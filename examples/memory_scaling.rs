@@ -1,0 +1,47 @@
+//! E4 driver: memory scaling of the clustering gradient (paper §3.3).
+//!
+//! Prints the analytic tape model across a range of layer sizes and t, then
+//! (artifacts present) the measured table from the cluster_grad probes —
+//! three sources of truth side by side.
+//!
+//!   cargo run --release --example memory_scaling
+
+use idkm::coordinator::{memory_probe, report};
+use idkm::memory::TapeModel;
+use idkm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+
+    println!("analytic tape model, one soft-k-means layer (f32):\n");
+    println!("| m | k | t | DKM O(t·m·2^b) | IDKM O(m·2^b) | JFB O(m·2^b) | ratio |");
+    println!("|---|---|---|---|---|---|---|");
+    for m in [65_536usize, 1 << 20, 11_172_032 /* paper's ResNet18 */] {
+        for t in [5usize, 30] {
+            let tm = TapeModel::new(m, 1, 4, t);
+            println!(
+                "| {m} | 4 | {t} | {} | {} | {} | {:.1}x |",
+                idkm::util::human_bytes(tm.dkm_bytes()),
+                idkm::util::human_bytes(tm.idkm_bytes()),
+                idkm::util::human_bytes(tm.jfb_bytes()),
+                tm.dkm_bytes() as f64 / tm.idkm_bytes() as f64
+            );
+        }
+    }
+    println!(
+        "\nat the paper's ResNet18 scale (11.17M weights, k=4, t=30) the DKM tape\n\
+         alone is {} — the 'cannot train at all' regime; IDKM needs {}.\n",
+        idkm::util::human_bytes(TapeModel::new(11_172_032, 1, 4, 30).dkm_bytes()),
+        idkm::util::human_bytes(TapeModel::new(11_172_032, 1, 4, 30).idkm_bytes()),
+    );
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let runtime = Runtime::new("artifacts")?;
+        println!("measured (XLA buffer assignment + RSS around execution):\n");
+        let rows = memory_probe::run_probes(&runtime, 2)?;
+        println!("{}", report::render_memory_table(&rows));
+    } else {
+        println!("(run `make artifacts` for the measured table)");
+    }
+    Ok(())
+}

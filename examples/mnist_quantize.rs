@@ -1,0 +1,42 @@
+//! E1/E2 driver: the paper's §5.1 experiment — quantize the 2-layer convnet
+//! over the full (k, d) x method grid and print Tables 1 and 2.
+//!
+//! This is the *full-scale* variant of `cargo bench --bench table1` (same
+//! code path, preset step counts). Accepts the same flags as the CLI:
+//!
+//!   cargo run --release --example mnist_quantize -- --steps 500
+//!
+//! Results land in runs/convnet2_sweep_report.md and EXPERIMENTS.md cites
+//! the recorded run.
+
+use idkm::coordinator::{ExperimentConfig, Sweep};
+use idkm::runtime::Runtime;
+use idkm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new()
+        .opt("steps", "", "QAT steps per cell (default: preset)")
+        .opt("pretrain-steps", "", "pretraining steps (default: preset)")
+        .opt("runs", "runs", "output directory")
+        .parse(&argv)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+
+    let mut cfg = ExperimentConfig::preset("table1")?;
+    cfg.runs_dir = args.get("runs").unwrap().into();
+    if let Some(s) = args.get("steps").filter(|s| !s.is_empty()) {
+        cfg.qat_steps = s.parse()?;
+    }
+    if let Some(s) = args.get("pretrain-steps").filter(|s| !s.is_empty()) {
+        cfg.pretrain_steps = s.parse()?;
+    }
+
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let sweep = Sweep::new(&runtime, &cfg, "convnet2_sweep");
+    let cells = sweep.run()?;
+    let rendered = sweep.render(&cells);
+    println!("{rendered}");
+    std::fs::write(cfg.runs_dir.join("convnet2_sweep_report.md"), rendered)?;
+    Ok(())
+}

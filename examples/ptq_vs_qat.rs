@@ -1,0 +1,60 @@
+//! E5 driver: why quantization-aware training matters.
+//!
+//! Compares three ways to reach the same deployment format (k codewords of
+//! dimension d per layer):
+//!   1. PTQ — cluster the pretrained weights once and snap (Han et al. 2015)
+//!   2. QAT IDKM — the paper's method
+//!   3. QAT IDKM-JFB — the fast approximate variant
+//! across the aggressive end of the grid, where retraining matters most.
+//!
+//!   cargo run --release --example ptq_vs_qat -- --steps 150
+
+use idkm::coordinator::{ExperimentConfig, Trainer};
+use idkm::quant::ptq;
+use idkm::runtime::Runtime;
+use idkm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new()
+        .opt("steps", "150", "QAT steps")
+        .opt("runs", "runs", "output directory")
+        .parse(&argv)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+
+    let mut cfg = ExperimentConfig::preset("table1")?;
+    cfg.runs_dir = args.get("runs").unwrap().into();
+    cfg.qat_steps = args.get_parsed("steps").map_err(|e| anyhow::anyhow!(e))?;
+    cfg.eval_every = usize::MAX;
+
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let trainer = Trainer::new(&runtime, &cfg);
+    let params = trainer.load_or_pretrain()?;
+    let float_acc = trainer.eval_float(&params)?;
+    let info = runtime.load(&cfg.pretrain_artifact())?.info.clone();
+    let layers: Vec<(String, idkm::tensor::Tensor, bool)> = info
+        .params
+        .iter()
+        .zip(&params)
+        .map(|(s, t)| (s.name.clone(), t.clone(), s.clustered))
+        .collect();
+
+    println!("float accuracy: {float_acc:.4}\n");
+    println!("| k | d | PTQ | QAT idkm | QAT idkm_jfb | compress |");
+    println!("|---|---|---|---|---|---|");
+    for (k, d) in [(2usize, 1usize), (2, 2), (4, 1)] {
+        let (_, quantized, rep) = ptq::quantize_model(&layers, k, d, 50, cfg.seed)?;
+        let ptq_acc = trainer.eval_float(&quantized)?;
+        let idkm_cell = trainer.qat_cell(k, d, "idkm")?;
+        let jfb_cell = trainer.qat_cell(k, d, "idkm_jfb")?;
+        println!(
+            "| {k} | {d} | {ptq_acc:.4} | {:.4} | {:.4} | {:.1}x |",
+            idkm_cell.quant_acc,
+            jfb_cell.quant_acc,
+            rep.ratio_fixed()
+        );
+    }
+    println!("\nexpected shape: QAT >= PTQ everywhere, gap widening as k, 1/d shrink");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! E3 driver: the paper's §5.2 experiment — ResNet18 quantization on
+//! SynthCIFAR "on hardware where DKM cannot train at all".
+//!
+//! Runs the (k, d) grid with IDKM / IDKM-JFB under the width-scaled device
+//! budget, shows DKM's OOM verdict at full iterations and the accuracy of
+//! the t-capped DKM probe (paper: never beats random), and prints Table 3.
+//!
+//!   cargo run --release --example resnet_cifar -- --steps 60
+
+use idkm::coordinator::{report, ExperimentConfig, Sweep, Trainer};
+use idkm::memory::Budget;
+use idkm::runtime::Runtime;
+use idkm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new()
+        .opt("steps", "", "QAT steps per cell (default: preset)")
+        .opt("pretrain-steps", "", "pretraining steps (default: preset)")
+        .opt("runs", "runs", "output directory")
+        .opt("budget-mb", "", "device budget in MiB (default: preset 128)")
+        .parse(&argv)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+
+    let mut cfg = ExperimentConfig::preset("table3")?;
+    cfg.runs_dir = args.get("runs").unwrap().into();
+    if let Some(s) = args.get("steps").filter(|s| !s.is_empty()) {
+        cfg.qat_steps = s.parse()?;
+    }
+    if let Some(s) = args.get("pretrain-steps").filter(|s| !s.is_empty()) {
+        cfg.pretrain_steps = s.parse()?;
+    }
+    if let Some(s) = args.get("budget-mb").filter(|s| !s.is_empty()) {
+        cfg.budget_bytes = s.parse::<u64>()? << 20;
+    }
+
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+
+    // The paper's headline: DKM at full clustering iterations does not fit.
+    let any_qat = runtime
+        .manifest
+        .get(&cfg.qat_artifact(4, 1, "idkm"))?
+        .clone();
+    let budget = Budget { bytes: cfg.budget_bytes };
+    for (method, t) in [("dkm", 30), ("idkm", 30), ("idkm_jfb", 30)] {
+        let v = budget.check(&any_qat.params, 4, 1, t, method);
+        println!(
+            "{method:>9} t={t}: tape {} / budget {} -> {}{}",
+            idkm::util::human_bytes(v.required),
+            idkm::util::human_bytes(v.budget),
+            if v.fits { "fits" } else { "OOM" },
+            if method == "dkm" {
+                format!(" (max feasible t = {} — the paper capped DKM at 5)", v.max_t)
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    let sweep = Sweep::new(&runtime, &cfg, "resnet18_sweep");
+    let mut cells = sweep.run()?;
+
+    // The capped DKM probe: runs, but cannot learn (paper table 3 caption).
+    let trainer = Trainer::new(&runtime, &cfg);
+    let probe = format!("resnet18w{}_qat_k4d1_dkm_t5", runtime.manifest.resnet_width);
+    if runtime.manifest.get(&probe).is_ok() {
+        let cell = trainer.qat_cell_with_artifact(4, 1, "dkm", &probe)?;
+        println!(
+            "DKM t=5 probe (k=4, d=1): quant acc {:.4} vs chance 0.1 vs float {:.4}",
+            cell.quant_acc, cell.float_acc
+        );
+        cells.push(cell);
+    }
+
+    let rendered = format!(
+        "## Table 3 — resnet18 ({} params at width {})\n\n{}",
+        any_qat.total_param_elems(),
+        runtime.manifest.resnet_width,
+        report::render_table3(&cells, &cfg.methods)
+    );
+    println!("{rendered}");
+    std::fs::write(cfg.runs_dir.join("resnet18_sweep_report.md"), rendered)?;
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""L1 Pallas kernels for soft-k-means, plus their pure-jnp oracles.
+
+Public surface used by L2 (``compile.kmeans``):
+
+* :func:`kernels.f_step` — one fused soft-k-means iteration F(C, W)
+* :func:`kernels.quantize` / :func:`kernels.quantize_hard`
+* ``ref`` — the oracle module (ground truth for pytest)
+
+``use_pallas`` toggles kernel vs oracle at trace time so every exported HLO
+exists in both flavors for A/B testing (the lowered artifacts default to the
+Pallas path).
+
+Autodiff note: Pallas ``pallas_call`` has no reverse-mode rule (and the fused
+kernel's cross-grid accumulation could not have one), so the differentiable
+entry points below are ``jax.custom_vjp`` wrappers: the **forward** runs the
+Pallas kernel, the **backward** is the vjp of the pure-jnp oracle — which the
+kernels match to float tolerance (pytest enforces this), so the cotangents are
+the cotangents of the kernel up to the same tolerance.  The DKM baseline
+deliberately bypasses these wrappers (``use_pallas=False``) so its autodiff
+tape has the true O(t * m * 2^b) footprint the paper ascribes to it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as _attention
+from . import common, ref
+from . import distance as _distance
+from . import fused_step as _fused
+from . import quantize as _quantize
+
+pairwise_distance = _distance.pairwise_distance
+attention = _attention.attention
+mstep_sums = _fused.mstep_sums
+soft_quantize = _quantize.soft_quantize
+hard_quantize = _quantize.hard_quantize
+
+
+def _f_step_pallas_raw(c, w, tau):
+    num, den = mstep_sums(w, c, tau)
+    safe = jnp.maximum(den, ref.DEN_EPS)[:, None]
+    return jnp.where(den[:, None] > ref.DEN_EPS, num / safe, c)
+
+
+@jax.custom_vjp
+def _f_step_pallas(c, w, tau):
+    return _f_step_pallas_raw(c, w, tau)
+
+
+def _f_step_fwd(c, w, tau):
+    return _f_step_pallas_raw(c, w, tau), (c, w, tau)
+
+
+def _f_step_bwd(res, v):
+    c, w, tau = res
+    _, vjp = jax.vjp(lambda cc, ww: ref.f_step(cc, ww, tau), c, w)
+    dc, dw = vjp(v)
+    return dc, dw, jnp.zeros_like(tau)
+
+
+_f_step_pallas.defvjp(_f_step_fwd, _f_step_bwd)
+
+
+@jax.custom_vjp
+def _quantize_pallas(w, c, tau):
+    return soft_quantize(w, c, tau)
+
+
+def _quantize_fwd(w, c, tau):
+    return soft_quantize(w, c, tau), (w, c, tau)
+
+
+def _quantize_bwd(res, v):
+    w, c, tau = res
+    _, vjp = jax.vjp(lambda ww, cc: ref.soft_quantize(ww, cc, tau), w, c)
+    dw, dc = vjp(v)
+    return dw, dc, jnp.zeros_like(tau)
+
+
+_quantize_pallas.defvjp(_quantize_fwd, _quantize_bwd)
+
+
+def f_step(c, w, tau, *, use_pallas: bool = True):
+    """One soft-k-means iteration ``F(C, W)`` (paper eq. 12).
+
+    Pallas path: fused E+M sums in one grid pass (``fused_step.mstep_sums``),
+    then the tiny guarded division on the host graph.
+    """
+    if not use_pallas:
+        return ref.f_step(c, w, tau)
+    return _f_step_pallas(c, w, jnp.asarray(tau, jnp.float32))
+
+
+def quantize(w, c, tau, *, use_pallas: bool = True):
+    """Soft quantizer ``r_tau(W, C)`` (eq. 7)."""
+    if not use_pallas:
+        return ref.soft_quantize(w, c, tau)
+    return _quantize_pallas(w, c, jnp.asarray(tau, jnp.float32))
+
+
+def quantize_hard(w, c, *, use_pallas: bool = True):
+    """Hard quantizer ``q(W, C)`` (paper §3) for eval-time snapping."""
+    if not use_pallas:
+        return ref.hard_quantize(w, c)
+    return hard_quantize(w, c)

@@ -1,0 +1,44 @@
+"""Pallas kernel: row-softmax attention ``A = rowsoftmax_tau(-D)`` (eq. 8).
+
+Numerically stable (max-subtracted) — with the paper's tau = 5e-4 the raw
+logits are in the thousands, so stability is load-bearing, not cosmetic.
+tau arrives as a (1, 1) runtime operand (not baked) so the tau-annealing
+extension and the E5 ablation sweep reuse one compiled artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _attention_kernel(d_ref, tau_ref, a_ref):
+    d = d_ref[...]  # (TILE_M, k)
+    tau = tau_ref[0, 0]
+    logits = -d / tau
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    a_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention(d, tau, *, tile_m: int = common.TILE_M, interpret: bool = common.INTERPRET):
+    """Pallas counterpart of :func:`ref.attention`. ``d`` is ``(m, k)``."""
+    m, k = d.shape
+    dp = common.pad_to_tile(d, tile_m)
+    nt = common.num_tiles(m, tile_m)
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _attention_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile_m, k), jnp.float32),
+        interpret=interpret,
+    )(dp, tau_arr)
+    return out[:m]

@@ -1,0 +1,49 @@
+"""Shared Pallas tiling helpers for the soft-k-means kernels.
+
+All kernels tile along the m axis (the number of weight sub-vectors); k and d
+are tiny (k <= 16, d <= 4 in every paper configuration) so codebooks and
+k-sized accumulators stay VMEM-resident across the whole grid.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is how these kernels lower into the same HLO
+module as the surrounding JAX graph (see /opt/xla-example/README.md).  On a
+real TPU the identical BlockSpecs compile to Mosaic; DESIGN.md
+§Hardware-Adaptation estimates VMEM/MXU behaviour from these specs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Rows of W processed per grid step. 512 sub-vectors x (d + k) floats is a few
+# KiB of VMEM — far below the ~16 MiB/core budget, leaving room for double
+# buffering (the Mosaic pipeliner overlaps the next tile's HBM->VMEM copy with
+# this tile's compute).
+TILE_M = 512
+
+INTERPRET = True
+
+
+def num_tiles(m: int, tile: int = TILE_M) -> int:
+    return (m + tile - 1) // tile
+
+
+def pad_to_tile(x, tile: int = TILE_M):
+    """Pad axis 0 of ``x`` up to a multiple of ``tile`` with zeros.
+
+    The kernels mask padded rows out of every reduction, so zero-fill is safe
+    regardless of content; padding here (rather than relying on out-of-bounds
+    block semantics) keeps interpret mode and Mosaic behaviour identical.
+    """
+    m = x.shape[0]
+    padded = num_tiles(m, tile) * tile
+    if padded == m:
+        return x
+    pad = [(0, padded - m)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def row_mask(tile_idx, tile: int, m: int):
+    """Boolean (tile,) mask: True where the global row index is < m."""
+    base = tile_idx * tile
+    return (base + jnp.arange(tile)) < m

@@ -1,0 +1,50 @@
+"""Pallas kernel: pairwise weight/codeword distance matrix (E-step input).
+
+``D[i, j] = ||w_i - c_j||_2`` for ``W (m, d)``, ``C (k, d)``, tiled along m.
+The cross term ``W @ C^T`` is the MXU-bound op; the row/column squared norms
+ride along on the VPU.  The codebook block is constant across the grid so it
+stays VMEM-resident while W streams HBM -> VMEM tile by tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import DIST_EPS
+
+
+def _distance_kernel(w_ref, c_ref, d_ref):
+    w = w_ref[...]  # (TILE_M, d)
+    c = c_ref[...]  # (k, d)
+    w2 = jnp.sum(w * w, axis=-1, keepdims=True)  # (TILE_M, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]  # (1, k)
+    # MXU: contraction over d.
+    cross = jnp.dot(w, c.T, preferred_element_type=jnp.float32)
+    sq = jnp.maximum(w2 - 2.0 * cross + c2, 0.0)
+    d_ref[...] = jnp.sqrt(sq + DIST_EPS)
+
+
+def pairwise_distance(w, c, *, tile_m: int = common.TILE_M, interpret: bool = common.INTERPRET):
+    """Pallas counterpart of :func:`ref.pairwise_distance`.
+
+    Accepts any m; pads internally and slices the result back to ``(m, k)``.
+    """
+    m, d = w.shape
+    k = c.shape[0]
+    wp = common.pad_to_tile(w, tile_m)
+    nt = common.num_tiles(m, tile_m)
+    out = pl.pallas_call(
+        _distance_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile_m, k), jnp.float32),
+        interpret=interpret,
+    )(wp, c)
+    return out[:m]

@@ -1,0 +1,89 @@
+"""Pallas kernel: fused soft-k-means E+M step — the algorithm's hot spot.
+
+One grid pass over W computes, per tile: the distance block, the attention
+block, and the M-step partial sums ``A^T W`` (k, d) and ``A^T 1`` (k, 1),
+accumulated in VMEM-resident output blocks (constant index map -> the blocks
+are revisited every grid step, i.e. they never round-trip to HBM).
+
+This fusion is exactly what the implicit formulation buys on TPU: DKM must
+materialize A for every iteration t for the backward tape (O(t * m * 2^b)
+HBM); IDKM's A never leaves VMEM and is overwritten tile by tile —
+O(TILE_M * 2^b) VMEM, O(m * 2^b) only if the caller asks for A explicitly.
+
+Padded rows are masked out of both accumulators (m arrives as a scalar
+operand), so any m works.  The k x d division (guarding empty clusters)
+happens outside — it is O(k*d) ~ 64 floats, not worth a kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import DIST_EPS
+
+
+def _fused_kernel(w_ref, c_ref, tau_ref, m_ref, num_ref, den_ref):
+    tile_m = w_ref.shape[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    w = w_ref[...]  # (TILE_M, d)
+    c = c_ref[...]  # (k, d)
+    tau = tau_ref[0, 0]
+    m = m_ref[0, 0]
+
+    # E-step: distances + attention for this tile.
+    w2 = jnp.sum(w * w, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]
+    cross = jnp.dot(w, c.T, preferred_element_type=jnp.float32)  # MXU
+    dist = jnp.sqrt(jnp.maximum(w2 - 2.0 * cross + c2, 0.0) + DIST_EPS)
+    logits = -dist / tau
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    a = e / jnp.sum(e, axis=-1, keepdims=True)  # (TILE_M, k)
+
+    # Mask padded rows out of the reduction.
+    rows = pl.program_id(0) * tile_m + jax.lax.broadcasted_iota(
+        jnp.int32, (tile_m, 1), 0
+    )
+    a = jnp.where(rows < m, a, 0.0)
+
+    # M-step partial sums (MXU: contraction over the tile rows).
+    num_ref[...] += jnp.dot(a.T, w, preferred_element_type=jnp.float32)
+    den_ref[...] += jnp.sum(a, axis=0)[:, None]
+
+
+def mstep_sums(w, c, tau, *, tile_m: int = common.TILE_M, interpret: bool = common.INTERPRET):
+    """Return ``(A^T W, A^T 1)`` for the current codebook — fused E+M sums."""
+    m, d = w.shape
+    k = c.shape[0]
+    wp = common.pad_to_tile(w, tile_m)
+    nt = common.num_tiles(m, tile_m)
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    m_arr = jnp.asarray(m, jnp.int32).reshape(1, 1)
+    num, den = pl.pallas_call(
+        _fused_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wp, c, tau_arr, m_arr)
+    return num, den[:, 0]

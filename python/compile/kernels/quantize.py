@@ -1,0 +1,87 @@
+"""Pallas kernels: soft quantizer ``r_tau(W, C) = A @ C`` (eq. 7) and the
+hard quantizer ``q(W, C)`` (argmin snap, paper §3) used at eval time.
+
+Both stream W tile by tile with the codebook VMEM-resident; the attention /
+argmin for a tile is computed and immediately consumed, never materialized
+for the whole layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import DIST_EPS
+
+
+def _soft_quantize_kernel(w_ref, c_ref, tau_ref, r_ref):
+    w = w_ref[...]
+    c = c_ref[...]
+    tau = tau_ref[0, 0]
+    w2 = jnp.sum(w * w, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]
+    cross = jnp.dot(w, c.T, preferred_element_type=jnp.float32)
+    dist = jnp.sqrt(jnp.maximum(w2 - 2.0 * cross + c2, 0.0) + DIST_EPS)
+    logits = -dist / tau
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    a = e / jnp.sum(e, axis=-1, keepdims=True)
+    r_ref[...] = jnp.dot(a, c, preferred_element_type=jnp.float32)
+
+
+def soft_quantize(w, c, tau, *, tile_m: int = common.TILE_M, interpret: bool = common.INTERPRET):
+    """Pallas counterpart of :func:`ref.soft_quantize`."""
+    m, d = w.shape
+    k = c.shape[0]
+    wp = common.pad_to_tile(w, tile_m)
+    nt = common.num_tiles(m, tile_m)
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _soft_quantize_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile_m, d), jnp.float32),
+        interpret=interpret,
+    )(wp, c, tau_arr)
+    return out[:m]
+
+
+def _hard_quantize_kernel(w_ref, c_ref, r_ref):
+    w = w_ref[...]
+    c = c_ref[...]
+    w2 = jnp.sum(w * w, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]
+    cross = jnp.dot(w, c.T, preferred_element_type=jnp.float32)
+    sq = w2 - 2.0 * cross + c2  # monotone in distance; no sqrt needed
+    idx = jnp.argmin(sq, axis=-1)
+    # One-hot gather keeps the lookup on the MXU instead of a scatter/gather.
+    k = c.shape[0]
+    onehot = (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    r_ref[...] = jnp.dot(onehot, c, preferred_element_type=jnp.float32)
+
+
+def hard_quantize(w, c, *, tile_m: int = common.TILE_M, interpret: bool = common.INTERPRET):
+    """Pallas counterpart of :func:`ref.hard_quantize`."""
+    m, d = w.shape
+    k = c.shape[0]
+    wp = common.pad_to_tile(w, tile_m)
+    nt = common.num_tiles(m, tile_m)
+    out = pl.pallas_call(
+        _hard_quantize_kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * tile_m, d), jnp.float32),
+        interpret=interpret,
+    )(wp, c)
+    return out[:m]

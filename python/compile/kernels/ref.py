@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests`` sweeps shapes and
+dtypes with hypothesis and asserts the Pallas kernels (interpret mode) match
+these to tight tolerances.  They are also used directly by the L2 graph when
+``use_pallas=False`` (useful to A/B the lowered HLO).
+
+Conventions (match DESIGN.md §2):
+  * ``W`` is ``(m, d)`` — m weight sub-vectors of dimension d (the paper's
+    d x m matrix, transposed so rows are sub-vectors).
+  * ``C`` is ``(k, d)`` — k codewords.
+  * ``D`` is ``(m, k)`` with ``D[i, j] = ||w_i - c_j||_2`` (paper eq. after (7)).
+  * ``A`` is ``(m, k)`` row-stochastic attention, ``rowsoftmax_tau(-D)``
+    (paper eq. 8).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Numerical guards shared with the Pallas kernels so oracle and kernel agree
+# bit-for-bit on edge cases (empty clusters, coincident points).
+DIST_EPS = 1e-12
+DEN_EPS = 1e-8
+
+
+def pairwise_distance(w, c):
+    """``D[i, j] = ||w_i - c_j||`` computed MXU-style.
+
+    Expanded as ``sqrt(||w||^2 - 2 w.c^T + ||c||^2)`` so the inner product is
+    a single matmul (this is the form the Pallas kernel feeds to the MXU).
+    Clamped at zero before the sqrt: the expansion can go slightly negative
+    in floating point for coincident points.
+    """
+    w = jnp.asarray(w)
+    c = jnp.asarray(c)
+    w2 = jnp.sum(w * w, axis=-1, keepdims=True)  # (m, 1)
+    c2 = jnp.sum(c * c, axis=-1)  # (k,)
+    cross = w @ c.T  # (m, k)  <- MXU
+    sq = jnp.maximum(w2 - 2.0 * cross + c2[None, :], 0.0)
+    return jnp.sqrt(sq + DIST_EPS)
+
+
+def attention(d, tau):
+    """``A = rowsoftmax_tau(-D)`` (paper eq. 8), max-subtracted for stability.
+
+    With the paper's tau = 5e-4 the logits are huge; subtracting the row max
+    (i.e. the minimum distance) keeps everything in exp's safe range.
+    """
+    logits = -d / tau
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def center_update(a, w, c_prev):
+    """M-step (paper eq. 10): ``C+ = diag(A^T 1)^{-1} A^T W``.
+
+    Empty clusters (attention mass below DEN_EPS) keep their previous center
+    instead of dividing by ~0 — differentiable almost everywhere and
+    fixed-point-consistent (an empty cluster is already at equilibrium).
+    """
+    num = a.T @ w  # (k, d)
+    den = jnp.sum(a, axis=0)  # (k,)
+    safe = jnp.maximum(den, DEN_EPS)[:, None]
+    return jnp.where(den[:, None] > DEN_EPS, num / safe, c_prev)
+
+
+def f_step(c, w, tau):
+    """One full soft-k-means iteration ``F(C, W)`` (paper eq. 12)."""
+    d = pairwise_distance(w, c)
+    a = attention(d, tau)
+    return center_update(a, w, c)
+
+
+def soft_quantize(w, c, tau):
+    """``r_tau(W, C) = A(W, C) @ C`` (paper eq. 7): convex-combination weights."""
+    a = attention(pairwise_distance(w, c), tau)
+    return a @ c
+
+
+def hard_quantize(w, c):
+    """``q(W, C)``: snap every sub-vector to its nearest codeword (paper §3)."""
+    d = pairwise_distance(w, c)
+    idx = jnp.argmin(d, axis=-1)
+    return c[idx]
+
+
+def assignments(w, c):
+    """Nearest-codeword indices (the b = lg k bit cluster addresses)."""
+    return jnp.argmin(pairwise_distance(w, c), axis=-1)
+
+
+def cluster_cost(w, c):
+    """Quantization cost (paper eq. 2): sum_i ||w_i - q(w_i, C)||^2."""
+    q = hard_quantize(w, c)
+    return jnp.sum((w - q) ** 2)

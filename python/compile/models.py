@@ -1,0 +1,224 @@
+"""L2: functional model zoo (no flax/haiku — params are explicit flat lists).
+
+Models are described by a :class:`ModelSpec`: an ordered list of
+:class:`ParamSpec` plus an ``apply(params, x) -> logits`` function.  The
+ordered list *is* the AOT interchange contract: the rust coordinator feeds
+parameters to the compiled HLO in exactly this order (recorded in
+``artifacts/manifest.json``).
+
+``clustered`` parameters (conv kernels, dense matrices) are the ones the
+quantizer touches; biases and norm affines stay float, matching DKM's setup.
+Every clustered parameter's element count is divisible by 4 so the paper's
+sub-vector dimensions d ∈ {1, 2, 4} all tile cleanly (paper §3, the Stock et
+al. product-quantization setup).
+
+Architecture notes:
+  * ``convnet2`` — the paper's "2-layer convolutional network with 2158
+    parameters" (§5.1); ours has 2082 (same two conv layers + linear head,
+    exact count differs because the paper never specifies channel widths).
+  * ``resnet18`` — He et al. BasicBlock [2,2,2,2] ResNet-18, CIFAR stem (3x3,
+    no maxpool), width-scalable: ``width=64`` is the full 11.2M-param model,
+    the default bench preset uses ``width=16`` (~700k params) to stay
+    CPU-runnable (DESIGN.md §3 substitutions).  GroupNorm replaces BatchNorm
+    so the network is stateless/functional (no running stats to thread
+    through the AOT boundary); norm affines are unquantized either way.
+  * ``mlp`` — plain 784-256-128-10 MLP, used by tests and the quickstart.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    name: str
+    shape: Tuple[int, ...]
+    #: participates in weight clustering (conv kernels / dense matrices).
+    clustered: bool
+    #: fan-in for init scaling.
+    fan_in: int
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+class ModelSpec(NamedTuple):
+    name: str
+    params: Tuple[ParamSpec, ...]
+    apply: Callable
+    input_shape: Tuple[int, ...]  # per-example (H, W, C) or (features,)
+    num_classes: int
+
+    @property
+    def total_params(self) -> int:
+        return sum(p.size for p in self.params)
+
+    def clustered_indices(self) -> List[int]:
+        return [i for i, p in enumerate(self.params) if p.clustered]
+
+
+def _conv(x, w, stride: int):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _group_norm(x, scale, bias, groups: int, eps: float = 1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# convnet2 — paper §5.1
+# ---------------------------------------------------------------------------
+
+
+def convnet2() -> ModelSpec:
+    c1, c2 = 8, 24
+    params = (
+        ParamSpec("conv1/w", (3, 3, 1, c1), True, 9),
+        ParamSpec("conv1/b", (c1,), False, 1),
+        ParamSpec("conv2/w", (3, 3, c1, c2), True, 9 * c1),
+        ParamSpec("conv2/b", (c2,), False, 1),
+        ParamSpec("fc/w", (c2, 10), True, c2),
+        ParamSpec("fc/b", (10,), False, 1),
+    )
+
+    def apply(p, x):
+        w1, b1, w2, b2, wf, bf = p
+        x = jax.nn.relu(_conv(x, w1, 2) + b1)
+        x = jax.nn.relu(_conv(x, w2, 2) + b2)
+        x = jnp.mean(x, axis=(1, 2))  # global average pool
+        return x @ wf + bf
+
+    return ModelSpec("convnet2", params, apply, (28, 28, 1), 10)
+
+
+# ---------------------------------------------------------------------------
+# mlp — tests / quickstart
+# ---------------------------------------------------------------------------
+
+
+def mlp(hidden: Sequence[int] = (256, 128)) -> ModelSpec:
+    dims = [784, *hidden, 10]
+    specs: List[ParamSpec] = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs.append(ParamSpec(f"fc{i}/w", (a, b), True, a))
+        specs.append(ParamSpec(f"fc{i}/b", (b,), False, 1))
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], -1)
+        n_layers = len(dims) - 1
+        for i in range(n_layers):
+            x = x @ p[2 * i] + p[2 * i + 1]
+            if i + 1 < n_layers:
+                x = jax.nn.relu(x)
+        return x
+
+    return ModelSpec("mlp", tuple(specs), apply, (28, 28, 1), 10)
+
+
+# ---------------------------------------------------------------------------
+# resnet18 — paper §5.2 (width-scalable; width=64 is the full 11.2M model)
+# ---------------------------------------------------------------------------
+
+
+def resnet18(width: int = 16, num_classes: int = 10) -> ModelSpec:
+    stages = [width, 2 * width, 4 * width, 8 * width]
+    specs: List[ParamSpec] = [
+        ParamSpec("stem/w", (3, 3, 3, width), True, 27),
+        ParamSpec("stem/gn_s", (width,), False, 1),
+        ParamSpec("stem/gn_b", (width,), False, 1),
+    ]
+    # Two BasicBlocks per stage; first block of stages 1..3 downsamples.
+    block_meta = []  # (stage, block, in_ch, out_ch, stride, has_proj)
+    in_ch = width
+    for s, out_ch in enumerate(stages):
+        for b in range(2):
+            stride = 2 if (s > 0 and b == 0) else 1
+            has_proj = stride != 1 or in_ch != out_ch
+            prefix = f"s{s}b{b}"
+            specs.append(ParamSpec(f"{prefix}/conv1/w", (3, 3, in_ch, out_ch), True, 9 * in_ch))
+            specs.append(ParamSpec(f"{prefix}/gn1_s", (out_ch,), False, 1))
+            specs.append(ParamSpec(f"{prefix}/gn1_b", (out_ch,), False, 1))
+            specs.append(ParamSpec(f"{prefix}/conv2/w", (3, 3, out_ch, out_ch), True, 9 * out_ch))
+            specs.append(ParamSpec(f"{prefix}/gn2_s", (out_ch,), False, 1))
+            specs.append(ParamSpec(f"{prefix}/gn2_b", (out_ch,), False, 1))
+            if has_proj:
+                specs.append(ParamSpec(f"{prefix}/proj/w", (1, 1, in_ch, out_ch), True, in_ch))
+            block_meta.append((s, b, in_ch, out_ch, stride, has_proj))
+            in_ch = out_ch
+    specs.append(ParamSpec("fc/w", (stages[-1], num_classes), True, stages[-1]))
+    specs.append(ParamSpec("fc/b", (num_classes,), False, 1))
+    specs = tuple(specs)
+
+    name_to_idx = {p.name: i for i, p in enumerate(specs)}
+
+    def apply(p, x):
+        def g(nm):
+            return p[name_to_idx[nm]]
+
+        x = _conv(x, g("stem/w"), 1)
+        x = jax.nn.relu(_group_norm(x, g("stem/gn_s"), g("stem/gn_b"), 8))
+        for (s, b, _ic, _oc, stride, has_proj) in block_meta:
+            prefix = f"s{s}b{b}"
+            idn = x
+            y = _conv(x, g(f"{prefix}/conv1/w"), stride)
+            y = jax.nn.relu(_group_norm(y, g(f"{prefix}/gn1_s"), g(f"{prefix}/gn1_b"), 8))
+            y = _conv(y, g(f"{prefix}/conv2/w"), 1)
+            y = _group_norm(y, g(f"{prefix}/gn2_s"), g(f"{prefix}/gn2_b"), 8)
+            if has_proj:
+                idn = _conv(x, g(f"{prefix}/proj/w"), stride)
+            x = jax.nn.relu(y + idn)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ g("fc/w") + g("fc/b")
+
+    return ModelSpec(f"resnet18w{width}", specs, apply, (32, 32, 3), num_classes)
+
+
+_BUILDERS = {
+    "convnet2": convnet2,
+    "mlp": mlp,
+    "resnet18": resnet18,
+}
+
+
+def build(name: str, **kwargs) -> ModelSpec:
+    """Build a model spec by registry name (``convnet2``, ``mlp``, ``resnet18``)."""
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown model {name!r}; known: {sorted(_BUILDERS)}")
+    return _BUILDERS[name](**kwargs)
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> List[jnp.ndarray]:
+    """He-normal init for weights, zeros for biases, ones for norm scales.
+
+    Python-side convenience for tests; the rust coordinator performs the
+    equivalent init natively (tensor::init) using the manifest shapes.
+    """
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for p in spec.params:
+        key, sub = jax.random.split(key)
+        if p.name.endswith("gn_s") or "/gn" in p.name and p.name.endswith("_s"):
+            out.append(jnp.ones(p.shape, jnp.float32))
+        elif not p.clustered:
+            out.append(jnp.zeros(p.shape, jnp.float32))
+        else:
+            std = math.sqrt(2.0 / p.fan_in)
+            out.append(std * jax.random.normal(sub, p.shape, jnp.float32))
+    return out

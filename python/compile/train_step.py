@@ -1,0 +1,288 @@
+"""L2: AOT-exportable program builders (QAT step, pretrain step, eval).
+
+Every builder returns a function over a *flat* argument list (params first,
+then codebooks, then batch, then tau) returning a flat tuple — that flat
+order is the interchange contract with the rust coordinator and is recorded
+per-artifact in the manifest.  No pytrees cross the AOT boundary.
+
+The QAT step implements the paper's algorithm 2 (IDKM) / the DKM baseline,
+batched over layers sequentially:
+
+  for each clustered layer W:  C* = soft-k-means(W, C_prev)   (alg. 1)
+  loss = CE(f(x; r_tau(W, C*)))                               (eq. 11)
+  W   -= lr * dL/dW            (SGD, no momentum — paper §5)
+
+Codebooks are warm-started from the previous step's C* (carried as state),
+matching the paper's observation that clustering converges faster in later
+epochs as weights become "well-behaved".
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels, kmeans, models
+
+
+class QATConfig(NamedTuple):
+    """Static QAT experiment configuration (baked into the artifact)."""
+
+    model: str = "convnet2"
+    width: int = 16  # resnet18 only
+    k: int = 4
+    d: int = 1
+    method: str = "idkm"
+    lr: float = 1e-4  # paper §5
+    batch: int = 128
+    max_iter: int = 30  # paper caps clustering at 30
+    tol: float = 1e-4
+    bwd_max_iter: int = 60
+    use_pallas: bool = True
+
+    def kmeans_cfg(self) -> kmeans.KMeansConfig:
+        return kmeans.KMeansConfig(
+            method=self.method,
+            max_iter=self.max_iter,
+            tol=self.tol,
+            bwd_max_iter=self.bwd_max_iter,
+            use_pallas=self.use_pallas,
+        ).validate()
+
+    def model_spec(self) -> models.ModelSpec:
+        if self.model == "resnet18":
+            return models.build(self.model, width=self.width)
+        return models.build(self.model)
+
+
+def cross_entropy(logits, labels):
+    """Mean CE over the batch; labels are int32 class ids."""
+    logp = logits - jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return -jnp.mean(picked)
+
+
+def top1_count(logits, labels):
+    """Number of correct top-1 predictions (int32)."""
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((preds == labels.astype(jnp.int32)).astype(jnp.int32))
+
+
+def codebook_shapes(spec: models.ModelSpec, k: int, d: int) -> List[Tuple[int, int]]:
+    """One (k, d) codebook per clustered parameter; validates divisibility."""
+    shapes = []
+    for i in spec.clustered_indices():
+        p = spec.params[i]
+        if p.size % d != 0:
+            raise ValueError(f"{p.name}: size {p.size} not divisible by d={d}")
+        shapes.append((k, d))
+    return shapes
+
+
+def init_codebook(w_flat, k: int, d: int):
+    """Deterministic warm-start: k evenly spaced sub-vectors after sorting by
+    first principal coordinate (cheap stand-in for k-means++; the rust
+    coordinator uses its own k-means++ on the pretrained weights instead)."""
+    m = w_flat.size // d
+    sub = w_flat.reshape(m, d)
+    order = jnp.argsort(sub[:, 0])
+    idx = jnp.linspace(0, m - 1, k).astype(jnp.int32)
+    return sub[order[idx]]
+
+
+# ---------------------------------------------------------------------------
+# Program builders.  Each returns (fn, in_specs, out_names) where in_specs is
+# the ordered list of (name, ShapeDtypeStruct) the manifest records.
+# ---------------------------------------------------------------------------
+
+
+def make_qat_step(cfg: QATConfig):
+    """QAT train step: (params.., codebooks.., x, y, tau) ->
+    (params'.., codebooks'.., loss, mean_iters)."""
+    spec = cfg.model_spec()
+    kcfg = cfg.kmeans_cfg()
+    cl_idx = spec.clustered_indices()
+    n_params = len(spec.params)
+    n_cb = len(cl_idx)
+
+    def step(*flat):
+        params = list(flat[:n_params])
+        cbs = list(flat[n_params : n_params + n_cb])
+        x, y, tau = flat[n_params + n_cb :]
+
+        def loss_fn(params):
+            qparams = list(params)
+            new_cbs = []
+            iters = []
+            for j, i in enumerate(cl_idx):
+                p = params[i]
+                w_mat = p.reshape(-1, cfg.d)
+                wq, c_star, it = kmeans.solve_and_quantize(w_mat, cbs[j], tau, kcfg)
+                qparams[i] = wq.reshape(p.shape)
+                new_cbs.append(c_star)
+                iters.append(it)
+            logits = spec.apply(qparams, x)
+            loss = cross_entropy(logits, y)
+            mean_iters = jnp.mean(jnp.asarray(iters, jnp.float32))
+            return loss, (new_cbs, mean_iters)
+
+        (loss, (new_cbs, mean_iters)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+        # Codebooks leave the step without gradient state.
+        new_cbs = [jax.lax.stop_gradient(c) for c in new_cbs]
+        return (*new_params, *new_cbs, loss, mean_iters)
+
+    in_specs = _qat_in_specs(spec, cfg)
+    out_names = (
+        [f"param:{p.name}" for p in spec.params]
+        + [f"codebook:{spec.params[i].name}" for i in cl_idx]
+        + ["loss", "mean_iters"]
+    )
+    return step, in_specs, out_names
+
+
+def _qat_in_specs(spec: models.ModelSpec, cfg: QATConfig):
+    f32 = jnp.float32
+    ins = [(f"param:{p.name}", jax.ShapeDtypeStruct(p.shape, f32)) for p in spec.params]
+    for i in spec.clustered_indices():
+        ins.append(
+            (
+                f"codebook:{spec.params[i].name}",
+                jax.ShapeDtypeStruct((cfg.k, cfg.d), f32),
+            )
+        )
+    ins.append(("x", jax.ShapeDtypeStruct((cfg.batch, *spec.input_shape), f32)))
+    ins.append(("y", jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)))
+    ins.append(("tau", jax.ShapeDtypeStruct((), f32)))
+    return ins
+
+
+def make_eval_quant(cfg: QATConfig):
+    """Hard-quantized eval: (params.., codebooks.., x, y) -> (correct, loss).
+
+    Uses q(W, C) — the deployment-time snap-to-codeword (paper §3) — i.e.
+    what the compressed model actually scores.
+    """
+    spec = cfg.model_spec()
+    cl_idx = spec.clustered_indices()
+    n_params = len(spec.params)
+    n_cb = len(cl_idx)
+
+    def ev(*flat):
+        params = list(flat[:n_params])
+        cbs = list(flat[n_params : n_params + n_cb])
+        x, y = flat[n_params + n_cb :]
+        qparams = list(params)
+        for j, i in enumerate(cl_idx):
+            p = params[i]
+            w_mat = p.reshape(-1, cfg.d)
+            wq = kernels.quantize_hard(w_mat, cbs[j], use_pallas=cfg.use_pallas)
+            qparams[i] = wq.reshape(p.shape)
+        logits = spec.apply(qparams, x)
+        return top1_count(logits, y), cross_entropy(logits, y)
+
+    in_specs = [
+        (f"param:{p.name}", jax.ShapeDtypeStruct(p.shape, jnp.float32))
+        for p in spec.params
+    ]
+    for i in cl_idx:
+        in_specs.append(
+            (
+                f"codebook:{spec.params[i].name}",
+                jax.ShapeDtypeStruct((cfg.k, cfg.d), jnp.float32),
+            )
+        )
+    in_specs.append(("x", jax.ShapeDtypeStruct((cfg.batch, *spec.input_shape), jnp.float32)))
+    in_specs.append(("y", jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)))
+    return ev, in_specs, ["correct", "loss"]
+
+
+def make_eval_float(cfg: QATConfig):
+    """Unquantized eval: (params.., x, y) -> (correct, loss)."""
+    spec = cfg.model_spec()
+    n_params = len(spec.params)
+
+    def ev(*flat):
+        params = list(flat[:n_params])
+        x, y = flat[n_params:]
+        logits = spec.apply(params, x)
+        return top1_count(logits, y), cross_entropy(logits, y)
+
+    in_specs = [
+        (f"param:{p.name}", jax.ShapeDtypeStruct(p.shape, jnp.float32))
+        for p in spec.params
+    ]
+    in_specs.append(("x", jax.ShapeDtypeStruct((cfg.batch, *spec.input_shape), jnp.float32)))
+    in_specs.append(("y", jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)))
+    return ev, in_specs, ["correct", "loss"]
+
+
+def make_pretrain_step(cfg: QATConfig, lr: float = 0.05, momentum: float = 0.9):
+    """Plain SGD+momentum pretraining step (produces the float model that QAT
+    then compresses — the paper quantizes *pre-trained* networks):
+    (params.., velocities.., x, y) -> (params'.., velocities'.., loss, correct)."""
+    spec = cfg.model_spec()
+    n_params = len(spec.params)
+
+    def step(*flat):
+        params = list(flat[:n_params])
+        vels = list(flat[n_params : 2 * n_params])
+        x, y = flat[2 * n_params :]
+
+        def loss_fn(params):
+            logits = spec.apply(params, x)
+            return cross_entropy(logits, y), top1_count(logits, y)
+
+        (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_vels = [momentum * v + g for v, g in zip(vels, grads)]
+        new_params = [p - lr * v for p, v in zip(params, new_vels)]
+        return (*new_params, *new_vels, loss, correct)
+
+    in_specs = [
+        (f"param:{p.name}", jax.ShapeDtypeStruct(p.shape, jnp.float32))
+        for p in spec.params
+    ]
+    in_specs += [
+        (f"vel:{p.name}", jax.ShapeDtypeStruct(p.shape, jnp.float32))
+        for p in spec.params
+    ]
+    in_specs.append(("x", jax.ShapeDtypeStruct((cfg.batch, *spec.input_shape), jnp.float32)))
+    in_specs.append(("y", jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)))
+    out_names = (
+        [f"param:{p.name}" for p in spec.params]
+        + [f"vel:{p.name}" for p in spec.params]
+        + ["loss", "correct"]
+    )
+    return step, in_specs, out_names
+
+
+def make_cluster_grad(m: int, k: int, d: int, method: str, max_iter: int, use_pallas: bool = True):
+    """Standalone clustering-with-gradient probe for the E4 memory experiment:
+    (w, c0, v, tau) -> (c_star, dL/dW, iters) where v is the cotangent of C*.
+
+    Compiling this at several ``max_iter`` values and reading XLA's buffer
+    assignment shows DKM's tape growing linearly in t while IDKM/JFB stay
+    flat — the paper's §3.3 claim as a measurable artifact property.
+    """
+    kcfg = kmeans.KMeansConfig(method=method, max_iter=max_iter, use_pallas=use_pallas)
+
+    def probe(w, c0, v, tau):
+        def inner(w):
+            c, it = kmeans.solve(w, c0, tau, kcfg)
+            return jnp.vdot(c, v), (c, it)
+
+        (_, (c_star, iters)), dw = jax.value_and_grad(inner, has_aux=True)(w)
+        return c_star, dw, iters
+
+    f32 = jnp.float32
+    in_specs = [
+        ("w", jax.ShapeDtypeStruct((m, d), f32)),
+        ("c0", jax.ShapeDtypeStruct((k, d), f32)),
+        ("v", jax.ShapeDtypeStruct((k, d), f32)),
+        ("tau", jax.ShapeDtypeStruct((), f32)),
+    ]
+    return probe, in_specs, ["c_star", "dw", "iters"]

@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (m not divisible by the tile, k in the paper's
+range, d in {1, 2, 4}) and distributions; every kernel must match its oracle
+to float32 tolerance. This is the core correctness signal for the kernels
+that end up inside every exported artifact.
+"""
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import Phase, given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+qmod = importlib.import_module("compile.kernels.quantize")
+fmod = importlib.import_module("compile.kernels.fused_step")
+dmod = importlib.import_module("compile.kernels.distance")
+amod = importlib.import_module("compile.kernels.attention")
+
+# No shrink phase: counterexamples here are (m, k, d, seed) tuples whose
+# shrunk form is no more informative than the original, and shrinking
+# re-traces jit'd kernels for minutes.
+SETTINGS = dict(
+    max_examples=20,
+    deadline=None,
+    phases=(Phase.explicit, Phase.reuse, Phase.generate),
+)
+
+
+def make_wc(seed, m, k, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(scale=scale, size=(m, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(scale=scale, size=(k, d)).astype(np.float32))
+    return w, c
+
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=900),  # m — crosses tile boundaries
+    st.sampled_from([2, 4, 8, 16]),  # k
+    st.sampled_from([1, 2, 4]),  # d
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_distance_matches_ref(args):
+    m, k, d, seed = args
+    w, c = make_wc(seed, m, k, d)
+    got = dmod.pairwise_distance(w, c, tile_m=256)
+    want = ref.pairwise_distance(w, c)
+    # atol dominates near zero distance: the MXU expansion loses ~eps in the
+    # squared distance and sqrt amplifies it to ~sqrt(eps) in the distance,
+    # identically in kernel and oracle up to reduction order.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-3)
+
+
+@given(shape_strategy, st.sampled_from([5e-4, 5e-3, 5e-2, 0.5]))
+@settings(**SETTINGS)
+def test_attention_matches_ref(args, tau):
+    m, k, d, seed = args
+    w, c = make_wc(seed, m, k, d)
+    dmat = ref.pairwise_distance(w, c)
+    got = amod.attention(dmat, tau, tile_m=256)
+    want = ref.attention(dmat, tau)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # rows are stochastic
+    np.testing.assert_allclose(jnp.sum(got, axis=-1), 1.0, rtol=1e-5)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_fused_step_matches_ref(args):
+    m, k, d, seed = args
+    w, c = make_wc(seed, m, k, d)
+    tau = 5e-3
+    got = kernels.f_step(c, w, tau, use_pallas=True)
+    want = ref.f_step(c, w, tau)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_soft_quantize_matches_ref(args):
+    m, k, d, seed = args
+    w, c = make_wc(seed, m, k, d)
+    tau = 5e-3
+    got = np.asarray(qmod.soft_quantize(w, c, tau, tile_m=256))
+    want = np.asarray(ref.soft_quantize(w, c, tau))
+    # At sharp tau the attention is near-one-hot: a sub-vector almost
+    # equidistant to two codewords can legitimately flip winners between the
+    # kernel's and the oracle's (reduction-order-different) distances. Allow
+    # a <2% near-tie flip fraction; everything else must match tightly.
+    row_err = np.max(np.abs(got - want), axis=-1)
+    flips = np.sum(row_err > 1e-3)
+    assert flips <= max(1, int(0.02 * m)), f"{flips}/{m} rows differ"
+    ok = row_err <= 1e-3
+    np.testing.assert_allclose(got[ok], want[ok], rtol=1e-4, atol=1e-3)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_hard_quantize_matches_ref(args):
+    m, k, d, seed = args
+    w, c = make_wc(seed, m, k, d)
+    got = np.asarray(qmod.hard_quantize(w, c, tile_m=256))
+    want = np.asarray(ref.hard_quantize(w, c))
+    # argmin ties can flip between kernel and oracle (see soft test above).
+    row_err = np.max(np.abs(got - want), axis=-1)
+    flips = np.sum(row_err > 1e-5)
+    assert flips <= max(1, int(0.02 * m)), f"{flips}/{m} rows differ"
+
+
+def test_fused_masking_excludes_padding():
+    # m chosen so the last tile is nearly all padding; the accumulated sums
+    # must be identical to a no-padding run of the same data.
+    w, c = make_wc(0, 513, 4, 2)
+    got = kernels.f_step(c, w, 1e-2, use_pallas=True)
+    want = ref.f_step(c, w, 1e-2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_tiny_tau_is_hard_assignment():
+    # tau -> 0: r_tau == q (paper: "if tau = 0 then r_tau = q").
+    w, c = make_wc(3, 300, 8, 1)
+    soft = qmod.soft_quantize(w, c, 1e-6, tile_m=256)
+    hard = qmod.hard_quantize(w, c, tile_m=256)
+    np.testing.assert_allclose(soft, hard, rtol=1e-4, atol=1e-5)
+
+
+def test_empty_cluster_keeps_center():
+    # A codeword far from all data receives ~zero attention at small tau and
+    # must keep its position (DEN_EPS guard), not collapse to NaN/0.
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 1)).astype(np.float32))
+    c = jnp.asarray([[0.0], [100.0]], dtype=jnp.float32)
+    out = kernels.f_step(c, w, 5e-4, use_pallas=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out[1], c[1], atol=1e-6)
+
+
+def test_coincident_points_no_nan():
+    w = jnp.zeros((128, 2), jnp.float32)
+    c = jnp.zeros((4, 2), jnp.float32)
+    d = dmod.pairwise_distance(w, c, tile_m=64)
+    assert bool(jnp.all(jnp.isfinite(d)))
+    a = amod.attention(d, 5e-4, tile_m=64)
+    assert bool(jnp.all(jnp.isfinite(a)))
+    out = kernels.f_step(c, w, 5e-4)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_custom_vjp_grads_match_oracle():
+    # The kernels' custom_vjp backward is the oracle's vjp; check end to end.
+    w, c = make_wc(7, 200, 4, 2)
+    tau = jnp.float32(5e-3)
+
+    g_kernel = jax.grad(lambda w: jnp.sum(kernels.quantize(w, c, tau) ** 2))(w)
+    g_oracle = jax.grad(lambda w: jnp.sum(ref.soft_quantize(w, c, tau) ** 2))(w)
+    np.testing.assert_allclose(g_kernel, g_oracle, rtol=1e-4, atol=1e-5)
+
+    g_kernel = jax.grad(lambda c: jnp.sum(kernels.f_step(c, w, tau) ** 2))(c)
+    g_oracle = jax.grad(lambda c: jnp.sum(ref.f_step(c, w, tau) ** 2))(c)
+    np.testing.assert_allclose(g_kernel, g_oracle, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,d", [(1, 2, 1), (2, 16, 4), (511, 3, 2), (512, 2, 1), (1025, 5, 1)])
+def test_edge_shapes(m, k, d):
+    w, c = make_wc(11, m, k, d)
+    np.testing.assert_allclose(
+        kernels.f_step(c, w, 1e-2), ref.f_step(c, w, 1e-2), rtol=1e-4, atol=1e-5
+    )

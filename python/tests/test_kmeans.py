@@ -1,0 +1,175 @@
+"""L2 solver tests: the three differentiation strategies.
+
+Core assertions:
+ * all three methods find the same fixed point (forward agreement);
+ * IDKM's implicit gradient matches DKM's exact unrolled gradient;
+ * IDKM-JFB's gradient is a descent-aligned approximation;
+ * the backward solver converges and the alpha-restart path is well-formed;
+ * warm-started solves converge in fewer iterations (the property the
+   codebook-carrying QAT state relies on).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import Phase, given, settings, strategies as st
+
+from compile import kmeans
+from compile.kernels import ref
+
+
+def data(seed=0, m=300, d=2, k=4, spread=1.0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(scale=spread, size=(m, d)).astype(np.float32))
+    c0 = jnp.asarray(rng.normal(scale=spread, size=(k, d)).astype(np.float32))
+    return w, c0
+
+
+TAU = jnp.float32(0.05)
+
+
+def test_methods_agree_on_fixed_point():
+    w, c0 = data()
+    sols = {}
+    for method in kmeans.METHODS:
+        cfg = kmeans.KMeansConfig(method=method, max_iter=80, tol=1e-6)
+        c, it = jax.jit(lambda w, c0, t: kmeans.solve(w, c0, t, cfg))(w, c0, TAU)
+        sols[method] = np.asarray(c)
+        assert int(it) >= 1
+    np.testing.assert_allclose(sols["idkm"], sols["dkm"], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(sols["idkm"], sols["idkm_jfb"], rtol=1e-6, atol=1e-7)
+
+
+def test_fixed_point_satisfies_equation():
+    # C* = F(C*, W) (eq. 13) to solver tolerance.
+    w, c0 = data(1)
+    cfg = kmeans.KMeansConfig(method="idkm", max_iter=100, tol=1e-7)
+    c, _ = kmeans.solve(w, c0, TAU, cfg)
+    resid = jnp.linalg.norm(ref.f_step(c, w, TAU) - c)
+    assert float(resid) < 1e-5, float(resid)
+
+
+def test_idkm_gradient_matches_unrolled():
+    w, c0 = data(2)
+
+    def grad_for(method):
+        cfg = kmeans.KMeansConfig(
+            method=method, max_iter=80, tol=1e-7, bwd_max_iter=300, bwd_tol=1e-9
+        )
+
+        def loss(w):
+            c, _ = kmeans.solve(w, c0, TAU, cfg)
+            return jnp.sum(jnp.sin(3.0 * c))
+
+        return jax.jit(jax.grad(loss))(w)
+
+    g_dkm = grad_for("dkm")
+    g_idkm = grad_for("idkm")
+    rel = float(jnp.linalg.norm(g_idkm - g_dkm) / (jnp.linalg.norm(g_dkm) + 1e-12))
+    assert rel < 1e-3, rel
+
+
+def test_jfb_gradient_is_descent_aligned():
+    # JFB is the zeroth Neumann truncation: not exact, but its inner product
+    # with the exact gradient must be positive (Fung et al.'s descent claim).
+    w, c0 = data(3)
+
+    def grad_for(method):
+        cfg = kmeans.KMeansConfig(method=method, max_iter=80, tol=1e-7)
+
+        def loss(w):
+            c, _ = kmeans.solve(w, c0, TAU, cfg)
+            return jnp.sum(c**2)
+
+        return jax.jit(jax.grad(loss))(w)
+
+    g_exact = grad_for("dkm")
+    g_jfb = grad_for("idkm_jfb")
+    cos = float(
+        jnp.vdot(g_exact, g_jfb)
+        / (jnp.linalg.norm(g_exact) * jnp.linalg.norm(g_jfb) + 1e-12)
+    )
+    assert cos > 0.5, cos
+
+
+@given(
+    st.integers(min_value=10, max_value=400),
+    st.sampled_from([2, 4, 8]),
+    st.sampled_from([1, 2]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(
+    max_examples=10,
+    deadline=None,
+    phases=(Phase.explicit, Phase.reuse, Phase.generate),
+)
+def test_gradients_finite_across_shapes(m, k, d, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    c0 = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    for method in kmeans.METHODS:
+        cfg = kmeans.KMeansConfig(method=method, max_iter=25)
+
+        def loss(w):
+            wq, _, _ = kmeans.solve_and_quantize(w, c0, TAU, cfg)
+            return jnp.sum(wq**2)
+
+        g = jax.jit(jax.grad(loss))(w)
+        assert bool(jnp.all(jnp.isfinite(g))), method
+
+
+def test_warm_start_converges_faster():
+    w, c0 = data(4)
+    cfg = kmeans.KMeansConfig(method="idkm", max_iter=100, tol=1e-6)
+    c_star, it_cold = kmeans.solve(w, c0, TAU, cfg)
+    _, it_warm = kmeans.solve(w, c_star, TAU, cfg)
+    assert int(it_warm) <= int(it_cold)
+    assert int(it_warm) <= 2  # starting at the fixed point terminates fast
+
+
+def test_max_iter_caps_iterations():
+    w, c0 = data(5)
+    cfg = kmeans.KMeansConfig(method="idkm", max_iter=3, tol=0.0)
+    _, it = kmeans.solve(w, c0, TAU, cfg)
+    assert int(it) == 3
+
+
+def test_dkm_runs_exactly_max_iter():
+    w, c0 = data(6)
+    cfg = kmeans.KMeansConfig(method="dkm", max_iter=7)
+    _, it = kmeans.solve(w, c0, TAU, cfg)
+    assert int(it) == 7
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        kmeans.KMeansConfig(method="nope").validate()
+    with pytest.raises(ValueError):
+        kmeans.KMeansConfig(max_iter=0).validate()
+    with pytest.raises(ValueError):
+        kmeans.KMeansConfig(alpha0=0.0).validate()
+
+
+def test_solve_and_quantize_reduces_cluster_cost():
+    # r_tau(W, C*) should be closer to W than r_tau(W, C0) for random C0.
+    w, c0 = data(7, spread=2.0)
+    cfg = kmeans.KMeansConfig(method="idkm", max_iter=50)
+    wq, c_star, _ = kmeans.solve_and_quantize(w, c0, TAU, cfg)
+    before = float(jnp.sum((ref.soft_quantize(w, c0, TAU) - w) ** 2))
+    after = float(jnp.sum((wq - w) ** 2))
+    assert after < before
+
+
+def test_tau_is_runtime_operand():
+    # Same jitted function, different tau values: no retrace errors, and
+    # larger tau gives softer assignments (higher entropy).
+    w, c0 = data(8)
+    cfg = kmeans.KMeansConfig(method="idkm", max_iter=40)
+    f = jax.jit(lambda w, c0, tau: kmeans.solve(w, c0, tau, cfg)[0])
+    c_sharp = f(w, c0, jnp.float32(1e-4))
+    c_soft = f(w, c0, jnp.float32(1.0))
+    a_sharp = ref.attention(ref.pairwise_distance(w, c_sharp), 1e-4)
+    a_soft = ref.attention(ref.pairwise_distance(w, c_soft), 1.0)
+    ent = lambda a: float(-jnp.mean(jnp.sum(a * jnp.log(a + 1e-12), axis=-1)))
+    assert ent(a_soft) > ent(a_sharp)

@@ -1,0 +1,94 @@
+"""Model zoo contracts: shapes, param accounting, clusterability (every
+clustered parameter divisible by d in {1,2,4}), and the AOT flattening
+order that the rust coordinator depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+
+
+@pytest.mark.parametrize(
+    "name,kwargs",
+    [("convnet2", {}), ("mlp", {}), ("resnet18", {"width": 8}), ("resnet18", {"width": 16})],
+)
+def test_apply_shapes(name, kwargs):
+    spec = models.build(name, **kwargs)
+    params = models.init_params(spec, 0)
+    assert len(params) == len(spec.params)
+    x = jnp.zeros((3, *spec.input_shape), jnp.float32)
+    logits = spec.apply(params, x)
+    assert logits.shape == (3, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize(
+    "name,kwargs", [("convnet2", {}), ("mlp", {}), ("resnet18", {"width": 16})]
+)
+def test_clustered_divisible_by_paper_ds(name, kwargs):
+    spec = models.build(name, **kwargs)
+    for p in spec.params:
+        if p.clustered:
+            for d in (1, 2, 4):
+                assert p.size % d == 0, (p.name, p.size, d)
+
+
+def test_convnet2_is_paper_scale():
+    # paper §5.1: "2-layer convolutional neural network with 2158 parameters"
+    spec = models.build("convnet2")
+    assert 1500 <= spec.total_params <= 2500, spec.total_params
+    # exactly two conv layers + linear head are clustered
+    assert len(spec.clustered_indices()) == 3
+
+
+def test_resnet18_structure():
+    spec = models.build("resnet18", width=16)
+    names = [p.name for p in spec.params]
+    # 8 BasicBlocks -> s0b0..s3b1
+    for s in range(4):
+        for b in range(2):
+            assert f"s{s}b{b}/conv1/w" in names
+            assert f"s{s}b{b}/conv2/w" in names
+    # downsample projections only where stride/width changes
+    assert "s1b0/proj/w" in names
+    assert "s0b0/proj/w" not in names
+    # full-width model is the paper's 11.2M-param network
+    full = models.build("resnet18", width=64)
+    assert 10_500_000 <= full.total_params <= 11_500_000, full.total_params
+
+
+def test_init_statistics():
+    spec = models.build("convnet2")
+    params = models.init_params(spec, 0)
+    for p, spec_p in zip(params, spec.params):
+        if spec_p.clustered:
+            std = float(jnp.std(p))
+            expect = float(np.sqrt(2.0 / spec_p.fan_in))
+            assert 0.5 * expect < std < 1.5 * expect, spec_p.name
+        elif spec_p.name.endswith("_s"):
+            assert bool(jnp.all(p == 1.0))
+        else:
+            assert bool(jnp.all(p == 0.0))
+
+
+def test_model_is_differentiable():
+    spec = models.build("resnet18", width=8)
+    params = models.init_params(spec, 1)
+    x = jnp.ones((2, *spec.input_shape), jnp.float32)
+
+    def loss(params):
+        return jnp.sum(spec.apply(params, x) ** 2)
+
+    grads = jax.grad(loss)(params)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in grads)
+    # every clustered parameter receives gradient signal
+    for g, p in zip(grads, spec.params):
+        if p.clustered:
+            assert float(jnp.max(jnp.abs(g))) > 0.0, p.name
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(KeyError):
+        models.build("alexnet")

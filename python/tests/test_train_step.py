@@ -1,0 +1,165 @@
+"""AOT program semantics: QAT step, pretrain step, eval programs.
+
+These test the *programs* that get lowered to HLO: training on a fixed batch
+reduces loss, QAT carries codebooks as warm-started state, eval counts are
+bounded, and the flat I/O contract (lengths and order) matches what the
+manifest promises the rust coordinator.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, train_step
+from compile.train_step import QATConfig
+
+
+def batch(cfg, seed=0):
+    spec = cfg.model_spec()
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(cfg.batch, *spec.input_shape)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(cfg.batch,)).astype(np.int32))
+    return x, y
+
+
+def init_state(cfg, seed=0):
+    spec = cfg.model_spec()
+    params = models.init_params(spec, seed)
+    cbs = [
+        train_step.init_codebook(params[i].ravel(), cfg.k, cfg.d)
+        for i in spec.clustered_indices()
+    ]
+    return params, cbs
+
+
+CFG = QATConfig(model="convnet2", k=4, d=1, method="idkm", batch=16, max_iter=15, lr=1e-2)
+
+
+def test_qat_step_io_contract():
+    step, ins, outs = train_step.make_qat_step(CFG)
+    spec = CFG.model_spec()
+    n, c = len(spec.params), len(spec.clustered_indices())
+    assert len(ins) == n + c + 3  # params, codebooks, x, y, tau
+    assert [nm for nm, _ in ins[-3:]] == ["x", "y", "tau"]
+    assert len(outs) == n + c + 2  # params', codebooks', loss, mean_iters
+    params, cbs = init_state(CFG)
+    x, y = batch(CFG)
+    out = jax.jit(step)(*params, *cbs, x, y, jnp.float32(5e-4))
+    assert len(out) == len(outs)
+    for o, (_, spec_in) in zip(out[:n], ins[:n]):
+        assert o.shape == spec_in.shape
+
+
+@pytest.mark.parametrize("method", ["dkm", "idkm", "idkm_jfb"])
+def test_qat_overfits_fixed_batch(method):
+    # Repeated QAT steps on one batch must reduce the quantized loss — the
+    # end-to-end signal that gradients flow through the clustering layer.
+    cfg = CFG._replace(method=method, lr=5e-2)
+    step = jax.jit(train_step.make_qat_step(cfg)[0])
+    params, cbs = init_state(cfg)
+    x, y = batch(cfg)
+    n, c = len(params), len(cbs)
+    first = None
+    last = None
+    for i in range(12):
+        out = step(*params, *cbs, x, y, jnp.float32(5e-3))
+        params = list(out[:n])
+        cbs = list(out[n : n + c])
+        loss = float(out[n + c])
+        if first is None:
+            first = loss
+        last = loss
+    assert last < first * 0.9, f"{method}: {first} -> {last}"
+
+
+def test_qat_codebooks_are_updated_and_finite():
+    step = jax.jit(train_step.make_qat_step(CFG)[0])
+    params, cbs = init_state(CFG)
+    x, y = batch(CFG)
+    n, c = len(params), len(cbs)
+    out = step(*params, *cbs, x, y, jnp.float32(5e-4))
+    new_cbs = out[n : n + c]
+    for old, new in zip(cbs, new_cbs):
+        assert bool(jnp.all(jnp.isfinite(new)))
+        assert not bool(jnp.allclose(old, new))  # clustering moved the centers
+
+
+def test_eval_quant_counts_bounded():
+    ev = jax.jit(train_step.make_eval_quant(CFG)[0])
+    params, cbs = init_state(CFG)
+    x, y = batch(CFG)
+    correct, loss = ev(*params, *cbs, x, y)
+    assert 0 <= int(correct) <= CFG.batch
+    assert float(loss) > 0.0
+
+
+def test_eval_float_beats_random_after_pretraining():
+    cfg = CFG._replace(lr=0.0)  # lr unused by pretrain builder default
+    pre = jax.jit(train_step.make_pretrain_step(cfg, lr=0.1, momentum=0.9)[0])
+    ev = jax.jit(train_step.make_eval_float(cfg)[0])
+    params, _ = init_state(cfg, seed=1)
+    vels = [jnp.zeros_like(p) for p in params]
+    # learnable batch: class-dependent mean intensity + noise (a tiny conv
+    # net with global average pooling can separate these quickly; pure
+    # noise-to-random-label fitting would need far more capacity/steps).
+    rng = np.random.default_rng(2)
+    y = jnp.asarray(rng.integers(0, 10, size=(cfg.batch,)).astype(np.int32))
+    base = (np.asarray(y, dtype=np.float32) / 10.0 - 0.5)[:, None, None, None]
+    x = jnp.asarray(
+        base + 0.05 * rng.normal(size=(cfg.batch, 28, 28, 1)).astype(np.float32)
+    )
+    n = len(params)
+    for _ in range(60):
+        out = pre(*params, *vels, x, y)
+        params = list(out[:n])
+        vels = list(out[n : 2 * n])
+    correct, _ = ev(*params, x, y)
+    # overfit a 16-example batch: should classify most of it
+    assert int(correct) >= 12, int(correct)
+
+
+def test_pretrain_reduces_loss():
+    pre = jax.jit(train_step.make_pretrain_step(CFG, lr=0.05)[0])
+    params, _ = init_state(CFG, seed=3)
+    vels = [jnp.zeros_like(p) for p in params]
+    x, y = batch(CFG, seed=4)
+    n = len(params)
+    losses = []
+    for _ in range(10):
+        out = pre(*params, *vels, x, y)
+        params = list(out[:n])
+        vels = list(out[n : 2 * n])
+        losses.append(float(out[2 * n]))
+    assert losses[-1] < losses[0]
+
+
+def test_cluster_grad_probe_outputs():
+    probe, ins, outs = train_step.make_cluster_grad(256, 4, 1, "idkm", 20)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(256, 1)).astype(np.float32))
+    c0 = jnp.asarray(rng.normal(size=(4, 1)).astype(np.float32))
+    v = jnp.ones((4, 1), jnp.float32)
+    c_star, dw, iters = jax.jit(probe)(w, c0, v, jnp.float32(5e-3))
+    assert c_star.shape == (4, 1)
+    assert dw.shape == (256, 1)
+    assert bool(jnp.all(jnp.isfinite(dw)))
+    assert 1 <= int(iters) <= 20
+    # dw = d<v, C*>/dW: column sums of dC*/dW weighted by v=1; the total
+    # attention mass is conserved so sum(dw) ~ sum over centers of d(mean)=1.
+    assert float(jnp.abs(jnp.sum(dw))) < 10.0
+
+
+def test_divisibility_guard():
+    cfg = CFG._replace(d=5)  # conv1 has 72 elements; 72 % 5 != 0
+    with pytest.raises(ValueError):
+        train_step.codebook_shapes(cfg.model_spec(), cfg.k, cfg.d)
+
+
+def test_init_codebook_within_data_range():
+    w = jnp.asarray(np.linspace(-2, 2, 128, dtype=np.float32))
+    cb = train_step.init_codebook(w, 4, 1)
+    assert cb.shape == (4, 1)
+    assert float(jnp.min(cb)) >= -2.0 and float(jnp.max(cb)) <= 2.0
+    # spread across the sorted range
+    assert float(cb[0, 0]) < float(cb[-1, 0])

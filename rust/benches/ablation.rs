@@ -1,0 +1,74 @@
+//! E5 ablations: the design choices DESIGN.md calls out.
+//!
+//! (a) backward-solver budget: IDKM with bwd_max_iter in {1, 5, 20, 60} —
+//!     bwd=1 should behave like JFB, bwd=60 like the exact implicit
+//!     gradient; accuracy and step time trade off accordingly.
+//! (b) PTQ-vs-QAT: cluster-once-and-snap (Han et al.) against trained
+//!     quantization at the same (k, d) — the motivation for DKM-family
+//!     methods in the first place.
+//! (c) temperature: constant tau = 5e-4 (paper) vs the §6 annealing
+//!     extension.
+
+mod common;
+
+use idkm::coordinator::{config::TauSchedule, Trainer};
+use idkm::quant::ptq;
+use idkm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    common::banner("E5 — ablations (bench scale)");
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let mut cfg = common::bench_config("table1")?;
+    cfg.qat_steps = common::env_usize("IDKM_BENCH_QAT_STEPS", 40);
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let trainer = Trainer::new(&runtime, &cfg);
+
+    // (a) backward budget sweep
+    println!("\n-- (a) IDKM backward-solver budget (k=4, d=1) --");
+    println!("| bwd_max_iter | quant acc | s/step |");
+    println!("|---|---|---|");
+    for bwd in [1usize, 5, 20, 60] {
+        let artifact = format!("convnet2_qat_k4d1_idkm_bwd{bwd}");
+        if runtime.manifest.get(&artifact).is_err() {
+            continue;
+        }
+        let cell = trainer.qat_cell_with_artifact(4, 1, "idkm", &artifact)?;
+        println!("| {bwd} | {:.4} | {:.3} |", cell.quant_acc, cell.secs_per_step);
+        runtime.evict(&artifact);
+    }
+
+    // (b) PTQ vs QAT at (k=2, d=1) — the regime where retraining matters most
+    println!("\n-- (b) PTQ (cluster-once) vs QAT (k=2, d=1) --");
+    let params = trainer.load_or_pretrain()?;
+    let info = runtime.load(&cfg.pretrain_artifact())?.info.clone();
+    let layers: Vec<(String, idkm::tensor::Tensor, bool)> = info
+        .params
+        .iter()
+        .zip(&params)
+        .map(|(s, t)| (s.name.clone(), t.clone(), s.clustered))
+        .collect();
+    let (_, quantized, rep) = ptq::quantize_model(&layers, 2, 1, 50, cfg.seed)?;
+    let ptq_acc = trainer.eval_float(&quantized)?;
+    let qat_cell = trainer.qat_cell(2, 1, "idkm")?;
+    println!(
+        "PTQ acc {:.4} vs QAT(idkm) acc {:.4} (float {:.4}, compress {:.1}x)",
+        ptq_acc, qat_cell.quant_acc, qat_cell.float_acc, rep.ratio_fixed()
+    );
+    println!("shape: QAT >= PTQ expected: {}", qat_cell.quant_acc >= ptq_acc);
+
+    // (c) tau annealing extension
+    println!("\n-- (c) temperature: constant 5e-4 vs annealed 5e-2 -> 5e-4 --");
+    let const_cell = trainer.qat_cell(4, 1, "idkm")?;
+    let mut anneal_cfg = cfg.clone();
+    anneal_cfg.tau = TauSchedule::Anneal { from: 5e-2, to: 5e-4 };
+    let anneal_trainer = Trainer::new(&runtime, &anneal_cfg);
+    let anneal_cell = anneal_trainer.qat_cell(4, 1, "idkm")?;
+    println!(
+        "constant tau acc {:.4} vs annealed acc {:.4}",
+        const_cell.quant_acc, anneal_cell.quant_acc
+    );
+    Ok(())
+}

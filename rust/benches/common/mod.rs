@@ -1,0 +1,41 @@
+//! Shared bench scaffolding (criterion is not vendored; each bench is a
+//! `harness = false` binary that prints the paper-table rows it reproduces).
+//!
+//! Env knobs so `cargo bench` stays tractable while full runs remain one
+//! variable away:
+//!   IDKM_BENCH_QAT_STEPS       per-cell QAT steps (default 60)
+//!   IDKM_BENCH_PRETRAIN_STEPS  pretraining steps (default: preset value)
+//!   IDKM_BENCH_GRID_LIMIT      max (k,d) cells (default: all)
+
+use idkm::coordinator::ExperimentConfig;
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Preset scaled by bench env knobs.
+pub fn bench_config(preset: &str) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::preset(preset)?;
+    cfg.qat_steps = env_usize("IDKM_BENCH_QAT_STEPS", 60);
+    cfg.pretrain_steps = env_usize("IDKM_BENCH_PRETRAIN_STEPS", cfg.pretrain_steps);
+    let limit = env_usize("IDKM_BENCH_GRID_LIMIT", cfg.grid.len());
+    cfg.grid.truncate(limit);
+    cfg.eval_every = usize::MAX; // quiet step logs inside benches
+    Ok(cfg)
+}
+
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Benches only run meaningfully with artifacts present.
+pub fn require_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        println!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    ok
+}

@@ -1,0 +1,51 @@
+//! E4 / paper §3.3: the memory-complexity claim, measured three ways.
+//!
+//! For the m = 65536, k = 4, d = 1 clustering layer:
+//!   analytic tape model   O(t·m·2^b) for DKM vs O(m·2^b) for IDKM/JFB
+//!   XLA buffer assignment temp bytes of each compiled cluster_grad probe
+//!   process RSS           measured around executions
+//! plus backward wall-clock (JFB's O(1)-in-t backward, paper §4.3).
+
+mod common;
+
+use idkm::coordinator::{memory_probe, report};
+use idkm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    common::banner("E4 — memory complexity: DKM O(t·m·2^b) vs IDKM O(m·2^b)");
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let runtime = Runtime::new("artifacts")?;
+    let repeats = common::env_usize("IDKM_BENCH_REPEATS", 3);
+    let rows = memory_probe::run_probes(&runtime, repeats)?;
+    println!("{}", report::render_memory_table(&rows));
+
+    // shape checks
+    let dkm: Vec<_> = rows.iter().filter(|r| r.method == "dkm").collect();
+    let grows = dkm.windows(2).all(|w| w[1].xla_temp_bytes > w[0].xla_temp_bytes);
+    println!("shape: dkm XLA temp strictly increasing in t: {grows}");
+    if let (Some(d30), Some(i30)) = (
+        dkm.iter().find(|r| r.t == 30),
+        rows.iter().find(|r| r.method == "idkm" && r.t == 30),
+    ) {
+        println!(
+            "shape: at t=30, dkm/idkm XLA temp ratio = {:.1}x (tape model {:.1}x)",
+            d30.xla_temp_bytes as f64 / i30.xla_temp_bytes as f64,
+            d30.model_bytes as f64 / i30.model_bytes as f64
+        );
+    }
+    if let (Some(idkm), Some(jfb)) = (
+        rows.iter().find(|r| r.method == "idkm"),
+        rows.iter().find(|r| r.method == "idkm_jfb"),
+    ) {
+        println!(
+            "shape: backward time idkm {:.3}s vs jfb {:.3}s (jfb faster: {})",
+            idkm.grad_secs,
+            jfb.grad_secs,
+            jfb.grad_secs < idkm.grad_secs
+        );
+    }
+    Ok(())
+}

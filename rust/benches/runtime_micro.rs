@@ -1,0 +1,149 @@
+//! Runtime microbenchmarks: the L3 hot-path pieces in isolation.
+//!
+//! * executor round-trip latency (smallest eval artifact, steady state)
+//! * host->literal staging throughput for a resnet-sized parameter set
+//! * data-loader batch synthesis throughput (SynthMNIST / SynthCIFAR)
+//! * host Lloyd k-means (warm-start path) on a 700k-element layer
+//!
+//! These bound how much of a QAT step is coordinator overhead vs XLA
+//! compute — EXPERIMENTS.md §Perf tracks them before/after optimization.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use idkm::data::{self, loader, Split};
+use idkm::quant::kmeans::lloyd;
+use idkm::runtime::{Runtime, Value};
+use idkm::tensor::{init, Tensor};
+use idkm::util::rng::Rng;
+
+fn time_it(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // warm-up
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<44} {:>10.3} ms/iter ({iters} iters)", per * 1e3);
+    per
+}
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    common::banner("runtime microbenchmarks");
+
+    // loader throughput (no artifacts needed)
+    let ds: Arc<dyn data::Dataset> = Arc::from(data::build("synthmnist", 0)?);
+    let mnist_batch = time_it("synthmnist batch synth (128)", 20, || {
+        let idx: Vec<u64> = (0..128).collect();
+        let b = data::make_batch(ds.as_ref(), Split::Train, &idx);
+        std::hint::black_box(b);
+    });
+    let ds2: Arc<dyn data::Dataset> = Arc::from(data::build("synthcifar", 0)?);
+    time_it("synthcifar batch synth (64)", 20, || {
+        let idx: Vec<u64> = (0..64).collect();
+        let b = data::make_batch(ds2.as_ref(), Split::Train, &idx);
+        std::hint::black_box(b);
+    });
+
+    // prefetching loader steady-state
+    {
+        let loader = loader::Loader::spawn(
+            Arc::clone(&ds),
+            loader::LoaderConfig {
+                batch_size: 128,
+                prefetch: 4,
+                max_batches: Some(64),
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        let mut n = 0;
+        while loader.next().is_some() {
+            n += 1;
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "{:<44} {:>10.3} ms/iter (overlap vs {:.3} ms sync)",
+            "loader.next() steady state (128)",
+            per * 1e3,
+            mnist_batch * 1e3
+        );
+    }
+
+    // host k-means warm start on a resnet-scale layer
+    let mut rng = Rng::new(7);
+    let w: Vec<f32> = (0..294_912).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    time_it("host lloyd k=16 d=4 (73k subvectors)", 3, || {
+        let mut r2 = Rng::new(3);
+        let res = lloyd(&w, 4, 16, 10, &mut r2);
+        std::hint::black_box(res);
+    });
+
+    // literal staging: the old double-copy path (vec1 + reshape) vs the
+    // single-copy path now used by the runtime (§Perf L3 before/after).
+    {
+        let n = 1 << 20;
+        let t = Tensor::from_fn(&[1024, 1024], |i| i as f32);
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        time_it("literal staging 1M f32 (double copy, old)", 50, || {
+            let lit = xla::Literal::vec1(t.data()).reshape(&dims).unwrap();
+            std::hint::black_box(lit);
+        });
+        time_it("literal staging 1M f32 (single copy, new)", 50, || {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, n * 4)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                t.shape(),
+                bytes,
+            )
+            .unwrap();
+            std::hint::black_box(lit);
+        });
+    }
+
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let runtime = Runtime::new("artifacts")?;
+
+    // executor round-trip on the tiny eval program
+    let exe = runtime.load("convnet2_eval_float")?;
+    let params = init::init_params(&exe.info.params, 0);
+    let batch = exe.info.batch.unwrap();
+    let idx: Vec<u64> = (0..batch as u64).collect();
+    let b = data::make_batch(ds.as_ref(), Split::Test, &idx);
+    let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+    args.push(Value::F32(b.x.clone()));
+    args.push(Value::I32(b.y.clone()));
+    time_it("convnet2_eval_float exec round-trip", 30, || {
+        let out = exe.run(&args).unwrap();
+        std::hint::black_box(out);
+    });
+
+    // literal staging cost for a resnet-sized parameter set
+    let rn = runtime
+        .manifest
+        .artifacts
+        .values()
+        .find(|a| a.kind == "pretrain_step" && a.model.as_deref().map(|m| m.starts_with("resnet")).unwrap_or(false))
+        .cloned();
+    if let Some(info) = rn {
+        let params = init::init_params(&info.params, 0);
+        let total: usize = params.iter().map(Tensor::len).sum();
+        time_it(
+            &format!("tensor clone+stage {} params ({:.1}M elems)", params.len(), total as f64 / 1e6),
+            10,
+            || {
+                let vals: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+                std::hint::black_box(vals);
+            },
+        );
+    }
+    Ok(())
+}

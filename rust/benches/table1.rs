@@ -1,0 +1,44 @@
+//! E1 / paper Table 1: top-1 accuracy of the quantized 2-layer convnet,
+//! (k, d) in {(8,1),(4,1),(2,1),(2,2),(4,2)} x {DKM, IDKM, IDKM-JFB}.
+//!
+//! Bench-scale by default (IDKM_BENCH_QAT_STEPS); the full run is
+//! `idkm sweep --preset table1`. Expected shape: IDKM ~= DKM at equal
+//! settings, IDKM-JFB slightly below; all recover most float accuracy at
+//! k=8, degrade toward k=2/d=2 (the half-bit regime).
+
+mod common;
+
+use idkm::coordinator::{report, Sweep};
+use idkm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    common::banner("Table 1 — convnet2 quantized top-1 (bench scale)");
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let cfg = common::bench_config("table1")?;
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let sweep = Sweep::new(&runtime, &cfg, "bench_table1");
+    let t0 = std::time::Instant::now();
+    let cells = sweep.run()?;
+    println!("{}", report::render_table1(&cells, &cfg.methods));
+    // shape check: idkm within a few points of dkm per cell
+    let mut max_gap: f64 = 0.0;
+    for &(k, d) in &cfg.grid {
+        let get = |m: &str| {
+            cells
+                .iter()
+                .find(|c| c.k == k && c.d == d && c.method == m)
+                .map(|c| c.quant_acc)
+        };
+        if let (Some(a), Some(b)) = (get("dkm"), get("idkm")) {
+            max_gap = max_gap.max((a - b).abs());
+        }
+    }
+    println!(
+        "shape: max |dkm - idkm| accuracy gap = {max_gap:.4} (paper's gap <= 0.03)\ntotal {}",
+        idkm::util::human_secs(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! E2 / paper Table 2: wall-clock per method across the compression grid.
+//!
+//! Measures steady-state seconds/step of each method's QAT executable
+//! (identical state, identical batches — only the differentiation strategy
+//! differs) and projects to the paper's 100-unit budget. Expected shape:
+//! IDKM-JFB <= IDKM < DKM (the paper's striking result that the implicit
+//! solve is *faster* than backprop through the clustering tape).
+
+mod common;
+
+use idkm::coordinator::{report, Sweep};
+use idkm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    common::banner("Table 2 — wall-clock per method (bench scale)");
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let mut cfg = common::bench_config("table1")?;
+    // timing-focused: fewer steps, but enough to amortize warm-up
+    cfg.qat_steps = common::env_usize("IDKM_BENCH_QAT_STEPS", 40);
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let sweep = Sweep::new(&runtime, &cfg, "bench_table2");
+    let cells = sweep.run()?;
+    println!("{}", report::render_table2(&cells, &cfg.methods));
+
+    // shape check per (k, d): dkm slowest on average
+    let mut dkm_wins = 0usize;
+    let mut total = 0usize;
+    for &(k, d) in &cfg.grid {
+        let get = |m: &str| {
+            cells
+                .iter()
+                .find(|c| c.k == k && c.d == d && c.method == m)
+                .map(|c| c.secs_per_step)
+        };
+        if let (Some(dkm), Some(idkm), Some(jfb)) = (get("dkm"), get("idkm"), get("idkm_jfb")) {
+            total += 1;
+            if dkm >= idkm && dkm >= jfb {
+                dkm_wins += 1;
+            }
+        }
+    }
+    println!("shape: dkm slowest in {dkm_wins}/{total} grid cells (paper: all)");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! E3 / paper Table 3: ResNet18 quantization where DKM cannot train.
+//!
+//! Runs the (k, d) grid with IDKM / IDKM-JFB under the width-scaled memory
+//! budget (DESIGN.md §3), then demonstrates the two DKM facts the paper's
+//! caption reports: (a) the uncapped DKM configuration exceeds the budget
+//! (OOM verdict), (b) the t-capped (t=5) DKM probe runs but stays at chance.
+
+mod common;
+
+use idkm::coordinator::{report, CellStatus, Sweep, Trainer};
+use idkm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    idkm::util::log::init_from_env();
+    common::banner("Table 3 — resnet18 quantization (bench scale)");
+    if !common::require_artifacts() {
+        return Ok(());
+    }
+    let mut cfg = common::bench_config("table3")?;
+    cfg.qat_steps = common::env_usize("IDKM_BENCH_QAT_STEPS", 30);
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    let sweep = Sweep::new(&runtime, &cfg, "bench_table3");
+    let mut cells = sweep.run()?;
+
+    // (a) DKM at full iterations: blocked by the budget gate.
+    let trainer = Trainer::new(&runtime, &cfg);
+    let mut dkm_cfg = cfg.clone();
+    dkm_cfg.methods = vec!["dkm".into()];
+    let gate = idkm::memory::Budget { bytes: cfg.budget_bytes }.check(
+        &runtime.manifest.get(&cfg.qat_artifact(4, 1, "idkm"))?.params,
+        4,
+        1,
+        30,
+        "dkm",
+    );
+    println!(
+        "DKM t=30 verdict: required {} vs budget {} -> {} (max feasible t = {})",
+        idkm::util::human_bytes(gate.required),
+        idkm::util::human_bytes(gate.budget),
+        if gate.fits { "fits" } else { "OOM" },
+        gate.max_t
+    );
+
+    // (b) the capped probe (t = 5, the paper's own cap) runs but cannot learn.
+    let probe = format!("resnet18w{}_qat_k4d1_dkm_t5", runtime.manifest.resnet_width);
+    if runtime.manifest.get(&probe).is_ok() {
+        let cell = trainer.qat_cell_with_artifact(4, 1, "dkm", &probe)?;
+        if cell.status == CellStatus::Ok {
+            println!(
+                "DKM t=5 probe: quant-acc {:.4} (chance = 0.1, float = {:.4}) — \
+                 'never outperforms random' when {:.4} - 0.1 is small",
+                cell.quant_acc, cell.float_acc, cell.quant_acc
+            );
+        }
+        cells.push(cell);
+    }
+
+    println!("{}", report::render_table3(&cells, &["idkm".into(), "idkm_jfb".into()]));
+    Ok(())
+}

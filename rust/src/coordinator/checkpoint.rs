@@ -1,0 +1,217 @@
+//! Checkpoint format: named f32 tensors in a single file.
+//!
+//! Layout: `ICKP` magic, u32 version, u64 JSON-header length, JSON header
+//! (`{"tensors": [{"name", "shape", "offset", "len"}]}`), then the raw
+//! little-endian f32 payload. Self-describing, append-free, mmap-friendly.
+//! Used for pretrained weights, QAT state (params + codebooks), and sweep
+//! resume points.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+
+const MAGIC: &[u8; 4] = b"ICKP";
+const VERSION: u32 = 1;
+
+/// An ordered collection of named tensors.
+#[derive(Debug, Default, Clone)]
+pub struct Checkpoint {
+    entries: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        self.entries.push((name.into(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, Tensor)> {
+        self.entries.iter()
+    }
+
+    /// Tensors with a given name prefix, in insertion order, prefix stripped.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<(&str, &Tensor)> {
+        self.entries
+            .iter()
+            .filter_map(|(n, t)| n.strip_prefix(prefix).map(|rest| (rest, t)))
+            .collect()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut offset = 0u64;
+        let mut metas = Vec::new();
+        for (name, t) in &self.entries {
+            let len = t.len() as u64;
+            metas.push(obj(vec![
+                ("name", Json::from(name.as_str())),
+                (
+                    "shape",
+                    Json::Arr(t.shape().iter().map(|&d| Json::from(d)).collect()),
+                ),
+                ("offset", Json::from(offset as usize)),
+                ("len", Json::from(len as usize)),
+            ]));
+            offset += len;
+        }
+        let header = obj(vec![("tensors", Json::Arr(metas))]).to_string_pretty();
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in &self.entries {
+            for v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not an ICKP checkpoint");
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let version = u32::from_le_bytes(u32buf);
+        if version != VERSION {
+            bail!("{path:?}: unsupported checkpoint version {version}");
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let hlen = u64::from_le_bytes(u64buf) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("{path:?} header: {e}"))?;
+
+        // Read the full payload, then slice per tensor.
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        let floats: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut entries = Vec::new();
+        let metas = header
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: header missing tensors[]"))?;
+        for m in metas {
+            let name = m
+                .str_of("name")
+                .ok_or_else(|| anyhow::anyhow!("tensor missing name"))?
+                .to_string();
+            let shape: Vec<usize> = m
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            let off = m.usize_of("offset").unwrap_or(0);
+            let len = m.usize_of("len").unwrap_or(0);
+            if off + len > floats.len() {
+                bail!("{path:?}: tensor {name} extends past payload");
+            }
+            entries.push((name, Tensor::new(&shape, floats[off..off + len].to_vec())));
+        }
+        Ok(Self { entries })
+    }
+
+    /// Extra metadata as a sibling JSON file (step counts, metrics, config).
+    pub fn save_meta(path: impl AsRef<Path>, meta: &BTreeMap<String, Json>) -> Result<()> {
+        let p = path.as_ref().with_extension("meta.json");
+        std::fs::write(&p, Json::Obj(meta.clone()).to_string_pretty())
+            .with_context(|| format!("writing {p:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("idkm_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let mut ck = Checkpoint::new();
+        ck.push("param:w", Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        ck.push("param:b", Tensor::new(&[3], vec![-1., 0., 1.]));
+        ck.push("codebook:w", Tensor::new(&[4, 1], vec![0.1, 0.2, 0.3, 0.4]));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("param:w"), ck.get("param:w"));
+        assert_eq!(back.get("codebook:w"), ck.get("codebook:w"));
+        assert_eq!(back.names(), ck.names());
+    }
+
+    #[test]
+    fn prefix_query_preserves_order() {
+        let mut ck = Checkpoint::new();
+        ck.push("param:a", Tensor::zeros(&[1]));
+        ck.push("codebook:a", Tensor::zeros(&[2]));
+        ck.push("param:b", Tensor::zeros(&[3]));
+        let params = ck.with_prefix("param:");
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].0, "a");
+        assert_eq!(params[1].0, "b");
+        assert_eq!(params[1].1.shape(), &[3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("idkm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let dir = std::env::temp_dir().join("idkm_ckpt_test");
+        let path = dir.join("empty.ckpt");
+        Checkpoint::new().save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert!(back.is_empty());
+    }
+}

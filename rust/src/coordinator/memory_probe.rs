@@ -1,0 +1,72 @@
+//! E4 driver: execute the standalone `cluster_grad_*` probes and collect the
+//! three memory sources of truth (tape model, XLA buffer stats, measured
+//! RSS) plus backward wall-clock — the paper's §3.3 claim as a table.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::report::MemoryRow;
+use crate::memory::{peak_rss_bytes, TapeModel};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Run every `cluster_grad` artifact in the manifest; returns rows sorted by
+/// (method, t).
+pub fn run_probes(runtime: &Runtime, repeats: usize) -> Result<Vec<MemoryRow>> {
+    let infos: Vec<_> = runtime
+        .manifest
+        .by_kind("cluster_grad")
+        .into_iter()
+        .cloned()
+        .collect();
+    let mut rows = Vec::new();
+    for info in infos {
+        let method = info.method.clone().context("probe missing method")?;
+        let t = info.max_iter.context("probe missing max_iter")?;
+        let m = info.m.context("probe missing m")?;
+        let k = info.k.context("probe missing k")?;
+        let d = info.d.context("probe missing d")?;
+        let exe = runtime.load(&info.name)?;
+
+        let mut rng = Rng::new(0xE4);
+        let w = Tensor::from_fn(&[m, d], |_| rng.normal_f32(0.0, 1.0));
+        let c0 = Tensor::from_fn(&[k, d], |_| rng.normal_f32(0.0, 1.0));
+        let v = Tensor::from_fn(&[k, d], |_| rng.normal_f32(0.0, 1.0));
+        let tau = Tensor::scalar(5e-3);
+
+        let args = vec![
+            Value::F32(w),
+            Value::F32(c0),
+            Value::F32(v),
+            Value::F32(tau),
+        ];
+        // Warm-up (allocators, compilation already done at load).
+        exe.run(&args)?;
+        let rss_before = peak_rss_bytes();
+        let t0 = std::time::Instant::now();
+        for _ in 0..repeats.max(1) {
+            let out = exe.run(&args)?;
+            // dw must be finite — the probe is also a correctness check.
+            let dw = out[1].as_f32()?;
+            anyhow::ensure!(
+                dw.data().iter().all(|x| x.is_finite()),
+                "{}: non-finite gradient",
+                info.name
+            );
+        }
+        let grad_secs = t0.elapsed().as_secs_f64() / repeats.max(1) as f64;
+        let rss_delta = peak_rss_bytes() as i64 - rss_before as i64;
+
+        rows.push(MemoryRow {
+            method: method.clone(),
+            t,
+            model_bytes: TapeModel::new(m, d, k, t).bytes_for(&method),
+            xla_temp_bytes: info.memory.temp_bytes,
+            measured_rss_delta: rss_delta,
+            grad_secs,
+        });
+        runtime.evict(&info.name);
+    }
+    rows.sort_by(|a, b| (a.method.clone(), a.t).cmp(&(b.method.clone(), b.t)));
+    Ok(rows)
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: experiment configuration, checkpointing, the training
+//! pipeline driver (pretrain → QAT → eval), sweep orchestration, and report
+//! generation. See DESIGN.md §2 (L3) and §4 (experiment index).
+
+pub mod checkpoint;
+pub mod memory_probe;
+pub mod config;
+pub mod report;
+pub mod sweep;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::{ExperimentConfig, TauSchedule};
+pub use sweep::Sweep;
+pub use trainer::{CellResult, CellStatus, PretrainResult, Trainer};

@@ -1,0 +1,138 @@
+//! Sweep runner: executes the (k, d) x method grid of one experiment,
+//! collects per-cell results, and writes the report + JSON audit trail.
+//!
+//! Cells run sequentially on the single PJRT CPU client (the executables
+//! themselves parallelize internally via XLA's intra-op thread pool; data
+//! loading overlaps via the loader threads). Completed cells are
+//! checkpointed to `runs/<name>_cells.json` so an interrupted sweep resumes
+//! where it stopped.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::report;
+use crate::coordinator::trainer::{CellResult, Trainer};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+pub struct Sweep<'a> {
+    pub runtime: &'a Runtime,
+    pub cfg: &'a ExperimentConfig,
+    pub name: String,
+}
+
+impl<'a> Sweep<'a> {
+    pub fn new(runtime: &'a Runtime, cfg: &'a ExperimentConfig, name: impl Into<String>) -> Self {
+        Self { runtime, cfg, name: name.into() }
+    }
+
+    fn cells_path(&self) -> PathBuf {
+        self.cfg.runs_dir.join(format!("{}_cells.json", self.name))
+    }
+
+    /// Load previously completed cells (resume support).
+    fn load_done(&self) -> Vec<(usize, usize, String)> {
+        let Ok(text) = std::fs::read_to_string(self.cells_path()) else {
+            return Vec::new();
+        };
+        let Ok(json) = Json::parse(&text) else {
+            return Vec::new();
+        };
+        json.as_arr()
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|c| {
+                        Some((
+                            c.usize_of("k")?,
+                            c.usize_of("d")?,
+                            c.str_of("method")?.to_string(),
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Run every cell of the grid; returns all results (fresh + resumed are
+    /// re-run only if their JSON is missing).
+    pub fn run(&self) -> Result<Vec<CellResult>> {
+        std::fs::create_dir_all(&self.cfg.runs_dir)?;
+        let trainer = Trainer::new(self.runtime, self.cfg);
+
+        // Ensure the pretrained checkpoint exists once, up front.
+        trainer.load_or_pretrain()?;
+
+        let done = self.load_done();
+        let mut cells: Vec<CellResult> = Vec::new();
+        let total = self.cfg.grid.len() * self.cfg.methods.len();
+        let mut i = 0;
+        for &(k, d) in &self.cfg.grid {
+            for method in &self.cfg.methods {
+                i += 1;
+                if done.contains(&(k, d, method.clone())) {
+                    crate::info!("[{i}/{total}] skip {k},{d},{method} (already in {:?})", self.cells_path());
+                    continue;
+                }
+                crate::info!("[{i}/{total}] cell k={k} d={d} method={method}");
+                let cell = trainer
+                    .qat_cell(k, d, method)
+                    .with_context(|| format!("cell k={k} d={d} {method}"))?;
+                cells.push(cell);
+                // incremental audit trail
+                self.save(&cells)?;
+                // free the compiled program before the next big cell
+                self.runtime.evict(&self.cfg.qat_artifact(k, d, method));
+            }
+        }
+        Ok(cells)
+    }
+
+    pub fn save(&self, cells: &[CellResult]) -> Result<()> {
+        // Merge with cells already on disk (a resumed sweep holds only the
+        // fresh cells in memory; the file is the union, keyed by k/d/method).
+        let fresh = report::cells_to_json(cells);
+        let mut merged: Vec<Json> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(self.cells_path()) {
+            if let Ok(Json::Arr(existing)) = Json::parse(&text) {
+                let key = |c: &Json| {
+                    (
+                        c.usize_of("k").unwrap_or(0),
+                        c.usize_of("d").unwrap_or(0),
+                        c.str_of("method").unwrap_or("").to_string(),
+                    )
+                };
+                let fresh_keys: Vec<_> = fresh
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(key)
+                    .collect();
+                merged.extend(
+                    existing
+                        .into_iter()
+                        .filter(|c| !fresh_keys.contains(&key(c))),
+                );
+            }
+        }
+        merged.extend(fresh.as_arr().unwrap_or(&[]).iter().cloned());
+        std::fs::write(self.cells_path(), Json::Arr(merged).to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Render the experiment's tables (layout chosen by model family).
+    pub fn render(&self, cells: &[CellResult]) -> String {
+        let mut out = String::new();
+        if self.cfg.model_tag.starts_with("resnet") {
+            out.push_str(&format!("## Table 3 — {} ({})\n\n", self.cfg.model_tag, self.name));
+            out.push_str(&report::render_table3(cells, &self.cfg.methods));
+        } else {
+            out.push_str(&format!("## Table 1 — {} ({})\n\n", self.cfg.model_tag, self.name));
+            out.push_str(&report::render_table1(cells, &self.cfg.methods));
+            out.push_str(&format!("\n## Table 2 — time ({})\n\n", self.name));
+            out.push_str(&report::render_table2(cells, &self.cfg.methods));
+        }
+        out
+    }
+}

@@ -1,0 +1,455 @@
+//! The training coordinator: drives pretrain → QAT → eval pipelines over
+//! the AOT executables (paper algorithm 2 at the system level).
+//!
+//! The coordinator owns all state (weights, codebooks, optimizer velocity)
+//! as host tensors; each step stages one batch (prefetched by the data
+//! loader), assembles the artifact's flat argument list from the manifest
+//! signature, executes, and unpacks the outputs back into state. Python is
+//! never involved.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::ExperimentConfig;
+use crate::data::{self, loader, Batch, Split};
+use crate::memory::{rss_bytes, Budget};
+use crate::quant::kmeans::lloyd;
+use crate::quant::packing::{pack, CompressionReport};
+use crate::runtime::{ArtifactInfo, Executable, Runtime, Value, ValueRef};
+use crate::tensor::metrics::{Accuracy, Running, Series};
+use crate::tensor::{init, IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+/// Outcome of a pretraining run.
+#[derive(Debug, Clone)]
+pub struct PretrainResult {
+    pub steps: usize,
+    pub final_loss: f64,
+    pub eval_acc: f64,
+    pub loss_series: Series,
+    pub secs: f64,
+}
+
+/// Status of one sweep cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellStatus {
+    Ok,
+    /// Skipped: the memory model says the tape exceeds the device budget —
+    /// the paper's "DKM cannot train at all" row.
+    OverBudget { required: u64, budget: u64, max_t: usize },
+}
+
+/// Outcome of one QAT cell (one (k, d, method) configuration).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub k: usize,
+    pub d: usize,
+    pub method: String,
+    pub status: CellStatus,
+    pub quant_acc: f64,
+    pub float_acc: f64,
+    pub final_loss: f64,
+    pub mean_cluster_iters: f64,
+    pub secs_per_step: f64,
+    pub total_secs: f64,
+    /// projected seconds for the paper's 100-epoch budget (Table 2 shape)
+    pub secs_per_100: f64,
+    pub loss_series: Series,
+    pub compression_fixed: f64,
+    pub compression_huffman: f64,
+    pub bits_per_weight: f64,
+    pub rss_delta_bytes: i64,
+    /// analytic tape-model bytes for this configuration
+    pub model_bytes: u64,
+    /// XLA buffer-assignment bytes from the manifest
+    pub xla_temp_bytes: u64,
+}
+
+pub struct Trainer<'a> {
+    pub runtime: &'a Runtime,
+    pub cfg: &'a ExperimentConfig,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(runtime: &'a Runtime, cfg: &'a ExperimentConfig) -> Self {
+        Self { runtime, cfg }
+    }
+
+    // ------------------------------------------------------------------
+    // Pretraining
+    // ------------------------------------------------------------------
+
+    /// Train the float model from scratch and checkpoint it (the paper
+    /// quantizes *pretrained* networks).
+    pub fn pretrain(&self) -> Result<PretrainResult> {
+        let exe = self.runtime.load(&self.cfg.pretrain_artifact())?;
+        let info = exe.info.clone();
+        let batch_size = info.batch.context("pretrain artifact missing batch")?;
+        let ds: Arc<dyn data::Dataset> =
+            Arc::from(data::for_model(&self.cfg.model_tag, self.cfg.seed)?);
+        let loader = loader::Loader::spawn(
+            Arc::clone(&ds),
+            loader::LoaderConfig {
+                batch_size,
+                prefetch: 4,
+                seed: self.cfg.seed,
+                split: Split::Train,
+                max_batches: Some(self.cfg.pretrain_steps),
+                augment: self.cfg.augment,
+            },
+        );
+
+        let mut params = init::init_params(&info.params, self.cfg.seed);
+        let mut vels: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let mut losses = Series::default();
+        let mut acc = Accuracy::default();
+        let t0 = Instant::now();
+        let mut step = 0u64;
+        while let Some(batch) = loader.next() {
+            let mut args: Vec<ValueRef> = Vec::with_capacity(2 * params.len() + 2);
+            args.extend(params.iter().map(ValueRef::F32));
+            args.extend(vels.iter().map(ValueRef::F32));
+            args.push(ValueRef::F32(&batch.x));
+            args.push(ValueRef::I32(&batch.y));
+            let out = exe.run_borrowed(&args)?;
+            let n = params.len();
+            for (i, v) in out[..n].iter().enumerate() {
+                params[i] = v.as_f32()?.clone();
+            }
+            for (i, v) in out[n..2 * n].iter().enumerate() {
+                vels[i] = v.as_f32()?.clone();
+            }
+            let loss = out[2 * n].scalar_f32()? as f64;
+            let correct = out[2 * n + 1].scalar_i32()? as u64;
+            acc.add(correct, batch_size as u64);
+            losses.push(step, loss);
+            if step % self.cfg.eval_every as u64 == 0 {
+                crate::info!(
+                    "pretrain {} step {step}/{}: loss {loss:.4} train-acc {:.3}",
+                    self.cfg.model_tag,
+                    self.cfg.pretrain_steps,
+                    acc.value()
+                );
+            }
+            step += 1;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+
+        let eval_acc = self.eval_float(&params)?;
+        crate::info!(
+            "pretrained {}: {} steps, eval acc {eval_acc:.4}, {}",
+            self.cfg.model_tag,
+            step,
+            crate::util::human_secs(secs)
+        );
+
+        // checkpoint
+        let mut ck = Checkpoint::new();
+        for (p, spec) in params.iter().zip(&info.params) {
+            ck.push(format!("param:{}", spec.name), p.clone());
+        }
+        ck.save(self.cfg.checkpoint_path())?;
+
+        Ok(PretrainResult {
+            steps: step as usize,
+            final_loss: losses.tail_mean(10),
+            eval_acc,
+            loss_series: losses,
+            secs,
+        })
+    }
+
+    /// Load pretrained params (pretraining first if no checkpoint exists).
+    pub fn load_or_pretrain(&self) -> Result<Vec<Tensor>> {
+        let path = self.cfg.checkpoint_path();
+        if !path.exists() {
+            crate::info!("no checkpoint at {path:?}; pretraining");
+            self.pretrain()?;
+        }
+        let ck = Checkpoint::load(&path)?;
+        let exe = self.runtime.load(&self.cfg.pretrain_artifact())?;
+        let mut params = Vec::new();
+        for spec in &exe.info.params {
+            let t = ck
+                .get(&format!("param:{}", spec.name))
+                .with_context(|| format!("checkpoint missing param:{}", spec.name))?;
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "checkpoint param {} shape {:?} != manifest {:?} — stale checkpoint?",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            params.push(t.clone());
+        }
+        Ok(params)
+    }
+
+    // ------------------------------------------------------------------
+    // Evaluation
+    // ------------------------------------------------------------------
+
+    /// Float (unquantized) test accuracy.
+    pub fn eval_float(&self, params: &[Tensor]) -> Result<f64> {
+        let exe = self.runtime.load(&self.cfg.eval_float_artifact())?;
+        let batch_size = exe.info.batch.context("eval artifact missing batch")?;
+        let ds = data::for_model(&self.cfg.model_tag, self.cfg.seed)?;
+        let batches =
+            loader::eval_batches(ds.as_ref(), Split::Test, batch_size, self.cfg.eval_batches);
+        let mut acc = Accuracy::default();
+        for b in &batches {
+            let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+            args.push(Value::F32(b.x.clone()));
+            args.push(Value::I32(b.y.clone()));
+            let out = exe.run(&args)?;
+            acc.add(out[0].scalar_i32()? as u64, batch_size as u64);
+        }
+        Ok(acc.value())
+    }
+
+    /// Hard-quantized test accuracy q(W, C) — what the deployed model scores.
+    pub fn eval_quant(
+        &self,
+        k: usize,
+        d: usize,
+        params: &[Tensor],
+        codebooks: &[Tensor],
+    ) -> Result<f64> {
+        let exe = self.runtime.load(&self.cfg.eval_quant_artifact(k, d))?;
+        let batch_size = exe.info.batch.context("eval artifact missing batch")?;
+        let ds = data::for_model(&self.cfg.model_tag, self.cfg.seed)?;
+        let batches =
+            loader::eval_batches(ds.as_ref(), Split::Test, batch_size, self.cfg.eval_batches);
+        let mut acc = Accuracy::default();
+        for b in &batches {
+            let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+            args.extend(codebooks.iter().cloned().map(Value::F32));
+            args.push(Value::F32(b.x.clone()));
+            args.push(Value::I32(b.y.clone()));
+            let out = exe.run(&args)?;
+            acc.add(out[0].scalar_i32()? as u64, batch_size as u64);
+        }
+        Ok(acc.value())
+    }
+
+    // ------------------------------------------------------------------
+    // QAT
+    // ------------------------------------------------------------------
+
+    /// Warm-start codebooks with host k-means++/Lloyd on pretrained weights
+    /// (mirrors DKM's init-from-float-model practice).
+    pub fn init_codebooks(
+        &self,
+        info: &ArtifactInfo,
+        params: &[Tensor],
+        k: usize,
+        d: usize,
+    ) -> Vec<Tensor> {
+        let mut rng = Rng::new(self.cfg.seed ^ 0xC0DE_B00C);
+        info.clustered_indices()
+            .into_iter()
+            .map(|i| {
+                let r = lloyd(params[i].data(), d, k, self.cfg.warmstart_iters, &mut rng);
+                Tensor::new(&[k, d], r.codebook)
+            })
+            .collect()
+    }
+
+    /// Run one QAT cell: cluster-quantize-train for `qat_steps`, then eval.
+    pub fn qat_cell(&self, k: usize, d: usize, method: &str) -> Result<CellResult> {
+        let artifact = self.cfg.qat_artifact(k, d, method);
+        self.qat_cell_with_artifact(k, d, method, &artifact)
+    }
+
+    /// Same, with an explicit artifact name (used for the t-capped DKM probe
+    /// and the E5 ablation artifacts).
+    pub fn qat_cell_with_artifact(
+        &self,
+        k: usize,
+        d: usize,
+        method: &str,
+        artifact: &str,
+    ) -> Result<CellResult> {
+        let params0 = self.load_or_pretrain()?;
+        let float_acc = self.eval_float(&params0)?;
+
+        // Gate on the memory model BEFORE compiling the artifact — the whole
+        // point of the budget check is to refuse work that cannot fit.
+        let info = self.runtime.manifest.get(artifact)?.clone();
+        let batch_size = info.batch.context("qat artifact missing batch")?;
+        let t = info.max_iter.unwrap_or(30);
+
+        // Memory feasibility (the paper's §5.2 gate): analytic tape model
+        // against the configured budget.
+        let budget = Budget { bytes: self.cfg.budget_bytes };
+        let verdict = budget.check(&info.params, k, d, t, method);
+        let model_bytes = verdict.required;
+        if !verdict.fits {
+            crate::warnlog!(
+                "{artifact}: tape {} exceeds budget {} (max feasible t={}); skipping — \
+                 this is the paper's 'DKM cannot train at all' case",
+                crate::util::human_bytes(verdict.required),
+                crate::util::human_bytes(verdict.budget),
+                verdict.max_t
+            );
+            return Ok(CellResult {
+                k,
+                d,
+                method: method.to_string(),
+                status: CellStatus::OverBudget {
+                    required: verdict.required,
+                    budget: verdict.budget,
+                    max_t: verdict.max_t,
+                },
+                quant_acc: 0.0,
+                float_acc,
+                final_loss: f64::NAN,
+                mean_cluster_iters: 0.0,
+                secs_per_step: 0.0,
+                total_secs: 0.0,
+                secs_per_100: 0.0,
+                loss_series: Series::default(),
+                compression_fixed: 0.0,
+                compression_huffman: 0.0,
+                bits_per_weight: 0.0,
+                rss_delta_bytes: 0,
+                model_bytes,
+                xla_temp_bytes: info.memory.temp_bytes,
+            });
+        }
+
+        let exe = self.runtime.load(artifact)?;
+        let mut params = params0;
+        let mut codebooks = self.init_codebooks(&info, &params, k, d);
+        let n_params = params.len();
+        let n_cb = codebooks.len();
+
+        let ds: Arc<dyn data::Dataset> =
+            Arc::from(data::for_model(&self.cfg.model_tag, self.cfg.seed)?);
+        let loader = loader::Loader::spawn(
+            Arc::clone(&ds),
+            loader::LoaderConfig {
+                batch_size,
+                prefetch: 4,
+                seed: self.cfg.seed ^ 0x9A7,
+                split: Split::Train,
+                max_batches: Some(self.cfg.qat_steps),
+                augment: self.cfg.augment,
+            },
+        );
+
+        let rss_before = rss_bytes() as i64;
+        let mut losses = Series::default();
+        let mut iters = Running::default();
+        let mut step_time = Running::default();
+        let t0 = Instant::now();
+        let mut step = 0usize;
+        while let Some(batch) = loader.next() {
+            let tau = self.cfg.tau.at(step, self.cfg.qat_steps);
+            let s0 = Instant::now();
+            let out = self.run_qat_step(&exe, &params, &codebooks, &batch, tau)?;
+            step_time.add(s0.elapsed().as_secs_f64());
+            for (i, v) in out[..n_params].iter().enumerate() {
+                params[i] = v.as_f32()?.clone();
+            }
+            for (i, v) in out[n_params..n_params + n_cb].iter().enumerate() {
+                codebooks[i] = v.as_f32()?.clone();
+            }
+            let loss = out[n_params + n_cb].scalar_f32()? as f64;
+            let mean_it = out[n_params + n_cb + 1].scalar_f32()? as f64;
+            losses.push(step as u64, loss);
+            iters.add(mean_it);
+            if step % self.cfg.eval_every == 0 {
+                crate::info!(
+                    "qat {artifact} step {step}/{}: loss {loss:.4} cluster-iters {mean_it:.1} tau {tau:.2e}",
+                    self.cfg.qat_steps
+                );
+            }
+            step += 1;
+        }
+        let total_secs = t0.elapsed().as_secs_f64();
+        let rss_delta = rss_bytes() as i64 - rss_before;
+
+        let quant_acc = self.eval_quant(k, d, &params, &codebooks)?;
+
+        // Deployment compression accounting with the final codebooks.
+        let mut report = CompressionReport::default();
+        for (j, i) in info.clustered_indices().into_iter().enumerate() {
+            let layer = pack(params[i].data(), d, codebooks[j].data())?;
+            report.add(&layer);
+        }
+
+        crate::info!(
+            "qat {artifact}: quant-acc {quant_acc:.4} (float {float_acc:.4}), \
+             {:.0} ms/step, compress {:.1}x fixed / {:.1}x huffman",
+            step_time.mean() * 1e3,
+            report.ratio_fixed(),
+            report.ratio_huffman()
+        );
+
+        Ok(CellResult {
+            k,
+            d,
+            method: method.to_string(),
+            status: CellStatus::Ok,
+            quant_acc,
+            float_acc,
+            final_loss: losses.tail_mean(10),
+            mean_cluster_iters: iters.mean(),
+            secs_per_step: step_time.mean(),
+            total_secs,
+            secs_per_100: step_time.mean() * 100.0,
+            loss_series: losses,
+            compression_fixed: report.ratio_fixed(),
+            compression_huffman: report.ratio_huffman(),
+            bits_per_weight: report.bits_per_weight(),
+            rss_delta_bytes: rss_delta,
+            model_bytes,
+            xla_temp_bytes: info.memory.temp_bytes,
+        })
+    }
+
+    fn run_qat_step(
+        &self,
+        exe: &Executable,
+        params: &[Tensor],
+        codebooks: &[Tensor],
+        batch: &Batch,
+        tau: f32,
+    ) -> Result<Vec<Value>> {
+        let tau_t = Tensor::scalar(tau);
+        let mut args: Vec<ValueRef> =
+            Vec::with_capacity(params.len() + codebooks.len() + 3);
+        args.extend(params.iter().map(ValueRef::F32));
+        args.extend(codebooks.iter().map(ValueRef::F32));
+        args.push(ValueRef::F32(&batch.x));
+        args.push(ValueRef::I32(&batch.y));
+        args.push(ValueRef::F32(&tau_t));
+        exe.run_borrowed(&args)
+    }
+}
+
+/// Label stream sanity helper shared by tests: returns a batch of zeros with
+/// in-range labels for an artifact's (batch, input) signature.
+pub fn synthetic_batch(info: &ArtifactInfo) -> Result<Batch> {
+    let x_spec = info
+        .inputs
+        .iter()
+        .find(|i| i.name == "x")
+        .context("artifact has no x input")?;
+    let y_spec = info
+        .inputs
+        .iter()
+        .find(|i| i.name == "y")
+        .context("artifact has no y input")?;
+    let b = y_spec.shape[0];
+    Ok(Batch {
+        x: Tensor::zeros(&x_spec.shape),
+        y: IntTensor::new(&y_spec.shape, (0..b as i32).map(|i| i % 10).collect()),
+    })
+}

@@ -1,0 +1,171 @@
+//! Training-time data augmentation: random horizontal flip, random crop
+//! with padding, and per-image brightness jitter — the standard CIFAR
+//! recipe (He et al. train ResNets with flip + 4px-pad crop). Applied by
+//! the loader to training batches only; eval batches are untouched.
+
+use super::Batch;
+use crate::util::rng::Rng;
+
+/// Augmentation configuration; `none()` disables everything.
+#[derive(Debug, Clone, Copy)]
+pub struct Augment {
+    pub hflip: bool,
+    /// random crop after zero-padding by this many pixels (0 = off)
+    pub crop_pad: usize,
+    /// brightness jitter amplitude (0.0 = off)
+    pub brightness: f32,
+}
+
+impl Augment {
+    pub fn none() -> Self {
+        Self { hflip: false, crop_pad: 0, brightness: 0.0 }
+    }
+
+    /// The CIFAR training recipe.
+    pub fn cifar() -> Self {
+        Self { hflip: true, crop_pad: 4, brightness: 0.1 }
+    }
+
+    /// Digits must not flip (6 vs 9 ambiguity); small translations only.
+    pub fn mnist() -> Self {
+        Self { hflip: false, crop_pad: 2, brightness: 0.05 }
+    }
+
+    pub fn is_none(&self) -> bool {
+        !self.hflip && self.crop_pad == 0 && self.brightness == 0.0
+    }
+
+    /// Augment a staged batch in place. Batch layout is (B, H, W, C).
+    pub fn apply(&self, batch: &mut Batch, rng: &mut Rng) {
+        if self.is_none() {
+            return;
+        }
+        let dims = batch.x.shape().to_vec();
+        let (b, h, w, c) = (dims[0], dims[1], dims[2], dims[3]);
+        let img_len = h * w * c;
+        let data = batch.x.data_mut();
+        let mut scratch = vec![0.0f32; img_len];
+        for i in 0..b {
+            let img = &mut data[i * img_len..(i + 1) * img_len];
+            if self.hflip && rng.f32() < 0.5 {
+                flip_horizontal(img, h, w, c);
+            }
+            if self.crop_pad > 0 {
+                let p = self.crop_pad as i64;
+                let dy = rng.below(2 * self.crop_pad + 1) as i64 - p;
+                let dx = rng.below(2 * self.crop_pad + 1) as i64 - p;
+                translate(img, &mut scratch, h, w, c, dy, dx);
+            }
+            if self.brightness > 0.0 {
+                let delta = rng.range_f32(-self.brightness, self.brightness);
+                for v in img.iter_mut() {
+                    *v += delta;
+                }
+            }
+        }
+    }
+}
+
+fn flip_horizontal(img: &mut [f32], h: usize, w: usize, c: usize) {
+    for y in 0..h {
+        for x in 0..w / 2 {
+            for ch in 0..c {
+                let a = (y * w + x) * c + ch;
+                let b = (y * w + (w - 1 - x)) * c + ch;
+                img.swap(a, b);
+            }
+        }
+    }
+}
+
+/// Shift by (dy, dx) with zero fill — equivalent to pad+crop.
+fn translate(img: &mut [f32], scratch: &mut [f32], h: usize, w: usize, c: usize, dy: i64, dx: i64) {
+    scratch.fill(0.0);
+    for y in 0..h as i64 {
+        let sy = y + dy;
+        if sy < 0 || sy >= h as i64 {
+            continue;
+        }
+        for x in 0..w as i64 {
+            let sx = x + dx;
+            if sx < 0 || sx >= w as i64 {
+                continue;
+            }
+            let src = ((sy as usize) * w + sx as usize) * c;
+            let dst = ((y as usize) * w + x as usize) * c;
+            scratch[dst..dst + c].copy_from_slice(&img[src..src + c]);
+        }
+    }
+    img.copy_from_slice(scratch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_batch, synthmnist::SynthMnist, Dataset, Split};
+
+    fn demo_batch() -> Batch {
+        let ds = SynthMnist::with_lens(0, 64, 16);
+        make_batch(&ds, Split::Train, &[0, 1, 2, 3])
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut b = demo_batch();
+        let orig = b.x.clone();
+        Augment::none().apply(&mut b, &mut crate::util::rng::Rng::new(0));
+        assert_eq!(b.x, orig);
+    }
+
+    #[test]
+    fn flip_is_involution() {
+        let mut b = demo_batch();
+        let orig = b.x.clone();
+        let dims = b.x.shape().to_vec();
+        let img_len: usize = dims[1..].iter().product();
+        let data = b.x.data_mut();
+        for i in 0..dims[0] {
+            let img = &mut data[i * img_len..(i + 1) * img_len];
+            flip_horizontal(img, dims[1], dims[2], dims[3]);
+            flip_horizontal(img, dims[1], dims[2], dims[3]);
+        }
+        assert_eq!(b.x, orig);
+    }
+
+    #[test]
+    fn translate_preserves_mass_when_inside() {
+        // zero shift is identity
+        let mut b = demo_batch();
+        let orig = b.x.clone();
+        let dims = b.x.shape().to_vec();
+        let img_len: usize = dims[1..].iter().product();
+        let mut scratch = vec![0.0; img_len];
+        let data = b.x.data_mut();
+        for i in 0..dims[0] {
+            let img = &mut data[i * img_len..(i + 1) * img_len];
+            translate(img, &mut scratch, dims[1], dims[2], dims[3], 0, 0);
+        }
+        assert_eq!(b.x, orig);
+    }
+
+    #[test]
+    fn augmented_batch_differs_but_labels_fixed() {
+        let mut b = demo_batch();
+        let orig_x = b.x.clone();
+        let orig_y = b.y.clone();
+        Augment::cifar().apply(&mut b, &mut crate::util::rng::Rng::new(7));
+        assert_ne!(b.x, orig_x);
+        assert_eq!(b.y, orig_y);
+        // values remain bounded after brightness jitter
+        assert!(b.x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = demo_batch();
+        let mut b = demo_batch();
+        Augment::cifar().apply(&mut a, &mut crate::util::rng::Rng::new(9));
+        Augment::cifar().apply(&mut b, &mut crate::util::rng::Rng::new(9));
+        assert_eq!(a.x, b.x);
+    }
+}

@@ -1,0 +1,178 @@
+//! Background batch loader: shuffled epochs, prefetch threads, bounded
+//! staging (backpressure).
+//!
+//! The producer thread walks shuffled index permutations of the split and
+//! renders batches into a `Bounded` channel of depth `prefetch`; the trainer
+//! pops fully-staged batches. Because the datasets are pure functions of the
+//! index, the loader is deterministic given (seed, batch, epoch order).
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::augment::Augment;
+use super::{make_batch, Batch, Dataset, Split};
+use crate::util::rng::Rng;
+use crate::util::threadpool::Bounded;
+
+pub struct LoaderConfig {
+    pub batch_size: usize,
+    pub prefetch: usize,
+    pub seed: u64,
+    pub split: Split,
+    /// Stop after this many batches (None = run until dropped).
+    pub max_batches: Option<usize>,
+    /// Training-time augmentation, applied in the producer thread.
+    pub augment: Augment,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 128,
+            prefetch: 4,
+            seed: 0,
+            split: Split::Train,
+            max_batches: None,
+            augment: Augment::none(),
+        }
+    }
+}
+
+/// Streaming batch source backed by a producer thread.
+pub struct Loader {
+    rx: Bounded<Batch>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Loader {
+    pub fn spawn(ds: Arc<dyn Dataset>, cfg: LoaderConfig) -> Self {
+        let ch: Bounded<Batch> = Bounded::new(cfg.prefetch.max(1));
+        let tx = ch.clone();
+        let handle = std::thread::Builder::new()
+            .name("idkm-loader".into())
+            .spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ 0x4c4f_4144_4552);
+                let n = ds.len(cfg.split).max(cfg.batch_size);
+                let mut order: Vec<u64> = (0..n as u64).collect();
+                let mut produced = 0usize;
+                'outer: loop {
+                    rng.shuffle(&mut order);
+                    for chunk in order.chunks(cfg.batch_size) {
+                        if chunk.len() < cfg.batch_size {
+                            break; // drop ragged tail; AOT shapes are static
+                        }
+                        let mut batch = make_batch(ds.as_ref(), cfg.split, chunk);
+                        if cfg.split == Split::Train {
+                            cfg.augment.apply(&mut batch, &mut rng);
+                        }
+                        if tx.push(batch).is_err() {
+                            break 'outer; // consumer closed
+                        }
+                        produced += 1;
+                        if let Some(max) = cfg.max_batches {
+                            if produced >= max {
+                                break 'outer;
+                            }
+                        }
+                    }
+                }
+                tx.close();
+            })
+            .expect("spawn loader");
+        Self { rx: ch, handle: Some(handle) }
+    }
+
+    /// Next staged batch (blocks on the producer); None when exhausted.
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.pop()
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        self.rx.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deterministic, non-threaded iterator over `n` eval batches — evaluation
+/// must see a fixed set regardless of prefetch timing.
+pub fn eval_batches(
+    ds: &dyn Dataset,
+    split: Split,
+    batch_size: usize,
+    n_batches: usize,
+) -> Vec<Batch> {
+    (0..n_batches)
+        .map(|b| {
+            let idx: Vec<u64> =
+                (0..batch_size as u64).map(|i| b as u64 * batch_size as u64 + i).collect();
+            make_batch(ds, split, &idx)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthmnist::SynthMnist;
+
+    #[test]
+    fn produces_requested_batches() {
+        let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 256, 64));
+        let loader = Loader::spawn(
+            ds,
+            LoaderConfig { batch_size: 32, max_batches: Some(5), ..Default::default() },
+        );
+        let mut n = 0;
+        while let Some(b) = loader.next() {
+            assert_eq!(b.x.shape(), &[32, 28, 28, 1]);
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        // 64 examples, batch 64 => each epoch is one batch; two consecutive
+        // epochs should present different orders (so different x tensors).
+        let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 64, 64));
+        let loader = Loader::spawn(
+            ds,
+            LoaderConfig {
+                batch_size: 64,
+                max_batches: Some(2),
+                prefetch: 1,
+                ..Default::default()
+            },
+        );
+        let a = loader.next().unwrap();
+        let b = loader.next().unwrap();
+        assert_ne!(a.y.data(), b.y.data());
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let ds = SynthMnist::with_lens(0, 256, 64);
+        let a = eval_batches(&ds, Split::Test, 16, 3);
+        let b = eval_batches(&ds, Split::Test, 16, 3);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.x, y.x);
+            assert_eq!(x.y, y.y);
+        }
+    }
+
+    #[test]
+    fn drop_unblocks_producer() {
+        let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 10_000, 64));
+        let loader = Loader::spawn(
+            ds,
+            LoaderConfig { batch_size: 16, prefetch: 1, ..Default::default() },
+        );
+        let _ = loader.next();
+        drop(loader); // must not hang
+    }
+}

@@ -1,0 +1,145 @@
+//! Dataset substrates.
+//!
+//! The paper trains on MNIST and CIFAR10; neither is available in this
+//! offline environment, so we build procedural stand-ins with the same
+//! shapes, class counts, and qualitative difficulty (DESIGN.md §3):
+//!
+//! * [`synthmnist`] — 28x28x1 stroke-rendered digits (7-segment skeletons
+//!   with random affine jitter, stroke width, and pixel noise).
+//! * [`synthcifar`] — 32x32x3 procedural texture/shape classes (gratings,
+//!   checkers, blobs, rings, gradients, ...).
+//!
+//! Every example is a pure function of `(seed, split, index)`, so datasets
+//! are infinite, index-addressable, and bit-reproducible without storage.
+//! [`loader`] streams shuffled batches through a bounded channel with
+//! backpressure (prefetch threads never run more than `prefetch` batches
+//! ahead of the trainer).
+
+pub mod augment;
+pub mod loader;
+pub mod synthcifar;
+pub mod synthmnist;
+
+use crate::tensor::{IntTensor, Tensor};
+
+/// Train/test split tag, mixed into the per-example seed so the splits are
+/// disjoint streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    pub fn tag(self) -> u64 {
+        match self {
+            Split::Train => 0x5452_4149_4e00_0001, // "TRAIN"
+            Split::Test => 0x5445_5354_0000_0002,  // "TEST"
+        }
+    }
+}
+
+/// An index-addressable, deterministic synthetic dataset.
+pub trait Dataset: Send + Sync {
+    /// Per-example feature shape, e.g. `[28, 28, 1]`.
+    fn input_shape(&self) -> Vec<usize>;
+
+    fn num_classes(&self) -> usize;
+
+    /// Nominal epoch size for a split (how many indices a shuffled epoch
+    /// cycles through before reshuffling).
+    fn len(&self, split: Split) -> usize;
+
+    fn is_empty(&self, split: Split) -> bool {
+        self.len(split) == 0
+    }
+
+    /// Render example `index` of `split` into `out` (length = product of
+    /// `input_shape`) and return its label.
+    fn sample(&self, split: Split, index: u64, out: &mut [f32]) -> u32;
+}
+
+/// One staged batch, shaped for the AOT executables.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `(B, H, W, C)` (or `(B, features)`) f32.
+    pub x: Tensor,
+    /// `(B,)` int32 labels.
+    pub y: IntTensor,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.y.shape()[0]
+    }
+}
+
+/// Materialize one batch of `indices` from a dataset.
+pub fn make_batch(ds: &dyn Dataset, split: Split, indices: &[u64]) -> Batch {
+    let shape = ds.input_shape();
+    let ex_len: usize = shape.iter().product();
+    let b = indices.len();
+    let mut x = vec![0.0f32; b * ex_len];
+    let mut y = vec![0i32; b];
+    for (i, &idx) in indices.iter().enumerate() {
+        let label = ds.sample(split, idx, &mut x[i * ex_len..(i + 1) * ex_len]);
+        y[i] = label as i32;
+    }
+    let mut full_shape = vec![b];
+    full_shape.extend(shape);
+    Batch {
+        x: Tensor::new(&full_shape, x),
+        y: IntTensor::new(&[b], y),
+    }
+}
+
+/// Build a dataset by registry name (`synthmnist` | `synthcifar`).
+pub fn build(name: &str, seed: u64) -> anyhow::Result<Box<dyn Dataset>> {
+    match name {
+        "synthmnist" => Ok(Box::new(synthmnist::SynthMnist::new(seed))),
+        "synthcifar" => Ok(Box::new(synthcifar::SynthCifar::new(seed))),
+        _ => anyhow::bail!("unknown dataset {name:?} (known: synthmnist, synthcifar)"),
+    }
+}
+
+/// Registry lookup by model: which dataset a model trains on.
+pub fn for_model(model: &str, seed: u64) -> anyhow::Result<Box<dyn Dataset>> {
+    if model.starts_with("resnet18") {
+        build("synthcifar", seed)
+    } else {
+        build("synthmnist", seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let ds = synthmnist::SynthMnist::new(0);
+        let b = make_batch(&ds, Split::Train, &[0, 1, 2]);
+        assert_eq!(b.x.shape(), &[3, 28, 28, 1]);
+        assert_eq!(b.y.shape(), &[3]);
+        assert_eq!(b.batch_size(), 3);
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let ds = synthmnist::SynthMnist::new(0);
+        let mut a = vec![0.0; 784];
+        let mut b = vec![0.0; 784];
+        ds.sample(Split::Train, 5, &mut a);
+        ds.sample(Split::Test, 5, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn registry() {
+        assert!(build("synthmnist", 0).is_ok());
+        assert!(build("synthcifar", 0).is_ok());
+        assert!(build("nope", 0).is_err());
+        assert_eq!(for_model("resnet18w16", 0).unwrap().input_shape(), vec![32, 32, 3]);
+        assert_eq!(for_model("convnet2", 0).unwrap().input_shape(), vec![28, 28, 1]);
+    }
+}

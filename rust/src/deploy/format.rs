@@ -1,0 +1,353 @@
+//! On-disk compressed model bundle.
+//!
+//! Layout: `IDKM` magic, u32 version, u64 JSON header length, JSON header
+//! describing every layer (name, shape, encoding, offsets), then the
+//! payload: codebooks (f32 LE), packed or Huffman-coded address streams,
+//! and raw f32 layers. Offsets are payload-relative; everything is
+//! byte-exact reproducible.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::packing::{self, PackedLayer};
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+
+const MAGIC: &[u8; 4] = b"IDKM";
+const VERSION: u32 = 1;
+
+/// How a layer's weights are encoded in the bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Encoding {
+    /// Raw f32 (unclustered layers: biases, norm affines).
+    Raw,
+    /// Fixed-width b-bit cluster addresses + codebook.
+    Packed { k: usize, d: usize },
+    /// Canonical-Huffman-coded addresses + codebook (+ code lengths).
+    Huffman { k: usize, d: usize },
+}
+
+/// One layer in the bundle.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub encoding: Encoding,
+    /// codebook (empty for Raw)
+    pub codebook: Vec<f32>,
+    /// payload bytes (raw f32 LE / packed / huffman stream)
+    pub bytes: Vec<u8>,
+    /// canonical code lengths (Huffman only)
+    pub code_lengths: Vec<u8>,
+}
+
+/// A complete compressed model.
+#[derive(Debug, Clone, Default)]
+pub struct CompressedModel {
+    pub layers: Vec<Layer>,
+}
+
+impl CompressedModel {
+    /// Build from (name, weights, clustered?, codebook) layers: clustered
+    /// layers are packed against their codebook, choosing Huffman when it
+    /// is strictly smaller than fixed-width packing.
+    pub fn build(
+        layers: &[(String, Tensor, bool)],
+        codebooks: &BTreeMap<String, (Vec<f32>, usize, usize)>, // name -> (codebook, k, d)
+    ) -> Result<Self> {
+        let mut out = Vec::new();
+        for (name, tensor, clustered) in layers {
+            if !clustered {
+                out.push(Layer {
+                    name: name.clone(),
+                    shape: tensor.shape().to_vec(),
+                    encoding: Encoding::Raw,
+                    codebook: Vec::new(),
+                    bytes: tensor.data().iter().flat_map(|v| v.to_le_bytes()).collect(),
+                    code_lengths: Vec::new(),
+                });
+                continue;
+            }
+            let (cb, k, d) = codebooks
+                .get(name)
+                .with_context(|| format!("no codebook for clustered layer {name}"))?;
+            let packed: PackedLayer = packing::pack(tensor.data(), *d, cb)?;
+            let huffman_bytes = (packed.huffman_bits as usize + 7) / 8;
+            if huffman_bytes < packed.packed.len() {
+                out.push(Layer {
+                    name: name.clone(),
+                    shape: tensor.shape().to_vec(),
+                    encoding: Encoding::Huffman { k: *k, d: *d },
+                    codebook: cb.clone(),
+                    bytes: packed.huffman.clone(),
+                    code_lengths: packed.huffman_lengths.clone(),
+                });
+            } else {
+                out.push(Layer {
+                    name: name.clone(),
+                    shape: tensor.shape().to_vec(),
+                    encoding: Encoding::Packed { k: *k, d: *d },
+                    codebook: cb.clone(),
+                    bytes: packed.packed.clone(),
+                    code_lengths: Vec::new(),
+                });
+            }
+        }
+        Ok(Self { layers: out })
+    }
+
+    /// Reconstruct full-shaped f32 weights (the decompress-at-load path).
+    pub fn hydrate(&self) -> Result<Vec<(String, Tensor)>> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let n: usize = layer.shape.iter().product();
+            let data: Vec<f32> = match &layer.encoding {
+                Encoding::Raw => layer
+                    .bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+                Encoding::Packed { k, d } => {
+                    let pl = PackedLayer {
+                        k: *k,
+                        d: *d,
+                        m: n / d,
+                        codebook: layer.codebook.clone(),
+                        packed: layer.bytes.clone(),
+                        huffman: Vec::new(),
+                        huffman_bits: 0,
+                        huffman_lengths: Vec::new(),
+                    };
+                    packing::unpack(&pl)
+                }
+                Encoding::Huffman { k, d } => {
+                    let pl = PackedLayer {
+                        k: *k,
+                        d: *d,
+                        m: n / d,
+                        codebook: layer.codebook.clone(),
+                        packed: Vec::new(),
+                        huffman: layer.bytes.clone(),
+                        huffman_bits: 0,
+                        huffman_lengths: layer.code_lengths.clone(),
+                    };
+                    packing::unpack_huffman(&pl)?
+                }
+            };
+            if data.len() != n {
+                bail!("{}: hydrated {} elems, shape wants {n}", layer.name, data.len());
+            }
+            out.push((layer.name.clone(), Tensor::new(&layer.shape, data)));
+        }
+        Ok(out)
+    }
+
+    /// Total bundle payload size (the number the compression ratio quotes).
+    pub fn payload_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.bytes.len() + l.codebook.len() * 4 + l.code_lengths.len())
+            .sum()
+    }
+
+    pub fn float_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.shape.iter().product::<usize>() * 4)
+            .sum()
+    }
+
+    pub fn ratio(&self) -> f64 {
+        self.float_bytes() as f64 / self.payload_bytes().max(1) as f64
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut payload: Vec<u8> = Vec::new();
+        let mut metas = Vec::new();
+        for l in &self.layers {
+            let cb_off = payload.len();
+            for v in &l.codebook {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            let bytes_off = payload.len();
+            payload.extend_from_slice(&l.bytes);
+            let lens_off = payload.len();
+            payload.extend_from_slice(&l.code_lengths);
+            let (enc, k, d) = match l.encoding {
+                Encoding::Raw => ("raw", 0usize, 0usize),
+                Encoding::Packed { k, d } => ("packed", k, d),
+                Encoding::Huffman { k, d } => ("huffman", k, d),
+            };
+            metas.push(obj(vec![
+                ("name", Json::from(l.name.as_str())),
+                ("shape", Json::Arr(l.shape.iter().map(|&s| Json::from(s)).collect())),
+                ("encoding", Json::from(enc)),
+                ("k", Json::from(k)),
+                ("d", Json::from(d)),
+                ("codebook_offset", Json::from(cb_off)),
+                ("codebook_len", Json::from(l.codebook.len())),
+                ("bytes_offset", Json::from(bytes_off)),
+                ("bytes_len", Json::from(l.bytes.len())),
+                ("lengths_offset", Json::from(lens_off)),
+                ("lengths_len", Json::from(l.code_lengths.len())),
+            ]));
+        }
+        let header = obj(vec![("layers", Json::Arr(metas))]).to_string_pretty();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&payload)?;
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not an IDKM bundle");
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != VERSION {
+            bail!("{path:?}: unsupported version");
+        }
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let hlen = u64::from_le_bytes(b8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+
+        let mut layers = Vec::new();
+        for m in header.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = m.str_of("name").unwrap_or("?").to_string();
+            let shape: Vec<usize> = m
+                .get("shape")
+                .and_then(Json::as_arr)
+                .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            let k = m.usize_of("k").unwrap_or(0);
+            let d = m.usize_of("d").unwrap_or(0);
+            let encoding = match m.str_of("encoding") {
+                Some("raw") => Encoding::Raw,
+                Some("packed") => Encoding::Packed { k, d },
+                Some("huffman") => Encoding::Huffman { k, d },
+                other => bail!("{path:?}: unknown encoding {other:?}"),
+            };
+            let slice = |off_key: &str, len_key: &str, scale: usize| -> Result<Vec<u8>> {
+                let off = m.usize_of(off_key).unwrap_or(0);
+                let len = m.usize_of(len_key).unwrap_or(0) * scale;
+                if off + len > payload.len() {
+                    bail!("layer slice out of bounds at offset {off}");
+                }
+                Ok(payload[off..off + len].to_vec())
+            };
+            let codebook: Vec<f32> = slice("codebook_offset", "codebook_len", 4)?
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            layers.push(Layer {
+                name,
+                shape,
+                encoding,
+                codebook,
+                bytes: slice("bytes_offset", "bytes_len", 1)?,
+                code_lengths: slice("lengths_offset", "lengths_len", 1)?,
+            });
+        }
+        Ok(Self { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::kmeans::lloyd;
+    use crate::util::rng::Rng;
+
+    fn demo_model() -> (Vec<(String, Tensor, bool)>, BTreeMap<String, (Vec<f32>, usize, usize)>) {
+        let mut rng = Rng::new(5);
+        let w = Tensor::from_fn(&[16, 16], |_| rng.normal_f32(0.0, 1.0));
+        let b = Tensor::from_fn(&[16], |_| rng.normal_f32(0.0, 0.1));
+        let km = lloyd(w.data(), 1, 4, 30, &mut rng);
+        let mut cbs = BTreeMap::new();
+        cbs.insert("w".to_string(), (km.codebook, 4usize, 1usize));
+        (
+            vec![("w".to_string(), w, true), ("b".to_string(), b, false)],
+            cbs,
+        )
+    }
+
+    #[test]
+    fn build_hydrate_is_hard_quantization() {
+        let (layers, cbs) = demo_model();
+        let model = CompressedModel::build(&layers, &cbs).unwrap();
+        let hyd = model.hydrate().unwrap();
+        // raw layer is bit-exact
+        assert_eq!(hyd[1].1, layers[1].1);
+        // clustered layer: every value is a codeword
+        let cb = &cbs["w"].0;
+        for v in hyd[0].1.data() {
+            assert!(cb.iter().any(|c| (c - v).abs() < 1e-6), "{v} not a codeword");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (layers, cbs) = demo_model();
+        let model = CompressedModel::build(&layers, &cbs).unwrap();
+        let path = std::env::temp_dir().join("idkm_deploy_test/model.idkm");
+        model.save(&path).unwrap();
+        let back = CompressedModel::load(&path).unwrap();
+        assert_eq!(back.layers.len(), model.layers.len());
+        let a = model.hydrate().unwrap();
+        let b = back.hydrate().unwrap();
+        for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(ta, tb);
+        }
+    }
+
+    #[test]
+    fn compression_ratio_sane() {
+        let (layers, cbs) = demo_model();
+        let model = CompressedModel::build(&layers, &cbs).unwrap();
+        // 256 f32 weights at 2 bits + 16 raw floats + codebook: > 3x overall
+        assert!(model.ratio() > 3.0, "{}", model.ratio());
+        assert!(model.payload_bytes() < model.float_bytes());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = std::env::temp_dir().join("idkm_deploy_test/garbage.idkm");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not a bundle").unwrap();
+        assert!(CompressedModel::load(&path).is_err());
+    }
+
+    #[test]
+    fn missing_codebook_for_clustered_layer_fails() {
+        let (layers, _) = demo_model();
+        let empty = BTreeMap::new();
+        assert!(CompressedModel::build(&layers, &empty).is_err());
+    }
+}

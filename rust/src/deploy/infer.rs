@@ -1,0 +1,133 @@
+//! Edge-inference path: load a compressed bundle, hydrate, and serve
+//! batched classification through the model's eval artifact.
+//!
+//! This is what an edge deployment of the paper's output looks like: the
+//! model ships as the IDKM bundle (1-4 bits/weight), hydration happens once
+//! at load, and the float-shaped eval executable runs the requests. The
+//! `idkm deploy` / `idkm infer` CLI commands wrap this.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::format::CompressedModel;
+use crate::coordinator::{Checkpoint, ExperimentConfig, Trainer};
+use crate::data::{self, Split};
+use crate::runtime::{Runtime, ValueRef};
+use crate::tensor::metrics::Accuracy;
+use crate::tensor::Tensor;
+
+/// Package a trained QAT state (params + codebooks checkpoint) into a
+/// deployable bundle.
+pub fn package(
+    runtime: &Runtime,
+    cfg: &ExperimentConfig,
+    k: usize,
+    d: usize,
+    out: impl AsRef<Path>,
+) -> Result<CompressedModel> {
+    let trainer = Trainer::new(runtime, cfg);
+    let params = trainer.load_or_pretrain()?;
+    let info = runtime.load(&cfg.pretrain_artifact())?.info.clone();
+    // Codebooks: host k-means warm start on the (possibly QAT-trained)
+    // weights — for a sweep-produced state, pass its checkpoint instead.
+    let cbs = trainer.init_codebooks(&info, &params, k, d);
+    let mut cb_map = BTreeMap::new();
+    for (j, i) in info.clustered_indices().into_iter().enumerate() {
+        cb_map.insert(
+            info.params[i].name.clone(),
+            (cbs[j].data().to_vec(), k, d),
+        );
+    }
+    let layers: Vec<(String, Tensor, bool)> = info
+        .params
+        .iter()
+        .zip(&params)
+        .map(|(s, t)| (s.name.clone(), t.clone(), s.clustered))
+        .collect();
+    let model = CompressedModel::build(&layers, &cb_map)?;
+    model.save(out)?;
+    Ok(model)
+}
+
+/// Load a bundle and evaluate it on the model's test split: the end-to-end
+/// "does the deployed artifact still classify" check.
+pub fn evaluate_bundle(
+    runtime: &Runtime,
+    cfg: &ExperimentConfig,
+    bundle: impl AsRef<Path>,
+    batches: usize,
+) -> Result<f64> {
+    let model = CompressedModel::load(bundle)?;
+    let hydrated = model.hydrate()?;
+    let by_name: BTreeMap<&str, &Tensor> =
+        hydrated.iter().map(|(n, t)| (n.as_str(), t)).collect();
+
+    let exe = runtime.load(&cfg.eval_float_artifact())?;
+    let info = exe.info.clone();
+    let batch_size = info.batch.context("eval artifact missing batch")?;
+    let params: Vec<&Tensor> = info
+        .params
+        .iter()
+        .map(|spec| {
+            by_name
+                .get(spec.name.as_str())
+                .copied()
+                .with_context(|| format!("bundle missing layer {}", spec.name))
+        })
+        .collect::<Result<_>>()?;
+
+    let ds = data::for_model(&cfg.model_tag, cfg.seed)?;
+    let mut acc = Accuracy::default();
+    for b in 0..batches {
+        let idx: Vec<u64> = (0..batch_size as u64)
+            .map(|i| b as u64 * batch_size as u64 + i)
+            .collect();
+        let batch = data::make_batch(ds.as_ref(), Split::Test, &idx);
+        let mut args: Vec<ValueRef> = params.iter().map(|t| ValueRef::F32(t)).collect();
+        args.push(ValueRef::F32(&batch.x));
+        args.push(ValueRef::I32(&batch.y));
+        let out = exe.run_borrowed(&args)?;
+        acc.add(out[0].scalar_i32()? as u64, batch_size as u64);
+    }
+    Ok(acc.value())
+}
+
+/// Convert a sweep/QAT checkpoint (params + codebooks) into a bundle —
+/// the path used after `idkm sweep` has trained the quantized state.
+pub fn package_checkpoint(
+    runtime: &Runtime,
+    cfg: &ExperimentConfig,
+    ckpt: impl AsRef<Path>,
+    k: usize,
+    d: usize,
+    out: impl AsRef<Path>,
+) -> Result<CompressedModel> {
+    let ck = Checkpoint::load(ckpt)?;
+    let info = runtime.load(&cfg.pretrain_artifact())?.info.clone();
+    let mut layers = Vec::new();
+    let mut cb_map = BTreeMap::new();
+    for spec in &info.params {
+        let t = ck
+            .get(&format!("param:{}", spec.name))
+            .with_context(|| format!("checkpoint missing param:{}", spec.name))?;
+        layers.push((spec.name.clone(), t.clone(), spec.clustered));
+        if spec.clustered {
+            if let Some(cb) = ck.get(&format!("codebook:{}", spec.name)) {
+                cb_map.insert(spec.name.clone(), (cb.data().to_vec(), k, d));
+            }
+        }
+    }
+    // Layers without stored codebooks fall back to host k-means.
+    for (name, t, clustered) in &layers {
+        if *clustered && !cb_map.contains_key(name) {
+            let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDE91_0704);
+            let r = crate::quant::kmeans::lloyd(t.data(), d, k, cfg.warmstart_iters, &mut rng);
+            cb_map.insert(name.clone(), (r.codebook, k, d));
+        }
+    }
+    let model = CompressedModel::build(&layers, &cb_map)?;
+    model.save(out)?;
+    Ok(model)
+}

@@ -1,0 +1,15 @@
+//! Deployment substrate: the compressed on-disk model format and the
+//! edge-inference path — the paper's motivating use case ("deployment on
+//! edge devices", §1).
+//!
+//! A quantized model serializes as an `IDKM`-magic bundle: per clustered
+//! layer, the (k, d) codebook + bit-packed cluster addresses (optionally
+//! Huffman-coded, whichever is smaller); float layers (biases, norm
+//! affines) are stored raw. [`CompressedModel::hydrate`] reconstructs the
+//! full-precision-shaped weights so any eval artifact can execute them —
+//! the decompress-and-run path an edge runtime would use.
+
+pub mod format;
+pub mod infer;
+
+pub use format::CompressedModel;

@@ -1,0 +1,23 @@
+//! # idkm — Memory-Efficient Neural Network Quantization via Implicit, Differentiable k-Means
+//!
+//! Rust coordinator (Layer 3) of the three-layer IDKM stack (see DESIGN.md):
+//! it owns datasets, training orchestration, checkpoints, metrics, memory
+//! accounting, and the PJRT runtime that executes the AOT-compiled JAX/Pallas
+//! programs from `artifacts/`. Python never runs at request time.
+//!
+//! Module map:
+//! * [`util`] — JSON/TOML/CLI/PRNG/logging/threadpool/proptest substrates
+//! * [`tensor`] — host NDArray, init, metrics
+//! * [`data`] — SynthMNIST / SynthCIFAR procedural datasets + loaders
+//! * [`runtime`] — PJRT wrapper: manifest, executable cache, execution
+//! * [`quant`] — pure-rust k-means/PTQ/codebook-packing substrates
+//! * [`memory`] — the paper's O(t·m·2^b) vs O(m·2^b) tape model + probes
+//! * [`coordinator`] — experiment pipeline: pretrain → QAT → eval → report
+pub mod coordinator;
+pub mod data;
+pub mod deploy;
+pub mod memory;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,294 @@
+//! `idkm` — the coordinator CLI (the L3 entrypoint).
+//!
+//! Subcommands:
+//!   pretrain   train the float model and write its checkpoint
+//!   quantize   run one QAT cell (k, d, method)
+//!   eval       evaluate a checkpoint (float + optionally quantized)
+//!   sweep      run a full experiment grid (presets: table1 / table3 / quick)
+//!   memory     run the E4 cluster-grad memory probes
+//!   ptq        post-training-quantization baseline on the checkpoint
+//!   inspect    list manifest artifacts and their memory stats
+//!
+//! Every subcommand accepts `--artifacts DIR` (default `artifacts/`),
+//! `--preset NAME`, and `--config FILE` (TOML overrides).
+
+use anyhow::{Context, Result};
+
+use idkm::coordinator::{memory_probe, report, ExperimentConfig, Sweep, Trainer};
+use idkm::data;
+use idkm::quant::ptq;
+use idkm::runtime::Runtime;
+use idkm::util::cli::Args;
+use idkm::util::log;
+
+fn main() {
+    log::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "pretrain" => cmd_pretrain(rest),
+        "quantize" => cmd_quantize(rest),
+        "eval" => cmd_eval(rest),
+        "sweep" => cmd_sweep(rest),
+        "memory" => cmd_memory(rest),
+        "ptq" => cmd_ptq(rest),
+        "deploy" => cmd_deploy(rest),
+        "infer" => cmd_infer(rest),
+        "inspect" => cmd_inspect(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "idkm <command> [options]\n\
+     commands:\n\
+       pretrain   train the float model, write checkpoint\n\
+       quantize   one QAT cell: --k --d --method [--artifact NAME]\n\
+       eval       evaluate checkpoint (add --k/--d for quantized eval)\n\
+       sweep      full grid: --preset table1|table3|quick\n\
+       memory     E4 memory probes over cluster_grad artifacts\n\
+       ptq        post-training-quantization baseline: --k --d\n\
+       deploy     package checkpoint into a compressed .idkm bundle\n\
+       infer      evaluate a .idkm bundle on the test split\n\
+       inspect    list artifacts\n\
+     common options: --artifacts DIR --runs DIR --config FILE --preset NAME\n\
+                     --model TAG --seed N --steps N --pretrain-steps N --budget-mb N"
+        .to_string()
+}
+
+/// Register shared options on an Args builder.
+fn shared(extra: Args) -> Args {
+    extra
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("runs", "runs", "runs/output directory")
+        .opt("config", "", "TOML config overrides")
+        .opt("preset", "table1", "experiment preset (table1|table3|quick)")
+        .opt("model", "", "override model tag (convnet2|resnet18w16)")
+        .opt("seed", "", "override RNG seed")
+        .opt("steps", "", "override qat steps")
+        .opt("pretrain-steps", "", "override pretrain steps")
+        .opt("budget-mb", "", "device memory budget in MiB")
+}
+
+/// Parse argv and materialize (args, config, runtime).
+fn setup(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig, Runtime)> {
+    let args = shared(extra).parse(rest).map_err(|u| anyhow::anyhow!("{u}"))?;
+    let mut cfg = ExperimentConfig::preset(&args.get("preset").unwrap())?;
+    let cfg_file = args.get("config").unwrap_or_default();
+    if !cfg_file.is_empty() {
+        cfg.apply_toml(std::path::Path::new(&cfg_file))?;
+    }
+    cfg.artifacts_dir = args.get("artifacts").unwrap().into();
+    cfg.runs_dir = args.get("runs").unwrap().into();
+    if let Some(m) = args.get("model").filter(|m| !m.is_empty()) {
+        cfg.model_tag = m;
+    }
+    if let Some(s) = args.get("seed").filter(|s| !s.is_empty()) {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    if let Some(s) = args.get("steps").filter(|s| !s.is_empty()) {
+        cfg.qat_steps = s.parse().context("--steps")?;
+    }
+    if let Some(s) = args.get("pretrain-steps").filter(|s| !s.is_empty()) {
+        cfg.pretrain_steps = s.parse().context("--pretrain-steps")?;
+    }
+    if let Some(s) = args.get("budget-mb").filter(|s| !s.is_empty()) {
+        cfg.budget_bytes = s.parse::<u64>().context("--budget-mb")? << 20;
+    }
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    Ok((args, cfg, runtime))
+}
+
+fn cmd_pretrain(rest: &[String]) -> Result<()> {
+    let (_args, cfg, runtime) = setup(rest, Args::new())?;
+    let trainer = Trainer::new(&runtime, &cfg);
+    let r = trainer.pretrain()?;
+    println!(
+        "pretrained {}: eval acc {:.4}, final loss {:.4}, {} steps, {}",
+        cfg.model_tag,
+        r.eval_acc,
+        r.final_loss,
+        r.steps,
+        idkm::util::human_secs(r.secs)
+    );
+    Ok(())
+}
+
+fn cmd_quantize(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("k", "4", "codebook size")
+        .opt("d", "1", "sub-vector dimension")
+        .opt("method", "idkm", "dkm | idkm | idkm_jfb")
+        .opt("artifact", "", "explicit artifact name (ablation probes)");
+    let (args, cfg, runtime) = setup(rest, extra)?;
+    let k: usize = args.get_parsed("k").map_err(|e| anyhow::anyhow!(e))?;
+    let d: usize = args.get_parsed("d").map_err(|e| anyhow::anyhow!(e))?;
+    let method = args.get("method").unwrap();
+    let trainer = Trainer::new(&runtime, &cfg);
+    let artifact = args.get("artifact").unwrap_or_default();
+    let cell = if artifact.is_empty() {
+        trainer.qat_cell(k, d, &method)?
+    } else {
+        trainer.qat_cell_with_artifact(k, d, &method, &artifact)?
+    };
+    println!("{}", report::render_table1(&[cell], &[method]));
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("k", "", "codebook size for quantized eval")
+        .opt("d", "", "sub-vector dimension for quantized eval");
+    let (args, cfg, runtime) = setup(rest, extra)?;
+    let trainer = Trainer::new(&runtime, &cfg);
+    let params = trainer.load_or_pretrain()?;
+    let acc = trainer.eval_float(&params)?;
+    println!("float eval acc: {acc:.4}");
+    let k = args.get("k").unwrap_or_default();
+    let d = args.get("d").unwrap_or_default();
+    if !k.is_empty() && !d.is_empty() {
+        let (k, d): (usize, usize) = (k.parse()?, d.parse()?);
+        let exe = runtime.load(&cfg.qat_artifact(k, d, "idkm"))?;
+        let cbs = trainer.init_codebooks(&exe.info, &params, k, d);
+        let qacc = trainer.eval_quant(k, d, &params, &cbs)?;
+        println!("hard-quantized (k={k}, d={d}, k-means init only): {qacc:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    let (_args, cfg, runtime) = setup(rest, Args::new())?;
+    let name = format!("{}_sweep", cfg.model_tag);
+    let sweep = Sweep::new(&runtime, &cfg, name);
+    let cells = sweep.run()?;
+    let rendered = sweep.render(&cells);
+    println!("{rendered}");
+    let out = cfg.runs_dir.join(format!("{}_report.md", sweep.name));
+    std::fs::write(&out, &rendered)?;
+    println!("report written to {out:?}");
+    Ok(())
+}
+
+fn cmd_memory(rest: &[String]) -> Result<()> {
+    let extra = Args::new().opt("repeats", "3", "executions per probe");
+    let (args, cfg, runtime) = setup(rest, extra)?;
+    let repeats: usize = args.get_parsed("repeats").map_err(|e| anyhow::anyhow!(e))?;
+    let rows = memory_probe::run_probes(&runtime, repeats)?;
+    let table = report::render_memory_table(&rows);
+    println!("{table}");
+    std::fs::create_dir_all(&cfg.runs_dir)?;
+    std::fs::write(cfg.runs_dir.join("memory_table.md"), table)?;
+    Ok(())
+}
+
+fn cmd_ptq(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("k", "4", "codebook size")
+        .opt("d", "1", "sub-vector dimension");
+    let (args, cfg, runtime) = setup(rest, extra)?;
+    let (k, d): (usize, usize) = (
+        args.get_parsed("k").map_err(|e| anyhow::anyhow!(e))?,
+        args.get_parsed("d").map_err(|e| anyhow::anyhow!(e))?,
+    );
+    let trainer = Trainer::new(&runtime, &cfg);
+    let params = trainer.load_or_pretrain()?;
+    let exe = runtime.load(&cfg.pretrain_artifact())?;
+    let layers: Vec<(String, idkm::tensor::Tensor, bool)> = exe
+        .info
+        .params
+        .iter()
+        .zip(&params)
+        .map(|(spec, t)| (spec.name.clone(), t.clone(), spec.clustered))
+        .collect();
+    let (detail, quantized, rep) = ptq::quantize_model(&layers, k, d, 50, cfg.seed)?;
+    let acc = trainer.eval_float(&quantized)?;
+    let facc = trainer.eval_float(&params)?;
+    println!(
+        "PTQ baseline k={k} d={d}: acc {acc:.4} (float {facc:.4}), \
+         compression {:.1}x fixed / {:.1}x huffman, {} clustered layers",
+        rep.ratio_fixed(),
+        rep.ratio_huffman(),
+        detail.len()
+    );
+    Ok(())
+}
+
+fn cmd_deploy(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("k", "4", "codebook size")
+        .opt("d", "1", "sub-vector dimension")
+        .opt("out", "runs/model.idkm", "output bundle path")
+        .opt("checkpoint", "", "explicit checkpoint (default: model's pretrained)");
+    let (args, cfg, runtime) = setup(rest, extra)?;
+    let (k, d): (usize, usize) = (
+        args.get_parsed("k").map_err(|e| anyhow::anyhow!(e))?,
+        args.get_parsed("d").map_err(|e| anyhow::anyhow!(e))?,
+    );
+    let out = args.get("out").unwrap();
+    let ckpt = args.get("checkpoint").unwrap_or_default();
+    let model = if ckpt.is_empty() {
+        idkm::deploy::infer::package(&runtime, &cfg, k, d, &out)?
+    } else {
+        idkm::deploy::infer::package_checkpoint(&runtime, &cfg, &ckpt, k, d, &out)?
+    };
+    println!(
+        "wrote {out}: {} layers, {} -> {} ({:.1}x)",
+        model.layers.len(),
+        idkm::util::human_bytes(model.float_bytes() as u64),
+        idkm::util::human_bytes(model.payload_bytes() as u64),
+        model.ratio()
+    );
+    Ok(())
+}
+
+fn cmd_infer(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("bundle", "runs/model.idkm", "bundle path")
+        .opt("batches", "8", "test batches to score");
+    let (args, cfg, runtime) = setup(rest, extra)?;
+    let bundle = args.get("bundle").unwrap();
+    let batches: usize = args.get_parsed("batches").map_err(|e| anyhow::anyhow!(e))?;
+    let acc = idkm::deploy::infer::evaluate_bundle(&runtime, &cfg, &bundle, batches)?;
+    println!("bundle {bundle}: top-1 {acc:.4} over {batches} test batches");
+    Ok(())
+}
+
+fn cmd_inspect(rest: &[String]) -> Result<()> {
+    let (_args, _cfg, runtime) = setup(rest, Args::new())?;
+    println!(
+        "{:<44} {:>14} {:>14} {:>9} {:>4}",
+        "artifact", "kind", "temp bytes", "method", "t"
+    );
+    for (name, a) in &runtime.manifest.artifacts {
+        println!(
+            "{:<44} {:>14} {:>14} {:>9} {:>4}",
+            name,
+            a.kind,
+            a.memory.temp_bytes,
+            a.method.as_deref().unwrap_or("-"),
+            a.max_iter.map(|t| t.to_string()).unwrap_or_else(|| "-".into()),
+        );
+    }
+    for m in ["convnet2", "resnet18w16"] {
+        if let Ok(ds) = data::for_model(m, 0) {
+            println!("dataset for {m}: shape {:?}", ds.input_shape());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Memory accounting for the paper's central claim (§3.3):
+//!
+//!   DKM backward tape:  O(t · m · 2^b)   (stores every clustering iterate)
+//!   IDKM / IDKM-JFB:    O(m · 2^b)       (implicit gradient, no tape)
+//!
+//! Three sources of truth, cross-checked by the E4 bench:
+//! 1. [`TapeModel`] — the analytic model, parameterized like the paper.
+//! 2. Manifest [`MemoryStats`](crate::runtime::manifest::MemoryStats) — XLA's
+//!    buffer assignment for each compiled artifact (recorded at export).
+//! 3. [`rss_probe`] — measured process RSS deltas around executions.
+//!
+//! The [`Budget`] simulator turns "DKM cannot train at all" (paper §5.2)
+//! into a decidable predicate: does the configuration's tape fit the device?
+
+use crate::runtime::manifest::ArtifactInfo;
+
+/// Analytic autodiff-tape model of one soft-k-means layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TapeModel {
+    /// number of weight sub-vectors m = n/d
+    pub m: usize,
+    /// sub-vector dimension
+    pub d: usize,
+    /// number of clusters k = 2^b
+    pub k: usize,
+    /// clustering iterations
+    pub t: usize,
+    /// bytes per element (f32)
+    pub elem_bytes: usize,
+}
+
+impl TapeModel {
+    pub fn new(m: usize, d: usize, k: usize, t: usize) -> Self {
+        Self { m, d, k, t, elem_bytes: 4 }
+    }
+
+    /// Address bits b = lg k (the paper's 2^b == k).
+    pub fn b(&self) -> u32 {
+        (usize::BITS - (self.k - 1).leading_zeros()).max(1)
+    }
+
+    /// Per-iteration tape record: the attention and distance matrices
+    /// (m x k each) plus the k x d iterate — what reverse-mode autodiff
+    /// keeps alive per soft-k-means step.
+    pub fn per_iteration_bytes(&self) -> u64 {
+        let mk = self.m as u64 * self.k as u64;
+        let kd = self.k as u64 * self.d as u64;
+        (2 * mk + kd) * self.elem_bytes as u64
+    }
+
+    /// DKM forward+backward footprint: t tape records + the live weights.
+    /// This is the paper's O(t · m · 2^b).
+    pub fn dkm_bytes(&self) -> u64 {
+        self.t as u64 * self.per_iteration_bytes() + self.live_bytes()
+    }
+
+    /// IDKM footprint: live weights + ONE linearization record (the single
+    /// F application the implicit backward differentiates) + the k x k-sized
+    /// adjoint state. O(m · 2^b), independent of t.
+    pub fn idkm_bytes(&self) -> u64 {
+        self.live_bytes() + self.per_iteration_bytes()
+            + (self.k * self.d * self.elem_bytes) as u64
+    }
+
+    /// JFB footprint: same O(m · 2^b) envelope as IDKM (one linearization,
+    /// no adjoint iteration state).
+    pub fn jfb_bytes(&self) -> u64 {
+        self.live_bytes() + self.per_iteration_bytes()
+    }
+
+    /// Always-live storage: W (m x d) and C (k x d).
+    pub fn live_bytes(&self) -> u64 {
+        ((self.m * self.d + self.k * self.d) * self.elem_bytes) as u64
+    }
+
+    pub fn bytes_for(&self, method: &str) -> u64 {
+        match method {
+            "dkm" => self.dkm_bytes(),
+            "idkm" => self.idkm_bytes(),
+            "idkm_jfb" => self.jfb_bytes(),
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+/// Sum the tape model across a model's clustered layers.
+pub fn model_tape_bytes(
+    params: &[crate::runtime::manifest::ParamInfo],
+    k: usize,
+    d: usize,
+    t: usize,
+    method: &str,
+) -> u64 {
+    params
+        .iter()
+        .filter(|p| p.clustered)
+        .map(|p| TapeModel::new(p.size() / d, d, k, t).bytes_for(method))
+        .sum()
+}
+
+/// Device-memory budget simulator: decides whether a configuration fits.
+/// Defaults to 2 GiB — a modest edge/workstation GPU partition, the regime
+/// the paper's "on hardware where DKM cannot train at all" refers to.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub bytes: u64,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self { bytes: 2 << 30 }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Verdict {
+    pub required: u64,
+    pub budget: u64,
+    pub fits: bool,
+    /// Largest t that would fit (for DKM's "cap the iterations" workaround).
+    pub max_t: usize,
+}
+
+impl Budget {
+    pub fn check(&self, params: &[crate::runtime::manifest::ParamInfo], k: usize, d: usize, t: usize, method: &str) -> Verdict {
+        let required = model_tape_bytes(params, k, d, t, method);
+        let mut max_t = 0;
+        if method == "dkm" {
+            // invert the linear-in-t model
+            for probe in 1..=t {
+                if model_tape_bytes(params, k, d, probe, method) <= self.bytes {
+                    max_t = probe;
+                } else {
+                    break;
+                }
+            }
+        } else if required <= self.bytes {
+            max_t = usize::MAX; // t-independent
+        }
+        Verdict { required, budget: self.bytes, fits: required <= self.bytes, max_t }
+    }
+
+    /// Check an exported artifact against the budget using XLA's own buffer
+    /// stats (source of truth #2).
+    pub fn check_artifact(&self, info: &ArtifactInfo) -> Verdict {
+        let required = info.memory.peak_bytes();
+        Verdict {
+            required,
+            budget: self.bytes,
+            fits: required <= self.bytes,
+            max_t: if required <= self.bytes { info.max_iter.unwrap_or(0) } else { 0 },
+        }
+    }
+}
+
+/// Current process resident-set size in bytes (Linux /proc; measurement
+/// source of truth #3). Returns 0 if unavailable.
+pub fn rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Peak RSS (VmHWM) in bytes.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamInfo;
+
+    #[test]
+    fn dkm_linear_in_t() {
+        let base = TapeModel::new(65536, 1, 4, 1);
+        let t10 = TapeModel::new(65536, 1, 4, 10);
+        let t30 = TapeModel::new(65536, 1, 4, 30);
+        let slope1 = (t10.dkm_bytes() - base.dkm_bytes()) / 9;
+        let slope2 = (t30.dkm_bytes() - t10.dkm_bytes()) / 20;
+        assert_eq!(slope1, slope2, "dkm growth must be exactly linear in t");
+        assert_eq!(slope1, base.per_iteration_bytes());
+    }
+
+    #[test]
+    fn implicit_methods_independent_of_t() {
+        let a = TapeModel::new(65536, 1, 4, 1);
+        let b = TapeModel::new(65536, 1, 4, 1000);
+        assert_eq!(a.idkm_bytes(), b.idkm_bytes());
+        assert_eq!(a.jfb_bytes(), b.jfb_bytes());
+        assert!(b.dkm_bytes() > 100 * b.idkm_bytes());
+    }
+
+    #[test]
+    fn ordering_jfb_le_idkm_lt_dkm() {
+        let m = TapeModel::new(4096, 2, 8, 30);
+        assert!(m.jfb_bytes() <= m.idkm_bytes());
+        assert!(m.idkm_bytes() < m.dkm_bytes());
+    }
+
+    #[test]
+    fn budget_caps_dkm_iterations() {
+        let params = vec![ParamInfo {
+            name: "w".into(),
+            shape: vec![1024, 1024],
+            clustered: true,
+            fan_in: 1024,
+        }];
+        // Budget sized to fit ~5 iterations of the tape (the paper's DKM cap).
+        let five = model_tape_bytes(&params, 4, 1, 5, "dkm");
+        let budget = Budget { bytes: five + 1 };
+        let v = budget.check(&params, 4, 1, 30, "dkm");
+        assert!(!v.fits);
+        assert_eq!(v.max_t, 5);
+        // IDKM fits at any t under the same budget.
+        let vi = budget.check(&params, 4, 1, 30, "idkm");
+        assert!(vi.fits);
+        assert_eq!(vi.max_t, usize::MAX);
+    }
+
+    #[test]
+    fn rss_probe_returns_something() {
+        let rss = rss_bytes();
+        assert!(rss > 1 << 20, "rss {rss} suspiciously small");
+        assert!(peak_rss_bytes() >= rss);
+    }
+
+    #[test]
+    fn b_matches_k() {
+        assert_eq!(TapeModel::new(1, 1, 2, 1).b(), 1);
+        assert_eq!(TapeModel::new(1, 1, 4, 1).b(), 2);
+        assert_eq!(TapeModel::new(1, 1, 16, 1).b(), 4);
+    }
+}

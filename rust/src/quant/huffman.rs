@@ -1,0 +1,197 @@
+//! Canonical Huffman coder over cluster-address symbols.
+//!
+//! Deep Compression (Han et al. 2015 — the paper's citation [Han15]) follows
+//! weight clustering with Huffman coding of the cluster indices; we do the
+//! same so the report's compression ratios reflect the full pipeline.
+//! Codes are canonical, so the decoder needs only the per-symbol lengths.
+
+use anyhow::{bail, Result};
+
+/// Build canonical code lengths for `counts` (one entry per symbol).
+/// Zero-count symbols get length 0 (absent). Single-symbol streams get
+/// length 1 by convention.
+pub fn code_lengths(counts: &[u64]) -> Vec<u8> {
+    let symbols: Vec<usize> = counts
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, _)| i)
+        .collect();
+    let mut lengths = vec![0u8; counts.len()];
+    match symbols.len() {
+        0 => return lengths,
+        1 => {
+            lengths[symbols[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+    // Heap-free Huffman: repeatedly merge two smallest (k <= 2^b <= 16 here,
+    // so O(k^2) merging is irrelevant).
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        syms: Vec<usize>,
+    }
+    let mut nodes: Vec<Node> = symbols
+        .iter()
+        .map(|&s| Node { weight: counts[s], syms: vec![s] })
+        .collect();
+    while nodes.len() > 1 {
+        nodes.sort_by_key(|n| std::cmp::Reverse(n.weight));
+        let a = nodes.pop().unwrap();
+        let b = nodes.pop().unwrap();
+        for &s in a.syms.iter().chain(&b.syms) {
+            lengths[s] += 1;
+        }
+        let mut syms = a.syms;
+        syms.extend(b.syms);
+        nodes.push(Node { weight: a.weight + b.weight, syms });
+    }
+    lengths
+}
+
+/// Assign canonical codes from lengths: (code, length) per symbol.
+pub fn canonical_codes(lengths: &[u8]) -> Vec<(u32, u8)> {
+    let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+    order.sort_by_key(|&i| (lengths[i], i));
+    let mut codes = vec![(0u32, 0u8); lengths.len()];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &i in &order {
+        code <<= lengths[i] - prev_len;
+        codes[i] = (code, lengths[i]);
+        prev_len = lengths[i];
+        code += 1;
+    }
+    codes
+}
+
+/// Huffman-encode a symbol stream. Returns (bytes, bit_len, lengths-table).
+pub fn encode(symbols: &[u32], num_symbols: usize) -> Result<(Vec<u8>, u64, Vec<u8>)> {
+    let mut counts = vec![0u64; num_symbols];
+    for &s in symbols {
+        if s as usize >= num_symbols {
+            bail!("symbol {s} out of range {num_symbols}");
+        }
+        counts[s as usize] += 1;
+    }
+    let lengths = code_lengths(&counts);
+    let codes = canonical_codes(&lengths);
+    let mut out = Vec::new();
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut total_bits = 0u64;
+    for &s in symbols {
+        let (code, len) = codes[s as usize];
+        acc = (acc << len) | code as u64;
+        nbits += len as u32;
+        total_bits += len as u64;
+        while nbits >= 8 {
+            nbits -= 8;
+            out.push((acc >> nbits) as u8);
+        }
+    }
+    if nbits > 0 {
+        out.push((acc << (8 - nbits)) as u8);
+    }
+    Ok((out, total_bits, lengths))
+}
+
+/// Decode `n` symbols from a canonical-Huffman bit stream.
+pub fn decode(bytes: &[u8], n: usize, lengths: &[u8]) -> Result<Vec<u32>> {
+    let codes = canonical_codes(lengths);
+    // (code, len) -> symbol lookup; k is tiny so linear scan per bit-length.
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u32 = 0;
+    let mut acc_len: u8 = 0;
+    let mut bit_pos = 0usize;
+    let total_bits = bytes.len() * 8;
+    while out.len() < n {
+        if bit_pos >= total_bits {
+            bail!("huffman stream exhausted after {} of {n} symbols", out.len());
+        }
+        let bit = (bytes[bit_pos / 8] >> (7 - bit_pos % 8)) & 1;
+        bit_pos += 1;
+        acc = (acc << 1) | bit as u32;
+        acc_len += 1;
+        if acc_len > 32 {
+            bail!("invalid huffman stream (no code within 32 bits)");
+        }
+        if let Some(sym) = codes
+            .iter()
+            .position(|&(c, l)| l == acc_len && c == acc)
+        {
+            out.push(sym as u32);
+            acc = 0;
+            acc_len = 0;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, UsizeIn};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let counts = [5u64, 9, 12, 13, 16, 45];
+        let lengths = code_lengths(&counts);
+        let kraft: f64 = lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-12, "kraft {kraft}");
+    }
+
+    #[test]
+    fn skewed_distribution_compresses() {
+        // 90% symbol 0 out of 4 symbols: optimal code is 1 bit for the
+        // dominant symbol, so expect ~1.17 bits/symbol — well under the
+        // 2-bit fixed width but >= 1 (Huffman's per-symbol floor).
+        let mut rng = Rng::new(1);
+        let syms: Vec<u32> = (0..10_000)
+            .map(|_| if rng.f32() < 0.9 { 0 } else { 1 + rng.below(3) as u32 })
+            .collect();
+        let (_, bits, _) = encode(&syms, 4).unwrap();
+        let bps = bits as f64 / syms.len() as f64;
+        assert!((1.0..1.3).contains(&bps), "bits/symbol {bps}");
+    }
+
+    #[test]
+    fn roundtrip_uniform() {
+        let mut rng = Rng::new(2);
+        let syms: Vec<u32> = (0..5_000).map(|_| rng.below(16) as u32).collect();
+        let (bytes, _, lengths) = encode(&syms, 16).unwrap();
+        let back = decode(&bytes, syms.len(), &lengths).unwrap();
+        assert_eq!(back, syms);
+    }
+
+    #[test]
+    fn roundtrip_property_over_alphabet_sizes() {
+        check("huffman_roundtrip", 25, &UsizeIn(1, 16), |&k| {
+            let mut rng = Rng::new(k as u64);
+            let syms: Vec<u32> = (0..500).map(|_| rng.below(k) as u32).collect();
+            let (bytes, _, lengths) = encode(&syms, k).unwrap();
+            decode(&bytes, syms.len(), &lengths).unwrap() == syms
+        });
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let syms = vec![3u32; 100];
+        let (bytes, bits, lengths) = encode(&syms, 8).unwrap();
+        assert_eq!(bits, 100); // length-1 code by convention
+        let back = decode(&bytes, 100, &lengths).unwrap();
+        assert_eq!(back, syms);
+    }
+
+    #[test]
+    fn out_of_range_symbol_rejected() {
+        assert!(encode(&[5], 4).is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Host k-means: Lloyd's algorithm with k-means++ seeding, and the paper's
+//! soft-k-means (algorithm 1) as a host reference.
+//!
+//! Used for (a) warm-starting QAT codebooks from pretrained weights —
+//! mirroring DKM's practice of initializing clusters from the float model —
+//! (b) the PTQ baseline, and (c) cross-checking the fixed points the XLA
+//! artifacts converge to.
+
+use crate::util::rng::Rng;
+
+use super::{dist2, nearest};
+
+/// Result of a clustering run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// Row-major (k, d) codebook.
+    pub codebook: Vec<f32>,
+    pub k: usize,
+    pub d: usize,
+    pub iterations: usize,
+    /// Final quantization cost (paper eq. 2).
+    pub cost: f64,
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii): spread initial centers by
+/// D^2-weighted sampling.
+pub fn kmeanspp_init(w: &[f32], d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let m = w.len() / d;
+    assert!(m >= 1 && k >= 1);
+    let mut codebook = Vec::with_capacity(k * d);
+    let first = rng.below(m);
+    codebook.extend_from_slice(&w[first * d..(first + 1) * d]);
+    let mut d2: Vec<f32> = (0..m)
+        .map(|i| dist2(&w[i * d..(i + 1) * d], &codebook[0..d]))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(m) // all points identical: any index works
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = m - 1;
+            for (i, &x) in d2.iter().enumerate() {
+                target -= x as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        let start = codebook.len();
+        codebook.extend_from_slice(&w[pick * d..(pick + 1) * d]);
+        // Update shortest distances against the new center.
+        let new_c = codebook[start..start + d].to_vec();
+        for i in 0..m {
+            let dd = dist2(&w[i * d..(i + 1) * d], &new_c);
+            if dd < d2[i] {
+                d2[i] = dd;
+            }
+        }
+    }
+    codebook
+}
+
+/// Lloyd's algorithm until assignment fixpoint or `max_iter`.
+pub fn lloyd(w: &[f32], d: usize, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    let m = w.len() / d;
+    let mut codebook = kmeanspp_init(w, d, k, rng);
+    let mut assign = vec![usize::MAX; m];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // E-step
+        let mut changed = false;
+        for i in 0..m {
+            let j = nearest(&codebook, d, &w[i * d..(i + 1) * d]);
+            if assign[i] != j {
+                assign[i] = j;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // M-step
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..m {
+            let j = assign[i];
+            counts[j] += 1;
+            for c in 0..d {
+                sums[j * d + c] += w[i * d + c] as f64;
+            }
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                for c in 0..d {
+                    codebook[j * d + c] = (sums[j * d + c] / counts[j] as f64) as f32;
+                }
+            }
+            // empty cluster: keep previous center (consistent with the L1
+            // kernels' DEN_EPS guard)
+        }
+    }
+    let cost = super::cluster_cost(w, d, &codebook);
+    KMeansResult { codebook, k, d, iterations, cost }
+}
+
+/// The paper's soft-k-means (algorithm 1) on the host: attention-weighted
+/// EM with temperature `tau`, run to `tol` or `max_iter`.
+pub fn soft_kmeans(
+    w: &[f32],
+    d: usize,
+    init: &[f32],
+    tau: f32,
+    tol: f32,
+    max_iter: usize,
+) -> KMeansResult {
+    let m = w.len() / d;
+    let k = init.len() / d;
+    let mut codebook = init.to_vec();
+    let mut iterations = 0;
+    let mut attn = vec![0.0f32; k];
+    for it in 0..max_iter {
+        iterations = it + 1;
+        let mut num = vec![0.0f64; k * d];
+        let mut den = vec![0.0f64; k];
+        for i in 0..m {
+            let sub = &w[i * d..(i + 1) * d];
+            // A(W,C) row: softmax_tau(-dist) — max-subtracted for stability.
+            let mut max_logit = f32::MIN;
+            for j in 0..k {
+                let dist = dist2(sub, &codebook[j * d..(j + 1) * d]).sqrt();
+                attn[j] = -dist / tau;
+                max_logit = max_logit.max(attn[j]);
+            }
+            let mut z = 0.0f32;
+            for a in attn.iter_mut() {
+                *a = (*a - max_logit).exp();
+                z += *a;
+            }
+            for j in 0..k {
+                let a = (attn[j] / z) as f64;
+                den[j] += a;
+                for c in 0..d {
+                    num[j * d + c] += a * sub[c] as f64;
+                }
+            }
+        }
+        let mut delta2 = 0.0f64;
+        for j in 0..k {
+            if den[j] > 1e-8 {
+                for c in 0..d {
+                    let new = (num[j * d + c] / den[j]) as f32;
+                    let old = codebook[j * d + c];
+                    delta2 += ((new - old) as f64).powi(2);
+                    codebook[j * d + c] = new;
+                }
+            }
+        }
+        if (delta2.sqrt() as f32) < tol {
+            break;
+        }
+    }
+    let cost = super::cluster_cost(w, d, &codebook);
+    KMeansResult { codebook, k, d, iterations, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, VecF32};
+
+    fn gen_blobs(rng: &mut Rng, centers: &[f32], n_per: usize) -> Vec<f32> {
+        let mut w = Vec::new();
+        for &c in centers {
+            for _ in 0..n_per {
+                w.push(c + rng.normal_f32(0.0, 0.05));
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn lloyd_recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let w = gen_blobs(&mut rng, &[-2.0, 0.0, 2.0], 100);
+        let r = lloyd(&w, 1, 3, 50, &mut rng);
+        let mut cb = r.codebook.clone();
+        cb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((cb[0] + 2.0).abs() < 0.1, "{cb:?}");
+        assert!(cb[1].abs() < 0.1, "{cb:?}");
+        assert!((cb[2] - 2.0).abs() < 0.1, "{cb:?}");
+        assert!(r.cost < 3.0);
+    }
+
+    #[test]
+    fn soft_kmeans_matches_lloyd_at_low_tau() {
+        let mut rng = Rng::new(2);
+        let w = gen_blobs(&mut rng, &[-1.0, 1.0], 200);
+        let hard = lloyd(&w, 1, 2, 50, &mut rng);
+        let soft = soft_kmeans(&w, 1, &hard.codebook, 5e-4, 1e-6, 50);
+        // At the paper's tau the attention is near-hard: same fixed point.
+        for (a, b) in hard.codebook.iter().zip(&soft.codebook) {
+            assert!((a - b).abs() < 1e-2, "{:?} vs {:?}", hard.codebook, soft.codebook);
+        }
+    }
+
+    #[test]
+    fn kmeanspp_centers_are_data_points() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let cb = kmeanspp_init(&w, 1, 4, &mut rng);
+        for c in &cb {
+            assert!(w.contains(c));
+        }
+        // distinct with overwhelming probability on spread data
+        let mut s = cb.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.dedup();
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn lloyd_cost_monotone_in_k_property() {
+        // More clusters never increase optimal cost (checked on random data
+        // across k=1..4 with the same seed).
+        check(
+            "kmeans_cost_monotone",
+            30,
+            &VecF32 { min_len: 8, max_len: 64, scale: 1.0 },
+            |w| {
+                let mut costs = Vec::new();
+                for k in 1..=4 {
+                    let mut rng = Rng::new(7);
+                    costs.push(lloyd(w, 1, k, 30, &mut rng).cost);
+                }
+                costs.windows(2).all(|p| p[1] <= p[0] + 1e-6)
+            },
+        );
+    }
+
+    #[test]
+    fn handles_degenerate_all_equal() {
+        let w = vec![1.5f32; 32];
+        let mut rng = Rng::new(4);
+        let r = lloyd(&w, 1, 4, 10, &mut rng);
+        assert!(r.cost < 1e-10);
+        let s = soft_kmeans(&w, 1, &r.codebook, 1e-3, 1e-7, 10);
+        assert!(s.cost < 1e-10);
+    }
+
+    #[test]
+    fn subvector_d2() {
+        let mut rng = Rng::new(5);
+        // two 2-d blobs at (0,0) and (3,3)
+        let mut w = Vec::new();
+        for _ in 0..100 {
+            w.push(rng.normal_f32(0.0, 0.05));
+            w.push(rng.normal_f32(0.0, 0.05));
+        }
+        for _ in 0..100 {
+            w.push(rng.normal_f32(3.0, 0.05));
+            w.push(rng.normal_f32(3.0, 0.05));
+        }
+        let r = lloyd(&w, 2, 2, 50, &mut rng);
+        let c0 = &r.codebook[0..2];
+        let c1 = &r.codebook[2..4];
+        let (lo, hi) = if c0[0] < c1[0] { (c0, c1) } else { (c1, c0) };
+        assert!(lo[0].abs() < 0.1 && lo[1].abs() < 0.1);
+        assert!((hi[0] - 3.0).abs() < 0.1 && (hi[1] - 3.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,86 @@
+//! Pure-rust quantization substrates.
+//!
+//! These are the host-side counterparts of the L1/L2 clustering stack:
+//!
+//! * [`kmeans`] — Lloyd's (hard) k-means with k-means++ seeding, plus a host
+//!   soft-k-means (algorithm 1) used to warm-start QAT codebooks and to
+//!   cross-check the XLA artifacts' fixed points.
+//! * [`ptq`] — post-training quantization baseline (Han et al. 2015: cluster
+//!   pre-trained weights once, snap, no retraining) for the E5 PTQ-vs-QAT
+//!   comparison.
+//! * [`packing`] — codebook bit-packing + Huffman coding: turns (weights,
+//!   codebook) into the actual compressed byte stream so compression ratios
+//!   in reports are measured, not estimated.
+
+pub mod huffman;
+pub mod kmeans;
+pub mod packing;
+pub mod ptq;
+pub mod uniform;
+
+/// Squared euclidean distance between two d-dim sub-vectors.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Nearest codeword index for a sub-vector.
+#[inline]
+pub fn nearest(c: &[f32], d: usize, w: &[f32]) -> usize {
+    let k = c.len() / d;
+    let mut best = 0;
+    let mut best_d = f32::MAX;
+    for j in 0..k {
+        let dd = dist2(w, &c[j * d..(j + 1) * d]);
+        if dd < best_d {
+            best_d = dd;
+            best = j;
+        }
+    }
+    best
+}
+
+/// Quantization cost (paper eq. 2): sum of squared distances to assigned
+/// codewords.
+pub fn cluster_cost(w: &[f32], d: usize, codebook: &[f32]) -> f64 {
+    let m = w.len() / d;
+    let mut cost = 0.0f64;
+    for i in 0..m {
+        let sub = &w[i * d..(i + 1) * d];
+        let j = nearest(codebook, d, sub);
+        cost += dist2(sub, &codebook[j * d..(j + 1) * d]) as f64;
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist2_basics() {
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(dist2(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn nearest_picks_min() {
+        let codebook = [0.0, 1.0, 5.0, -3.0]; // k=4, d=1
+        assert_eq!(nearest(&codebook, 1, &[0.9]), 1);
+        assert_eq!(nearest(&codebook, 1, &[-2.0]), 3);
+        assert_eq!(nearest(&codebook, 1, &[4.0]), 2);
+    }
+
+    #[test]
+    fn cost_zero_when_exact() {
+        let cb = [1.0, 2.0];
+        let w = [1.0, 2.0, 1.0, 2.0];
+        assert_eq!(cluster_cost(&w, 1, &cb), 0.0);
+    }
+}

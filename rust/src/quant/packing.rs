@@ -1,0 +1,214 @@
+//! Codebook packing: (weights, codebook) -> compressed byte stream.
+//!
+//! This is the deployment format the paper's compression ratios refer to
+//! (paper table 3 caption: "when k=2 ... 1 bit per weight; k=2, d=2 ... half
+//! a bit per weight"): each of the m = n/d sub-vectors stores a b = lg k bit
+//! cluster address (optionally Huffman-coded below b bits), plus the k*d f32
+//! codebook itself.
+
+use anyhow::Result;
+
+use super::{huffman, nearest};
+
+/// A layer quantized into codebook + packed addresses.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub k: usize,
+    pub d: usize,
+    /// Number of sub-vectors.
+    pub m: usize,
+    /// (k, d) codebook, row-major f32.
+    pub codebook: Vec<f32>,
+    /// Fixed-width bit-packed addresses, b = ceil(lg k) bits each.
+    pub packed: Vec<u8>,
+    /// Huffman-coded addresses (entropy-coded stream + canonical lengths).
+    pub huffman: Vec<u8>,
+    pub huffman_bits: u64,
+    pub huffman_lengths: Vec<u8>,
+}
+
+/// Bits per address at fixed width.
+pub fn addr_bits(k: usize) -> u32 {
+    (usize::BITS - (k - 1).leading_zeros()).max(1)
+}
+
+/// Quantize `w` (flat, subvector dim `d`) against `codebook` and pack.
+pub fn pack(w: &[f32], d: usize, codebook: &[f32]) -> Result<PackedLayer> {
+    let k = codebook.len() / d;
+    let m = w.len() / d;
+    let b = addr_bits(k);
+    let mut addrs = Vec::with_capacity(m);
+    for i in 0..m {
+        addrs.push(nearest(codebook, d, &w[i * d..(i + 1) * d]) as u32);
+    }
+    // fixed-width packing
+    let mut packed = Vec::with_capacity((m * b as usize + 7) / 8);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for &a in &addrs {
+        acc = (acc << b) | a as u64;
+        nbits += b;
+        while nbits >= 8 {
+            nbits -= 8;
+            packed.push((acc >> nbits) as u8);
+        }
+    }
+    if nbits > 0 {
+        packed.push((acc << (8 - nbits)) as u8);
+    }
+    let (hbytes, hbits, hlengths) = huffman::encode(&addrs, k)?;
+    Ok(PackedLayer {
+        k,
+        d,
+        m,
+        codebook: codebook.to_vec(),
+        packed,
+        huffman: hbytes,
+        huffman_bits: hbits,
+        huffman_lengths: hlengths,
+    })
+}
+
+/// Reconstruct the (lossy) weights from a packed layer.
+pub fn unpack(layer: &PackedLayer) -> Vec<f32> {
+    let b = addr_bits(layer.k);
+    let mut out = Vec::with_capacity(layer.m * layer.d);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut byte_idx = 0usize;
+    for _ in 0..layer.m {
+        while nbits < b {
+            acc = (acc << 8) | layer.packed[byte_idx] as u64;
+            byte_idx += 1;
+            nbits += 8;
+        }
+        let addr = ((acc >> (nbits - b)) & ((1 << b) - 1)) as usize;
+        nbits -= b;
+        out.extend_from_slice(&layer.codebook[addr * layer.d..(addr + 1) * layer.d]);
+    }
+    out
+}
+
+/// Decode the Huffman stream back to addresses and reconstruct weights —
+/// verifies the entropy-coded path agrees with the fixed-width path.
+pub fn unpack_huffman(layer: &PackedLayer) -> Result<Vec<f32>> {
+    let addrs = huffman::decode(&layer.huffman, layer.m, &layer.huffman_lengths)?;
+    let mut out = Vec::with_capacity(layer.m * layer.d);
+    for a in addrs {
+        let a = a as usize;
+        out.extend_from_slice(&layer.codebook[a * layer.d..(a + 1) * layer.d]);
+    }
+    Ok(out)
+}
+
+/// Compression accounting for a set of packed layers.
+#[derive(Debug, Clone, Default)]
+pub struct CompressionReport {
+    pub float_bytes: u64,
+    pub packed_bytes: u64,
+    pub huffman_bytes: u64,
+    pub codebook_bytes: u64,
+}
+
+impl CompressionReport {
+    pub fn add(&mut self, layer: &PackedLayer) {
+        self.float_bytes += (layer.m * layer.d * 4) as u64;
+        self.packed_bytes += layer.packed.len() as u64;
+        self.huffman_bytes += (layer.huffman_bits + 7) as u64 / 8;
+        self.codebook_bytes += (layer.codebook.len() * 4) as u64;
+    }
+
+    /// Ratio of float size to (packed + codebook) size.
+    pub fn ratio_fixed(&self) -> f64 {
+        self.float_bytes as f64 / (self.packed_bytes + self.codebook_bytes).max(1) as f64
+    }
+
+    pub fn ratio_huffman(&self) -> f64 {
+        self.float_bytes as f64 / (self.huffman_bytes + self.codebook_bytes).max(1) as f64
+    }
+
+    /// Effective bits per original weight (fixed-width addressing).
+    pub fn bits_per_weight(&self) -> f64 {
+        8.0 * (self.packed_bytes + self.codebook_bytes) as f64
+            / (self.float_bytes as f64 / 4.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PairOf, UsizeIn, VecF32};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn addr_bits_table() {
+        assert_eq!(addr_bits(2), 1);
+        assert_eq!(addr_bits(4), 2);
+        assert_eq!(addr_bits(8), 3);
+        assert_eq!(addr_bits(16), 4);
+        assert_eq!(addr_bits(3), 2);
+    }
+
+    #[test]
+    fn pack_unpack_is_hard_quantization() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cb = vec![-1.0f32, -0.3, 0.3, 1.0];
+        let layer = pack(&w, 1, &cb).unwrap();
+        let rec = unpack(&layer);
+        // every reconstructed value is the nearest codeword
+        for (orig, r) in w.iter().zip(&rec) {
+            let j = nearest(&cb, 1, std::slice::from_ref(orig));
+            assert_eq!(*r, cb[j]);
+        }
+        // huffman path agrees exactly
+        assert_eq!(unpack_huffman(&layer).unwrap(), rec);
+    }
+
+    #[test]
+    fn k2_is_one_bit_per_weight() {
+        // paper table 3 caption: k=2, d=1 -> 1 bit/weight (+ codebook)
+        let w: Vec<f32> = (0..8192).map(|i| if i % 2 == 0 { -1.0 } else { 1.0 }).collect();
+        let cb = vec![-1.0f32, 1.0];
+        let layer = pack(&w, 1, &cb).unwrap();
+        assert_eq!(layer.packed.len(), 8192 / 8);
+        // k=2, d=2 -> half a bit per weight
+        let layer2 = pack(&w, 2, &cb).unwrap();
+        assert_eq!(layer2.packed.len(), (8192 / 2) / 8);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        let gen = PairOf(VecF32 { min_len: 8, max_len: 512, scale: 1.0 }, UsizeIn(1, 4));
+        check("pack_roundtrip", 30, &gen, |(w0, dd)| {
+            let d = *dd;
+            let w: Vec<f32> = {
+                let mut v = w0.clone();
+                v.truncate(v.len() / d * d);
+                if v.len() < d {
+                    v = vec![0.0; d];
+                }
+                v
+            };
+            let mut rng = Rng::new(9);
+            let k = 4;
+            let r = crate::quant::kmeans::lloyd(&w, d, k, 20, &mut rng);
+            let layer = pack(&w, d, &r.codebook).unwrap();
+            let a = unpack(&layer);
+            let b = unpack_huffman(&layer).unwrap();
+            a == b && a.len() == w.len()
+        });
+    }
+
+    #[test]
+    fn report_ratios() {
+        let w: Vec<f32> = (0..4096).map(|i| (i % 4) as f32).collect();
+        let cb = vec![0.0f32, 1.0, 2.0, 3.0];
+        let layer = pack(&w, 1, &cb).unwrap();
+        let mut rep = CompressionReport::default();
+        rep.add(&layer);
+        // 32-bit floats to 2-bit addresses: ratio just under 16x.
+        assert!(rep.ratio_fixed() > 14.0, "{}", rep.ratio_fixed());
+        assert!(rep.bits_per_weight() < 2.3);
+    }
+}

@@ -1,0 +1,90 @@
+//! Post-training quantization baseline (paper §2.3 / Han et al. 2015b):
+//! cluster each layer's pretrained weights once with k-means and snap — no
+//! retraining. The E5 ablation compares PTQ against the QAT methods to show
+//! why training through the quantizer matters.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::kmeans::{lloyd, KMeansResult};
+use super::packing::{pack, CompressionReport, PackedLayer};
+
+/// PTQ outcome for one layer.
+#[derive(Debug, Clone)]
+pub struct PtqLayer {
+    pub name: String,
+    pub result: KMeansResult,
+    pub packed: PackedLayer,
+    /// Hard-quantized weights (same shape as input).
+    pub quantized: Tensor,
+}
+
+/// Quantize a named set of layers (name, tensor, clustered?) in place:
+/// clustered layers are snapped to k-means codebooks, the rest pass through.
+pub fn quantize_model(
+    layers: &[(String, Tensor, bool)],
+    k: usize,
+    d: usize,
+    max_iter: usize,
+    seed: u64,
+) -> Result<(Vec<PtqLayer>, Vec<Tensor>, CompressionReport)> {
+    let mut rng = Rng::new(seed ^ 0x5054_5100);
+    let mut detailed = Vec::new();
+    let mut out_tensors = Vec::with_capacity(layers.len());
+    let mut report = CompressionReport::default();
+    for (name, tensor, clustered) in layers {
+        if !*clustered {
+            out_tensors.push(tensor.clone());
+            continue;
+        }
+        let w = tensor.data();
+        let result = lloyd(w, d, k, max_iter, &mut rng);
+        let packed = pack(w, d, &result.codebook)?;
+        let rec = super::packing::unpack(&packed);
+        report.add(&packed);
+        let quantized = Tensor::new(tensor.shape(), rec);
+        out_tensors.push(quantized.clone());
+        detailed.push(PtqLayer { name: name.clone(), result, packed, quantized });
+    }
+    Ok((detailed, out_tensors, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ptq_quantizes_only_clustered() {
+        let layers = vec![
+            (
+                "w".to_string(),
+                Tensor::new(&[4, 4], (0..16).map(|i| (i % 4) as f32).collect()),
+                true,
+            ),
+            ("b".to_string(), Tensor::new(&[4], vec![0.5; 4]), false),
+        ];
+        let (detailed, out, report) = quantize_model(&layers, 4, 1, 20, 0).unwrap();
+        assert_eq!(detailed.len(), 1);
+        assert_eq!(out.len(), 2);
+        // with k=4 and 4 distinct values the snap is exact
+        assert_eq!(out[0], layers[0].1);
+        // bias untouched
+        assert_eq!(out[1], layers[1].1);
+        assert!(report.ratio_fixed() > 1.0);
+    }
+
+    #[test]
+    fn ptq_cost_decreases_with_k() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::from_fn(&[512], |_| rng.normal_f32(0.0, 1.0));
+        let layers = vec![("w".to_string(), t, true)];
+        let mut prev = f64::MAX;
+        for k in [2usize, 4, 8, 16] {
+            let (d, _, _) = quantize_model(&layers, k, 1, 30, 7).unwrap();
+            assert!(d[0].result.cost <= prev + 1e-9, "k={k}");
+            prev = d[0].result.cost;
+        }
+    }
+}

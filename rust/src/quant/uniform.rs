@@ -1,0 +1,170 @@
+//! Uniform (affine) quantization baselines — the PTQ family the paper cites
+//! via Banner et al. 2019 (post-training 4-bit) and the Straight-Through
+//! Estimator literature. Included so the E5 comparison covers the standard
+//! non-clustered alternative: a k-level uniform grid over [min, max] with
+//! optional stochastic rounding.
+//!
+//! A uniform grid is exactly a codebook with evenly spaced codewords, so
+//! these plug into the same packing/eval machinery as k-means codebooks.
+
+use crate::util::rng::Rng;
+
+/// Affine quantization parameters for one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UniformParams {
+    pub scale: f32,
+    pub zero: f32,
+    pub levels: usize,
+}
+
+impl UniformParams {
+    /// Fit a k-level grid over the data range (min/max calibration).
+    pub fn fit(w: &[f32], levels: usize) -> Self {
+        assert!(levels >= 2);
+        let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+        for &x in w {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || !hi.is_finite() || lo == hi {
+            return Self { scale: 1.0, zero: if lo.is_finite() { lo } else { 0.0 }, levels };
+        }
+        Self { scale: (hi - lo) / (levels - 1) as f32, zero: lo, levels }
+    }
+
+    /// Quantize one value to its level index (round-to-nearest).
+    pub fn index(&self, x: f32) -> usize {
+        let q = ((x - self.zero) / self.scale).round();
+        (q.max(0.0) as usize).min(self.levels - 1)
+    }
+
+    /// Stochastically rounded level index: rounds up with probability equal
+    /// to the fractional part (unbiased in expectation).
+    pub fn index_stochastic(&self, x: f32, rng: &mut Rng) -> usize {
+        let q = (x - self.zero) / self.scale;
+        let floor = q.floor();
+        let frac = q - floor;
+        let up = rng.f32() < frac;
+        let idx = floor as isize + up as isize;
+        (idx.max(0) as usize).min(self.levels - 1)
+    }
+
+    /// Reconstruct a value from its level index.
+    pub fn value(&self, idx: usize) -> f32 {
+        self.zero + idx as f32 * self.scale
+    }
+
+    /// The grid as an explicit (levels, 1) codebook — interoperates with
+    /// `quant::packing` and the eval artifacts.
+    pub fn codebook(&self) -> Vec<f32> {
+        (0..self.levels).map(|i| self.value(i)).collect()
+    }
+}
+
+/// Uniformly quantize a tensor's data (round-to-nearest). Returns the
+/// reconstruction and the mean squared error.
+pub fn quantize(w: &[f32], levels: usize) -> (Vec<f32>, f64) {
+    let p = UniformParams::fit(w, levels);
+    let mut out = Vec::with_capacity(w.len());
+    let mut mse = 0.0f64;
+    for &x in w {
+        let v = p.value(p.index(x));
+        mse += ((v - x) as f64).powi(2);
+        out.push(v);
+    }
+    (out, mse / w.len().max(1) as f64)
+}
+
+/// Stochastic-rounding variant (unbiased; higher variance).
+pub fn quantize_stochastic(w: &[f32], levels: usize, seed: u64) -> (Vec<f32>, f64) {
+    let p = UniformParams::fit(w, levels);
+    let mut rng = Rng::new(seed ^ 0x5452_0001);
+    let mut out = Vec::with_capacity(w.len());
+    let mut mse = 0.0f64;
+    for &x in w {
+        let v = p.value(p.index_stochastic(x, &mut rng));
+        mse += ((v - x) as f64).powi(2);
+        out.push(v);
+    }
+    (out, mse / w.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, VecF32};
+
+    #[test]
+    fn fit_covers_range() {
+        let w = [-2.0f32, -1.0, 0.0, 1.0, 2.0];
+        let p = UniformParams::fit(&w, 4);
+        assert_eq!(p.value(0), -2.0);
+        assert!((p.value(3) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn round_trip_on_grid_points_is_exact() {
+        let p = UniformParams::fit(&[0.0, 3.0], 4);
+        for i in 0..4 {
+            let v = p.value(i);
+            assert_eq!(p.index(v), i);
+        }
+    }
+
+    #[test]
+    fn quantize_error_shrinks_with_levels() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..4096).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (_, e2) = quantize(&w, 2);
+        let (_, e4) = quantize(&w, 4);
+        let (_, e16) = quantize(&w, 16);
+        assert!(e4 < e2);
+        assert!(e16 < e4);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        // mean of reconstructions approaches the input mean.
+        let w = vec![0.3f32; 20_000];
+        let p = UniformParams::fit(&[0.0, 1.0], 2); // grid {0, 1}
+        let mut rng = Rng::new(2);
+        let mean: f64 = w
+            .iter()
+            .map(|&x| p.value(p.index_stochastic(x, &mut rng)) as f64)
+            .sum::<f64>()
+            / w.len() as f64;
+        assert!((mean - 0.3).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn kmeans_beats_uniform_on_clustered_data() {
+        // Bimodal data: a fitted codebook (k-means) must achieve lower MSE
+        // than the uniform grid at the same bit budget — the reason the
+        // paper's family clusters instead of scaling.
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..2000)
+            .map(|i| rng.normal_f32(if i % 2 == 0 { -3.0 } else { 3.0 }, 0.1))
+            .collect();
+        let (_, uni_mse) = quantize(&w, 4);
+        let km = crate::quant::kmeans::lloyd(&w, 1, 4, 30, &mut rng);
+        let km_mse = km.cost / w.len() as f64;
+        assert!(km_mse < uni_mse * 0.5, "kmeans {km_mse} vs uniform {uni_mse}");
+    }
+
+    #[test]
+    fn degenerate_constant_input() {
+        let w = vec![5.0f32; 64];
+        let (rec, mse) = quantize(&w, 4);
+        assert!(mse < 1e-12);
+        assert!(rec.iter().all(|&v| (v - 5.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn codebook_interop_property() {
+        check("uniform_codebook_monotone", 30, &VecF32 { min_len: 2, max_len: 256, scale: 2.0 }, |w| {
+            let p = UniformParams::fit(w, 8);
+            let cb = p.codebook();
+            cb.windows(2).all(|ab| ab[1] >= ab[0])
+        });
+    }
+}

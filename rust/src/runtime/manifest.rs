@@ -1,0 +1,297 @@
+//! Typed view of `artifacts/manifest.json` — the AOT interchange contract.
+//!
+//! The manifest is written by `python/compile/aot.py` at export time and is
+//! the *only* channel through which rust learns program signatures: input
+//! ordering (params, then codebooks, then batch, then tau), shapes, dtypes,
+//! experiment parameters baked into each artifact, and XLA's compiled buffer
+//! statistics (consumed by the `memory` module for E4).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use crate::tensor::init::ParamInfo;
+use crate::util::json::Json;
+
+/// One named input or output of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// XLA buffer-assignment statistics recorded at export time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryStats {
+    pub temp_bytes: u64,
+    pub argument_bytes: u64,
+    pub output_bytes: u64,
+    pub generated_code_bytes: u64,
+}
+
+impl MemoryStats {
+    pub fn peak_bytes(&self) -> u64 {
+        self.temp_bytes + self.argument_bytes + self.output_bytes
+    }
+}
+
+/// One exported program.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// `qat_step` | `pretrain_step` | `eval_quant` | `eval_float` | `cluster_grad`
+    pub kind: String,
+    pub model: Option<String>,
+    pub method: Option<String>,
+    pub k: Option<usize>,
+    pub d: Option<usize>,
+    pub max_iter: Option<usize>,
+    pub batch: Option<usize>,
+    pub m: Option<usize>,
+    pub bwd_max_iter: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub params: Vec<ParamInfo>,
+    pub memory: MemoryStats,
+}
+
+impl ArtifactInfo {
+    /// Indices of clustered parameters (codebook order).
+    pub fn clustered_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.clustered)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.size()).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub table1_grid: Vec<(usize, usize)>,
+    pub table3_grid: Vec<(usize, usize)>,
+    pub methods: Vec<String>,
+    pub memory_t: Vec<usize>,
+    pub resnet_width: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let info = parse_artifact(a)?;
+            artifacts.insert(info.name.clone(), info);
+        }
+
+        let grid = |key: &str| -> Vec<(usize, usize)> {
+            root.get(key)
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|p| {
+                            let p = p.as_arr()?;
+                            Some((p.first()?.as_usize()?, p.get(1)?.as_usize()?))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+
+        Ok(Self {
+            dir,
+            table1_grid: grid("table1_grid"),
+            table3_grid: grid("table3_grid"),
+            methods: root
+                .get("methods")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|m| m.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+            memory_t: root
+                .get("memory_t")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            resnet_width: root.usize_of("resnet_width").unwrap_or(16),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Artifacts of a given kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactInfo> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Resolve the artifact file path.
+    pub fn hlo_path(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactInfo> {
+    let name = a
+        .str_of("name")
+        .ok_or_else(|| anyhow!("artifact missing name"))?
+        .to_string();
+    let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+        let mut out = Vec::new();
+        for io in a.get(key).and_then(Json::as_arr).unwrap_or(&[]) {
+            out.push(IoSpec {
+                name: io.str_of("name").unwrap_or("?").to_string(),
+                shape: io
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: DType::parse(io.str_of("dtype").unwrap_or("float32"))
+                    .with_context(|| format!("artifact {name}, io {key}"))?,
+            });
+        }
+        Ok(out)
+    };
+
+    let params = a
+        .get("params")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|p| ParamInfo {
+                    name: p.str_of("name").unwrap_or("?").to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    clustered: p.get("clustered").and_then(Json::as_bool).unwrap_or(false),
+                    fan_in: p.usize_of("fan_in").unwrap_or(1),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let mem = a.get("memory");
+    let mem_field = |f: &str| -> u64 {
+        mem.and_then(|m| m.usize_of(f)).unwrap_or(0) as u64
+    };
+
+    Ok(ArtifactInfo {
+        file: a.str_of("file").unwrap_or(&format!("{name}.hlo.txt")).to_string(),
+        kind: a.str_of("kind").unwrap_or("unknown").to_string(),
+        model: a.str_of("model").map(String::from),
+        method: a.str_of("method").map(String::from),
+        k: a.usize_of("k"),
+        d: a.usize_of("d"),
+        max_iter: a.usize_of("max_iter"),
+        batch: a.usize_of("batch"),
+        m: a.usize_of("m"),
+        bwd_max_iter: a.usize_of("bwd_max_iter"),
+        inputs: parse_io("inputs")?,
+        outputs: parse_io("outputs")?,
+        params,
+        memory: MemoryStats {
+            temp_bytes: mem_field("temp_bytes"),
+            argument_bytes: mem_field("argument_bytes"),
+            output_bytes: mem_field("output_bytes"),
+            generated_code_bytes: mem_field("generated_code_bytes"),
+        },
+        name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+ "artifacts": [
+  {
+   "name": "m_qat_k4d1_idkm",
+   "file": "m_qat_k4d1_idkm.hlo.txt",
+   "kind": "qat_step",
+   "model": "convnet2", "method": "idkm", "k": 4, "d": 1,
+   "max_iter": 30, "batch": 128,
+   "inputs": [
+    {"name": "param:conv1/w", "shape": [3,3,1,8], "dtype": "float32"},
+    {"name": "y", "shape": [128], "dtype": "int32"}
+   ],
+   "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}],
+   "params": [
+    {"name": "conv1/w", "shape": [3,3,1,8], "clustered": true, "fan_in": 9},
+    {"name": "conv1/b", "shape": [8], "clustered": false, "fan_in": 1}
+   ],
+   "memory": {"temp_bytes": 1000, "argument_bytes": 200, "output_bytes": 50}
+  }
+ ],
+ "table1_grid": [[8,1],[4,1]],
+ "methods": ["dkm","idkm"],
+ "memory_t": [1,5],
+ "resnet_width": 16
+}"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("idkm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("m_qat_k4d1_idkm").unwrap();
+        assert_eq!(a.kind, "qat_step");
+        assert_eq!(a.k, Some(4));
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.params.len(), 2);
+        assert!(a.params[0].clustered);
+        assert_eq!(a.clustered_indices(), vec![0]);
+        assert_eq!(a.memory.peak_bytes(), 1250);
+        assert_eq!(m.table1_grid, vec![(8, 1), (4, 1)]);
+        assert_eq!(m.by_kind("qat_step").len(), 1);
+        assert!(m.get("nope").is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts, compile them once on
+//! the CPU PJRT client, and execute them from the coordinator's hot loop.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile`.
+//! Executables are cached (compilation of the ResNet QAT steps takes tens of
+//! seconds) and shape-checked against the manifest before every call in
+//! debug builds, once at load in release.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng; // re-exported convenience for callers
+pub use manifest::{ArtifactInfo, DType, IoSpec, Manifest};
+
+/// Host-side value crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 value"),
+        }
+    }
+
+    /// Scalar f32 accessor (loss, iteration counts reported as f32).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            bail!("expected scalar, got shape {:?}", t.shape());
+        }
+        Ok(t.data()[0])
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        let t = self.as_i32()?;
+        if t.data().len() != 1 {
+            bail!("expected scalar, got shape {:?}", t.shape());
+        }
+        Ok(t.data()[0])
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Value::F32(Tensor::new(&dims, lit.to_vec::<f32>()?)))
+            }
+            xla::ElementType::S32 => {
+                Ok(Value::I32(IntTensor::new(&dims, lit.to_vec::<i32>()?)))
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Single-copy host->literal staging (perf: `Literal::vec1(..).reshape(..)`
+/// copies twice; `create_from_shape_and_untyped_data` copies once — §Perf L3).
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes,
+    )?)
+}
+
+fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        t.shape(),
+        bytes,
+    )?)
+}
+
+/// Borrowed argument view — lets the step hot loop stage literals without
+/// cloning the host tensors first (§Perf L3).
+#[derive(Debug, Clone, Copy)]
+pub enum ValueRef<'a> {
+    F32(&'a Tensor),
+    I32(&'a IntTensor),
+}
+
+impl<'a> ValueRef<'a> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ValueRef::F32(t) => t.shape(),
+            ValueRef::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            ValueRef::F32(_) => DType::F32,
+            ValueRef::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ValueRef::F32(t) => tensor_to_literal(t),
+            ValueRef::I32(t) => int_tensor_to_literal(t),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+/// Cumulative execution statistics for one executable.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// A compiled artifact plus its manifest record.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executable {
+    /// Execute with host values; returns outputs in manifest order.
+    pub fn run(&self, args: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<ValueRef> = args
+            .iter()
+            .map(|v| match v {
+                Value::F32(t) => ValueRef::F32(t),
+                Value::I32(t) => ValueRef::I32(t),
+            })
+            .collect();
+        self.run_borrowed(&refs)
+    }
+
+    /// Execute with borrowed host values (hot-loop path: no tensor clones).
+    pub fn run_borrowed(&self, args: &[ValueRef]) -> Result<Vec<Value>> {
+        self.check_args(args)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(ValueRef::to_literal)
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let out = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = out[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.calls += 1;
+            st.total_secs += dt;
+        }
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "{}: output arity {} != manifest {}",
+                self.info.name,
+                parts.len(),
+                self.info.outputs.len()
+            );
+        }
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    fn check_args(&self, args: &[ValueRef]) -> Result<()> {
+        if args.len() != self.info.inputs.len() {
+            bail!(
+                "{}: got {} args, manifest expects {}",
+                self.info.name,
+                args.len(),
+                self.info.inputs.len()
+            );
+        }
+        for (v, spec) in args.iter().zip(&self.info.inputs) {
+            if v.shape() != spec.shape.as_slice() || v.dtype() != spec.dtype {
+                bail!(
+                    "{}: arg {:?} shape/dtype {:?}/{:?} != manifest {:?}/{:?}",
+                    self.info.name,
+                    spec.name,
+                    v.shape(),
+                    v.dtype(),
+                    spec.shape,
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Mean wall-clock per call so far.
+    pub fn mean_secs(&self) -> f64 {
+        let st = self.stats.lock().unwrap();
+        if st.calls == 0 {
+            0.0
+        } else {
+            st.total_secs / st.calls as f64
+        }
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compiled-executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "runtime up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load (compile-once, cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let info = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&info);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+        crate::info!("compiled {name} in {}", crate::util::human_secs(compile_secs));
+        let executable = Arc::new(Executable {
+            info,
+            exe,
+            stats: Mutex::new(ExecStats { compile_secs, ..Default::default() }),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&executable));
+        Ok(executable)
+    }
+
+    /// Drop a compiled executable (frees program memory between sweep cells).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Deterministic helper RNG namespace for runtime consumers.
+    pub fn rng(&self, seed: u64) -> rng::Rng {
+        rng::Rng::new(seed)
+    }
+}

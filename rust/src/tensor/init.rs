@@ -1,0 +1,99 @@
+//! Parameter initialization mirroring `python/compile/models.py::init_params`
+//! semantics (He-normal for clustered weights, ones for norm scales, zeros
+//! for biases) — but seeded by the rust PRNG: the coordinator owns weights;
+//! Python only ships programs.
+
+use super::Tensor;
+use crate::util::rng::Rng;
+
+/// Parameter record mirrored from the manifest (`runtime::manifest` re-uses
+/// this type so init and runtime agree on the schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub clustered: bool,
+    pub fan_in: usize,
+}
+
+impl ParamInfo {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Initialize one parameter from its manifest record.
+pub fn init_param(p: &ParamInfo, rng: &mut Rng) -> Tensor {
+    if p.clustered {
+        let std = (2.0 / p.fan_in.max(1) as f32).sqrt();
+        Tensor::from_fn(&p.shape, |_| rng.normal_f32(0.0, std))
+    } else if is_norm_scale(&p.name) {
+        Tensor::ones(&p.shape)
+    } else {
+        Tensor::zeros(&p.shape)
+    }
+}
+
+/// Initialize the full parameter list for a model (manifest order).
+pub fn init_params(params: &[ParamInfo], seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut sub = rng.fork(i as u64);
+            init_param(p, &mut sub)
+        })
+        .collect()
+}
+
+/// GroupNorm scale parameters are named `*/gn*_s` or `*/gn_s` in the model
+/// zoo; they initialize to one, not zero.
+fn is_norm_scale(name: &str) -> bool {
+    name.ends_with("gn_s") || (name.contains("/gn") && name.ends_with("_s"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pi(name: &str, shape: &[usize], clustered: bool, fan_in: usize) -> ParamInfo {
+        ParamInfo {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            clustered,
+            fan_in,
+        }
+    }
+
+    #[test]
+    fn clustered_has_he_scale() {
+        let p = pi("conv1/w", &[3, 3, 1, 8], true, 9);
+        let mut rng = Rng::new(0);
+        let t = init_param(&p, &mut rng);
+        let std = (t.data().iter().map(|x| x * x).sum::<f32>() / t.len() as f32).sqrt();
+        let expect = (2.0f32 / 9.0).sqrt();
+        assert!((std - expect).abs() < 0.2 * expect, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn bias_zero_norm_one() {
+        let mut rng = Rng::new(0);
+        let b = init_param(&pi("conv1/b", &[8], false, 1), &mut rng);
+        assert!(b.data().iter().all(|&x| x == 0.0));
+        let s = init_param(&pi("s0b0/gn1_s", &[8], false, 1), &mut rng);
+        assert!(s.data().iter().all(|&x| x == 1.0));
+        let s2 = init_param(&pi("stem/gn_s", &[8], false, 1), &mut rng);
+        assert!(s2.data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let ps = vec![pi("a/w", &[4, 4], true, 4), pi("a/b", &[4], false, 1)];
+        let x = init_params(&ps, 7);
+        let y = init_params(&ps, 7);
+        let z = init_params(&ps, 8);
+        assert_eq!(x[0], y[0]);
+        assert_ne!(x[0], z[0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Training/eval metric accumulators: running means, accuracy counters,
+//! loss curves with step stamps, and simple summary statistics used by the
+//! report generator and the benches.
+
+/// Accumulates (correct, total) over eval batches.
+#[derive(Debug, Default, Clone)]
+pub struct Accuracy {
+    pub correct: u64,
+    pub total: u64,
+}
+
+impl Accuracy {
+    pub fn add(&mut self, correct: u64, total: u64) {
+        self.correct += correct;
+        self.total += total;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Numerically stable running mean/min/max (Welford for variance).
+#[derive(Debug, Default, Clone)]
+pub struct Running {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// A (step, value) series — loss curves, accuracy-over-epochs, etc.
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` points (smoothed terminal value).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Render as CSV (`step,value` lines) for EXPERIMENTS.md appendices.
+    pub fn to_csv(&self, header: &str) -> String {
+        let mut out = format!("step,{header}\n");
+        for (s, v) in &self.points {
+            out.push_str(&format!("{s},{v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_ratio() {
+        let mut a = Accuracy::default();
+        a.add(3, 10);
+        a.add(7, 10);
+        assert!((a.value() - 0.5).abs() < 1e-12);
+        assert_eq!(Accuracy::default().value(), 0.0);
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut r = Running::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.add(x);
+        }
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert!((r.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 4.0);
+    }
+
+    #[test]
+    fn series_tail() {
+        let mut s = Series::default();
+        for i in 0..10 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.last(), Some(9.0));
+        assert!((s.tail_mean(4) - 7.5).abs() < 1e-12);
+        assert!(s.to_csv("loss").starts_with("step,loss\n0,0\n"));
+    }
+}

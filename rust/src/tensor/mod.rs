@@ -1,0 +1,203 @@
+//! Host-side tensor substrate: a dense row-major f32 NDArray plus the init
+//! and metric helpers the coordinator needs around the PJRT boundary.
+//!
+//! This is deliberately *not* a general autodiff tensor library — all heavy
+//! compute happens inside the AOT-compiled XLA executables. What lives here
+//! is the host plumbing: parameter initialization (matching the manifest
+//! shapes), batch staging, metrics, and the weight-matrix views the pure-rust
+//! quantization substrate (`quant/`) operates on.
+
+pub mod init;
+pub mod metrics;
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// View as an (m, d) matrix of sub-vectors — the product-quantization
+    /// partition (paper §3): element count must divide evenly by `d`.
+    pub fn as_subvectors(&self, d: usize) -> Matrix<'_> {
+        assert!(d > 0 && self.len() % d == 0, "len {} % d {d} != 0", self.len());
+        Matrix { data: &self.data, rows: self.len() / d, cols: d }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+/// Borrowed (rows, cols) matrix view over a tensor's data.
+#[derive(Debug, Clone, Copy)]
+pub struct Matrix<'a> {
+    pub data: &'a [f32],
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl<'a> Matrix<'a> {
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// Int32 tensor (labels and other integral AOT inputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        let t = t.reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data()[4], 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn subvector_view() {
+        let t = Tensor::new(&[8], (0..8).map(|i| i as f32).collect());
+        let m = t.as_subvectors(2);
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.row(1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn subvector_indivisible_panics() {
+        Tensor::new(&[7], vec![0.0; 7]).as_subvectors(2);
+    }
+
+    #[test]
+    fn norms_and_diffs() {
+        let a = Tensor::new(&[3], vec![3.0, 0.0, 4.0]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-6);
+        let b = Tensor::new(&[3], vec![3.0, 1.0, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let s = Tensor::scalar(5e-4);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.len(), 1);
+    }
+}

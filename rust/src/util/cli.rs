@@ -1,0 +1,174 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options. Each subcommand of the
+//! `idkm` binary builds one `Args` over its slice of `std::env::args`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments plus the option registry (for `--help`).
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a valued option (for usage text + default lookup).
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse a raw argv slice. Returns Err(usage) on `--help` or bad input.
+    pub fn parse(mut self, argv: &[String]) -> Result<Self, String> {
+        let known_flag = |specs: &[OptSpec], n: &str| {
+            specs.iter().any(|s| s.is_flag && s.name == n)
+        };
+        let known_opt = |specs: &[OptSpec], n: &str| {
+            specs.iter().any(|s| !s.is_flag && s.name == n)
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    if !known_opt(&self.specs, k) {
+                        return Err(format!("unknown option --{k}\n{}", self.usage()));
+                    }
+                    self.values.insert(k.to_string(), v[1..].to_string());
+                } else if known_flag(&self.specs, stripped) {
+                    self.flags.push(stripped.to_string());
+                } else if known_opt(&self.specs, stripped) {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{stripped} expects a value"))?;
+                    self.values.insert(stripped.to_string(), v.clone());
+                } else {
+                    return Err(format!("unknown option --{stripped}\n{}", self.usage()));
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = String::from("options:\n");
+        for s in &self.specs {
+            let d = s
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<18} {}{}\n", s.name, s.help, d));
+        }
+        out
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.values.get(key).cloned().or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == key && !s.is_flag)
+                .and_then(|s| s.default.clone())
+        })
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<T, String> {
+        let v = self.get(key).ok_or_else(|| format!("missing --{key}"))?;
+        v.parse::<T>()
+            .map_err(|_| format!("--{key}: cannot parse {v:?}"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::new()
+            .opt("steps", "100", "train steps")
+            .opt("model", "convnet2", "model name")
+            .flag("verbose", "chatty")
+            .parse(&argv(&["--steps", "5", "--model=mlp", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_parsed::<usize>("steps").unwrap(), 5);
+        assert_eq!(a.get("model").unwrap(), "mlp");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new()
+            .opt("steps", "100", "train steps")
+            .parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_parsed::<usize>("steps").unwrap(), 100);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new().opt("a", "1", "a").parse(&argv(&["--nope", "3"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let r = Args::new().opt("a", "1", "a").parse(&argv(&["--a"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let r = Args::new().opt("a", "1", "the a option").parse(&argv(&["--help"]));
+        let msg = r.unwrap_err();
+        assert!(msg.contains("the a option"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Leveled stderr logger with wall-clock-since-start stamps.
+//!
+//! Level is set once at startup (`IDKM_LOG=debug|info|warn|error`, default
+//! info). Kept allocation-free on the disabled path so `debug!` in the step
+//! hot loop costs one atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn init_from_env() {
+    let lvl = match std::env::var("IDKM_LOG").as_deref() {
+        Ok("debug") => DEBUG,
+        Ok("warn") => WARN,
+        Ok("error") => ERROR,
+        _ => INFO,
+    };
+    LEVEL.store(lvl, Ordering::Relaxed);
+    START.get_or_init(Instant::now);
+}
+
+pub fn set_level(lvl: u8) {
+    LEVEL.store(lvl, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: u8) -> bool {
+    lvl <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: u8, args: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match lvl {
+        ERROR => "ERROR",
+        WARN => "WARN ",
+        INFO => "INFO ",
+        _ => "DEBUG",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::INFO, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::WARN, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::DEBUG, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! errorlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::ERROR, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(WARN);
+        assert!(enabled(ERROR));
+        assert!(enabled(WARN));
+        assert!(!enabled(INFO));
+        set_level(INFO);
+        assert!(enabled(INFO));
+        assert!(!enabled(DEBUG));
+    }
+}

@@ -1,0 +1,60 @@
+//! Utility substrates the vendored crate set lacks: JSON, TOML-subset
+//! config parsing, PRNG, CLI parsing, logging, a thread pool with bounded
+//! (backpressured) channels, and a mini property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod toml;
+
+/// Format a byte count human-readably (`12.3 MiB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds as `1h02m`, `3m20s`, `12.4s`, or `340ms`.
+pub fn human_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{}h{:02}m", (s / 3600.0) as u64, ((s % 3600.0) / 60.0) as u64)
+    } else if s >= 60.0 {
+        format!("{}m{:02}s", (s / 60.0) as u64, (s % 60.0) as u64)
+    } else if s >= 1.0 {
+        format!("{s:.1}s")
+    } else {
+        format!("{:.0}ms", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(0.25), "250ms");
+        assert_eq!(human_secs(12.44), "12.4s");
+        assert_eq!(human_secs(200.0), "3m20s");
+        assert_eq!(human_secs(3720.0), "1h02m");
+    }
+}

@@ -1,0 +1,160 @@
+//! Miniature property-testing harness (proptest is not vendored).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs greedy shrinking via the
+//! generator's `shrink` and reports the minimal counterexample and the seed
+//! to reproduce. Used for the coordinator/quant invariants (routing,
+//! packing round-trips, k-means monotonicity).
+
+use super::rng::Rng;
+
+/// A generator produces values from randomness and can propose shrinks.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values; default none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run the property over `cases` random inputs (seeded deterministically by
+/// `name` + case index so CI is stable). Panics with the minimal failing
+/// input on violation.
+pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let min = shrink_loop(gen, v, &prop);
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}); minimal counterexample: {min:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy: take the first shrink candidate that still fails, repeat.
+    'outer: loop {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        return v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi]; shrinks toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec<f32> with length in [min_len, max_len], values normal(0, scale);
+/// shrinks by halving length and zeroing entries.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.normal_f32(0.0, self.scale)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum_nonneg", 200, &VecF32 { min_len: 0, max_len: 32, scale: 1.0 }, |v| {
+            v.iter().map(|x| x * x).sum::<f32>() >= 0.0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        // fails for any vec with len >= 3; shrinker should find len 3.
+        check("len_lt_3", 200, &VecF32 { min_len: 0, max_len: 64, scale: 1.0 }, |v| {
+            v.len() < 3
+        });
+    }
+
+    #[test]
+    fn usize_gen_in_bounds() {
+        let g = UsizeIn(5, 10);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = g.generate(&mut rng);
+            assert!((5..=10).contains(&v));
+        }
+    }
+}

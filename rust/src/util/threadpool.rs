@@ -1,0 +1,203 @@
+//! Thread pool + bounded MPMC channel (tokio is not vendored; the data
+//! loaders and the sweep runner use these instead).
+//!
+//! `Bounded<T>` is a condvar-based bounded queue providing backpressure:
+//! dataset prefetch threads block in `push` when the trainer falls behind,
+//! capping staging memory. `Pool` runs closures on N workers and joins them
+//! on drop (used by the sweep runner to parallelize independent experiment
+//! cells).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer channel.
+pub struct Bounded<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Arc::new(Inner {
+                q: Mutex::new(State { items: VecDeque::new(), cap, closed: false }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking push; returns Err(item) if the channel is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < st.cap {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Fixed-size worker pool executing boxed jobs.
+pub struct Pool {
+    jobs: Bounded<Box<dyn FnOnce() + Send + 'static>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(n: usize) -> Self {
+        let jobs: Bounded<Box<dyn FnOnce() + Send + 'static>> = Bounded::new(n.max(1) * 2);
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let jobs = jobs.clone();
+                std::thread::Builder::new()
+                    .name(format!("idkm-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = jobs.pop() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { jobs, workers }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        // Err only if closed, which join() is the sole caller of.
+        let _ = self.jobs.push(Box::new(f));
+    }
+
+    /// Close the queue and wait for all workers to finish outstanding jobs.
+    pub fn join(mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_order_single_consumer() {
+        let ch = Bounded::new(4);
+        for i in 0..4 {
+            ch.push(i).unwrap();
+        }
+        ch.close();
+        let got: Vec<i32> = std::iter::from_fn(|| ch.pop()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let ch = Bounded::new(1);
+        ch.push(1u32).unwrap();
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || ch2.push(2).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(ch.pop(), Some(1)); // unblocks the producer
+        assert!(t.join().unwrap());
+        assert_eq!(ch.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_wakes_consumers() {
+        let ch: Bounded<u32> = Bounded::new(2);
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || ch2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ch.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let ch = Bounded::new(2);
+        ch.close();
+        assert!(ch.push(5u8).is_err());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = Pool::new(4);
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+}

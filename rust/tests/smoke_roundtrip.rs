@@ -1,0 +1,49 @@
+// Early de-risk: load the smoke-exported QAT-step HLO (while_loop +
+// custom_vjp backward + interpret-mode Pallas lowerings) and execute it.
+// Only runs when the smoke artifacts exist.
+use anyhow::Result;
+
+#[test]
+fn qat_step_hlo_roundtrip() -> Result<()> {
+    let path = "/tmp/art_smoke/smoke_qat.hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} missing");
+        return Ok(());
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+
+    // convnet2 (k=4, d=1, batch=8): params, codebooks, x, y, tau — shapes per
+    // the manifest; fill with small deterministic values.
+    let mk = |n: usize, dims: &[i64], scale: f32| -> Result<xla::Literal> {
+        let v: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * scale).collect();
+        Ok(xla::Literal::vec1(&v).reshape(dims)?)
+    };
+    let mut args: Vec<xla::Literal> = vec![
+        mk(72, &[3, 3, 1, 8], 0.05)?,
+        mk(8, &[8], 0.0)?,
+        mk(1728, &[3, 3, 8, 24], 0.02)?,
+        mk(24, &[24], 0.0)?,
+        mk(240, &[24, 10], 0.05)?,
+        mk(10, &[10], 0.0)?,
+    ];
+    for _ in 0..3 {
+        args.push(mk(4, &[4, 1], 0.07)?); // codebooks
+    }
+    args.push(mk(8 * 28 * 28, &[8, 28, 28, 1], 0.1)?); // x
+    let y: Vec<i32> = (0..8).collect();
+    args.push(xla::Literal::vec1(&y).reshape(&[8])?);
+    args.push(xla::Literal::scalar(5e-4f32)); // tau
+
+    let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let outs = result.to_tuple()?;
+    assert_eq!(outs.len(), 11, "6 params + 3 codebooks + loss + iters");
+    let loss = outs[9].to_vec::<f32>()?[0];
+    let iters = outs[10].to_vec::<f32>()?[0];
+    println!("loss={loss} iters={iters}");
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(iters >= 1.0 && iters <= 10.0);
+    Ok(())
+}
