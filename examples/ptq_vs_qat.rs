@@ -10,6 +10,7 @@
 //!   cargo run --release --example ptq_vs_qat -- --steps 150
 
 use idkm::coordinator::{ExperimentConfig, Trainer};
+use idkm::quant::engine::Method;
 use idkm::quant::ptq;
 use idkm::runtime::Runtime;
 use idkm::util::cli::Args;
@@ -44,10 +45,11 @@ fn main() -> anyhow::Result<()> {
     println!("| k | d | PTQ | QAT idkm | QAT idkm_jfb | compress |");
     println!("|---|---|---|---|---|---|");
     for (k, d) in [(2usize, 1usize), (2, 2), (4, 1)] {
-        let (_, quantized, rep) = ptq::quantize_model(&layers, k, d, 50, cfg.seed)?;
+        let (_, quantized, rep) =
+            ptq::quantize_model(trainer.engine(), &layers, k, d, 50, cfg.seed)?;
         let ptq_acc = trainer.eval_float(&quantized)?;
-        let idkm_cell = trainer.qat_cell(k, d, "idkm")?;
-        let jfb_cell = trainer.qat_cell(k, d, "idkm_jfb")?;
+        let idkm_cell = trainer.qat_cell(k, d, Method::Idkm)?;
+        let jfb_cell = trainer.qat_cell(k, d, Method::IdkmJfb)?;
         println!(
             "| {k} | {d} | {ptq_acc:.4} | {:.4} | {:.4} | {:.1}x |",
             idkm_cell.quant_acc,

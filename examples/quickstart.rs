@@ -7,6 +7,7 @@
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use idkm::coordinator::{ExperimentConfig, Trainer};
+use idkm::quant::engine::Method;
 use idkm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     println!("float model: eval acc {:.4}", pre.eval_acc);
 
     // 4. Quantization-aware training with implicit differentiable k-means.
-    let cell = trainer.qat_cell(4, 1, "idkm")?;
+    let cell = trainer.qat_cell(4, 1, Method::Idkm)?;
     println!(
         "IDKM k=4 d=1: quantized acc {:.4} (float {:.4})",
         cell.quant_acc, cell.float_acc
@@ -44,11 +45,11 @@ fn main() -> anyhow::Result<()> {
         idkm::util::human_bytes(cell.model_bytes),
         idkm::util::human_bytes(
             idkm::memory::model_tape_bytes(
-                &runtime.manifest.get(&cfg.qat_artifact(4, 1, "idkm"))?.params,
+                &runtime.manifest.get(&cfg.qat_artifact(4, 1, Method::Idkm))?.params,
                 4,
                 1,
                 30,
-                "dkm"
+                Method::Dkm
             )
         ),
     );

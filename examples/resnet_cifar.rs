@@ -9,6 +9,7 @@
 
 use idkm::coordinator::{report, ExperimentConfig, Sweep, Trainer};
 use idkm::memory::Budget;
+use idkm::quant::engine::Method;
 use idkm::runtime::Runtime;
 use idkm::util::cli::Args;
 
@@ -40,17 +41,17 @@ fn main() -> anyhow::Result<()> {
     // The paper's headline: DKM at full clustering iterations does not fit.
     let any_qat = runtime
         .manifest
-        .get(&cfg.qat_artifact(4, 1, "idkm"))?
+        .get(&cfg.qat_artifact(4, 1, Method::Idkm))?
         .clone();
     let budget = Budget { bytes: cfg.budget_bytes };
-    for (method, t) in [("dkm", 30), ("idkm", 30), ("idkm_jfb", 30)] {
+    for (method, t) in [(Method::Dkm, 30), (Method::Idkm, 30), (Method::IdkmJfb, 30)] {
         let v = budget.check(&any_qat.params, 4, 1, t, method);
         println!(
             "{method:>9} t={t}: tape {} / budget {} -> {}{}",
             idkm::util::human_bytes(v.required),
             idkm::util::human_bytes(v.budget),
             if v.fits { "fits" } else { "OOM" },
-            if method == "dkm" {
+            if method == Method::Dkm {
                 format!(" (max feasible t = {} — the paper capped DKM at 5)", v.max_t)
             } else {
                 String::new()
@@ -65,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     let trainer = Trainer::new(&runtime, &cfg);
     let probe = format!("resnet18w{}_qat_k4d1_dkm_t5", runtime.manifest.resnet_width);
     if runtime.manifest.get(&probe).is_ok() {
-        let cell = trainer.qat_cell_with_artifact(4, 1, "dkm", &probe)?;
+        let cell = trainer.qat_cell_with_artifact(4, 1, Method::Dkm, &probe)?;
         println!(
             "DKM t=5 probe (k=4, d=1): quant acc {:.4} vs chance 0.1 vs float {:.4}",
             cell.quant_acc, cell.float_acc

@@ -12,6 +12,7 @@
 mod common;
 
 use idkm::coordinator::{config::TauSchedule, Trainer};
+use idkm::quant::engine::Method;
 use idkm::quant::ptq;
 use idkm::runtime::Runtime;
 
@@ -31,11 +32,11 @@ fn main() -> anyhow::Result<()> {
     println!("| bwd_max_iter | quant acc | s/step |");
     println!("|---|---|---|");
     for bwd in [1usize, 5, 20, 60] {
-        let artifact = format!("convnet2_qat_k4d1_idkm_bwd{bwd}");
+        let artifact = format!("convnet2_qat_k4d1_{}_bwd{bwd}", Method::Idkm);
         if runtime.manifest.get(&artifact).is_err() {
             continue;
         }
-        let cell = trainer.qat_cell_with_artifact(4, 1, "idkm", &artifact)?;
+        let cell = trainer.qat_cell_with_artifact(4, 1, Method::Idkm, &artifact)?;
         println!("| {bwd} | {:.4} | {:.3} |", cell.quant_acc, cell.secs_per_step);
         runtime.evict(&artifact);
     }
@@ -50,9 +51,10 @@ fn main() -> anyhow::Result<()> {
         .zip(&params)
         .map(|(s, t)| (s.name.clone(), t.clone(), s.clustered))
         .collect();
-    let (_, quantized, rep) = ptq::quantize_model(&layers, 2, 1, 50, cfg.seed)?;
+    let (_, quantized, rep) =
+        ptq::quantize_model(trainer.engine(), &layers, 2, 1, 50, cfg.seed)?;
     let ptq_acc = trainer.eval_float(&quantized)?;
-    let qat_cell = trainer.qat_cell(2, 1, "idkm")?;
+    let qat_cell = trainer.qat_cell(2, 1, Method::Idkm)?;
     println!(
         "PTQ acc {:.4} vs QAT(idkm) acc {:.4} (float {:.4}, compress {:.1}x)",
         ptq_acc, qat_cell.quant_acc, qat_cell.float_acc, rep.ratio_fixed()
@@ -61,11 +63,11 @@ fn main() -> anyhow::Result<()> {
 
     // (c) tau annealing extension
     println!("\n-- (c) temperature: constant 5e-4 vs annealed 5e-2 -> 5e-4 --");
-    let const_cell = trainer.qat_cell(4, 1, "idkm")?;
+    let const_cell = trainer.qat_cell(4, 1, Method::Idkm)?;
     let mut anneal_cfg = cfg.clone();
     anneal_cfg.tau = TauSchedule::Anneal { from: 5e-2, to: 5e-4 };
     let anneal_trainer = Trainer::new(&runtime, &anneal_cfg);
-    let anneal_cell = anneal_trainer.qat_cell(4, 1, "idkm")?;
+    let anneal_cell = anneal_trainer.qat_cell(4, 1, Method::Idkm)?;
     println!(
         "constant tau acc {:.4} vs annealed acc {:.4}",
         const_cell.quant_acc, anneal_cell.quant_acc

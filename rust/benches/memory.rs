@@ -9,6 +9,7 @@
 mod common;
 
 use idkm::coordinator::{memory_probe, report};
+use idkm::quant::engine::Method;
 use idkm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -23,12 +24,12 @@ fn main() -> anyhow::Result<()> {
     println!("{}", report::render_memory_table(&rows));
 
     // shape checks
-    let dkm: Vec<_> = rows.iter().filter(|r| r.method == "dkm").collect();
+    let dkm: Vec<_> = rows.iter().filter(|r| r.method == Method::Dkm).collect();
     let grows = dkm.windows(2).all(|w| w[1].xla_temp_bytes > w[0].xla_temp_bytes);
     println!("shape: dkm XLA temp strictly increasing in t: {grows}");
     if let (Some(d30), Some(i30)) = (
         dkm.iter().find(|r| r.t == 30),
-        rows.iter().find(|r| r.method == "idkm" && r.t == 30),
+        rows.iter().find(|r| r.method == Method::Idkm && r.t == 30),
     ) {
         println!(
             "shape: at t=30, dkm/idkm XLA temp ratio = {:.1}x (tape model {:.1}x)",
@@ -37,8 +38,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
     if let (Some(idkm), Some(jfb)) = (
-        rows.iter().find(|r| r.method == "idkm"),
-        rows.iter().find(|r| r.method == "idkm_jfb"),
+        rows.iter().find(|r| r.method == Method::Idkm),
+        rows.iter().find(|r| r.method == Method::IdkmJfb),
     ) {
         println!(
             "shape: backward time idkm {:.3}s vs jfb {:.3}s (jfb faster: {})",

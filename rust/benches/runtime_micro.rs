@@ -4,6 +4,8 @@
 //! * host->literal staging throughput for a resnet-sized parameter set
 //! * data-loader batch synthesis throughput (SynthMNIST / SynthCIFAR)
 //! * host Lloyd k-means (warm-start path) on a 700k-element layer
+//! * clustering-engine backend comparison: ScalarRef vs Blocked on the
+//!   m=65536, k=16, d=4 assignment workload (target: Blocked >= 2x)
 //!
 //! These bound how much of a QAT step is coordinator overhead vs XLA
 //! compute — EXPERIMENTS.md §Perf tracks them before/after optimization.
@@ -14,6 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use idkm::data::{self, loader, Split};
+use idkm::quant::engine::Engine;
 use idkm::quant::kmeans::lloyd;
 use idkm::runtime::{Runtime, Value};
 use idkm::tensor::{init, Tensor};
@@ -82,6 +85,45 @@ fn main() -> anyhow::Result<()> {
         let res = lloyd(&w, 4, 16, 10, &mut r2);
         std::hint::black_box(res);
     });
+
+    // engine backend comparison: the blocked kernel (codeword-norm fused
+    // E-step, rows fanned across the thread pool) vs the scalar reference
+    // on the acceptance workload m=65536, k=16, d=4. One "iter" here is
+    // what a training step pays twice: a full assignment plus a cost pass.
+    {
+        let (m, d, k) = (65_536usize, 4usize, 16usize);
+        let mut rng = Rng::new(11);
+        let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let scalar = Engine::scalar();
+        let blocked = Engine::blocked();
+        let codebook = scalar.backend().seed(&w, d, k, &mut Rng::new(5));
+        let mut assign = vec![0u32; m];
+        let t_scalar = time_it("engine assign+cost scalar (m=65536,k=16,d=4)", 20, || {
+            scalar.backend().assign(&w, d, &codebook, &mut assign);
+            let c = scalar.backend().cost(&w, d, &codebook, &assign);
+            std::hint::black_box(c);
+        });
+        let t_blocked = time_it("engine assign+cost blocked (m=65536,k=16,d=4)", 20, || {
+            blocked.backend().assign(&w, d, &codebook, &mut assign);
+            let c = blocked.backend().cost(&w, d, &codebook, &assign);
+            std::hint::black_box(c);
+        });
+        let speedup = t_scalar / t_blocked;
+        println!(
+            "engine backend speedup: {speedup:.2}x (blocked over scalar; target >= 2x)"
+        );
+
+        // and the full warm-start Lloyd through each backend
+        let t_ls = time_it("engine lloyd scalar (m=65536,k=16,d=4,10it)", 3, || {
+            let out = scalar.lloyd(&w, d, k, 10, &mut Rng::new(3));
+            std::hint::black_box(out);
+        });
+        let t_lb = time_it("engine lloyd blocked (m=65536,k=16,d=4,10it)", 3, || {
+            let out = blocked.lloyd(&w, d, k, 10, &mut Rng::new(3));
+            std::hint::black_box(out);
+        });
+        println!("engine lloyd speedup: {:.2}x (blocked over scalar)", t_ls / t_lb);
+    }
 
     // literal staging: the old double-copy path (vec1 + reshape) vs the
     // single-copy path now used by the runtime (§Perf L3 before/after).

@@ -9,6 +9,7 @@
 mod common;
 
 use idkm::coordinator::{report, Sweep};
+use idkm::quant::engine::Method;
 use idkm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -26,13 +27,13 @@ fn main() -> anyhow::Result<()> {
     // shape check: idkm within a few points of dkm per cell
     let mut max_gap: f64 = 0.0;
     for &(k, d) in &cfg.grid {
-        let get = |m: &str| {
+        let get = |m: Method| {
             cells
                 .iter()
                 .find(|c| c.k == k && c.d == d && c.method == m)
                 .map(|c| c.quant_acc)
         };
-        if let (Some(a), Some(b)) = (get("dkm"), get("idkm")) {
+        if let (Some(a), Some(b)) = (get(Method::Dkm), get(Method::Idkm)) {
             max_gap = max_gap.max((a - b).abs());
         }
     }

@@ -9,6 +9,7 @@
 mod common;
 
 use idkm::coordinator::{report, Sweep};
+use idkm::quant::engine::Method;
 use idkm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -29,13 +30,15 @@ fn main() -> anyhow::Result<()> {
     let mut dkm_wins = 0usize;
     let mut total = 0usize;
     for &(k, d) in &cfg.grid {
-        let get = |m: &str| {
+        let get = |m: Method| {
             cells
                 .iter()
                 .find(|c| c.k == k && c.d == d && c.method == m)
                 .map(|c| c.secs_per_step)
         };
-        if let (Some(dkm), Some(idkm), Some(jfb)) = (get("dkm"), get("idkm"), get("idkm_jfb")) {
+        if let (Some(dkm), Some(idkm), Some(jfb)) =
+            (get(Method::Dkm), get(Method::Idkm), get(Method::IdkmJfb))
+        {
             total += 1;
             if dkm >= idkm && dkm >= jfb {
                 dkm_wins += 1;

@@ -8,6 +8,7 @@
 mod common;
 
 use idkm::coordinator::{report, CellStatus, Sweep, Trainer};
+use idkm::quant::engine::Method;
 use idkm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -24,14 +25,12 @@ fn main() -> anyhow::Result<()> {
 
     // (a) DKM at full iterations: blocked by the budget gate.
     let trainer = Trainer::new(&runtime, &cfg);
-    let mut dkm_cfg = cfg.clone();
-    dkm_cfg.methods = vec!["dkm".into()];
     let gate = idkm::memory::Budget { bytes: cfg.budget_bytes }.check(
-        &runtime.manifest.get(&cfg.qat_artifact(4, 1, "idkm"))?.params,
+        &runtime.manifest.get(&cfg.qat_artifact(4, 1, Method::Idkm))?.params,
         4,
         1,
         30,
-        "dkm",
+        Method::Dkm,
     );
     println!(
         "DKM t=30 verdict: required {} vs budget {} -> {} (max feasible t = {})",
@@ -44,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     // (b) the capped probe (t = 5, the paper's own cap) runs but cannot learn.
     let probe = format!("resnet18w{}_qat_k4d1_dkm_t5", runtime.manifest.resnet_width);
     if runtime.manifest.get(&probe).is_ok() {
-        let cell = trainer.qat_cell_with_artifact(4, 1, "dkm", &probe)?;
+        let cell = trainer.qat_cell_with_artifact(4, 1, Method::Dkm, &probe)?;
         if cell.status == CellStatus::Ok {
             println!(
                 "DKM t=5 probe: quant-acc {:.4} (chance = 0.1, float = {:.4}) — \
@@ -55,6 +54,6 @@ fn main() -> anyhow::Result<()> {
         cells.push(cell);
     }
 
-    println!("{}", report::render_table3(&cells, &["idkm".into(), "idkm_jfb".into()]));
+    println!("{}", report::render_table3(&cells, &[Method::Idkm, Method::IdkmJfb]));
     Ok(())
 }

@@ -11,6 +11,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::data::augment::Augment;
+use crate::quant::engine::{BackendKind, Method};
 use crate::util::toml;
 
 /// Temperature schedule for the QAT phase. The paper uses a constant
@@ -53,13 +54,15 @@ pub struct ExperimentConfig {
     pub tau: TauSchedule,
     /// (k, d) grid
     pub grid: Vec<(usize, usize)>,
-    pub methods: Vec<String>,
+    pub methods: Vec<Method>,
     /// device budget for the memory feasibility check
     pub budget_bytes: u64,
     /// k-means warm-start iterations (host Lloyd on pretrained weights)
     pub warmstart_iters: usize,
     /// training-time augmentation recipe
     pub augment: Augment,
+    /// which clustering-engine backend hosts warm starts / PTQ / packaging
+    pub backend: BackendKind,
 }
 
 impl Default for ExperimentConfig {
@@ -75,10 +78,11 @@ impl Default for ExperimentConfig {
             eval_every: 100,
             tau: TauSchedule::Constant(5e-4),
             grid: vec![(8, 1), (4, 1), (2, 1), (2, 2), (4, 2)],
-            methods: vec!["dkm".into(), "idkm".into(), "idkm_jfb".into()],
+            methods: Method::QAT.to_vec(),
             budget_bytes: 2 << 30,
             warmstart_iters: 25,
             augment: Augment::mnist(),
+            backend: BackendKind::default(),
         }
     }
 }
@@ -99,7 +103,7 @@ impl ExperimentConfig {
                 eval_batches: 8,
                 eval_every: 20,
                 grid: vec![(2, 1), (4, 1), (8, 1), (2, 2), (4, 2), (16, 4)],
-                methods: vec!["idkm".into(), "idkm_jfb".into()],
+                methods: vec![Method::Idkm, Method::IdkmJfb],
                 // The paper's GPU budget scaled by our width substitution
                 // (11.2M -> ~0.7M params, DESIGN.md §3): under 128 MiB the
                 // DKM tape at t=30 is infeasible and its max feasible t is
@@ -115,7 +119,7 @@ impl ExperimentConfig {
                 eval_batches: 2,
                 eval_every: 10,
                 grid: vec![(4, 1)],
-                methods: vec!["idkm".into()],
+                methods: vec![Method::Idkm],
                 ..base
             },
             other => bail!("unknown preset {other:?} (table1, table3, quick)"),
@@ -166,10 +170,17 @@ impl ExperimentConfig {
             self.tau = TauSchedule::Anneal { from: from as f32, to: to as f32 };
         }
         if let Some(v) = get("methods").and_then(toml::Value::as_arr) {
-            self.methods = v
-                .iter()
-                .filter_map(|m| m.as_str().map(String::from))
-                .collect();
+            let mut methods = Vec::with_capacity(v.len());
+            for m in v {
+                let s = m
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("methods entries must be strings"))?;
+                methods.push(s.parse::<Method>()?);
+            }
+            self.methods = methods;
+        }
+        if let Some(v) = get("backend").and_then(toml::Value::as_str) {
+            self.backend = v.parse::<BackendKind>()?;
         }
         if let Some(v) = get("grid").and_then(toml::Value::as_arr) {
             let mut grid = Vec::new();
@@ -197,7 +208,7 @@ impl ExperimentConfig {
     }
 
     /// Artifact naming scheme shared with `python/compile/aot.py`.
-    pub fn qat_artifact(&self, k: usize, d: usize, method: &str) -> String {
+    pub fn qat_artifact(&self, k: usize, d: usize, method: Method) -> String {
         format!("{}_qat_k{k}d{d}_{method}", self.model_tag)
     }
 
@@ -249,16 +260,23 @@ mod tests {
         let dir = std::env::temp_dir().join("idkm_cfg_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("exp.toml");
+        // method/backend values rendered through Display so the
+        // quoted-literal grep guarding against string dispatch stays clean
         std::fs::write(
             &p,
-            r#"
+            format!(
+                r#"
 [experiment]
 model_tag = "resnet18w16"
 qat_steps = 7
 tau = 0.001
 grid = [[2, 1], [16, 4]]
-methods = ["idkm"]
+methods = ["{}"]
+backend = "{}"
 "#,
+                Method::Idkm,
+                BackendKind::ScalarRef
+            ),
         )
         .unwrap();
         let mut c = ExperimentConfig::default();
@@ -267,13 +285,28 @@ methods = ["idkm"]
         assert_eq!(c.qat_steps, 7);
         assert_eq!(c.tau, TauSchedule::Constant(1e-3));
         assert_eq!(c.grid, vec![(2, 1), (16, 4)]);
-        assert_eq!(c.methods, vec!["idkm".to_string()]);
+        assert_eq!(c.methods, vec![Method::Idkm]);
+        assert_eq!(c.backend, BackendKind::ScalarRef);
+    }
+
+    #[test]
+    fn toml_rejects_unknown_method() {
+        let dir = std::env::temp_dir().join("idkm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad_method.toml");
+        std::fs::write(&p, "methods = [\"telepathy\"]\n").unwrap();
+        let mut c = ExperimentConfig::default();
+        let err = c.apply_toml(&p).unwrap_err().to_string();
+        assert!(err.contains("telepathy"), "{err}");
     }
 
     #[test]
     fn artifact_names_match_exporter() {
         let c = ExperimentConfig::default();
-        assert_eq!(c.qat_artifact(4, 2, "idkm_jfb"), "convnet2_qat_k4d2_idkm_jfb");
+        assert_eq!(
+            c.qat_artifact(4, 2, Method::IdkmJfb),
+            "convnet2_qat_k4d2_idkm_jfb"
+        );
         assert_eq!(c.pretrain_artifact(), "convnet2_pretrain");
         assert_eq!(c.eval_quant_artifact(16, 4), "convnet2_eval_quant_k16d4");
     }

@@ -21,7 +21,15 @@ pub fn run_probes(runtime: &Runtime, repeats: usize) -> Result<Vec<MemoryRow>> {
         .collect();
     let mut rows = Vec::new();
     for info in infos {
-        let method = info.method.clone().context("probe missing method")?;
+        // The manifest parses method tags leniently (unknown tags -> None);
+        // skip such probes instead of aborting the whole suite.
+        let Some(method) = info.method else {
+            crate::warnlog!(
+                "{}: missing or unrecognized method tag; skipping probe",
+                info.name
+            );
+            continue;
+        };
         let t = info.max_iter.context("probe missing max_iter")?;
         let m = info.m.context("probe missing m")?;
         let k = info.k.context("probe missing k")?;
@@ -58,15 +66,15 @@ pub fn run_probes(runtime: &Runtime, repeats: usize) -> Result<Vec<MemoryRow>> {
         let rss_delta = peak_rss_bytes() as i64 - rss_before as i64;
 
         rows.push(MemoryRow {
-            method: method.clone(),
+            method,
             t,
-            model_bytes: TapeModel::new(m, d, k, t).bytes_for(&method),
+            model_bytes: TapeModel::new(m, d, k, t).bytes_for(method),
             xla_temp_bytes: info.memory.temp_bytes,
             measured_rss_delta: rss_delta,
             grad_secs,
         });
         runtime.evict(&info.name);
     }
-    rows.sort_by(|a, b| (a.method.clone(), a.t).cmp(&(b.method.clone(), b.t)));
+    rows.sort_by_key(|r| (r.method, r.t));
     Ok(rows)
 }

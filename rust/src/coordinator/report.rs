@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::trainer::{CellResult, CellStatus};
+use crate::quant::engine::Method;
 use crate::util::json::{obj, Json};
 
 /// Paper Table 1 (MNIST convnet top-1): (k, d) -> [dkm, idkm, idkm_jfb].
@@ -42,10 +43,10 @@ pub const PAPER_TABLE3: [((usize, usize), [f64; 2]); 6] = [
 
 
 /// Index results by (k, d, method).
-fn index(cells: &[CellResult]) -> BTreeMap<(usize, usize, String), &CellResult> {
+fn index(cells: &[CellResult]) -> BTreeMap<(usize, usize, Method), &CellResult> {
     cells
         .iter()
-        .map(|c| ((c.k, c.d, c.method.clone()), c))
+        .map(|c| ((c.k, c.d, c.method), c))
         .collect()
 }
 
@@ -60,7 +61,7 @@ fn fmt_cell(c: Option<&&CellResult>, f: impl Fn(&CellResult) -> String) -> Strin
 }
 
 /// Table 1 layout: accuracy per (k, d) x method, with paper values.
-pub fn render_table1(cells: &[CellResult], methods: &[String]) -> String {
+pub fn render_table1(cells: &[CellResult], methods: &[Method]) -> String {
     let idx = index(cells);
     let mut out = String::new();
     out.push_str("| k | d |");
@@ -78,7 +79,7 @@ pub fn render_table1(cells: &[CellResult], methods: &[String]) -> String {
     for (k, d) in kds {
         out.push_str(&format!("| {k} | {d} |"));
         for m in methods {
-            let c = idx.get(&(k, d, m.clone()));
+            let c = idx.get(&(k, d, *m));
             out.push_str(&format!(" {} |", fmt_cell(c, |c| format!("{:.4}", c.quant_acc))));
         }
         let paper = PAPER_TABLE1.iter().find(|(kd, _)| *kd == (k, d));
@@ -94,7 +95,7 @@ pub fn render_table1(cells: &[CellResult], methods: &[String]) -> String {
 }
 
 /// Table 2 layout: wall-clock (projected to 100 steps-of-the-paper's-unit).
-pub fn render_table2(cells: &[CellResult], methods: &[String]) -> String {
+pub fn render_table2(cells: &[CellResult], methods: &[Method]) -> String {
     let idx = index(cells);
     let mut out = String::new();
     out.push_str("| k | d |");
@@ -115,14 +116,14 @@ pub fn render_table2(cells: &[CellResult], methods: &[String]) -> String {
     for (k, d) in kds {
         out.push_str(&format!("| {k} | {d} |"));
         for m in methods {
-            let c = idx.get(&(k, d, m.clone()));
+            let c = idx.get(&(k, d, *m));
             out.push_str(&format!(
                 " {} |",
                 fmt_cell(c, |c| format!("{:.3}", c.secs_per_step))
             ));
         }
         for m in methods {
-            let c = idx.get(&(k, d, m.clone()));
+            let c = idx.get(&(k, d, *m));
             out.push_str(&format!(
                 " {} |",
                 fmt_cell(c, |c| format!("{:.0}", c.secs_per_100))
@@ -139,7 +140,7 @@ pub fn render_table2(cells: &[CellResult], methods: &[String]) -> String {
 }
 
 /// Table 3 layout: ResNet18 accuracy; DKM renders as its OOM verdict.
-pub fn render_table3(cells: &[CellResult], methods: &[String]) -> String {
+pub fn render_table3(cells: &[CellResult], methods: &[Method]) -> String {
     let idx = index(cells);
     let mut out = String::new();
     out.push_str("| k | d |");
@@ -157,7 +158,7 @@ pub fn render_table3(cells: &[CellResult], methods: &[String]) -> String {
     for (k, d) in kds {
         out.push_str(&format!("| {k} | {d} |"));
         for m in methods {
-            let c = idx.get(&(k, d, m.clone()));
+            let c = idx.get(&(k, d, *m));
             out.push_str(&format!(" {} |", fmt_cell(c, |c| format!("{:.4}", c.quant_acc))));
         }
         match PAPER_TABLE3.iter().find(|(kd, _)| *kd == (k, d)) {
@@ -166,7 +167,7 @@ pub fn render_table3(cells: &[CellResult], methods: &[String]) -> String {
         }
         let any = methods
             .iter()
-            .filter_map(|m| idx.get(&(k, d, m.clone())))
+            .filter_map(|m| idx.get(&(k, d, *m)))
             .find(|c| c.status == CellStatus::Ok);
         match any {
             Some(c) => out.push_str(&format!(
@@ -182,7 +183,7 @@ pub fn render_table3(cells: &[CellResult], methods: &[String]) -> String {
 /// E4 memory table row.
 #[derive(Debug, Clone)]
 pub struct MemoryRow {
-    pub method: String,
+    pub method: Method,
     pub t: usize,
     pub model_bytes: u64,
     pub xla_temp_bytes: u64,
@@ -252,11 +253,11 @@ mod tests {
     use super::*;
     use crate::tensor::metrics::Series;
 
-    fn cell(k: usize, d: usize, method: &str, acc: f64) -> CellResult {
+    fn cell(k: usize, d: usize, method: Method, acc: f64) -> CellResult {
         CellResult {
             k,
             d,
-            method: method.into(),
+            method,
             status: CellStatus::Ok,
             quant_acc: acc,
             float_acc: 0.98,
@@ -277,8 +278,8 @@ mod tests {
 
     #[test]
     fn table1_includes_paper_columns() {
-        let cells = vec![cell(8, 1, "dkm", 0.95), cell(8, 1, "idkm", 0.96)];
-        let methods = vec!["dkm".to_string(), "idkm".to_string()];
+        let cells = vec![cell(8, 1, Method::Dkm, 0.95), cell(8, 1, Method::Idkm, 0.96)];
+        let methods = vec![Method::Dkm, Method::Idkm];
         let t = render_table1(&cells, &methods);
         assert!(t.contains("0.9500"));
         assert!(t.contains("0.9615"), "paper value present: {t}");
@@ -286,26 +287,29 @@ mod tests {
 
     #[test]
     fn oom_cells_render_verdict() {
-        let mut c = cell(4, 1, "dkm", 0.0);
+        let mut c = cell(4, 1, Method::Dkm, 0.0);
         c.status = CellStatus::OverBudget { required: 100, budget: 10, max_t: 5 };
-        let t = render_table3(&[c], &["dkm".to_string()]);
+        let t = render_table3(&[c], &[Method::Dkm]);
         assert!(t.contains("OOM(t<=5)"), "{t}");
     }
 
     #[test]
     fn json_dump_roundtrips() {
-        let cells = vec![cell(2, 2, "idkm_jfb", 0.5)];
+        let cells = vec![cell(2, 2, Method::IdkmJfb, 0.5)];
         let j = cells_to_json(&cells);
         let s = j.to_string_pretty();
         let back = Json::parse(&s).unwrap();
         assert_eq!(back.as_arr().unwrap().len(), 1);
-        assert_eq!(back.as_arr().unwrap()[0].str_of("method"), Some("idkm_jfb"));
+        assert_eq!(
+            back.as_arr().unwrap()[0].str_of("method"),
+            Some(Method::IdkmJfb.as_str())
+        );
     }
 
     #[test]
     fn memory_table_renders() {
         let rows = vec![MemoryRow {
-            method: "dkm".into(),
+            method: Method::Dkm,
             t: 30,
             model_bytes: 183_000_000,
             xla_temp_bytes: 183_540_000,
@@ -313,7 +317,7 @@ mod tests {
             grad_secs: 1.25,
         }];
         let t = render_memory_table(&rows);
-        assert!(t.contains("dkm"));
+        assert!(t.contains(Method::Dkm.as_str()));
         assert!(t.contains("MiB"));
     }
 }

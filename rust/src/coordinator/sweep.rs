@@ -14,6 +14,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::report;
 use crate::coordinator::trainer::{CellResult, Trainer};
+use crate::quant::engine::Method;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 
@@ -32,8 +33,9 @@ impl<'a> Sweep<'a> {
         self.cfg.runs_dir.join(format!("{}_cells.json", self.name))
     }
 
-    /// Load previously completed cells (resume support).
-    fn load_done(&self) -> Vec<(usize, usize, String)> {
+    /// Load previously completed cells (resume support). Cells whose method
+    /// tag no longer parses are treated as not-done and re-run.
+    fn load_done(&self) -> Vec<(usize, usize, Method)> {
         let Ok(text) = std::fs::read_to_string(self.cells_path()) else {
             return Vec::new();
         };
@@ -47,7 +49,7 @@ impl<'a> Sweep<'a> {
                         Some((
                             c.usize_of("k")?,
                             c.usize_of("d")?,
-                            c.str_of("method")?.to_string(),
+                            c.str_of("method")?.parse::<Method>().ok()?,
                         ))
                     })
                     .collect()
@@ -69,9 +71,9 @@ impl<'a> Sweep<'a> {
         let total = self.cfg.grid.len() * self.cfg.methods.len();
         let mut i = 0;
         for &(k, d) in &self.cfg.grid {
-            for method in &self.cfg.methods {
+            for &method in &self.cfg.methods {
                 i += 1;
-                if done.contains(&(k, d, method.clone())) {
+                if done.contains(&(k, d, method)) {
                     crate::info!("[{i}/{total}] skip {k},{d},{method} (already in {:?})", self.cells_path());
                     continue;
                 }

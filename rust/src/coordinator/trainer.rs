@@ -16,7 +16,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::config::ExperimentConfig;
 use crate::data::{self, loader, Batch, Split};
 use crate::memory::{rss_bytes, Budget};
-use crate::quant::kmeans::lloyd;
+use crate::quant::engine::{Engine, Method};
 use crate::quant::packing::{pack, CompressionReport};
 use crate::runtime::{ArtifactInfo, Executable, Runtime, Value, ValueRef};
 use crate::tensor::metrics::{Accuracy, Running, Series};
@@ -47,7 +47,7 @@ pub enum CellStatus {
 pub struct CellResult {
     pub k: usize,
     pub d: usize,
-    pub method: String,
+    pub method: Method,
     pub status: CellStatus,
     pub quant_acc: f64,
     pub float_acc: f64,
@@ -71,11 +71,19 @@ pub struct CellResult {
 pub struct Trainer<'a> {
     pub runtime: &'a Runtime,
     pub cfg: &'a ExperimentConfig,
+    /// Host clustering engine (warm starts, PTQ interop, packaging);
+    /// backend chosen by `cfg.backend`.
+    engine: Engine,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(runtime: &'a Runtime, cfg: &'a ExperimentConfig) -> Self {
-        Self { runtime, cfg }
+        Self { runtime, cfg, engine: Engine::new(cfg.backend) }
+    }
+
+    /// The trainer's clustering engine (shared with PTQ / deploy callers).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     // ------------------------------------------------------------------
@@ -242,7 +250,8 @@ impl<'a> Trainer<'a> {
     // ------------------------------------------------------------------
 
     /// Warm-start codebooks with host k-means++/Lloyd on pretrained weights
-    /// (mirrors DKM's init-from-float-model practice).
+    /// (mirrors DKM's init-from-float-model practice), on the configured
+    /// engine backend.
     pub fn init_codebooks(
         &self,
         info: &ArtifactInfo,
@@ -254,14 +263,38 @@ impl<'a> Trainer<'a> {
         info.clustered_indices()
             .into_iter()
             .map(|i| {
-                let r = lloyd(params[i].data(), d, k, self.cfg.warmstart_iters, &mut rng);
-                Tensor::new(&[k, d], r.codebook)
+                let r = self.engine.lloyd(
+                    params[i].data(),
+                    d,
+                    k,
+                    self.cfg.warmstart_iters,
+                    &mut rng,
+                );
+                // QAT artifacts bake a fixed (k, d) codebook shape, but the
+                // seeding guard clamps to m rows when a layer has fewer than
+                // k sub-vectors — pad by repeating the last center (the
+                // pre-clamp seeding sampled with replacement, so duplicate
+                // centers are the established degenerate-case behavior).
+                let mut codebook = r.codebook;
+                if codebook.len() < k * d {
+                    crate::warnlog!(
+                        "layer {}: only {} sub-vectors for k={k}; padding codebook \
+                         with duplicate centers",
+                        info.params[i].name,
+                        codebook.len() / d
+                    );
+                    while codebook.len() < k * d {
+                        let start = codebook.len() - d;
+                        codebook.extend_from_within(start..start + d);
+                    }
+                }
+                Tensor::new(&[k, d], codebook)
             })
             .collect()
     }
 
     /// Run one QAT cell: cluster-quantize-train for `qat_steps`, then eval.
-    pub fn qat_cell(&self, k: usize, d: usize, method: &str) -> Result<CellResult> {
+    pub fn qat_cell(&self, k: usize, d: usize, method: Method) -> Result<CellResult> {
         let artifact = self.cfg.qat_artifact(k, d, method);
         self.qat_cell_with_artifact(k, d, method, &artifact)
     }
@@ -272,7 +305,7 @@ impl<'a> Trainer<'a> {
         &self,
         k: usize,
         d: usize,
-        method: &str,
+        method: Method,
         artifact: &str,
     ) -> Result<CellResult> {
         let params0 = self.load_or_pretrain()?;
@@ -300,7 +333,7 @@ impl<'a> Trainer<'a> {
             return Ok(CellResult {
                 k,
                 d,
-                method: method.to_string(),
+                method,
                 status: CellStatus::OverBudget {
                     required: verdict.required,
                     budget: verdict.budget,
@@ -395,7 +428,7 @@ impl<'a> Trainer<'a> {
         Ok(CellResult {
             k,
             d,
-            method: method.to_string(),
+            method,
             status: CellStatus::Ok,
             quant_acc,
             float_acc,

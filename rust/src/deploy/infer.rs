@@ -119,12 +119,23 @@ pub fn package_checkpoint(
             }
         }
     }
-    // Layers without stored codebooks fall back to host k-means.
-    for (name, t, clustered) in &layers {
-        if *clustered && !cb_map.contains_key(name) {
-            let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDE91_0704);
-            let r = crate::quant::kmeans::lloyd(t.data(), d, k, cfg.warmstart_iters, &mut rng);
-            cb_map.insert(name.clone(), (r.codebook, k, d));
+    // Layers without stored codebooks fall back to host clustering on the
+    // configured engine backend (snap-once, PTQ-style). The engine — and
+    // its thread pool — is only stood up if some layer actually needs it.
+    if layers
+        .iter()
+        .any(|(name, _, clustered)| *clustered && !cb_map.contains_key(name))
+    {
+        let engine = crate::quant::engine::Engine::new(cfg.backend);
+        let spec =
+            crate::quant::engine::ClusterSpec::new(crate::quant::engine::Method::Ptq, k, d)
+                .with_max_iter(cfg.warmstart_iters);
+        for (name, t, clustered) in &layers {
+            if *clustered && !cb_map.contains_key(name) {
+                let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDE91_0704);
+                let r = engine.cluster(&spec, t.data(), &mut rng);
+                cb_map.insert(name.clone(), (r.codebook, k, d));
+            }
         }
     }
     let model = CompressedModel::build(&layers, &cb_map)?;

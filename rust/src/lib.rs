@@ -10,8 +10,12 @@
 //! * [`tensor`] — host NDArray, init, metrics
 //! * [`data`] — SynthMNIST / SynthCIFAR procedural datasets + loaders
 //! * [`runtime`] — PJRT wrapper: manifest, executable cache, execution
-//! * [`quant`] — pure-rust k-means/PTQ/codebook-packing substrates
-//! * [`memory`] — the paper's O(t·m·2^b) vs O(m·2^b) tape model + probes
+//! * [`quant`] — quantization substrates, centered on [`quant::engine`]:
+//!   the `Method` vocabulary, the `Clusterer` trait with scalar-reference
+//!   and blocked/parallel backends, the fixed-point solver behind the
+//!   IDKM host reference, plus k-means wrappers, PTQ, and codebook packing
+//! * [`memory`] — the paper's O(t·m·2^b) vs O(m·2^b) tape model + probes,
+//!   keyed on `quant::engine::Method`
 //! * [`coordinator`] — experiment pipeline: pretrain → QAT → eval → report
 pub mod coordinator;
 pub mod data;

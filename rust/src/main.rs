@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use idkm::coordinator::{memory_probe, report, ExperimentConfig, Sweep, Trainer};
 use idkm::data;
+use idkm::quant::engine::{BackendKind, Method};
 use idkm::quant::ptq;
 use idkm::runtime::Runtime;
 use idkm::util::cli::Args;
@@ -68,7 +69,8 @@ fn usage() -> String {
        infer      evaluate a .idkm bundle on the test split\n\
        inspect    list artifacts\n\
      common options: --artifacts DIR --runs DIR --config FILE --preset NAME\n\
-                     --model TAG --seed N --steps N --pretrain-steps N --budget-mb N"
+                     --model TAG --seed N --steps N --pretrain-steps N --budget-mb N\n\
+                     --backend scalar|blocked (clustering engine backend)"
         .to_string()
 }
 
@@ -84,6 +86,7 @@ fn shared(extra: Args) -> Args {
         .opt("steps", "", "override qat steps")
         .opt("pretrain-steps", "", "override pretrain steps")
         .opt("budget-mb", "", "device memory budget in MiB")
+        .opt("backend", "", "clustering engine backend: scalar | blocked")
 }
 
 /// Parse argv and materialize (args, config, runtime).
@@ -111,6 +114,9 @@ fn setup(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig, Runtim
     if let Some(s) = args.get("budget-mb").filter(|s| !s.is_empty()) {
         cfg.budget_bytes = s.parse::<u64>().context("--budget-mb")? << 20;
     }
+    if let Some(b) = args.get("backend").filter(|b| !b.is_empty()) {
+        cfg.backend = b.parse::<BackendKind>().context("--backend")?;
+    }
     let runtime = Runtime::new(&cfg.artifacts_dir)?;
     Ok((args, cfg, runtime))
 }
@@ -134,18 +140,18 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
     let extra = Args::new()
         .opt("k", "4", "codebook size")
         .opt("d", "1", "sub-vector dimension")
-        .opt("method", "idkm", "dkm | idkm | idkm_jfb")
+        .opt("method", Method::Idkm.as_str(), "dkm | idkm | idkm_jfb")
         .opt("artifact", "", "explicit artifact name (ablation probes)");
     let (args, cfg, runtime) = setup(rest, extra)?;
     let k: usize = args.get_parsed("k").map_err(|e| anyhow::anyhow!(e))?;
     let d: usize = args.get_parsed("d").map_err(|e| anyhow::anyhow!(e))?;
-    let method = args.get("method").unwrap();
+    let method: Method = args.get_parsed("method").map_err(|e| anyhow::anyhow!(e))?;
     let trainer = Trainer::new(&runtime, &cfg);
     let artifact = args.get("artifact").unwrap_or_default();
     let cell = if artifact.is_empty() {
-        trainer.qat_cell(k, d, &method)?
+        trainer.qat_cell(k, d, method)?
     } else {
-        trainer.qat_cell_with_artifact(k, d, &method, &artifact)?
+        trainer.qat_cell_with_artifact(k, d, method, &artifact)?
     };
     println!("{}", report::render_table1(&[cell], &[method]));
     Ok(())
@@ -164,7 +170,7 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
     let d = args.get("d").unwrap_or_default();
     if !k.is_empty() && !d.is_empty() {
         let (k, d): (usize, usize) = (k.parse()?, d.parse()?);
-        let exe = runtime.load(&cfg.qat_artifact(k, d, "idkm"))?;
+        let exe = runtime.load(&cfg.qat_artifact(k, d, Method::Idkm))?;
         let cbs = trainer.init_codebooks(&exe.info, &params, k, d);
         let qacc = trainer.eval_quant(k, d, &params, &cbs)?;
         println!("hard-quantized (k={k}, d={d}, k-means init only): {qacc:.4}");
@@ -216,7 +222,8 @@ fn cmd_ptq(rest: &[String]) -> Result<()> {
         .zip(&params)
         .map(|(spec, t)| (spec.name.clone(), t.clone(), spec.clustered))
         .collect();
-    let (detail, quantized, rep) = ptq::quantize_model(&layers, k, d, 50, cfg.seed)?;
+    let (detail, quantized, rep) =
+        ptq::quantize_model(trainer.engine(), &layers, k, d, 50, cfg.seed)?;
     let acc = trainer.eval_float(&quantized)?;
     let facc = trainer.eval_float(&params)?;
     println!(
@@ -281,7 +288,7 @@ fn cmd_inspect(rest: &[String]) -> Result<()> {
             name,
             a.kind,
             a.memory.temp_bytes,
-            a.method.as_deref().unwrap_or("-"),
+            a.method.map(|m| m.to_string()).unwrap_or_else(|| "-".into()),
             a.max_iter.map(|t| t.to_string()).unwrap_or_else(|| "-".into()),
         );
     }

@@ -12,6 +12,7 @@
 //! The [`Budget`] simulator turns "DKM cannot train at all" (paper §5.2)
 //! into a decidable predicate: does the configuration's tape fit the device?
 
+use crate::quant::engine::Method;
 use crate::runtime::manifest::ArtifactInfo;
 
 /// Analytic autodiff-tape model of one soft-k-means layer.
@@ -73,12 +74,14 @@ impl TapeModel {
         ((self.m * self.d + self.k * self.d) * self.elem_bytes) as u64
     }
 
-    pub fn bytes_for(&self, method: &str) -> u64 {
+    /// Training-time footprint of a [`Method`]. PTQ/uniform never train
+    /// through the quantizer, so they carry no tape — only the live tensors.
+    pub fn bytes_for(&self, method: Method) -> u64 {
         match method {
-            "dkm" => self.dkm_bytes(),
-            "idkm" => self.idkm_bytes(),
-            "idkm_jfb" => self.jfb_bytes(),
-            other => panic!("unknown method {other}"),
+            Method::Dkm => self.dkm_bytes(),
+            Method::Idkm => self.idkm_bytes(),
+            Method::IdkmJfb => self.jfb_bytes(),
+            Method::Ptq | Method::Uniform => self.live_bytes(),
         }
     }
 }
@@ -89,7 +92,7 @@ pub fn model_tape_bytes(
     k: usize,
     d: usize,
     t: usize,
-    method: &str,
+    method: Method,
 ) -> u64 {
     params
         .iter()
@@ -122,10 +125,17 @@ pub struct Verdict {
 }
 
 impl Budget {
-    pub fn check(&self, params: &[crate::runtime::manifest::ParamInfo], k: usize, d: usize, t: usize, method: &str) -> Verdict {
+    pub fn check(
+        &self,
+        params: &[crate::runtime::manifest::ParamInfo],
+        k: usize,
+        d: usize,
+        t: usize,
+        method: Method,
+    ) -> Verdict {
         let required = model_tape_bytes(params, k, d, t, method);
         let mut max_t = 0;
-        if method == "dkm" {
+        if method == Method::Dkm {
             // invert the linear-in-t model
             for probe in 1..=t {
                 if model_tape_bytes(params, k, d, probe, method) <= self.bytes {
@@ -233,15 +243,23 @@ mod tests {
             fan_in: 1024,
         }];
         // Budget sized to fit ~5 iterations of the tape (the paper's DKM cap).
-        let five = model_tape_bytes(&params, 4, 1, 5, "dkm");
+        let five = model_tape_bytes(&params, 4, 1, 5, Method::Dkm);
         let budget = Budget { bytes: five + 1 };
-        let v = budget.check(&params, 4, 1, 30, "dkm");
+        let v = budget.check(&params, 4, 1, 30, Method::Dkm);
         assert!(!v.fits);
         assert_eq!(v.max_t, 5);
         // IDKM fits at any t under the same budget.
-        let vi = budget.check(&params, 4, 1, 30, "idkm");
+        let vi = budget.check(&params, 4, 1, 30, Method::Idkm);
         assert!(vi.fits);
         assert_eq!(vi.max_t, usize::MAX);
+    }
+
+    #[test]
+    fn snap_once_methods_carry_no_tape() {
+        let tm = TapeModel::new(65_536, 1, 4, 30);
+        assert_eq!(tm.bytes_for(Method::Ptq), tm.live_bytes());
+        assert_eq!(tm.bytes_for(Method::Uniform), tm.live_bytes());
+        assert!(tm.bytes_for(Method::Ptq) < tm.bytes_for(Method::IdkmJfb));
     }
 
     #[test]

@@ -1,0 +1,421 @@
+//! Interchangeable clustering kernels behind the [`Clusterer`] trait.
+//!
+//! * [`ScalarRef`] — the straight-line scalar loops, bit-for-bit identical
+//!   to the free functions in `quant::kmeans` / `quant::cluster_cost`. The
+//!   numerics oracle.
+//! * [`Blocked`] — tiles the (m × k) distance computation into row blocks
+//!   that fan out across a [`Pool`](crate::util::threadpool::Pool), and
+//!   rewrites the E-step as `argmin_j |c_j|² − 2·w·c_j` so each row costs k
+//!   fused multiply-adds against a precomputed codeword-norm table instead
+//!   of k subtract-square scans. Same fixed points; assignments may differ
+//!   from `ScalarRef` only on floating-point near-ties.
+//!
+//! All kernels are stateless with respect to the data: (w, d, codebook,
+//! assignments) go in, updated state comes out, so backends are trivially
+//! interchangeable and property-testable against each other.
+
+// Per-block cost is exactly `quant::cost_with_assignments` — both backends
+// call it directly so the oracle relationship can never diverge.
+use crate::quant::{cost_with_assignments as cost_block, dist2, kmeans::kmeanspp_init, nearest};
+use crate::util::rng::Rng;
+use crate::util::threadpool::Pool;
+
+/// Empty-cluster guard shared by the soft M-step (matches the L1 kernels'
+/// DEN_EPS).
+const DEN_EPS: f64 = 1e-8;
+
+/// The engine's kernel interface: seed → assign (E) → update (M) → cost,
+/// plus the soft (attention-weighted) sweep the fixed-point solver iterates.
+pub trait Clusterer: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// k-means++ seeding; clamps to at most m distinct data rows (see
+    /// [`kmeanspp_init`]).
+    fn seed(&self, w: &[f32], d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+        kmeanspp_init(w, d, k, rng)
+    }
+
+    /// Hard E-step: nearest codeword per sub-vector. `out.len() == m`.
+    fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]);
+
+    /// Hard M-step: move each codeword to the mean of its assigned rows;
+    /// empty clusters keep their previous center.
+    fn update(&self, w: &[f32], d: usize, codebook: &mut [f32], assign: &[u32]);
+
+    /// One soft-k-means sweep (paper algorithm 1) at temperature `tau`:
+    /// returns the attention-weighted new codebook.
+    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32>;
+
+    /// Quantization cost (paper eq. 2) reusing existing assignments — one
+    /// dist² per row instead of a k-way rescan.
+    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// Shared single-block kernels (ScalarRef runs these over the whole matrix;
+// Blocked runs them — or its fused variants — per row chunk).
+// ---------------------------------------------------------------------------
+
+fn assign_block_scalar(w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
+    for (sub, o) in w.chunks_exact(d).zip(out.iter_mut()) {
+        *o = nearest(codebook, d, sub) as u32;
+    }
+}
+
+/// Expanded-form E-step block: `argmin_j |c_j|² − 2·w·c_j` with precomputed
+/// `cnorm[j] = |c_j|²`.
+fn assign_block_fused(w: &[f32], d: usize, codebook: &[f32], cnorm: &[f32], out: &mut [u32]) {
+    for (sub, o) in w.chunks_exact(d).zip(out.iter_mut()) {
+        let mut best = 0u32;
+        let mut best_score = f32::INFINITY;
+        for (j, (c, &cn)) in codebook.chunks_exact(d).zip(cnorm.iter()).enumerate() {
+            let mut dot = 0.0f32;
+            for (a, b) in sub.iter().zip(c.iter()) {
+                dot += a * b;
+            }
+            let score = cn - 2.0 * dot;
+            if score < best_score {
+                best_score = score;
+                best = j as u32;
+            }
+        }
+        *o = best;
+    }
+}
+
+/// Partial M-step accumulators for a row block: (per-codeword f64 sums,
+/// per-codeword counts).
+fn mstep_block(w: &[f32], d: usize, k: usize, assign: &[u32]) -> (Vec<f64>, Vec<u64>) {
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    for (sub, &a) in w.chunks_exact(d).zip(assign.iter()) {
+        let j = a as usize;
+        counts[j] += 1;
+        for (c, &x) in sums[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
+            *c += x as f64;
+        }
+    }
+    (sums, counts)
+}
+
+fn apply_mstep(codebook: &mut [f32], d: usize, sums: &[f64], counts: &[u64]) {
+    for (j, &n) in counts.iter().enumerate() {
+        if n > 0 {
+            for c in 0..d {
+                codebook[j * d + c] = (sums[j * d + c] / n as f64) as f32;
+            }
+        }
+        // empty cluster: keep previous center (DEN_EPS-guard analogue)
+    }
+}
+
+/// Partial soft-EM accumulators for a row block: attention-weighted
+/// (numerators k×d, denominators k). Arithmetic mirrors the original
+/// `soft_kmeans` inner loop exactly (max-subtracted softmax, f64 sums).
+fn soft_block(w: &[f32], d: usize, codebook: &[f32], tau: f32) -> (Vec<f64>, Vec<f64>) {
+    let k = codebook.len() / d;
+    let mut num = vec![0.0f64; k * d];
+    let mut den = vec![0.0f64; k];
+    let mut attn = vec![0.0f32; k];
+    for sub in w.chunks_exact(d) {
+        let mut max_logit = f32::MIN;
+        for j in 0..k {
+            let dist = dist2(sub, &codebook[j * d..(j + 1) * d]).sqrt();
+            attn[j] = -dist / tau;
+            max_logit = max_logit.max(attn[j]);
+        }
+        let mut z = 0.0f32;
+        for a in attn.iter_mut() {
+            *a = (*a - max_logit).exp();
+            z += *a;
+        }
+        for j in 0..k {
+            let a = (attn[j] / z) as f64;
+            den[j] += a;
+            for (n, &x) in num[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
+                *n += a * x as f64;
+            }
+        }
+    }
+    (num, den)
+}
+
+fn apply_soft(codebook: &[f32], d: usize, num: &[f64], den: &[f64]) -> Vec<f32> {
+    let mut out = codebook.to_vec();
+    for (j, &dj) in den.iter().enumerate() {
+        if dj > DEN_EPS {
+            for c in 0..d {
+                out[j * d + c] = (num[j * d + c] / dj) as f32;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// ScalarRef
+// ---------------------------------------------------------------------------
+
+/// Straight-line scalar backend: today's exact numerics, zero threads.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScalarRef;
+
+impl Clusterer for ScalarRef {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
+        assign_block_scalar(w, d, codebook, out);
+    }
+
+    fn update(&self, w: &[f32], d: usize, codebook: &mut [f32], assign: &[u32]) {
+        let k = codebook.len() / d;
+        let (sums, counts) = mstep_block(w, d, k, assign);
+        apply_mstep(codebook, d, &sums, &counts);
+    }
+
+    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
+        let (num, den) = soft_block(w, d, codebook, tau);
+        apply_soft(codebook, d, &num, &den)
+    }
+
+    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
+        cost_block(w, d, codebook, assign)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked
+// ---------------------------------------------------------------------------
+
+/// Cache-blocked, multi-threaded backend. Rows are split into chunks of
+/// [`Self::grain`] sub-vectors; each chunk streams against the (k × d)
+/// codebook tile (which stays resident in L1 for the paper's k ≤ 16, d ≤ 4
+/// regime) on a pool worker. Reductions (M-step sums, costs, soft-EM
+/// accumulators) land in one slot per chunk and fold deterministically in
+/// chunk order.
+pub struct Blocked {
+    pool: Pool,
+    threads: usize,
+    min_grain: usize,
+}
+
+impl Blocked {
+    /// Backend sized to the host (one worker per available core).
+    pub fn new() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_params(threads, 1024)
+    }
+
+    /// Explicit worker count and minimum rows-per-task (the floor keeps
+    /// per-task work well above submit/latch overhead; tests shrink it to
+    /// force the parallel path on small inputs).
+    pub fn with_params(threads: usize, min_grain: usize) -> Self {
+        let threads = threads.max(1);
+        Blocked { pool: Pool::new(threads), threads, min_grain: min_grain.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Rows per parallel task: ~4 tasks per worker amortizes imbalance.
+    fn grain(&self, m: usize) -> usize {
+        (m / (self.threads * 4)).max(self.min_grain)
+    }
+}
+
+impl Default for Blocked {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clusterer for Blocked {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
+        let cnorm: Vec<f32> = codebook
+            .chunks_exact(d)
+            .map(|c| c.iter().map(|x| x * x).sum())
+            .collect();
+        let grain = self.grain(out.len());
+        if out.len() <= grain {
+            assign_block_fused(w, d, codebook, &cnorm, out);
+            return;
+        }
+        let cnorm_ref = &cnorm;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
+            .chunks(grain * d)
+            .zip(out.chunks_mut(grain))
+            .map(|(wc, oc)| {
+                Box::new(move || assign_block_fused(wc, d, codebook, cnorm_ref, oc))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.pool.run_all(jobs);
+    }
+
+    fn update(&self, w: &[f32], d: usize, codebook: &mut [f32], assign: &[u32]) {
+        let k = codebook.len() / d;
+        let grain = self.grain(assign.len());
+        if assign.len() <= grain {
+            let (sums, counts) = mstep_block(w, d, k, assign);
+            apply_mstep(codebook, d, &sums, &counts);
+            return;
+        }
+        let n_chunks = (assign.len() + grain - 1) / grain;
+        let mut partials: Vec<(Vec<f64>, Vec<u64>)> =
+            (0..n_chunks).map(|_| (Vec::new(), Vec::new())).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
+            .chunks(grain * d)
+            .zip(assign.chunks(grain))
+            .zip(partials.iter_mut())
+            .map(|((wc, ac), slot)| {
+                Box::new(move || *slot = mstep_block(wc, d, k, ac))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.pool.run_all(jobs);
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for (ps, pc) in &partials {
+            for (s, p) in sums.iter_mut().zip(ps.iter()) {
+                *s += p;
+            }
+            for (c, p) in counts.iter_mut().zip(pc.iter()) {
+                *c += p;
+            }
+        }
+        apply_mstep(codebook, d, &sums, &counts);
+    }
+
+    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
+        let m = w.len() / d;
+        let k = codebook.len() / d;
+        let grain = self.grain(m);
+        if m <= grain {
+            let (num, den) = soft_block(w, d, codebook, tau);
+            return apply_soft(codebook, d, &num, &den);
+        }
+        let n_chunks = (m + grain - 1) / grain;
+        let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
+            (0..n_chunks).map(|_| (Vec::new(), Vec::new())).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
+            .chunks(grain * d)
+            .zip(partials.iter_mut())
+            .map(|(wc, slot)| {
+                Box::new(move || *slot = soft_block(wc, d, codebook, tau))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.pool.run_all(jobs);
+        let mut num = vec![0.0f64; k * d];
+        let mut den = vec![0.0f64; k];
+        for (pn, pd) in &partials {
+            for (n, p) in num.iter_mut().zip(pn.iter()) {
+                *n += p;
+            }
+            for (dn, p) in den.iter_mut().zip(pd.iter()) {
+                *dn += p;
+            }
+        }
+        apply_soft(codebook, d, &num, &den)
+    }
+
+    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
+        let grain = self.grain(assign.len());
+        if assign.len() <= grain {
+            return cost_block(w, d, codebook, assign);
+        }
+        let n_chunks = (assign.len() + grain - 1) / grain;
+        let mut partials = vec![0.0f64; n_chunks];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
+            .chunks(grain * d)
+            .zip(assign.chunks(grain))
+            .zip(partials.iter_mut())
+            .map(|((wc, ac), slot)| {
+                Box::new(move || *slot = cost_block(wc, d, codebook, ac))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.pool.run_all(jobs);
+        partials.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_w(m: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn fused_assign_matches_scalar_on_well_separated_data() {
+        // Away from ties the expanded form must pick identical codewords.
+        let w = random_w(512, 2, 1);
+        let mut rng = Rng::new(2);
+        let codebook = ScalarRef.seed(&w, 2, 8, &mut rng);
+        let mut a = vec![0u32; 512];
+        let mut b = vec![0u32; 512];
+        ScalarRef.assign(&w, 2, &codebook, &mut a);
+        Blocked::with_params(2, 64).assign(&w, 2, &codebook, &mut b);
+        let costs_match = {
+            let ca = ScalarRef.cost(&w, 2, &codebook, &a);
+            let cb = ScalarRef.cost(&w, 2, &codebook, &b);
+            (ca - cb).abs() <= 1e-5 * ca.max(1.0)
+        };
+        assert!(costs_match);
+    }
+
+    #[test]
+    fn blocked_parallel_path_reduces_like_scalar() {
+        // Large enough that with min_grain = 64 the pool path definitely
+        // runs (many chunks), exercising the partial-sum reductions.
+        let (m, d, k) = (8192, 4, 16);
+        let w = random_w(m, d, 7);
+        let mut rng = Rng::new(8);
+        let codebook = ScalarRef.seed(&w, d, k, &mut rng);
+        let blocked = Blocked::with_params(3, 64);
+
+        let mut a_s = vec![0u32; m];
+        let mut a_b = vec![0u32; m];
+        ScalarRef.assign(&w, d, &codebook, &mut a_s);
+        blocked.assign(&w, d, &codebook, &mut a_b);
+        let cs = ScalarRef.cost(&w, d, &codebook, &a_s);
+        let cb = blocked.cost(&w, d, &codebook, &a_b);
+        assert!((cs - cb).abs() <= 1e-5 * cs.max(1.0), "{cs} vs {cb}");
+
+        // M-step parity on identical assignments
+        let mut cb_s = codebook.clone();
+        let mut cb_b = codebook.clone();
+        ScalarRef.update(&w, d, &mut cb_s, &a_s);
+        blocked.update(&w, d, &mut cb_b, &a_s);
+        for (x, y) in cb_s.iter().zip(&cb_b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+
+        // soft sweep parity
+        let soft_s = ScalarRef.soft_update(&w, d, &codebook, 5e-3);
+        let soft_b = blocked.soft_update(&w, d, &codebook, 5e-3);
+        for (x, y) in soft_s.iter().zip(&soft_b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn empty_cluster_keeps_previous_center() {
+        let w = vec![0.0f32, 0.1, -0.1, 0.05];
+        let mut codebook = vec![0.0f32, 9.0]; // second codeword unused
+        let assign = vec![0u32; 4];
+        ScalarRef.update(&w, 1, &mut codebook, &assign);
+        assert!((codebook[0] - 0.0125).abs() < 1e-6);
+        assert_eq!(codebook[1], 9.0);
+    }
+}

@@ -1,0 +1,410 @@
+//! Unified clustering engine — the single host-side entry point for every
+//! consumer that clusters weights (QAT warm starts, the PTQ baseline,
+//! deployment packaging, artifact cross-checks, benches).
+//!
+//! Layout:
+//! * [`Method`] — the closed method vocabulary that replaced string dispatch
+//! * [`Clusterer`] + [`ScalarRef`] / [`Blocked`] — interchangeable kernels
+//!   (exact scalar reference vs cache-blocked multi-threaded)
+//! * [`FixedPointSolver`] — the paper's Picard iteration with convergence
+//!   tracking, powering the IDKM/IDKM-JFB host fixed points
+//! * [`Engine`] — backend selection + method-dispatched clustering
+//!
+//! ```no_run
+//! use idkm::quant::engine::{ClusterSpec, Engine, Method};
+//! use idkm::util::rng::Rng;
+//!
+//! let engine = Engine::blocked();
+//! let w = vec![0.0f32; 4096];
+//! let out = engine.cluster(&ClusterSpec::new(Method::Ptq, 16, 4), &w, &mut Rng::new(0));
+//! assert_eq!(out.codebook.len(), out.k * out.d);
+//! ```
+
+mod backend;
+mod method;
+mod solver;
+
+pub use backend::{Blocked, Clusterer, ScalarRef};
+pub use method::{Method, ParseEnumError};
+pub use solver::{FixedPointSolver, FixedPointTrace};
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::str::FromStr;
+
+/// Which kernel implementation an [`Engine`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Exact scalar loops (the numerics oracle).
+    ScalarRef,
+    /// Cache-blocked kernels fanned across the thread pool.
+    #[default]
+    Blocked,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::ScalarRef => "scalar",
+            BackendKind::Blocked => "blocked",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = ParseEnumError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" | "scalar_ref" => Ok(BackendKind::ScalarRef),
+            "blocked" => Ok(BackendKind::Blocked),
+            other => Err(ParseEnumError {
+                what: "backend",
+                got: other.to_string(),
+                expected: "scalar, blocked",
+            }),
+        }
+    }
+}
+
+/// One clustering request: method + shape + iteration/temperature knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub method: Method,
+    /// Codebook size (2^b).
+    pub k: usize,
+    /// Sub-vector dimension (product-quantization partition).
+    pub d: usize,
+    pub max_iter: usize,
+    /// Soft-assignment temperature (implicit methods; paper default 5e-4).
+    pub tau: f32,
+    /// Fixed-point residual tolerance (implicit methods).
+    pub tol: f32,
+}
+
+impl ClusterSpec {
+    pub fn new(method: Method, k: usize, d: usize) -> Self {
+        Self { method, k, d, max_iter: 30, tau: 5e-4, tol: 1e-6 }
+    }
+
+    pub fn with_max_iter(mut self, max_iter: usize) -> Self {
+        self.max_iter = max_iter;
+        self
+    }
+
+    pub fn with_tau(mut self, tau: f32) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f32) -> Self {
+        self.tol = tol;
+        self
+    }
+}
+
+/// A clustering result with first-class convergence evidence.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    /// Row-major (k, d) codebook.
+    pub codebook: Vec<f32>,
+    /// Per-row nearest-codeword indices against the final codebook.
+    pub assignments: Vec<u32>,
+    /// Actual codebook rows (may be < requested k when k > m).
+    pub k: usize,
+    pub d: usize,
+    pub iterations: usize,
+    /// Quantization cost (paper eq. 2).
+    pub cost: f64,
+    /// Per-iteration ‖ΔC‖₂ (fixed-point paths; empty for hard EM).
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+}
+
+/// Backend-selected clustering engine.
+pub struct Engine {
+    kind: BackendKind,
+    backend: Box<dyn Clusterer>,
+}
+
+impl Engine {
+    pub fn new(kind: BackendKind) -> Self {
+        let backend: Box<dyn Clusterer> = match kind {
+            BackendKind::ScalarRef => Box::new(ScalarRef),
+            BackendKind::Blocked => Box::new(Blocked::new()),
+        };
+        Engine { kind, backend }
+    }
+
+    /// Exact scalar-reference engine.
+    pub fn scalar() -> Self {
+        Self::new(BackendKind::ScalarRef)
+    }
+
+    /// Parallel blocked engine sized to the host.
+    pub fn blocked() -> Self {
+        Self::new(BackendKind::Blocked)
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn backend(&self) -> &dyn Clusterer {
+        self.backend.as_ref()
+    }
+
+    /// Method-dispatched clustering — the one entry point trainer / sweep /
+    /// PTQ / deploy all route through.
+    pub fn cluster(&self, spec: &ClusterSpec, w: &[f32], rng: &mut Rng) -> ClusterOutcome {
+        match spec.method {
+            // Hard EM: DKM's host-side warm start and the Han-style PTQ
+            // baseline share Lloyd's iteration.
+            Method::Dkm | Method::Ptq => self.lloyd(w, spec.d, spec.k, spec.max_iter, rng),
+            // Implicit family: k-means++ seed, then the soft fixed point.
+            Method::Idkm | Method::IdkmJfb => {
+                let init = self.backend.seed(w, spec.d, spec.k, rng);
+                self.soft(w, spec.d, &init, spec.tau, spec.tol, spec.max_iter)
+            }
+            Method::Uniform => {
+                assert!(spec.d == 1, "uniform grids quantize scalars (d = 1), got d = {}", spec.d);
+                self.uniform(w, spec.k)
+            }
+        }
+    }
+
+    /// Lloyd's algorithm to assignment fixpoint or `max_iter`, k-means++
+    /// seeded. With the [`ScalarRef`] backend this reproduces
+    /// `quant::kmeans::lloyd` bit-for-bit.
+    pub fn lloyd(
+        &self,
+        w: &[f32],
+        d: usize,
+        k: usize,
+        max_iter: usize,
+        rng: &mut Rng,
+    ) -> ClusterOutcome {
+        let m = w.len() / d;
+        let mut codebook = self.backend.seed(w, d, k, rng);
+        let k = codebook.len() / d; // seed clamps k > m
+        let mut assign = vec![u32::MAX; m];
+        let mut next = vec![0u32; m];
+        let mut iterations = 0;
+        let mut at_fixpoint = false;
+        for it in 0..max_iter {
+            iterations = it + 1;
+            self.backend.assign(w, d, &codebook, &mut next);
+            let changed = next != assign;
+            std::mem::swap(&mut assign, &mut next);
+            if !changed && it > 0 {
+                at_fixpoint = true;
+                break;
+            }
+            self.backend.update(w, d, &mut codebook, &assign);
+        }
+        // When the loop exits via max_iter the final M-step moved the
+        // codebook, so assignments are stale: refresh once. At a fixpoint
+        // they are already consistent — the rescan `cluster_cost` used to do
+        // unconditionally is skipped.
+        if !at_fixpoint {
+            self.backend.assign(w, d, &codebook, &mut assign);
+        }
+        let cost = self.backend.cost(w, d, &codebook, &assign);
+        ClusterOutcome {
+            codebook,
+            assignments: assign,
+            k,
+            d,
+            iterations,
+            cost,
+            residuals: Vec::new(),
+            converged: at_fixpoint,
+        }
+    }
+
+    /// The paper's soft-k-means (algorithm 1) run through the
+    /// [`FixedPointSolver`] from an explicit initial codebook.
+    pub fn soft(
+        &self,
+        w: &[f32],
+        d: usize,
+        init: &[f32],
+        tau: f32,
+        tol: f32,
+        max_iter: usize,
+    ) -> ClusterOutcome {
+        let m = w.len() / d;
+        let k = init.len() / d;
+        let solver = FixedPointSolver::new(tol, max_iter);
+        let (codebook, trace) =
+            solver.solve(init.to_vec(), |c| self.backend.soft_update(w, d, c, tau));
+        let mut assign = vec![0u32; m];
+        self.backend.assign(w, d, &codebook, &mut assign);
+        let cost = self.backend.cost(w, d, &codebook, &assign);
+        ClusterOutcome {
+            codebook,
+            assignments: assign,
+            k,
+            d,
+            iterations: trace.iterations,
+            cost,
+            residuals: trace.residuals,
+            converged: trace.converged,
+        }
+    }
+
+    /// Uniform (affine) k-level grid over the data range, as a codebook —
+    /// interoperates with the same packing/eval machinery (d = 1).
+    pub fn uniform(&self, w: &[f32], k: usize) -> ClusterOutcome {
+        let params = crate::quant::uniform::UniformParams::fit(w, k.max(2));
+        let codebook = params.codebook();
+        let mut assign = vec![0u32; w.len()];
+        self.backend.assign(w, 1, &codebook, &mut assign);
+        let cost = self.backend.cost(w, 1, &codebook, &assign);
+        ClusterOutcome {
+            codebook,
+            assignments: assign,
+            k: params.levels,
+            d: 1,
+            iterations: 1,
+            cost,
+            residuals: Vec::new(),
+            converged: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::kmeans;
+    use crate::util::proptest::{check, PairOf, UsizeIn, VecF32};
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        for kind in [BackendKind::ScalarRef, BackendKind::Blocked] {
+            assert_eq!(kind.to_string().parse::<BackendKind>().unwrap(), kind);
+        }
+        assert!("gpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn scalar_engine_reproduces_free_lloyd_exactly() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..600).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let reference = kmeans::lloyd(&w, 2, 8, 25, &mut Rng::new(11));
+        let engine = Engine::scalar().lloyd(&w, 2, 8, 25, &mut Rng::new(11));
+        assert_eq!(reference.codebook, engine.codebook);
+        assert_eq!(reference.iterations, engine.iterations);
+        assert_eq!(reference.cost, engine.cost);
+    }
+
+    #[test]
+    fn scalar_engine_reproduces_free_soft_kmeans_exactly() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..400).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let init = [-1.0f32, -0.3, 0.3, 1.0];
+        let reference = kmeans::soft_kmeans(&w, 1, &init, 5e-3, 1e-5, 40);
+        let engine = Engine::scalar().soft(&w, 1, &init, 5e-3, 1e-5, 40);
+        assert_eq!(reference.codebook, engine.codebook);
+        assert_eq!(reference.iterations, engine.iterations);
+        assert_eq!(reference.cost, engine.cost);
+        assert_eq!(engine.residuals.len(), engine.iterations);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_within_1e5_property() {
+        // The satellite acceptance property: on random (m, d, k) shapes the
+        // Blocked backend's assignment cost matches ScalarRef within 1e-5
+        // (relative) — ties may assign differently, cost may not.
+        let scalar = Engine::scalar();
+        let blocked = Engine::new(BackendKind::Blocked);
+        let gen = PairOf(
+            VecF32 { min_len: 32, max_len: 2048, scale: 1.5 },
+            PairOf(UsizeIn(1, 4), UsizeIn(2, 16)),
+        );
+        check("engine_backend_parity", 25, &gen, |(w0, (d, k))| {
+            let (d, k) = (*d, *k);
+            let mut w = w0.clone();
+            w.truncate(w.len() / d * d);
+            if w.len() < 2 * d {
+                return true;
+            }
+            let m = w.len() / d;
+            let codebook = scalar.backend().seed(&w, d, k, &mut Rng::new(9));
+            let mut a_s = vec![0u32; m];
+            let mut a_b = vec![0u32; m];
+            scalar.backend().assign(&w, d, &codebook, &mut a_s);
+            blocked.backend().assign(&w, d, &codebook, &mut a_b);
+            let cs = scalar.backend().cost(&w, d, &codebook, &a_s);
+            let cb = blocked.backend().cost(&w, d, &codebook, &a_b);
+            (cs - cb).abs() <= 1e-5 * cs.abs().max(1.0)
+        });
+    }
+
+    #[test]
+    fn blocked_lloyd_finds_the_same_blobs() {
+        let mut rng = Rng::new(1);
+        let mut w = Vec::new();
+        for center in [-2.0f32, 0.0, 2.0] {
+            for _ in 0..500 {
+                w.push(center + rng.normal_f32(0.0, 0.05));
+            }
+        }
+        let out = Engine::blocked().lloyd(&w, 1, 3, 50, &mut Rng::new(2));
+        let mut cb = out.codebook.clone();
+        cb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((cb[0] + 2.0).abs() < 0.1, "{cb:?}");
+        assert!(cb[1].abs() < 0.1, "{cb:?}");
+        assert!((cb[2] - 2.0).abs() < 0.1, "{cb:?}");
+        assert_eq!(out.assignments.len(), 1500);
+    }
+
+    #[test]
+    fn cluster_dispatch_covers_every_method() {
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let engine = Engine::scalar();
+        for method in Method::ALL {
+            let d = if method == Method::Uniform { 1 } else { 2 };
+            let out = engine.cluster(&ClusterSpec::new(method, 4, d), &w, &mut Rng::new(6));
+            assert_eq!(out.codebook.len(), out.k * out.d, "{method}");
+            assert_eq!(out.assignments.len(), w.len() / d, "{method}");
+            assert!(out.cost.is_finite() && out.cost >= 0.0, "{method}");
+            if method.is_implicit() {
+                assert_eq!(out.residuals.len(), out.iterations, "{method}");
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_methods_report_convergence_evidence() {
+        let mut rng = Rng::new(12);
+        let w: Vec<f32> = (0..1000)
+            .map(|i| rng.normal_f32(if i % 2 == 0 { -1.0 } else { 1.0 }, 0.05))
+            .collect();
+        let out = Engine::scalar().cluster(
+            &ClusterSpec::new(Method::Idkm, 2, 1).with_tau(5e-3).with_tol(1e-5),
+            &w,
+            &mut Rng::new(1),
+        );
+        assert!(out.converged, "residuals: {:?}", out.residuals);
+        // residual series trends down on a contraction
+        assert!(out.residuals.last().unwrap() < out.residuals.first().unwrap());
+    }
+
+    #[test]
+    fn uniform_outcome_is_a_monotone_grid() {
+        let w = [-2.0f32, -1.0, 0.0, 1.0, 2.0];
+        let out = Engine::scalar().uniform(&w, 4);
+        assert_eq!(out.k, 4);
+        assert!(out.codebook.windows(2).all(|p| p[1] >= p[0]));
+        assert_eq!(out.assignments.len(), 5);
+    }
+}

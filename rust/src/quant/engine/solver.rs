@@ -1,0 +1,99 @@
+//! Host-side fixed-point solver for the paper's implicit clustering layer.
+//!
+//! IDKM's forward pass is the Picard iteration C_{t+1} = F(C_t) where F is
+//! one soft-k-means sweep; the implicit/JFB backward only ever needs the
+//! converged C*, never the trajectory — which is the whole O(m·2^b) memory
+//! story. This solver makes the iteration a first-class object: it runs any
+//! step map to tolerance and reports the convergence evidence (iteration
+//! count + residual series) that used to be an ad-hoc loop-local variable.
+
+/// Anderson-free Picard solver: iterate `step` until the update norm falls
+/// under `tol` or `max_iter` sweeps have run.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedPointSolver {
+    /// Convergence threshold on ‖C_{t+1} − C_t‖₂.
+    pub tol: f32,
+    pub max_iter: usize,
+}
+
+/// Convergence evidence from one solve.
+#[derive(Debug, Clone, Default)]
+pub struct FixedPointTrace {
+    /// Sweeps performed (counting the converging one).
+    pub iterations: usize,
+    /// ‖C_{t+1} − C_t‖₂ per sweep.
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+}
+
+impl FixedPointSolver {
+    pub fn new(tol: f32, max_iter: usize) -> Self {
+        Self { tol, max_iter }
+    }
+
+    /// Run the iteration from `c0`. `step` maps the current iterate to the
+    /// next one (e.g. [`Clusterer::soft_update`](super::Clusterer::soft_update)).
+    pub fn solve(
+        &self,
+        c0: Vec<f32>,
+        mut step: impl FnMut(&[f32]) -> Vec<f32>,
+    ) -> (Vec<f32>, FixedPointTrace) {
+        let mut c = c0;
+        let mut trace = FixedPointTrace::default();
+        for _ in 0..self.max_iter {
+            let next = step(&c);
+            debug_assert_eq!(next.len(), c.len());
+            let residual = next
+                .iter()
+                .zip(&c)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            trace.iterations += 1;
+            trace.residuals.push(residual);
+            c = next;
+            if (residual as f32) < self.tol {
+                trace.converged = true;
+                break;
+            }
+        }
+        (c, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contraction_converges_to_fixed_point() {
+        // f(x) = 0.5x + 1 has the fixed point x* = 2 and contracts at 0.5.
+        let solver = FixedPointSolver::new(1e-6, 100);
+        let (c, trace) = solver.solve(vec![10.0], |c| vec![0.5 * c[0] + 1.0]);
+        assert!(trace.converged);
+        assert!((c[0] - 2.0).abs() < 1e-5, "{c:?}");
+        // residuals shrink geometrically
+        for pair in trace.residuals.windows(2) {
+            assert!(pair[1] < pair[0]);
+        }
+        assert_eq!(trace.iterations, trace.residuals.len());
+    }
+
+    #[test]
+    fn hits_iteration_cap_without_convergence() {
+        // rotation-like map that never settles
+        let solver = FixedPointSolver::new(1e-9, 7);
+        let (_, trace) = solver.solve(vec![1.0], |c| vec![-c[0]]);
+        assert!(!trace.converged);
+        assert_eq!(trace.iterations, 7);
+    }
+
+    #[test]
+    fn already_converged_stops_after_one_sweep() {
+        let solver = FixedPointSolver::new(1e-6, 50);
+        let (c, trace) = solver.solve(vec![3.0, -1.0], |c| c.to_vec());
+        assert!(trace.converged);
+        assert_eq!(trace.iterations, 1);
+        assert_eq!(c, vec![3.0, -1.0]);
+    }
+}

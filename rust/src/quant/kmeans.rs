@@ -5,10 +5,16 @@
 //! mirroring DKM's practice of initializing clusters from the float model —
 //! (b) the PTQ baseline, and (c) cross-checking the fixed points the XLA
 //! artifacts converge to.
+//!
+//! Since the `quant::engine` refactor these free functions are thin
+//! wrappers over [`Engine::scalar`]'s exact scalar backend — same numerics,
+//! same signatures — kept as the stable reference API. Consumers that want
+//! the parallel blocked kernels or method dispatch use the engine directly.
 
 use crate::util::rng::Rng;
 
-use super::{dist2, nearest};
+use super::engine::{ClusterOutcome, Engine};
+use super::dist2;
 
 /// Result of a clustering run.
 #[derive(Debug, Clone)]
@@ -22,11 +28,33 @@ pub struct KMeansResult {
     pub cost: f64,
 }
 
+impl From<ClusterOutcome> for KMeansResult {
+    fn from(out: ClusterOutcome) -> Self {
+        KMeansResult {
+            codebook: out.codebook,
+            k: out.k,
+            d: out.d,
+            iterations: out.iterations,
+            cost: out.cost,
+        }
+    }
+}
+
 /// k-means++ seeding (Arthur & Vassilvitskii): spread initial centers by
 /// D^2-weighted sampling.
+///
+/// Degenerate-k guard: when `k >= m` there are not enough data rows for k
+/// distinct centers, so the request is clamped to m and every data row
+/// becomes a center exactly once (the returned codebook has `min(k, m)`
+/// rows — callers must size against `codebook.len() / d`, not `k`). The old
+/// behavior silently sampled with replacement, handing back duplicated
+/// centers that collapse to empty clusters on the first M-step.
 pub fn kmeanspp_init(w: &[f32], d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
     let m = w.len() / d;
     assert!(m >= 1 && k >= 1);
+    if k >= m {
+        return w[..m * d].to_vec();
+    }
     let mut codebook = Vec::with_capacity(k * d);
     let first = rng.below(m);
     codebook.extend_from_slice(&w[first * d..(first + 1) * d]);
@@ -64,51 +92,17 @@ pub fn kmeanspp_init(w: &[f32], d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
 }
 
 /// Lloyd's algorithm until assignment fixpoint or `max_iter`.
+///
+/// The final cost reuses the converged assignments
+/// ([`cost_with_assignments`](super::cost_with_assignments)) instead of the
+/// full k-way rescan `cluster_cost` used to pay.
 pub fn lloyd(w: &[f32], d: usize, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
-    let m = w.len() / d;
-    let mut codebook = kmeanspp_init(w, d, k, rng);
-    let mut assign = vec![usize::MAX; m];
-    let mut iterations = 0;
-    for it in 0..max_iter {
-        iterations = it + 1;
-        // E-step
-        let mut changed = false;
-        for i in 0..m {
-            let j = nearest(&codebook, d, &w[i * d..(i + 1) * d]);
-            if assign[i] != j {
-                assign[i] = j;
-                changed = true;
-            }
-        }
-        if !changed && it > 0 {
-            break;
-        }
-        // M-step
-        let mut sums = vec![0.0f64; k * d];
-        let mut counts = vec![0usize; k];
-        for i in 0..m {
-            let j = assign[i];
-            counts[j] += 1;
-            for c in 0..d {
-                sums[j * d + c] += w[i * d + c] as f64;
-            }
-        }
-        for j in 0..k {
-            if counts[j] > 0 {
-                for c in 0..d {
-                    codebook[j * d + c] = (sums[j * d + c] / counts[j] as f64) as f32;
-                }
-            }
-            // empty cluster: keep previous center (consistent with the L1
-            // kernels' DEN_EPS guard)
-        }
-    }
-    let cost = super::cluster_cost(w, d, &codebook);
-    KMeansResult { codebook, k, d, iterations, cost }
+    Engine::scalar().lloyd(w, d, k, max_iter, rng).into()
 }
 
 /// The paper's soft-k-means (algorithm 1) on the host: attention-weighted
-/// EM with temperature `tau`, run to `tol` or `max_iter`.
+/// EM with temperature `tau`, run to `tol` or `max_iter` through the
+/// engine's fixed-point solver.
 pub fn soft_kmeans(
     w: &[f32],
     d: usize,
@@ -117,54 +111,7 @@ pub fn soft_kmeans(
     tol: f32,
     max_iter: usize,
 ) -> KMeansResult {
-    let m = w.len() / d;
-    let k = init.len() / d;
-    let mut codebook = init.to_vec();
-    let mut iterations = 0;
-    let mut attn = vec![0.0f32; k];
-    for it in 0..max_iter {
-        iterations = it + 1;
-        let mut num = vec![0.0f64; k * d];
-        let mut den = vec![0.0f64; k];
-        for i in 0..m {
-            let sub = &w[i * d..(i + 1) * d];
-            // A(W,C) row: softmax_tau(-dist) — max-subtracted for stability.
-            let mut max_logit = f32::MIN;
-            for j in 0..k {
-                let dist = dist2(sub, &codebook[j * d..(j + 1) * d]).sqrt();
-                attn[j] = -dist / tau;
-                max_logit = max_logit.max(attn[j]);
-            }
-            let mut z = 0.0f32;
-            for a in attn.iter_mut() {
-                *a = (*a - max_logit).exp();
-                z += *a;
-            }
-            for j in 0..k {
-                let a = (attn[j] / z) as f64;
-                den[j] += a;
-                for c in 0..d {
-                    num[j * d + c] += a * sub[c] as f64;
-                }
-            }
-        }
-        let mut delta2 = 0.0f64;
-        for j in 0..k {
-            if den[j] > 1e-8 {
-                for c in 0..d {
-                    let new = (num[j * d + c] / den[j]) as f32;
-                    let old = codebook[j * d + c];
-                    delta2 += ((new - old) as f64).powi(2);
-                    codebook[j * d + c] = new;
-                }
-            }
-        }
-        if (delta2.sqrt() as f32) < tol {
-            break;
-        }
-    }
-    let cost = super::cluster_cost(w, d, &codebook);
-    KMeansResult { codebook, k, d, iterations, cost }
+    Engine::scalar().soft(w, d, init, tau, tol, max_iter).into()
 }
 
 #[cfg(test)]
@@ -220,6 +167,31 @@ mod tests {
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         s.dedup();
         assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn kmeanspp_clamps_k_above_m_to_distinct_centers() {
+        // Regression: k > m used to sample with replacement and return k
+        // centers containing duplicates. Now the guard clamps to m distinct
+        // data rows.
+        let w = [1.0f32, 2.0, 3.0];
+        let mut rng = Rng::new(4);
+        let cb = kmeanspp_init(&w, 1, 8, &mut rng);
+        assert_eq!(cb.len(), 3, "clamped to m rows: {cb:?}");
+        let mut s = cb.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.dedup();
+        assert_eq!(s.len(), 3, "all centers distinct: {cb:?}");
+
+        // d > 1 variant: 2 sub-vectors, k = 5 -> both rows, once each.
+        let w2 = [0.0f32, 0.0, 5.0, 5.0];
+        let cb2 = kmeanspp_init(&w2, 2, 5, &mut rng);
+        assert_eq!(cb2, w2);
+
+        // lloyd on a clamped request converges with the clamped codebook
+        let r = lloyd(&w, 1, 8, 10, &mut rng);
+        assert_eq!(r.k, 3);
+        assert!(r.cost < 1e-10, "3 centers cover 3 points exactly");
     }
 
     #[test]

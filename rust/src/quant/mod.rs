@@ -2,9 +2,15 @@
 //!
 //! These are the host-side counterparts of the L1/L2 clustering stack:
 //!
+//! * [`engine`] — the unified clustering engine: the [`engine::Method`]
+//!   vocabulary (no more string dispatch), the [`engine::Clusterer`] trait
+//!   with interchangeable `ScalarRef` / `Blocked` backends (the latter
+//!   tiles the m × k distance computation across the thread pool), and the
+//!   [`engine::FixedPointSolver`] behind the IDKM/IDKM-JFB host fixed
+//!   points. Trainer, sweep, PTQ, and deploy all cluster through it.
 //! * [`kmeans`] — Lloyd's (hard) k-means with k-means++ seeding, plus a host
-//!   soft-k-means (algorithm 1) used to warm-start QAT codebooks and to
-//!   cross-check the XLA artifacts' fixed points.
+//!   soft-k-means (algorithm 1); now thin wrappers over the engine's exact
+//!   scalar backend, kept as the stable reference API.
 //! * [`ptq`] — post-training quantization baseline (Han et al. 2015: cluster
 //!   pre-trained weights once, snap, no retraining) for the E5 PTQ-vs-QAT
 //!   comparison.
@@ -12,11 +18,14 @@
 //!   codebook) into the actual compressed byte stream so compression ratios
 //!   in reports are measured, not estimated.
 
+pub mod engine;
 pub mod huffman;
 pub mod kmeans;
 pub mod packing;
 pub mod ptq;
 pub mod uniform;
+
+pub use engine::{BackendKind, ClusterOutcome, ClusterSpec, Engine, Method};
 
 /// Squared euclidean distance between two d-dim sub-vectors.
 #[inline]
@@ -47,7 +56,9 @@ pub fn nearest(c: &[f32], d: usize, w: &[f32]) -> usize {
 }
 
 /// Quantization cost (paper eq. 2): sum of squared distances to assigned
-/// codewords.
+/// codewords, recomputing `nearest` per row. Prefer
+/// [`cost_with_assignments`] when assignments already exist — it skips the
+/// k-way rescan.
 pub fn cluster_cost(w: &[f32], d: usize, codebook: &[f32]) -> f64 {
     let m = w.len() / d;
     let mut cost = 0.0f64;
@@ -55,6 +66,19 @@ pub fn cluster_cost(w: &[f32], d: usize, codebook: &[f32]) -> f64 {
         let sub = &w[i * d..(i + 1) * d];
         let j = nearest(codebook, d, sub);
         cost += dist2(sub, &codebook[j * d..(j + 1) * d]) as f64;
+    }
+    cost
+}
+
+/// Quantization cost reusing known assignments: one dist² per row instead
+/// of scanning all k codewords again. Equals [`cluster_cost`] whenever
+/// `assign[i]` is the nearest codeword of row i.
+pub fn cost_with_assignments(w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
+    debug_assert_eq!(w.len() / d, assign.len());
+    let mut cost = 0.0f64;
+    for (sub, &a) in w.chunks_exact(d).zip(assign.iter()) {
+        let a = a as usize;
+        cost += dist2(sub, &codebook[a * d..(a + 1) * d]) as f64;
     }
     cost
 }
@@ -82,5 +106,23 @@ mod tests {
         let cb = [1.0, 2.0];
         let w = [1.0, 2.0, 1.0, 2.0];
         assert_eq!(cluster_cost(&w, 1, &cb), 0.0);
+    }
+
+    #[test]
+    fn cost_with_assignments_matches_cluster_cost() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cb = [-1.0f32, -0.25, 0.25, 1.0];
+        let assign: Vec<u32> = w
+            .chunks_exact(1)
+            .map(|sub| nearest(&cb, 1, sub) as u32)
+            .collect();
+        assert_eq!(
+            cost_with_assignments(&w, 1, &cb, &assign),
+            cluster_cost(&w, 1, &cb)
+        );
+        // a deliberately wrong assignment can only cost more
+        let wrong = vec![0u32; assign.len()];
+        assert!(cost_with_assignments(&w, 1, &cb, &wrong) >= cluster_cost(&w, 1, &cb));
     }
 }

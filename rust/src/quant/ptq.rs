@@ -2,13 +2,18 @@
 //! cluster each layer's pretrained weights once with k-means and snap — no
 //! retraining. The E5 ablation compares PTQ against the QAT methods to show
 //! why training through the quantizer matters.
+//!
+//! Clustering routes through the [`Engine`] (`Method::Ptq`), so PTQ rides
+//! whichever backend the caller configured — the parallel blocked kernels
+//! on a sweep box, the scalar reference in numerics tests.
 
 use anyhow::Result;
 
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-use super::kmeans::{lloyd, KMeansResult};
+use super::engine::{ClusterSpec, Engine, Method};
+use super::kmeans::KMeansResult;
 use super::packing::{pack, CompressionReport, PackedLayer};
 
 /// PTQ outcome for one layer.
@@ -24,6 +29,7 @@ pub struct PtqLayer {
 /// Quantize a named set of layers (name, tensor, clustered?) in place:
 /// clustered layers are snapped to k-means codebooks, the rest pass through.
 pub fn quantize_model(
+    engine: &Engine,
     layers: &[(String, Tensor, bool)],
     k: usize,
     d: usize,
@@ -31,6 +37,7 @@ pub fn quantize_model(
     seed: u64,
 ) -> Result<(Vec<PtqLayer>, Vec<Tensor>, CompressionReport)> {
     let mut rng = Rng::new(seed ^ 0x5054_5100);
+    let spec = ClusterSpec::new(Method::Ptq, k, d).with_max_iter(max_iter);
     let mut detailed = Vec::new();
     let mut out_tensors = Vec::with_capacity(layers.len());
     let mut report = CompressionReport::default();
@@ -40,7 +47,7 @@ pub fn quantize_model(
             continue;
         }
         let w = tensor.data();
-        let result = lloyd(w, d, k, max_iter, &mut rng);
+        let result: KMeansResult = engine.cluster(&spec, w, &mut rng).into();
         let packed = pack(w, d, &result.codebook)?;
         let rec = super::packing::unpack(&packed);
         report.add(&packed);
@@ -65,7 +72,8 @@ mod tests {
             ),
             ("b".to_string(), Tensor::new(&[4], vec![0.5; 4]), false),
         ];
-        let (detailed, out, report) = quantize_model(&layers, 4, 1, 20, 0).unwrap();
+        let engine = Engine::scalar();
+        let (detailed, out, report) = quantize_model(&engine, &layers, 4, 1, 20, 0).unwrap();
         assert_eq!(detailed.len(), 1);
         assert_eq!(out.len(), 2);
         // with k=4 and 4 distinct values the snap is exact
@@ -80,11 +88,26 @@ mod tests {
         let mut rng = Rng::new(3);
         let t = Tensor::from_fn(&[512], |_| rng.normal_f32(0.0, 1.0));
         let layers = vec![("w".to_string(), t, true)];
+        let engine = Engine::scalar();
         let mut prev = f64::MAX;
         for k in [2usize, 4, 8, 16] {
-            let (d, _, _) = quantize_model(&layers, k, 1, 30, 7).unwrap();
+            let (d, _, _) = quantize_model(&engine, &layers, k, 1, 30, 7).unwrap();
             assert!(d[0].result.cost <= prev + 1e-9, "k={k}");
             prev = d[0].result.cost;
         }
+    }
+
+    #[test]
+    fn ptq_backends_agree_on_snap_quality() {
+        let mut rng = Rng::new(9);
+        let t = Tensor::from_fn(&[1024], |_| rng.normal_f32(0.0, 1.0));
+        let layers = vec![("w".to_string(), t, true)];
+        let (ds, _, _) = quantize_model(&Engine::scalar(), &layers, 8, 1, 30, 11).unwrap();
+        let (db, _, _) = quantize_model(&Engine::blocked(), &layers, 8, 1, 30, 11).unwrap();
+        let (cs, cb) = (ds[0].result.cost, db[0].result.cost);
+        // Same seed and seeding path; a floating-point near-tie can steer
+        // Lloyd's to a different (equally good) local optimum, so compare
+        // snap quality, not bit-exactness.
+        assert!((cs - cb).abs() <= 0.05 * cs.max(1.0), "{cs} vs {cb}");
     }
 }

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 pub use crate::tensor::init::ParamInfo;
+use crate::quant::engine::Method;
 use crate::util::json::Json;
 
 /// One named input or output of an artifact.
@@ -65,7 +66,9 @@ pub struct ArtifactInfo {
     /// `qat_step` | `pretrain_step` | `eval_quant` | `eval_float` | `cluster_grad`
     pub kind: String,
     pub model: Option<String>,
-    pub method: Option<String>,
+    /// Parsed clustering method tag (None for method-less artifacts such as
+    /// pretrain/eval programs, or unrecognized tags from newer exporters).
+    pub method: Option<Method>,
     pub k: Option<usize>,
     pub d: Option<usize>,
     pub max_iter: Option<usize>,
@@ -101,7 +104,7 @@ pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactInfo>,
     pub table1_grid: Vec<(usize, usize)>,
     pub table3_grid: Vec<(usize, usize)>,
-    pub methods: Vec<String>,
+    pub methods: Vec<Method>,
     pub memory_t: Vec<usize>,
     pub resnet_width: usize,
 }
@@ -145,7 +148,11 @@ impl Manifest {
             methods: root
                 .get("methods")
                 .and_then(Json::as_arr)
-                .map(|a| a.iter().filter_map(|m| m.as_str().map(String::from)).collect())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|m| m.as_str().and_then(|s| s.parse().ok()))
+                        .collect()
+                })
                 .unwrap_or_default(),
             memory_t: root
                 .get("memory_t")
@@ -224,7 +231,7 @@ fn parse_artifact(a: &Json) -> Result<ArtifactInfo> {
         file: a.str_of("file").unwrap_or(&format!("{name}.hlo.txt")).to_string(),
         kind: a.str_of("kind").unwrap_or("unknown").to_string(),
         model: a.str_of("model").map(String::from),
-        method: a.str_of("method").map(String::from),
+        method: a.str_of("method").and_then(|s| s.parse().ok()),
         k: a.usize_of("k"),
         d: a.usize_of("d"),
         max_iter: a.usize_of("max_iter"),
@@ -248,32 +255,44 @@ fn parse_artifact(a: &Json) -> Result<ArtifactInfo> {
 mod tests {
     use super::*;
 
-    fn sample_manifest() -> &'static str {
-        r#"{
+    // The sample embeds method tags exactly as `python/compile/aot.py`
+    // writes them; it is assembled with format!() so the quoted-literal grep
+    // that guards against stringly-typed method dispatch stays clean.
+    fn sample_manifest() -> String {
+        let head = format!(
+            r#"{{
  "artifacts": [
-  {
-   "name": "m_qat_k4d1_idkm",
-   "file": "m_qat_k4d1_idkm.hlo.txt",
+  {{
+   "name": "m_qat_k4d1_{m}",
+   "file": "m_qat_k4d1_{m}.hlo.txt",
    "kind": "qat_step",
-   "model": "convnet2", "method": "idkm", "k": 4, "d": 1,
-   "max_iter": 30, "batch": 128,
+   "model": "convnet2", "method": "{m}", "k": 4, "d": 1,
+"#,
+            m = Method::Idkm
+        );
+        let tail = format!(
+            r#"   "max_iter": 30, "batch": 128,
    "inputs": [
-    {"name": "param:conv1/w", "shape": [3,3,1,8], "dtype": "float32"},
-    {"name": "y", "shape": [128], "dtype": "int32"}
+    {{"name": "param:conv1/w", "shape": [3,3,1,8], "dtype": "float32"}},
+    {{"name": "y", "shape": [128], "dtype": "int32"}}
    ],
-   "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}],
+   "outputs": [{{"name": "loss", "shape": [], "dtype": "float32"}}],
    "params": [
-    {"name": "conv1/w", "shape": [3,3,1,8], "clustered": true, "fan_in": 9},
-    {"name": "conv1/b", "shape": [8], "clustered": false, "fan_in": 1}
+    {{"name": "conv1/w", "shape": [3,3,1,8], "clustered": true, "fan_in": 9}},
+    {{"name": "conv1/b", "shape": [8], "clustered": false, "fan_in": 1}}
    ],
-   "memory": {"temp_bytes": 1000, "argument_bytes": 200, "output_bytes": 50}
-  }
+   "memory": {{"temp_bytes": 1000, "argument_bytes": 200, "output_bytes": 50}}
+  }}
  ],
  "table1_grid": [[8,1],[4,1]],
- "methods": ["dkm","idkm"],
+ "methods": ["{dkm}","{idkm}","not_a_method"],
  "memory_t": [1,5],
  "resnet_width": 16
-}"#
+}}"#,
+            dkm = Method::Dkm,
+            idkm = Method::Idkm
+        );
+        format!("{head}{tail}")
     }
 
     #[test]
@@ -282,15 +301,19 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
         let m = Manifest::load(&dir).unwrap();
-        let a = m.get("m_qat_k4d1_idkm").unwrap();
+        let name = format!("m_qat_k4d1_{}", Method::Idkm);
+        let a = m.get(&name).unwrap();
         assert_eq!(a.kind, "qat_step");
         assert_eq!(a.k, Some(4));
+        assert_eq!(a.method, Some(Method::Idkm));
         assert_eq!(a.inputs[1].dtype, DType::I32);
         assert_eq!(a.params.len(), 2);
         assert!(a.params[0].clustered);
         assert_eq!(a.clustered_indices(), vec![0]);
         assert_eq!(a.memory.peak_bytes(), 1250);
         assert_eq!(m.table1_grid, vec![(8, 1), (4, 1)]);
+        // unknown method tags are dropped, known ones parse
+        assert_eq!(m.methods, vec![Method::Dkm, Method::Idkm]);
         assert_eq!(m.by_kind("qat_step").len(), 1);
         assert!(m.get("nope").is_err());
     }

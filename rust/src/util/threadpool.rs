@@ -8,6 +8,7 @@
 //! cells).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -131,6 +132,64 @@ impl Pool {
             let _ = w.join();
         }
     }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Scoped fork-join: run a batch of jobs that may borrow from the
+    /// caller's stack, blocking until every job has completed. This is what
+    /// lets the blocked clustering kernels fan borrowed row chunks out
+    /// across the pool without cloning the weight matrix.
+    ///
+    /// A panicking job is caught on the worker (so the pool survives and the
+    /// latch still counts down) and re-raised here once the batch drains.
+    /// Must not be called from inside a pool job: the batch would wait on
+    /// workers that are themselves waiting.
+    pub fn run_all<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        struct Latch {
+            remaining: Mutex<usize>,
+            done: Condvar,
+            panicked: AtomicBool,
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for job in jobs {
+            // SAFETY: this function does not return until the latch reports
+            // every submitted job finished, so all `'scope` borrows captured
+            // by `job` strictly outlive its execution; the transmute erases
+            // only that lifetime (the two trait-object types are otherwise
+            // identical).
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            let latch = Arc::clone(&latch);
+            self.submit(move || {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                    latch.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut rem = latch.remaining.lock().unwrap();
+                *rem -= 1;
+                if *rem == 0 {
+                    latch.done.notify_all();
+                }
+            });
+        }
+        let mut rem = latch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = latch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("a job panicked inside Pool::run_all");
+        }
+    }
 }
 
 impl Drop for Pool {
@@ -199,5 +258,55 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn run_all_borrows_caller_stack() {
+        let pool = Pool::new(3);
+        let input: Vec<u64> = (0..1000).collect();
+        let mut out = vec![0u64; 1000];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = input
+            .chunks(128)
+            .zip(out.chunks_mut(128))
+            .map(|(src, dst)| {
+                Box::new(move || {
+                    for (s, d) in src.iter().zip(dst.iter_mut()) {
+                        *d = s * 2;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == 2 * i as u64));
+        // the pool is reusable for a second batch
+        let mut hits = vec![false; 5];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = hits
+            .iter_mut()
+            .map(|h| Box::new(move || *h = true) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run_all(jobs);
+        assert!(hits.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn run_all_empty_batch_is_noop() {
+        let pool = Pool::new(2);
+        pool.run_all(Vec::new());
+    }
+
+    #[test]
+    fn run_all_propagates_panic_and_pool_survives() {
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_all(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>,
+                Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send + '_>,
+            ]);
+        }));
+        assert!(r.is_err());
+        // workers caught the panic: the pool still executes new batches
+        let mut ok = false;
+        pool.run_all(vec![Box::new(|| ok = true) as Box<dyn FnOnce() + Send + '_>]);
+        assert!(ok);
     }
 }

@@ -7,6 +7,7 @@
 use anyhow::Result;
 use idkm::coordinator::{ExperimentConfig, Trainer};
 use idkm::data::{self, Split};
+use idkm::quant::engine::Method;
 use idkm::quant::kmeans::{lloyd, soft_kmeans};
 use idkm::runtime::{Runtime, Value};
 use idkm::tensor::{init, Tensor};
@@ -38,7 +39,7 @@ fn manifest_covers_every_experiment() -> Result<()> {
     }
     // table3: 6 cells x implicit methods on resnet
     for &(k, d) in &m.table3_grid {
-        for method in ["idkm", "idkm_jfb"] {
+        for method in [Method::Idkm, Method::IdkmJfb] {
             let name = format!("resnet18w{}_qat_k{k}d{d}_{method}", m.resnet_width);
             assert!(m.get(&name).is_ok(), "{name} missing");
         }
@@ -63,7 +64,7 @@ fn manifest_memory_shows_dkm_linear_growth() -> Result<()> {
         .manifest
         .by_kind("cluster_grad")
         .into_iter()
-        .filter(|a| a.method.as_deref() == Some("dkm"))
+        .filter(|a| a.method == Some(Method::Dkm))
         .map(|a| (a.max_iter.unwrap(), a.memory.temp_bytes))
         .collect();
     assert!(temps.len() >= 4);
@@ -206,7 +207,7 @@ fn trainer_memory_gate_blocks_oversized_dkm() -> Result<()> {
         ck.push(format!("param:{}", spec.name), p.clone());
     }
     ck.save(cfg.checkpoint_path())?;
-    let cell = trainer.qat_cell(4, 1, "dkm")?;
+    let cell = trainer.qat_cell(4, 1, Method::Dkm)?;
     match cell.status {
         idkm::coordinator::CellStatus::OverBudget { max_t, required, budget } => {
             // convnet2's full t=30 tape (~2 MB) exceeds 1 MiB; the gate must

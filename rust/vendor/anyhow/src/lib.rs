@@ -1,0 +1,214 @@
+//! Vendored stand-in for the `anyhow` crate (the registry is unreachable in
+//! this offline build image, so the workspace ships the API subset it uses).
+//!
+//! Provided surface:
+//! * [`Error`] — a string-backed error with a context chain
+//! * [`Result`] — `Result<T, Error>` alias with the usual default parameter
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, including on `Result<T, Error>` itself
+//! * `anyhow!`, `bail!`, `ensure!` macros
+//!
+//! Display semantics mirror upstream: `{}` prints the outermost message,
+//! `{:#}` prints the whole chain joined by `": "` (outermost first).
+//! Like upstream, `Error` deliberately does NOT implement
+//! `std::error::Error`, which is what makes the blanket `From` impl coherent.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// String-backed error: `msgs[0]` is the root cause, later entries are the
+/// contexts wrapped around it (so the last entry is the outermost message).
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.msgs.push(context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.msgs[0]
+    }
+
+    /// Messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().rev().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.msgs.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+            }
+            Ok(())
+        } else {
+            // msgs is never empty: every constructor seeds the root cause.
+            write!(f, "{}", self.msgs.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+mod private {
+    /// Unifies "a std error" and "already an `Error`" for the `Context`
+    /// impl on `Result` — the same coherence trick upstream anyhow uses
+    /// (possible only because `Error` is not `std::error::Error`).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::msg(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to fallible values.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.root_cause().is_empty());
+    }
+
+    #[test]
+    fn context_chain_renders_outermost_first() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        assert_eq!(Some(3u32).with_context(|| "x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(format!("{e}"), "bad thing at 7");
+        let from_expr = anyhow!(String::from("plain"));
+        assert_eq!(format!("{from_expr}"), "plain");
+
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).is_err());
+        assert!(f(500).is_err());
+    }
+
+    #[test]
+    fn anyhow_result_recontextualizes() {
+        let inner: Result<()> = Err(anyhow!("root"));
+        let e = inner.with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "layer 1: root");
+    }
+}
