@@ -1,25 +1,46 @@
 //! Runtime microbenchmarks: the L3 hot-path pieces in isolation.
 //!
+//! * clustering-engine E-step kernel matrix on the m=65536, k=16, d=4
+//!   acceptance workload: scalar reference vs scalar fused vs SIMD fused
+//!   (single-threaded), plus the thread-pooled Blocked variants
 //! * executor round-trip latency (smallest eval artifact, steady state)
 //! * host->literal staging throughput for a resnet-sized parameter set
 //! * data-loader batch synthesis throughput (SynthMNIST / SynthCIFAR)
 //! * host Lloyd k-means (warm-start path) on a 700k-element layer
-//! * clustering-engine backend comparison: ScalarRef vs Blocked on the
-//!   m=65536, k=16, d=4 assignment workload (target: Blocked >= 2x)
 //!
 //! These bound how much of a QAT step is coordinator overhead vs XLA
 //! compute — EXPERIMENTS.md §Perf tracks them before/after optimization.
+//!
+//! # Bench-regression gate
+//!
+//! `--json PATH` writes the kernel medians + speedup ratios as JSON;
+//! `--check BASELINE` compares the ratios named in the baseline's `gated`
+//! list and exits non-zero when one falls below `tolerance` (default 0.8,
+//! i.e. a >20% regression) times its committed value. CI runs
+//!
+//! ```text
+//! cargo bench --bench runtime_micro -- --engine-only \
+//!     --json target/BENCH_now.json --check BENCH_runtime_micro.json
+//! ```
+//!
+//! against the baseline checked in at `rust/BENCH_runtime_micro.json`.
+//! Medians are machine-relative and never gated — only the ratios are.
+//! To regenerate the baseline after an intentional kernel change, run the
+//! command stored in its `regen` field and commit the result.
 
 mod common;
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::Context;
 use idkm::data::{self, loader, Split};
-use idkm::quant::engine::Engine;
+use idkm::quant::engine::{Blocked, Clusterer, Engine, ScalarRef};
 use idkm::quant::kmeans::lloyd;
 use idkm::runtime::{Runtime, Value};
 use idkm::tensor::{init, Tensor};
+use idkm::util::cli::Args;
+use idkm::util::json::{obj, Json};
 use idkm::util::rng::Rng;
 
 fn time_it(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
@@ -34,26 +55,167 @@ fn time_it(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
     per
 }
 
+/// Median seconds/iter over individually timed iterations — what the
+/// regression gate records (robust to one-off scheduler hiccups that would
+/// skew a mean on shared CI runners).
+fn time_median(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm-up
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    println!("{label:<44} {:>10.3} ms/iter (median of {iters})", med * 1e3);
+    med
+}
+
+/// The acceptance workload (ISSUE 2 / Table-1 scale): one source of truth
+/// for both the measurement and the JSON report it is labeled with.
+const BENCH_M: usize = 65_536;
+const BENCH_D: usize = 4;
+const BENCH_K: usize = 16;
+
+/// The engine kernel matrix on the acceptance workload. Returns
+/// (median_ns rows, speedup rows) for the BENCH json.
+fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>) {
+    let (m, d, k) = (BENCH_M, BENCH_D, BENCH_K);
+    println!("-- engine E-step kernels (m={m}, k={k}, d={d}) --");
+    let mut rng = Rng::new(11);
+    let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let scalar = ScalarRef;
+    // Single-threaded, single-block variants isolate the kernel itself;
+    // usize::MAX grain keeps every row in one block.
+    let fused_1t = Blocked::with_kernel(1, usize::MAX, false);
+    let simd_1t = Blocked::with_kernel(1, usize::MAX, true);
+    // Host-sized pools measure the full deployed configuration.
+    let blocked = Blocked::new();
+    let blocked_simd = Blocked::simd();
+    let codebook = scalar.seed(&w, d, k, &mut Rng::new(5));
+    let mut assign = vec![0u32; m];
+    let iters = 30;
+
+    let t_scalar = time_median("estep scalar-ref", iters, || {
+        scalar.assign(&w, d, &codebook, &mut assign);
+        std::hint::black_box(&assign);
+    });
+    let t_fused = time_median("estep fused (1 thread)", iters, || {
+        fused_1t.assign(&w, d, &codebook, &mut assign);
+        std::hint::black_box(&assign);
+    });
+    let t_simd = time_median("estep simd fused (1 thread)", iters, || {
+        simd_1t.assign(&w, d, &codebook, &mut assign);
+        std::hint::black_box(&assign);
+    });
+    let t_blocked = time_median("estep fused blocked (pool)", iters, || {
+        blocked.assign(&w, d, &codebook, &mut assign);
+        std::hint::black_box(&assign);
+    });
+    let t_blocked_simd = time_median("estep simd blocked (pool)", iters, || {
+        blocked_simd.assign(&w, d, &codebook, &mut assign);
+        std::hint::black_box(&assign);
+    });
+
+    let speedup = vec![
+        ("fused_over_scalar", t_scalar / t_fused),
+        ("simd_over_fused", t_fused / t_simd),
+        ("blocked_over_scalar", t_scalar / t_blocked),
+        ("blocked_simd_over_scalar", t_scalar / t_blocked_simd),
+    ];
+    for (name, s) in &speedup {
+        println!("engine speedup {name:<26} {s:>6.2}x");
+    }
+    println!(
+        "simd fused E-step over scalar fused E-step: {:.2}x (target >= 2x)",
+        t_fused / t_simd
+    );
+
+    let median_ns = vec![
+        ("estep_scalar_ref", t_scalar * 1e9),
+        ("estep_fused_1t", t_fused * 1e9),
+        ("estep_simd_1t", t_simd * 1e9),
+        ("estep_blocked", t_blocked * 1e9),
+        ("estep_blocked_simd", t_blocked_simd * 1e9),
+    ];
+    (median_ns, speedup)
+}
+
+/// Compare `current` speedups against the committed baseline; Err on any
+/// gated ratio regressing past the baseline's tolerance.
+fn check_regression(current: &Json, baseline_path: &str) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading bench baseline {baseline_path}"))?;
+    let base = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+    let tol = base.f64_of("tolerance").unwrap_or(0.8);
+    let gated = base
+        .get("gated")
+        .and_then(Json::as_arr)
+        .context("baseline has no gated list")?;
+    let mut failed = false;
+    for g in gated {
+        let name = g.as_str().context("gated entries must be speedup names")?;
+        let want = base
+            .get("speedup")
+            .and_then(|s| s.f64_of(name))
+            .with_context(|| format!("baseline speedup {name:?} missing"))?;
+        let got = current
+            .get("speedup")
+            .and_then(|s| s.f64_of(name))
+            .with_context(|| format!("current run did not measure {name:?}"))?;
+        let floor = want * tol;
+        if got < floor {
+            eprintln!(
+                "BENCH REGRESSION {name}: {got:.2}x < {floor:.2}x \
+                 (baseline {want:.2}x, tolerance {tol})"
+            );
+            failed = true;
+        } else {
+            println!("bench gate {name}: {got:.2}x >= {floor:.2}x floor — ok");
+        }
+    }
+    if failed {
+        anyhow::bail!(
+            "bench regression gate failed against {baseline_path}; if the \
+             change is intentional, regenerate the baseline (its `regen` \
+             field holds the command) and commit it"
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     idkm::util::log::init_from_env();
+    // harness = false: argv is ours (drop a stray --bench if cargo adds one)
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::new()
+        .flag("engine-only", "run only the clustering-engine kernel benches")
+        .opt("json", "", "write kernel medians + speedups as JSON to this path")
+        .opt("check", "", "baseline JSON to gate speedups against (>20% regression fails)")
+        .parse(&argv)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let engine_only = args.has("engine-only");
     common::banner("runtime microbenchmarks");
 
-    // loader throughput (no artifacts needed)
-    let ds: Arc<dyn data::Dataset> = Arc::from(data::build("synthmnist", 0)?);
-    let mnist_batch = time_it("synthmnist batch synth (128)", 20, || {
-        let idx: Vec<u64> = (0..128).collect();
-        let b = data::make_batch(ds.as_ref(), Split::Train, &idx);
-        std::hint::black_box(b);
-    });
-    let ds2: Arc<dyn data::Dataset> = Arc::from(data::build("synthcifar", 0)?);
-    time_it("synthcifar batch synth (64)", 20, || {
-        let idx: Vec<u64> = (0..64).collect();
-        let b = data::make_batch(ds2.as_ref(), Split::Train, &idx);
-        std::hint::black_box(b);
-    });
+    if !engine_only {
+        // loader throughput (no artifacts needed)
+        let ds: Arc<dyn data::Dataset> = Arc::from(data::build("synthmnist", 0)?);
+        let mnist_batch = time_it("synthmnist batch synth (128)", 20, || {
+            let idx: Vec<u64> = (0..128).collect();
+            let b = data::make_batch(ds.as_ref(), Split::Train, &idx);
+            std::hint::black_box(b);
+        });
+        let ds2: Arc<dyn data::Dataset> = Arc::from(data::build("synthcifar", 0)?);
+        time_it("synthcifar batch synth (64)", 20, || {
+            let idx: Vec<u64> = (0..64).collect();
+            let b = data::make_batch(ds2.as_ref(), Split::Train, &idx);
+            std::hint::black_box(b);
+        });
 
-    // prefetching loader steady-state
-    {
+        // prefetching loader steady-state
         let loader = loader::Loader::spawn(
             Arc::clone(&ds),
             loader::LoaderConfig {
@@ -77,6 +239,65 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // engine kernel matrix + regression gate
+    let (median_ns, speedup) = engine_kernel_bench();
+    let report = obj(vec![
+        ("bench", Json::from("runtime_micro")),
+        // Emitted so a regenerated baseline keeps the same shape and
+        // self-documents its gating policy.
+        (
+            "note",
+            Json::from(
+                "Bench-regression baseline. median_ns are machine-relative and \
+                 informational only; CI gates the `gated` speedup ratios with \
+                 `tolerance` (0.8 = fail on a >20% regression). Only simd_over_fused \
+                 is gated: both sides are single-threaded, so the ratio is core-count \
+                 independent, and its floor equals the SIMD E-step acceptance target. \
+                 The pool-parallel ratios (blocked_*) depend on runner core count and \
+                 are recorded ungated. Refresh with the `regen` command after \
+                 intentional kernel changes.",
+            ),
+        ),
+        (
+            "workload",
+            obj(vec![
+                ("m", Json::from(BENCH_M)),
+                ("d", Json::from(BENCH_D)),
+                ("k", Json::from(BENCH_K)),
+            ]),
+        ),
+        (
+            "median_ns",
+            obj(median_ns.iter().map(|&(name, v)| (name, Json::from(v))).collect()),
+        ),
+        (
+            "speedup",
+            obj(speedup.iter().map(|&(name, v)| (name, Json::from(v))).collect()),
+        ),
+        // Only the single-thread ratio is gated: it is core-count
+        // independent. The blocked_* ratios scale with runner cores and
+        // are recorded ungated.
+        ("gated", Json::Arr(vec![Json::from("simd_over_fused")])),
+        ("tolerance", Json::from(0.8)),
+        (
+            "regen",
+            Json::from(
+                "cargo bench --bench runtime_micro -- --engine-only --json BENCH_runtime_micro.json",
+            ),
+        ),
+    ]);
+    if let Some(path) = args.get_nonempty("json") {
+        std::fs::write(&path, report.to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if let Some(baseline) = args.get_nonempty("check") {
+        check_regression(&report, &baseline)?;
+    }
+    if engine_only {
+        return Ok(());
+    }
+
     // host k-means warm start on a resnet-scale layer
     let mut rng = Rng::new(7);
     let w: Vec<f32> = (0..294_912).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -86,43 +307,19 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(res);
     });
 
-    // engine backend comparison: the blocked kernel (codeword-norm fused
-    // E-step, rows fanned across the thread pool) vs the scalar reference
-    // on the acceptance workload m=65536, k=16, d=4. One "iter" here is
-    // what a training step pays twice: a full assignment plus a cost pass.
+    // the full warm-start Lloyd through each engine backend
     {
-        let (m, d, k) = (65_536usize, 4usize, 16usize);
-        let mut rng = Rng::new(11);
-        let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let scalar = Engine::scalar();
-        let blocked = Engine::blocked();
-        let codebook = scalar.backend().seed(&w, d, k, &mut Rng::new(5));
-        let mut assign = vec![0u32; m];
-        let t_scalar = time_it("engine assign+cost scalar (m=65536,k=16,d=4)", 20, || {
-            scalar.backend().assign(&w, d, &codebook, &mut assign);
-            let c = scalar.backend().cost(&w, d, &codebook, &assign);
-            std::hint::black_box(c);
-        });
-        let t_blocked = time_it("engine assign+cost blocked (m=65536,k=16,d=4)", 20, || {
-            blocked.backend().assign(&w, d, &codebook, &mut assign);
-            let c = blocked.backend().cost(&w, d, &codebook, &assign);
-            std::hint::black_box(c);
-        });
-        let speedup = t_scalar / t_blocked;
-        println!(
-            "engine backend speedup: {speedup:.2}x (blocked over scalar; target >= 2x)"
-        );
-
-        // and the full warm-start Lloyd through each backend
-        let t_ls = time_it("engine lloyd scalar (m=65536,k=16,d=4,10it)", 3, || {
-            let out = scalar.lloyd(&w, d, k, 10, &mut Rng::new(3));
+        let simd = Engine::simd();
+        let t_ls = time_it("engine lloyd scalar (73k,k=16,d=4,10it)", 3, || {
+            let out = scalar.lloyd(&w, 4, 16, 10, &mut Rng::new(3));
             std::hint::black_box(out);
         });
-        let t_lb = time_it("engine lloyd blocked (m=65536,k=16,d=4,10it)", 3, || {
-            let out = blocked.lloyd(&w, d, k, 10, &mut Rng::new(3));
+        let t_lv = time_it("engine lloyd simd (73k,k=16,d=4,10it)", 3, || {
+            let out = simd.lloyd(&w, 4, 16, 10, &mut Rng::new(3));
             std::hint::black_box(out);
         });
-        println!("engine lloyd speedup: {:.2}x (blocked over scalar)", t_ls / t_lb);
+        println!("engine lloyd speedup: {:.2}x (simd over scalar)", t_ls / t_lv);
     }
 
     // literal staging: the old double-copy path (vec1 + reshape) vs the
@@ -155,16 +352,17 @@ fn main() -> anyhow::Result<()> {
     let runtime = Runtime::new("artifacts")?;
 
     // executor round-trip on the tiny eval program
+    let ds: Arc<dyn data::Dataset> = Arc::from(data::build("synthmnist", 0)?);
     let exe = runtime.load("convnet2_eval_float")?;
     let params = init::init_params(&exe.info.params, 0);
     let batch = exe.info.batch.unwrap();
     let idx: Vec<u64> = (0..batch as u64).collect();
     let b = data::make_batch(ds.as_ref(), Split::Test, &idx);
-    let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
-    args.push(Value::F32(b.x.clone()));
-    args.push(Value::I32(b.y.clone()));
+    let mut args2: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+    args2.push(Value::F32(b.x.clone()));
+    args2.push(Value::I32(b.y.clone()));
     time_it("convnet2_eval_float exec round-trip", 30, || {
-        let out = exe.run(&args).unwrap();
+        let out = exe.run(&args2).unwrap();
         std::hint::black_box(out);
     });
 

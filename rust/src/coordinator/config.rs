@@ -63,6 +63,9 @@ pub struct ExperimentConfig {
     pub augment: Augment,
     /// which clustering-engine backend hosts warm starts / PTQ / packaging
     pub backend: BackendKind,
+    /// sweep cells run concurrently on this many workers (1 = sequential;
+    /// results and the cells.json audit trail are identical either way)
+    pub sweep_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -83,6 +86,7 @@ impl Default for ExperimentConfig {
             warmstart_iters: 25,
             augment: Augment::mnist(),
             backend: BackendKind::default(),
+            sweep_threads: 1,
         }
     }
 }
@@ -156,6 +160,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = usize_of("warmstart_iters") {
             self.warmstart_iters = v;
+        }
+        if let Some(v) = usize_of("sweep_threads") {
+            self.sweep_threads = v.max(1);
         }
         if let Some(v) = get("budget_bytes").and_then(toml::Value::as_i64) {
             self.budget_bytes = v as u64;
@@ -269,6 +276,7 @@ mod tests {
 [experiment]
 model_tag = "resnet18w16"
 qat_steps = 7
+sweep_threads = 4
 tau = 0.001
 grid = [[2, 1], [16, 4]]
 methods = ["{}"]
@@ -283,6 +291,7 @@ backend = "{}"
         c.apply_toml(&p).unwrap();
         assert_eq!(c.model_tag, "resnet18w16");
         assert_eq!(c.qat_steps, 7);
+        assert_eq!(c.sweep_threads, 4);
         assert_eq!(c.tau, TauSchedule::Constant(1e-3));
         assert_eq!(c.grid, vec![(2, 1), (16, 4)]);
         assert_eq!(c.methods, vec![Method::Idkm]);

@@ -1,13 +1,30 @@
 //! Sweep runner: executes the (k, d) x method grid of one experiment,
 //! collects per-cell results, and writes the report + JSON audit trail.
 //!
-//! Cells run sequentially on the single PJRT CPU client (the executables
-//! themselves parallelize internally via XLA's intra-op thread pool; data
-//! loading overlaps via the loader threads). Completed cells are
-//! checkpointed to `runs/<name>_cells.json` so an interrupted sweep resumes
-//! where it stopped.
+//! Cells are independent (k, d, method) configurations, so the scheduler
+//! can fan them across [`Pool`] workers (`sweep_threads` in the config /
+//! `--sweep-threads` on the CLI; default 1 keeps the historical sequential
+//! order). Parallel runs stay deterministic:
+//!
+//! * every cell seeds its RNGs from the config seed, never from scheduler
+//!   state, so a cell's result is independent of which worker ran it;
+//! * all mutable per-cell runtime state (params, codebooks, optimizer
+//!   velocity, loaders) lives inside `qat_cell`; the cells share only the
+//!   read-only [`Runtime`] executable cache and one [`Trainer`] whose
+//!   clustering engine takes `&self` everywhere — its kernel pool is a
+//!   contention-managed queue, so concurrent cells interleave kernel
+//!   blocks on one host-sized pool instead of oversubscribing N pools;
+//! * results merge into `runs/<name>_cells.json` in grid order after every
+//!   chunk of `sweep_threads` cells: a failure-free grid produces a
+//!   byte-identical file whether it ran on 1 worker or N, an interrupted
+//!   sweep resumes via the same done-tag loader as before (losing at most
+//!   one chunk), and after a failed-then-resumed run the file still holds
+//!   the same cell *set* (order-normalized: the chunk's survivors are
+//!   checkpointed before the error propagates, so resume appends the
+//!   failed cell after them).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{Context, Result};
 
@@ -17,6 +34,127 @@ use crate::coordinator::trainer::{CellResult, Trainer};
 use crate::quant::engine::Method;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
+use crate::util::threadpool::Pool;
+
+/// Load the (k, d, method) tags already completed in a cells file (resume
+/// support). Tags whose method no longer parses are treated as not-done
+/// and re-run.
+pub fn load_done_tags(path: &Path) -> Vec<(usize, usize, Method)> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let Ok(json) = Json::parse(&text) else {
+        return Vec::new();
+    };
+    json.as_arr()
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|c| {
+                    Some((
+                        c.usize_of("k")?,
+                        c.usize_of("d")?,
+                        c.str_of("method")?.parse::<Method>().ok()?,
+                    ))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Merge freshly computed cells into a cells file. The file keeps the
+/// union keyed by (k, d, method): rows already on disk that are not in
+/// `fresh` survive (a resumed sweep holds only the fresh cells in memory),
+/// fresh rows are appended in their given order.
+pub fn merge_cells_file(path: &Path, fresh: &[CellResult]) -> Result<()> {
+    let fresh_json = report::cells_to_json(fresh);
+    let mut merged: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(Json::Arr(existing)) = Json::parse(&text) {
+            let key = |c: &Json| {
+                (
+                    c.usize_of("k").unwrap_or(0),
+                    c.usize_of("d").unwrap_or(0),
+                    c.str_of("method").unwrap_or("").to_string(),
+                )
+            };
+            let fresh_keys: Vec<_> =
+                fresh_json.as_arr().unwrap_or(&[]).iter().map(key).collect();
+            merged.extend(existing.into_iter().filter(|c| !fresh_keys.contains(&key(c))));
+        }
+    }
+    merged.extend(fresh_json.as_arr().unwrap_or(&[]).iter().cloned());
+    std::fs::write(path, Json::Arr(merged).to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Run `pending` cells, `threads` at a time, returning results in the
+/// given (grid) order regardless of completion order.
+///
+/// `runner` executes one cell; `checkpoint` is invoked with all results so
+/// far after every completed chunk (the incremental audit trail). On a
+/// cell error the completed cells of that chunk are checkpointed first,
+/// then the first error (in grid order, with cell context) is returned —
+/// a rerun resumes past everything that finished.
+///
+/// Each chunk is a barrier: workers idle until the chunk's slowest cell
+/// finishes. That is a deliberate trade for the simple grid-ordered
+/// checkpoint invariant; paper grids have near-uniform cell cost, so the
+/// idle tail is small. A completion-ordered scheduler that checkpoints the
+/// done prefix would remove the barrier if grids ever become heterogeneous.
+pub fn run_cells<R, C>(
+    pending: &[(usize, usize, Method)],
+    threads: usize,
+    runner: R,
+    mut checkpoint: C,
+) -> Result<Vec<CellResult>>
+where
+    R: Fn(usize, usize, Method) -> Result<CellResult> + Sync,
+    C: FnMut(&[CellResult]) -> Result<()>,
+{
+    let mut results: Vec<CellResult> = Vec::with_capacity(pending.len());
+    if threads <= 1 || pending.len() <= 1 {
+        for &(k, d, method) in pending {
+            let cell =
+                runner(k, d, method).with_context(|| format!("cell k={k} d={d} {method}"))?;
+            results.push(cell);
+            checkpoint(&results)?;
+        }
+        return Ok(results);
+    }
+    let pool = Pool::with_name(threads.min(pending.len()), "idkm-sweep");
+    for chunk in pending.chunks(threads) {
+        let mut slots: Vec<Option<Result<CellResult>>> =
+            (0..chunk.len()).map(|_| None).collect();
+        let runner_ref = &runner;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = chunk
+            .iter()
+            .zip(slots.iter_mut())
+            .map(|(&(k, d, method), slot)| {
+                Box::new(move || *slot = Some(runner_ref(k, d, method)))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_all(jobs);
+        let mut first_err = None;
+        for (slot, &(k, d, method)) in slots.into_iter().zip(chunk.iter()) {
+            match slot.expect("scheduler slot filled by run_all") {
+                Ok(cell) => results.push(cell),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(e.context(format!("cell k={k} d={d} {method}")));
+                    }
+                }
+            }
+        }
+        checkpoint(&results)?;
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+    }
+    Ok(results)
+}
 
 pub struct Sweep<'a> {
     pub runtime: &'a Runtime,
@@ -33,94 +171,68 @@ impl<'a> Sweep<'a> {
         self.cfg.runs_dir.join(format!("{}_cells.json", self.name))
     }
 
-    /// Load previously completed cells (resume support). Cells whose method
-    /// tag no longer parses are treated as not-done and re-run.
-    fn load_done(&self) -> Vec<(usize, usize, Method)> {
-        let Ok(text) = std::fs::read_to_string(self.cells_path()) else {
-            return Vec::new();
-        };
-        let Ok(json) = Json::parse(&text) else {
-            return Vec::new();
-        };
-        json.as_arr()
-            .map(|arr| {
-                arr.iter()
-                    .filter_map(|c| {
-                        Some((
-                            c.usize_of("k")?,
-                            c.usize_of("d")?,
-                            c.str_of("method")?.parse::<Method>().ok()?,
-                        ))
-                    })
-                    .collect()
-            })
-            .unwrap_or_default()
+    /// The full grid in deterministic (grid, method) order.
+    fn grid_cells(&self) -> Vec<(usize, usize, Method)> {
+        self.cfg
+            .grid
+            .iter()
+            .flat_map(|&(k, d)| self.cfg.methods.iter().map(move |&m| (k, d, m)))
+            .collect()
     }
 
-    /// Run every cell of the grid; returns all results (fresh + resumed are
-    /// re-run only if their JSON is missing).
+    /// Run every not-yet-done cell of the grid on `cfg.sweep_threads`
+    /// workers; returns the fresh results (resumed cells stay on disk).
     pub fn run(&self) -> Result<Vec<CellResult>> {
         std::fs::create_dir_all(&self.cfg.runs_dir)?;
-        let trainer = Trainer::new(self.runtime, self.cfg);
 
-        // Ensure the pretrained checkpoint exists once, up front.
+        // One trainer for the whole sweep (every method takes &self, so
+        // concurrent cells can share it and its kernel pool); pretrain
+        // up front — every cell warm-starts from the checkpoint.
+        let trainer = Trainer::new(self.runtime, self.cfg);
         trainer.load_or_pretrain()?;
 
-        let done = self.load_done();
-        let mut cells: Vec<CellResult> = Vec::new();
-        let total = self.cfg.grid.len() * self.cfg.methods.len();
-        let mut i = 0;
-        for &(k, d) in &self.cfg.grid {
-            for &method in &self.cfg.methods {
-                i += 1;
-                if done.contains(&(k, d, method)) {
-                    crate::info!("[{i}/{total}] skip {k},{d},{method} (already in {:?})", self.cells_path());
-                    continue;
+        let done = load_done_tags(&self.cells_path());
+        let pending: Vec<(usize, usize, Method)> = self
+            .grid_cells()
+            .into_iter()
+            .filter(|&(k, d, method)| {
+                let fresh = !done.contains(&(k, d, method));
+                if !fresh {
+                    crate::info!(
+                        "skip {k},{d},{method} (already in {:?})",
+                        self.cells_path()
+                    );
                 }
-                crate::info!("[{i}/{total}] cell k={k} d={d} method={method}");
-                let cell = trainer
-                    .qat_cell(k, d, method)
-                    .with_context(|| format!("cell k={k} d={d} {method}"))?;
-                cells.push(cell);
-                // incremental audit trail
-                self.save(&cells)?;
-                // free the compiled program before the next big cell
-                self.runtime.evict(&self.cfg.qat_artifact(k, d, method));
-            }
+                fresh
+            })
+            .collect();
+        let threads = self.cfg.sweep_threads.max(1);
+        let total = pending.len();
+        if threads > 1 && total > 1 {
+            crate::info!(
+                "sweep {}: {total} pending cells on {} workers",
+                self.name,
+                threads.min(total)
+            );
         }
-        Ok(cells)
+
+        let started = AtomicUsize::new(0);
+        let runner = |k: usize, d: usize, method: Method| {
+            let i = started.fetch_add(1, Ordering::Relaxed) + 1;
+            crate::info!("[{i}/{total}] cell k={k} d={d} method={method}");
+            // All mutable cell state is local to qat_cell; the shared
+            // trainer contributes only &self clustering kernels.
+            let cell = trainer.qat_cell(k, d, method);
+            // free the compiled program before the next big cell
+            self.runtime.evict(&self.cfg.qat_artifact(k, d, method));
+            cell
+        };
+        run_cells(&pending, threads, runner, |cells| self.save(cells))
     }
 
+    /// Merge `cells` into the on-disk audit trail (see [`merge_cells_file`]).
     pub fn save(&self, cells: &[CellResult]) -> Result<()> {
-        // Merge with cells already on disk (a resumed sweep holds only the
-        // fresh cells in memory; the file is the union, keyed by k/d/method).
-        let fresh = report::cells_to_json(cells);
-        let mut merged: Vec<Json> = Vec::new();
-        if let Ok(text) = std::fs::read_to_string(self.cells_path()) {
-            if let Ok(Json::Arr(existing)) = Json::parse(&text) {
-                let key = |c: &Json| {
-                    (
-                        c.usize_of("k").unwrap_or(0),
-                        c.usize_of("d").unwrap_or(0),
-                        c.str_of("method").unwrap_or("").to_string(),
-                    )
-                };
-                let fresh_keys: Vec<_> = fresh
-                    .as_arr()
-                    .unwrap_or(&[])
-                    .iter()
-                    .map(key)
-                    .collect();
-                merged.extend(
-                    existing
-                        .into_iter()
-                        .filter(|c| !fresh_keys.contains(&key(c))),
-                );
-            }
-        }
-        merged.extend(fresh.as_arr().unwrap_or(&[]).iter().cloned());
-        std::fs::write(self.cells_path(), Json::Arr(merged).to_string_pretty())?;
-        Ok(())
+        merge_cells_file(&self.cells_path(), cells)
     }
 
     /// Render the experiment's tables (layout chosen by model family).
@@ -136,5 +248,163 @@ impl<'a> Sweep<'a> {
             out.push_str(&report::render_table2(cells, &self.cfg.methods));
         }
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::CellStatus;
+    use crate::tensor::metrics::Series;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Deterministic synthetic cell: every field a pure function of the
+    /// tag, so any schedule must reproduce the same bytes.
+    fn synth_cell(k: usize, d: usize, method: Method) -> CellResult {
+        let salt = (k * 131 + d * 17 + method.as_str().len()) as f64;
+        let mut series = Series::default();
+        series.push(0, salt);
+        series.push(1, salt / 2.0);
+        CellResult {
+            k,
+            d,
+            method,
+            status: CellStatus::Ok,
+            quant_acc: salt / 1000.0,
+            float_acc: 0.99,
+            final_loss: salt / 500.0,
+            mean_cluster_iters: 3.0,
+            secs_per_step: 0.25,
+            total_secs: salt,
+            secs_per_100: 25.0,
+            loss_series: series,
+            compression_fixed: 8.0,
+            compression_huffman: 9.5,
+            bits_per_weight: 4.0,
+            rss_delta_bytes: 0,
+            model_bytes: (k * d) as u64,
+            xla_temp_bytes: 1024,
+        }
+    }
+
+    fn grid() -> Vec<(usize, usize, Method)> {
+        let mut cells = Vec::new();
+        for &(k, d) in &[(2usize, 1usize), (4, 1), (8, 1), (4, 2)] {
+            for &m in &[Method::Idkm, Method::IdkmJfb] {
+                cells.push((k, d, m));
+            }
+        }
+        cells
+    }
+
+    fn tmp_cells_path(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("idkm_sweep_sched_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cells.json");
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    #[test]
+    fn parallel_run_is_byte_identical_to_sequential() {
+        let pending = grid();
+        let mut files = Vec::new();
+        for threads in [1usize, 8] {
+            let path = tmp_cells_path(&format!("det_{threads}"));
+            let out = run_cells(
+                &pending,
+                threads,
+                |k, d, m| Ok(synth_cell(k, d, m)),
+                |cells| merge_cells_file(&path, cells),
+            )
+            .unwrap();
+            // results come back in grid order regardless of schedule
+            let tags: Vec<_> = out.iter().map(|c| (c.k, c.d, c.method)).collect();
+            assert_eq!(tags, pending);
+            files.push(std::fs::read_to_string(&path).unwrap());
+        }
+        assert_eq!(files[0], files[1], "1-thread vs 8-thread cells.json differ");
+    }
+
+    #[test]
+    fn resume_does_not_rerun_done_cells() {
+        let path = tmp_cells_path("resume");
+        let all = grid();
+
+        // Partial run: only the first three cells land on disk.
+        run_cells(
+            &all[..3],
+            2,
+            |k, d, m| Ok(synth_cell(k, d, m)),
+            |cells| merge_cells_file(&path, cells),
+        )
+        .unwrap();
+        let done = load_done_tags(&path);
+        assert_eq!(done.len(), 3);
+
+        // Resume: the done-tag filter must keep the runner away from them.
+        let pending: Vec<_> =
+            all.iter().copied().filter(|t| !done.contains(t)).collect();
+        let ran = AtomicUsize::new(0);
+        run_cells(
+            &pending,
+            4,
+            |k, d, m| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                assert!(!done.contains(&(k, d, m)), "re-ran done cell {k},{d},{m}");
+                Ok(synth_cell(k, d, m))
+            },
+            |cells| merge_cells_file(&path, cells),
+        )
+        .unwrap();
+        assert_eq!(ran.load(Ordering::Relaxed), all.len() - 3);
+
+        // The file now holds the full union, each tag exactly once.
+        let mut tags = load_done_tags(&path);
+        tags.sort();
+        let mut want = all.clone();
+        want.sort();
+        assert_eq!(tags, want);
+    }
+
+    #[test]
+    fn failed_chunk_checkpoints_completed_cells_first() {
+        let path = tmp_cells_path("fail");
+        let pending = grid(); // 8 cells, chunks of 4
+        let poison = (4usize, 1usize, Method::IdkmJfb); // inside chunk 1
+        let err = run_cells(
+            &pending,
+            4,
+            |k, d, m| {
+                if (k, d, m) == poison {
+                    anyhow::bail!("synthetic cell failure")
+                }
+                Ok(synth_cell(k, d, m))
+            },
+            |cells| merge_cells_file(&path, cells),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("synthetic cell failure"), "{msg}");
+        assert!(msg.contains("k=4 d=1"), "missing cell context: {msg}");
+        // chunk 1's three successful cells reached disk before the error
+        let done = load_done_tags(&path);
+        assert_eq!(done.len(), 3);
+        assert!(!done.contains(&poison));
+    }
+
+    #[test]
+    fn merge_preserves_rows_missing_from_fresh() {
+        let path = tmp_cells_path("merge");
+        merge_cells_file(&path, &[synth_cell(2, 1, Method::Idkm)]).unwrap();
+        merge_cells_file(&path, &[synth_cell(4, 1, Method::Idkm)]).unwrap();
+        // overwrite one of them; union size stays 2
+        merge_cells_file(&path, &[synth_cell(2, 1, Method::Idkm)]).unwrap();
+        let mut tags = load_done_tags(&path);
+        tags.sort();
+        assert_eq!(
+            tags,
+            vec![(2, 1, Method::Idkm), (4, 1, Method::Idkm)]
+        );
     }
 }

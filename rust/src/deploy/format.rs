@@ -75,7 +75,7 @@ impl CompressedModel {
                 .get(name)
                 .with_context(|| format!("no codebook for clustered layer {name}"))?;
             let packed: PackedLayer = packing::pack(tensor.data(), *d, cb)?;
-            let huffman_bytes = (packed.huffman_bits as usize + 7) / 8;
+            let huffman_bytes = (packed.huffman_bits as usize).div_ceil(8);
             if huffman_bytes < packed.packed.len() {
                 out.push(Layer {
                     name: name.clone(),

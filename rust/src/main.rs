@@ -70,7 +70,8 @@ fn usage() -> String {
        inspect    list artifacts\n\
      common options: --artifacts DIR --runs DIR --config FILE --preset NAME\n\
                      --model TAG --seed N --steps N --pretrain-steps N --budget-mb N\n\
-                     --backend scalar|blocked (clustering engine backend)"
+                     --backend scalar|blocked|simd (clustering engine backend)\n\
+                     --sweep-threads N (concurrent sweep cells; default 1)"
         .to_string()
 }
 
@@ -86,7 +87,8 @@ fn shared(extra: Args) -> Args {
         .opt("steps", "", "override qat steps")
         .opt("pretrain-steps", "", "override pretrain steps")
         .opt("budget-mb", "", "device memory budget in MiB")
-        .opt("backend", "", "clustering engine backend: scalar | blocked")
+        .opt("backend", "", "clustering engine backend: scalar | blocked | simd")
+        .opt("sweep-threads", "", "concurrent sweep cells (default: preset, usually 1)")
 }
 
 /// Parse argv and materialize (args, config, runtime).
@@ -99,23 +101,28 @@ fn setup(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig, Runtim
     }
     cfg.artifacts_dir = args.get("artifacts").unwrap().into();
     cfg.runs_dir = args.get("runs").unwrap().into();
-    if let Some(m) = args.get("model").filter(|m| !m.is_empty()) {
+    if let Some(m) = args.get_nonempty("model") {
         cfg.model_tag = m;
     }
-    if let Some(s) = args.get("seed").filter(|s| !s.is_empty()) {
-        cfg.seed = s.parse().context("--seed")?;
+    if let Some(s) = args.get_opt_parsed("seed").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.seed = s;
     }
-    if let Some(s) = args.get("steps").filter(|s| !s.is_empty()) {
-        cfg.qat_steps = s.parse().context("--steps")?;
+    if let Some(s) = args.get_opt_parsed("steps").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.qat_steps = s;
     }
-    if let Some(s) = args.get("pretrain-steps").filter(|s| !s.is_empty()) {
-        cfg.pretrain_steps = s.parse().context("--pretrain-steps")?;
+    if let Some(s) = args.get_opt_parsed("pretrain-steps").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.pretrain_steps = s;
     }
-    if let Some(s) = args.get("budget-mb").filter(|s| !s.is_empty()) {
-        cfg.budget_bytes = s.parse::<u64>().context("--budget-mb")? << 20;
+    if let Some(s) = args.get_opt_parsed::<u64>("budget-mb").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.budget_bytes = s << 20;
     }
-    if let Some(b) = args.get("backend").filter(|b| !b.is_empty()) {
+    if let Some(b) = args.get_nonempty("backend") {
         cfg.backend = b.parse::<BackendKind>().context("--backend")?;
+    }
+    let sweep_threads: Option<usize> =
+        args.get_opt_parsed("sweep-threads").map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(t) = sweep_threads {
+        cfg.sweep_threads = t.max(1);
     }
     let runtime = Runtime::new(&cfg.artifacts_dir)?;
     Ok((args, cfg, runtime))

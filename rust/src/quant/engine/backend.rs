@@ -9,6 +9,11 @@
 //!   fused multiply-adds against a precomputed codeword-norm table instead
 //!   of k subtract-square scans. Same fixed points; assignments may differ
 //!   from `ScalarRef` only on floating-point near-ties.
+//! * [`Blocked`] with the SIMD kernel (`Blocked::simd()`, backend kind
+//!   `simd`) — same row blocking, but the per-block E-step runs the 8-wide
+//!   lane kernel from [`super::simd`], which vectorizes across codewords
+//!   and (unlike the expanded form above) matches `ScalarRef` assignments
+//!   bit-for-bit.
 //!
 //! All kernels are stateless with respect to the data: (w, d, codebook,
 //! assignments) go in, updated state comes out, so backends are trivially
@@ -16,6 +21,8 @@
 
 // Per-block cost is exactly `quant::cost_with_assignments` — both backends
 // call it directly so the oracle relationship can never diverge.
+use super::simd::{assign_block_fused_simd, CodebookTiles};
+use super::BackendKind;
 use crate::quant::{cost_with_assignments as cost_block, dist2, kmeans::kmeanspp_init, nearest};
 use crate::util::rng::Rng;
 use crate::util::threadpool::Pool;
@@ -162,7 +169,7 @@ pub struct ScalarRef;
 
 impl Clusterer for ScalarRef {
     fn name(&self) -> &'static str {
-        "scalar"
+        BackendKind::ScalarRef.as_str()
     }
 
     fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
@@ -195,25 +202,46 @@ impl Clusterer for ScalarRef {
 /// regime) on a pool worker. Reductions (M-step sums, costs, soft-EM
 /// accumulators) land in one slot per chunk and fold deterministically in
 /// chunk order.
+///
+/// With `simd = true` the per-block E-step swaps the scalar fused loop for
+/// the 8-wide lane kernel ([`assign_block_fused_simd`]); M-step, soft
+/// sweep, and cost are unchanged (they are reduction-bound, not
+/// distance-scan-bound).
 pub struct Blocked {
     pool: Pool,
     threads: usize,
     min_grain: usize,
+    simd: bool,
 }
 
 impl Blocked {
     /// Backend sized to the host (one worker per available core).
     pub fn new() -> Self {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self::with_params(threads, 1024)
+        Self::with_kernel(Self::host_threads(), 1024, false)
+    }
+
+    /// Host-sized backend running the SIMD-wide fused E-step.
+    pub fn simd() -> Self {
+        Self::with_kernel(Self::host_threads(), 1024, true)
+    }
+
+    fn host_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 
     /// Explicit worker count and minimum rows-per-task (the floor keeps
     /// per-task work well above submit/latch overhead; tests shrink it to
     /// force the parallel path on small inputs).
     pub fn with_params(threads: usize, min_grain: usize) -> Self {
+        Self::with_kernel(threads, min_grain, false)
+    }
+
+    /// Full control: worker count, grain floor, and E-step kernel choice
+    /// (`simd = false` is the scalar fused loop). Benches use this to pin
+    /// single-threaded single-block variants of each kernel.
+    pub fn with_kernel(threads: usize, min_grain: usize, simd: bool) -> Self {
         let threads = threads.max(1);
-        Blocked { pool: Pool::new(threads), threads, min_grain: min_grain.max(1) }
+        Blocked { pool: Pool::new(threads), threads, min_grain: min_grain.max(1), simd }
     }
 
     pub fn threads(&self) -> usize {
@@ -234,15 +262,38 @@ impl Default for Blocked {
 
 impl Clusterer for Blocked {
     fn name(&self) -> &'static str {
-        "blocked"
+        if self.simd {
+            BackendKind::Simd.as_str()
+        } else {
+            BackendKind::Blocked.as_str()
+        }
     }
 
     fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
+        let grain = self.grain(out.len());
+        if self.simd {
+            // Transpose once; every row block reads the tiles immutably.
+            let tiles = CodebookTiles::new(codebook, d);
+            if out.len() <= grain {
+                assign_block_fused_simd(w, d, codebook, &tiles, out);
+                return;
+            }
+            let tiles_ref = &tiles;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
+                .chunks(grain * d)
+                .zip(out.chunks_mut(grain))
+                .map(|(wc, oc)| {
+                    Box::new(move || assign_block_fused_simd(wc, d, codebook, tiles_ref, oc))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.pool.run_all(jobs);
+            return;
+        }
         let cnorm: Vec<f32> = codebook
             .chunks_exact(d)
             .map(|c| c.iter().map(|x| x * x).sum())
             .collect();
-        let grain = self.grain(out.len());
         if out.len() <= grain {
             assign_block_fused(w, d, codebook, &cnorm, out);
             return;
@@ -267,7 +318,7 @@ impl Clusterer for Blocked {
             apply_mstep(codebook, d, &sums, &counts);
             return;
         }
-        let n_chunks = (assign.len() + grain - 1) / grain;
+        let n_chunks = assign.len().div_ceil(grain);
         let mut partials: Vec<(Vec<f64>, Vec<u64>)> =
             (0..n_chunks).map(|_| (Vec::new(), Vec::new())).collect();
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
@@ -301,7 +352,7 @@ impl Clusterer for Blocked {
             let (num, den) = soft_block(w, d, codebook, tau);
             return apply_soft(codebook, d, &num, &den);
         }
-        let n_chunks = (m + grain - 1) / grain;
+        let n_chunks = m.div_ceil(grain);
         let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
             (0..n_chunks).map(|_| (Vec::new(), Vec::new())).collect();
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
@@ -331,7 +382,7 @@ impl Clusterer for Blocked {
         if assign.len() <= grain {
             return cost_block(w, d, codebook, assign);
         }
-        let n_chunks = (assign.len() + grain - 1) / grain;
+        let n_chunks = assign.len().div_ceil(grain);
         let mut partials = vec![0.0f64; n_chunks];
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
             .chunks(grain * d)

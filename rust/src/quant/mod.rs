@@ -4,8 +4,10 @@
 //!
 //! * [`engine`] — the unified clustering engine: the [`engine::Method`]
 //!   vocabulary (no more string dispatch), the [`engine::Clusterer`] trait
-//!   with interchangeable `ScalarRef` / `Blocked` backends (the latter
-//!   tiles the m × k distance computation across the thread pool), and the
+//!   with interchangeable `ScalarRef` / `Blocked` / SIMD backends (the
+//!   blocked kernels tile the m × k distance computation across the thread
+//!   pool; the default `simd` kind adds the 8-wide lane E-step from
+//!   [`engine::simd`] with exact scalar parity), and the
 //!   [`engine::FixedPointSolver`] behind the IDKM/IDKM-JFB host fixed
 //!   points. Trainer, sweep, PTQ, and deploy all cluster through it.
 //! * [`kmeans`] — Lloyd's (hard) k-means with k-means++ seeding, plus a host

@@ -42,7 +42,7 @@ pub fn pack(w: &[f32], d: usize, codebook: &[f32]) -> Result<PackedLayer> {
         addrs.push(nearest(codebook, d, &w[i * d..(i + 1) * d]) as u32);
     }
     // fixed-width packing
-    let mut packed = Vec::with_capacity((m * b as usize + 7) / 8);
+    let mut packed = Vec::with_capacity((m * b as usize).div_ceil(8));
     let mut acc = 0u64;
     let mut nbits = 0u32;
     for &a in &addrs {

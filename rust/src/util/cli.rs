@@ -111,10 +111,32 @@ impl Args {
         })
     }
 
+    /// `get`, but treating an empty value as absent. Optional overrides are
+    /// registered with `""` defaults; this is the accessor that makes
+    /// "flag not given" and "flag given empty" both mean "use the preset".
+    pub fn get_nonempty(&self, key: &str) -> Option<String> {
+        self.get(key).filter(|v| !v.is_empty())
+    }
+
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<T, String> {
         let v = self.get(key).ok_or_else(|| format!("missing --{key}"))?;
         v.parse::<T>()
             .map_err(|_| format!("--{key}: cannot parse {v:?}"))
+    }
+
+    /// Parse an optional override: `Ok(None)` when the option is missing or
+    /// empty, `Err` only on a present-but-unparseable value.
+    pub fn get_opt_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> Result<Option<T>, String> {
+        match self.get_nonempty(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
     }
 
     pub fn positional(&self) -> &[String] {
@@ -142,6 +164,23 @@ mod tests {
         assert_eq!(a.get("model").unwrap(), "mlp");
         assert!(a.has("verbose"));
         assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn optional_overrides_distinguish_empty_from_bad() {
+        let a = Args::new()
+            .opt("seed", "", "optional override")
+            .opt("steps", "", "optional override")
+            .parse(&argv(&["--steps", "12"]))
+            .unwrap();
+        assert_eq!(a.get_nonempty("seed"), None);
+        assert_eq!(a.get_opt_parsed::<u64>("seed").unwrap(), None);
+        assert_eq!(a.get_opt_parsed::<usize>("steps").unwrap(), Some(12));
+        let bad = Args::new()
+            .opt("steps", "", "optional override")
+            .parse(&argv(&["--steps", "many"]))
+            .unwrap();
+        assert!(bad.get_opt_parsed::<usize>("steps").is_err());
     }
 
     #[test]

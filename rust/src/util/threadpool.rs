@@ -103,12 +103,19 @@ pub struct Pool {
 
 impl Pool {
     pub fn new(n: usize) -> Self {
+        Self::with_name(n, "idkm-worker")
+    }
+
+    /// Pool whose worker threads are named `{prefix}-{i}`. The sweep
+    /// scheduler labels its cell workers (`idkm-sweep-*`) distinctly from
+    /// the kernel pools so stack dumps attribute stalls to the right layer.
+    pub fn with_name(n: usize, prefix: &str) -> Self {
         let jobs: Bounded<Box<dyn FnOnce() + Send + 'static>> = Bounded::new(n.max(1) * 2);
         let workers = (0..n.max(1))
             .map(|i| {
                 let jobs = jobs.clone();
                 std::thread::Builder::new()
-                    .name(format!("idkm-worker-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || {
                         while let Some(job) = jobs.pop() {
                             job();
