@@ -66,6 +66,11 @@ pub struct ExperimentConfig {
     /// sweep cells run concurrently on this many workers (1 = sequential;
     /// results and the cells.json audit trail are identical either way)
     pub sweep_threads: usize,
+    /// batches kept resident in the sweep-shared QAT loader cache (the
+    /// `data::loader::SharedBatches` window; a straggling cell past the
+    /// window re-renders deterministically, so this only trades memory for
+    /// re-render work)
+    pub loader_window: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -87,6 +92,7 @@ impl Default for ExperimentConfig {
             augment: Augment::mnist(),
             backend: BackendKind::default(),
             sweep_threads: 1,
+            loader_window: 8,
         }
     }
 }
@@ -163,6 +169,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = usize_of("sweep_threads") {
             self.sweep_threads = v.max(1);
+        }
+        if let Some(v) = usize_of("loader_window") {
+            self.loader_window = v.max(2);
         }
         if let Some(v) = get("budget_bytes").and_then(toml::Value::as_i64) {
             self.budget_bytes = v as u64;
@@ -277,6 +286,7 @@ mod tests {
 model_tag = "resnet18w16"
 qat_steps = 7
 sweep_threads = 4
+loader_window = 6
 tau = 0.001
 grid = [[2, 1], [16, 4]]
 methods = ["{}"]
@@ -292,6 +302,7 @@ backend = "{}"
         assert_eq!(c.model_tag, "resnet18w16");
         assert_eq!(c.qat_steps, 7);
         assert_eq!(c.sweep_threads, 4);
+        assert_eq!(c.loader_window, 6);
         assert_eq!(c.tau, TauSchedule::Constant(1e-3));
         assert_eq!(c.grid, vec![(2, 1), (16, 4)]);
         assert_eq!(c.methods, vec![Method::Idkm]);

@@ -9,11 +9,18 @@
 //! * every cell seeds its RNGs from the config seed, never from scheduler
 //!   state, so a cell's result is independent of which worker ran it;
 //! * all mutable per-cell runtime state (params, codebooks, optimizer
-//!   velocity, loaders) lives inside `qat_cell`; the cells share only the
+//!   velocity) lives inside `qat_cell`; the cells share only the
 //!   read-only [`Runtime`] executable cache and one [`Trainer`] whose
 //!   clustering engine takes `&self` everywhere — its kernel pool is a
 //!   contention-managed queue, so concurrent cells interleave kernel
 //!   blocks on one host-sized pool instead of oversubscribing N pools;
+//! * data is shared, not duplicated: the trainer builds one dataset, one
+//!   prefetched `SharedBatches` hub per QAT batch size, and one eval set,
+//!   and every concurrent cell subscribes to them instead of spawning its
+//!   own loader threads. Batches are pure functions of the batch index, so
+//!   cache/prefetch/schedule timing cannot change any cell's stream, and a
+//!   poisoned batch fails each affected cell individually (surfacing
+//!   through the per-cell `Result`) rather than wedging the pool;
 //! * results merge into `runs/<name>_cells.json` in grid order after every
 //!   chunk of `sweep_threads` cells: a failure-free grid produces a
 //!   byte-identical file whether it ran on 1 worker or N, an interrupted
@@ -391,6 +398,92 @@ mod tests {
         let done = load_done_tags(&path);
         assert_eq!(done.len(), 3);
         assert!(!done.contains(&poison));
+    }
+
+    #[test]
+    fn shared_loader_cells_are_byte_identical_across_thread_counts() {
+        use crate::data::loader::{BatchPlan, LoaderConfig, SharedBatches};
+        use crate::data::synthmnist::SynthMnist;
+        use std::sync::Arc;
+
+        let pending = grid();
+        let mut files = Vec::new();
+        for threads in [1usize, 4] {
+            let ds: Arc<dyn crate::data::Dataset> = Arc::new(SynthMnist::with_lens(3, 128, 32));
+            let plan = BatchPlan::new(
+                ds,
+                LoaderConfig {
+                    batch_size: 16,
+                    prefetch: 2,
+                    seed: 7,
+                    max_batches: Some(6),
+                    ..Default::default()
+                },
+            );
+            let hub = SharedBatches::spawn(plan, 4);
+            let path = tmp_cells_path(&format!("shared_{threads}"));
+            let out = run_cells(
+                &pending,
+                threads,
+                |k, d, m| {
+                    // every cell consumes the full shared stream; the value
+                    // it reports is a pure function of the batches it saw,
+                    // so any schedule must reproduce the same bytes
+                    let mut stream = SharedBatches::stream(&hub);
+                    let mut sum = 0.0f64;
+                    while let Some(b) = stream.next()? {
+                        sum += b.y.data().iter().map(|&v| v as f64).sum::<f64>();
+                        sum += b.x.data().iter().take(8).map(|&v| v as f64).sum::<f64>();
+                    }
+                    let mut cell = synth_cell(k, d, m);
+                    cell.quant_acc = sum;
+                    Ok(cell)
+                },
+                |cells| merge_cells_file(&path, cells),
+            )
+            .unwrap();
+            assert_eq!(out.len(), pending.len());
+            files.push(std::fs::read_to_string(&path).unwrap());
+        }
+        assert_eq!(files[0], files[1], "shared-loader cells.json differ across thread counts");
+    }
+
+    #[test]
+    fn poisoned_shared_loader_fails_cells_without_deadlocking_the_pool() {
+        use crate::data::loader::SharedBatches;
+        use crate::data::{make_batch, synthmnist::SynthMnist, Split};
+
+        let ds = SynthMnist::with_lens(0, 64, 16);
+        let hub = SharedBatches::with_source(
+            move |b| {
+                if b >= 2 {
+                    anyhow::bail!("synthetic loader failure at batch {b}")
+                }
+                Ok(make_batch(&ds, Split::Train, &[b as u64, b as u64 + 1]))
+            },
+            5,
+            4,
+            1,
+        );
+        let pending = grid(); // 8 cells on 4 workers: two poisoned chunks
+        let path = tmp_cells_path("poisoned_loader");
+        let err = run_cells(
+            &pending,
+            4,
+            |k, d, m| {
+                let mut stream = SharedBatches::stream(&hub);
+                while stream.next()?.is_some() {}
+                Ok(synth_cell(k, d, m))
+            },
+            |cells| merge_cells_file(&path, cells),
+        )
+        .unwrap_err();
+        // the error carries both the failing batch and the cell context,
+        // and — the real assertion — run_cells returned instead of hanging
+        let msg = format!("{err:#}");
+        assert!(msg.contains("synthetic loader failure at batch 2"), "{msg}");
+        assert!(msg.contains("cell k="), "missing cell context: {msg}");
+        assert_eq!(load_done_tags(&path).len(), 0, "no cell survives the poisoned batch");
     }
 
     #[test]

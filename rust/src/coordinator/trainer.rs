@@ -6,15 +6,23 @@
 //! loader), assembles the artifact's flat argument list from the manifest
 //! signature, executes, and unpacks the outputs back into state. Python is
 //! never involved.
+//!
+//! Data is shared across a sweep, not rebuilt per cell: the trainer lazily
+//! builds one dataset, one [`SharedBatches`] hub per QAT batch size, and
+//! one eval set per batch size, and every concurrent cell subscribes to
+//! those instead of synthesizing its own dataset and spawning its own
+//! loader threads (see [`crate::data::loader`] for the hub's guarantees).
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::config::ExperimentConfig;
-use crate::data::{self, loader, Batch, Split};
+use crate::data::loader::{BatchPlan, SharedBatches};
+use crate::data::{self, loader, Batch, Dataset, Split};
 use crate::memory::{rss_bytes, Budget};
 use crate::quant::engine::{Engine, Method};
 use crate::quant::packing::{pack, CompressionReport};
@@ -74,16 +82,84 @@ pub struct Trainer<'a> {
     /// Host clustering engine (warm starts, PTQ interop, packaging);
     /// backend chosen by `cfg.backend`.
     engine: Engine,
+    /// Lazily-built data shared by every cell of a sweep (the trainer is
+    /// shared across sweep workers, so these are mutex-guarded caches).
+    shared: SharedData,
+}
+
+/// One dataset, one QAT batch hub per batch size, one eval set per batch
+/// size — built on first use, shared read-only afterwards.
+#[derive(Default)]
+struct SharedData {
+    dataset: Mutex<Option<Arc<dyn Dataset>>>,
+    qat: Mutex<HashMap<usize, Arc<SharedBatches>>>,
+    evals: Mutex<HashMap<usize, Arc<Vec<Batch>>>>,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(runtime: &'a Runtime, cfg: &'a ExperimentConfig) -> Self {
-        Self { runtime, cfg, engine: Engine::new(cfg.backend) }
+        Self { runtime, cfg, engine: Engine::new(cfg.backend), shared: SharedData::default() }
     }
 
     /// The trainer's clustering engine (shared with PTQ / deploy callers).
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// The experiment's dataset, built once and shared by pretrain, every
+    /// QAT cell, and eval (cells used to rebuild it per call).
+    pub fn dataset(&self) -> Result<Arc<dyn Dataset>> {
+        let mut slot = self.shared.dataset.lock().unwrap();
+        if let Some(ds) = slot.as_ref() {
+            return Ok(Arc::clone(ds));
+        }
+        let ds: Arc<dyn Dataset> =
+            Arc::from(data::for_model(&self.cfg.model_tag, self.cfg.seed)?);
+        *slot = Some(Arc::clone(&ds));
+        Ok(ds)
+    }
+
+    /// The shared QAT batch hub for `batch_size`: one prefetched stream
+    /// every concurrent cell subscribes to (batch `b` is a pure function of
+    /// the config, so cells are schedule-independent — see `data::loader`).
+    fn qat_batches(&self, batch_size: usize) -> Result<Arc<SharedBatches>> {
+        let ds = self.dataset()?;
+        let mut hubs = self.shared.qat.lock().unwrap();
+        if let Some(hub) = hubs.get(&batch_size) {
+            return Ok(Arc::clone(hub));
+        }
+        let plan = BatchPlan::new(
+            ds,
+            loader::LoaderConfig {
+                batch_size,
+                prefetch: 4,
+                seed: self.cfg.seed ^ 0x9A7,
+                split: Split::Train,
+                max_batches: Some(self.cfg.qat_steps),
+                augment: self.cfg.augment,
+            },
+        );
+        let hub = SharedBatches::spawn(plan, self.cfg.loader_window);
+        hubs.insert(batch_size, Arc::clone(&hub));
+        Ok(hub)
+    }
+
+    /// The deterministic eval set for `batch_size`, rendered once per sweep
+    /// and shared read-only by every cell's eval passes.
+    fn eval_set(&self, batch_size: usize) -> Result<Arc<Vec<Batch>>> {
+        let ds = self.dataset()?;
+        let mut sets = self.shared.evals.lock().unwrap();
+        if let Some(set) = sets.get(&batch_size) {
+            return Ok(Arc::clone(set));
+        }
+        let set = Arc::new(loader::eval_batches(
+            ds.as_ref(),
+            Split::Test,
+            batch_size,
+            self.cfg.eval_batches,
+        ));
+        sets.insert(batch_size, Arc::clone(&set));
+        Ok(set)
     }
 
     // ------------------------------------------------------------------
@@ -96,8 +172,7 @@ impl<'a> Trainer<'a> {
         let exe = self.runtime.load(&self.cfg.pretrain_artifact())?;
         let info = exe.info.clone();
         let batch_size = info.batch.context("pretrain artifact missing batch")?;
-        let ds: Arc<dyn data::Dataset> =
-            Arc::from(data::for_model(&self.cfg.model_tag, self.cfg.seed)?);
+        let ds = self.dataset()?;
         let loader = loader::Loader::spawn(
             Arc::clone(&ds),
             loader::LoaderConfig {
@@ -206,11 +281,9 @@ impl<'a> Trainer<'a> {
     pub fn eval_float(&self, params: &[Tensor]) -> Result<f64> {
         let exe = self.runtime.load(&self.cfg.eval_float_artifact())?;
         let batch_size = exe.info.batch.context("eval artifact missing batch")?;
-        let ds = data::for_model(&self.cfg.model_tag, self.cfg.seed)?;
-        let batches =
-            loader::eval_batches(ds.as_ref(), Split::Test, batch_size, self.cfg.eval_batches);
+        let batches = self.eval_set(batch_size)?;
         let mut acc = Accuracy::default();
-        for b in &batches {
+        for b in batches.iter() {
             let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
             args.push(Value::F32(b.x.clone()));
             args.push(Value::I32(b.y.clone()));
@@ -230,11 +303,9 @@ impl<'a> Trainer<'a> {
     ) -> Result<f64> {
         let exe = self.runtime.load(&self.cfg.eval_quant_artifact(k, d))?;
         let batch_size = exe.info.batch.context("eval artifact missing batch")?;
-        let ds = data::for_model(&self.cfg.model_tag, self.cfg.seed)?;
-        let batches =
-            loader::eval_batches(ds.as_ref(), Split::Test, batch_size, self.cfg.eval_batches);
+        let batches = self.eval_set(batch_size)?;
         let mut acc = Accuracy::default();
-        for b in &batches {
+        for b in batches.iter() {
             let mut args: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
             args.extend(codebooks.iter().cloned().map(Value::F32));
             args.push(Value::F32(b.x.clone()));
@@ -362,19 +433,11 @@ impl<'a> Trainer<'a> {
         let n_params = params.len();
         let n_cb = codebooks.len();
 
-        let ds: Arc<dyn data::Dataset> =
-            Arc::from(data::for_model(&self.cfg.model_tag, self.cfg.seed)?);
-        let loader = loader::Loader::spawn(
-            Arc::clone(&ds),
-            loader::LoaderConfig {
-                batch_size,
-                prefetch: 4,
-                seed: self.cfg.seed ^ 0x9A7,
-                split: Split::Train,
-                max_batches: Some(self.cfg.qat_steps),
-                augment: self.cfg.augment,
-            },
-        );
+        // Subscribe to the sweep-shared batch hub instead of spawning a
+        // per-cell loader thread: concurrent cells read one prefetched
+        // stream, and a standalone cell sees the identical batches.
+        let hub = self.qat_batches(batch_size)?;
+        let mut stream = SharedBatches::stream(&hub);
 
         let rss_before = rss_bytes() as i64;
         let mut losses = Series::default();
@@ -382,7 +445,7 @@ impl<'a> Trainer<'a> {
         let mut step_time = Running::default();
         let t0 = Instant::now();
         let mut step = 0usize;
-        while let Some(batch) = loader.next() {
+        while let Some(batch) = stream.next()? {
             let tau = self.cfg.tau.at(step, self.cfg.qat_steps);
             let s0 = Instant::now();
             let out = self.run_qat_step(&exe, &params, &codebooks, &batch, tau)?;

@@ -1,18 +1,40 @@
-//! Background batch loader: shuffled epochs, prefetch threads, bounded
-//! staging (backpressure).
+//! Batch loading: a classic prefetching producer ([`Loader`]), a pure
+//! index-addressable batch plan ([`BatchPlan`]), and a shared multi-consumer
+//! hub ([`SharedBatches`]) that lets every concurrent sweep cell read one
+//! prefetched stream instead of spawning its own loader threads.
 //!
-//! The producer thread walks shuffled index permutations of the split and
-//! renders batches into a `Bounded` channel of depth `prefetch`; the trainer
-//! pops fully-staged batches. Because the datasets are pure functions of the
+//! [`Loader`] walks shuffled index permutations of the split and renders
+//! batches into a `Bounded` channel of depth `prefetch`; the trainer pops
+//! fully-staged batches. Because the datasets are pure functions of the
 //! index, the loader is deterministic given (seed, batch, epoch order).
+//!
+//! [`BatchPlan`] goes one step further: batch `b` is a pure function of
+//! `(dataset, config, b)` — the epoch permutation is seeded per epoch and
+//! augmentation per batch, with no sequential RNG state threading through
+//! the stream. That is what makes *sharing* trivial: any consumer, on any
+//! thread, at any time, asking for batch `b` gets identical bytes, so the
+//! [`SharedBatches`] cache is purely an optimization — eviction, prefetch
+//! timing, and consumer scheduling can never change a result, only how
+//! often a batch is re-rendered.
 
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
 
 use super::augment::Augment;
 use super::{make_batch, Batch, Dataset, Split};
 use crate::util::rng::Rng;
 use crate::util::threadpool::Bounded;
+
+/// Salt mixed into loader / epoch-shuffle seeds ("LOADER").
+const LOADER_SALT: u64 = 0x4c4f_4144_4552;
+/// Salt for the per-batch augmentation streams ("AUGMENT"-ish).
+const AUGMENT_SALT: u64 = 0x4155_474d_454e_5400;
+/// SplitMix64 increment; decorrelates per-epoch / per-batch derived seeds.
+const SEED_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
 
 pub struct LoaderConfig {
     pub batch_size: usize,
@@ -51,7 +73,7 @@ impl Loader {
         let handle = std::thread::Builder::new()
             .name("idkm-loader".into())
             .spawn(move || {
-                let mut rng = Rng::new(cfg.seed ^ 0x4c4f_4144_4552);
+                let mut rng = Rng::new(cfg.seed ^ LOADER_SALT);
                 let n = ds.len(cfg.split).max(cfg.batch_size);
                 let mut order: Vec<u64> = (0..n as u64).collect();
                 let mut produced = 0usize;
@@ -114,10 +136,304 @@ pub fn eval_batches(
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// BatchPlan: the stream as a pure function of the batch index
+// ---------------------------------------------------------------------------
+
+/// Index-addressable batch plan: batch `b` is a pure function of
+/// `(dataset, config, b)`.
+///
+/// Epoch `e`'s shuffled permutation is seeded by `(seed, e)` and batch
+/// `b`'s augmentation stream by `(seed, b)`, so no sequential RNG state
+/// links one batch to the next. Shuffled epochs, static batch shapes
+/// (ragged tails dropped), and train-split augmentation all match
+/// [`Loader`]'s behavior; only the derivation of the randomness differs,
+/// which is what lets any number of consumers read the same stream without
+/// coordination.
+///
+/// **Compatibility note:** for the same `(seed, config)` this produces a
+/// *different* (equally distributed) batch sequence than the
+/// sequential-RNG [`Loader`] — QAT results from before the trainer
+/// switched to plans are not batch-for-batch reproducible afterwards.
+/// Within the plan world everything is deterministic: same config, same
+/// stream, on any thread count.
+pub struct BatchPlan {
+    ds: Arc<dyn Dataset>,
+    cfg: LoaderConfig,
+    /// Epoch length in examples (≥ batch_size; tiny datasets index past
+    /// `len` like [`Loader`] does — samples are pure functions of index).
+    n: usize,
+    per_epoch: usize,
+    /// Last epoch permutation touched — consumers walk the stream roughly
+    /// in lockstep, so one slot of memoization removes almost every
+    /// reshuffle.
+    epoch_cache: Mutex<Option<(usize, Arc<Vec<u64>>)>>,
+}
+
+impl BatchPlan {
+    pub fn new(ds: Arc<dyn Dataset>, cfg: LoaderConfig) -> Self {
+        let batch = cfg.batch_size.max(1);
+        let n = ds.len(cfg.split).max(batch);
+        let per_epoch = (n / batch).max(1);
+        Self { ds, cfg, n, per_epoch, epoch_cache: Mutex::new(None) }
+    }
+
+    /// Stream length in batches (None = unbounded).
+    pub fn total(&self) -> Option<usize> {
+        self.cfg.max_batches
+    }
+
+    /// Full batches per shuffled epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.per_epoch
+    }
+
+    fn epoch_order(&self, epoch: usize) -> Arc<Vec<u64>> {
+        let mut cached = self.epoch_cache.lock().unwrap();
+        if let Some((e, ord)) = cached.as_ref() {
+            if *e == epoch {
+                return Arc::clone(ord);
+            }
+        }
+        let seed = self.cfg.seed ^ LOADER_SALT ^ (epoch as u64).wrapping_mul(SEED_MIX);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<u64> = (0..self.n as u64).collect();
+        rng.shuffle(&mut order);
+        let order = Arc::new(order);
+        *cached = Some((epoch, Arc::clone(&order)));
+        order
+    }
+
+    /// Render batch `b` — identical bytes for every caller, on any thread.
+    pub fn batch(&self, b: usize) -> Batch {
+        let order = self.epoch_order(b / self.per_epoch);
+        let slot = b % self.per_epoch;
+        let bs = self.cfg.batch_size.max(1);
+        let idx = &order[slot * bs..(slot + 1) * bs];
+        let mut batch = make_batch(self.ds.as_ref(), self.cfg.split, idx);
+        if self.cfg.split == Split::Train {
+            let seed = self.cfg.seed ^ AUGMENT_SALT ^ (b as u64).wrapping_mul(SEED_MIX);
+            self.cfg.augment.apply(&mut batch, &mut Rng::new(seed));
+        }
+        batch
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SharedBatches: one prefetched stream, many consumers
+// ---------------------------------------------------------------------------
+
+/// A cached or failed render of one batch index.
+#[derive(Clone)]
+enum Slot {
+    Ready(Arc<Batch>),
+    Failed(String),
+}
+
+#[derive(Default)]
+struct HubState {
+    /// Rendered batches by index (bounded by `window`, evict-lowest).
+    cache: BTreeMap<usize, Slot>,
+    /// Indices some thread is currently rendering — consumers at the same
+    /// index wait on `ready` instead of rendering twice.
+    in_flight: HashSet<usize>,
+    /// Most recent index any consumer asked for — the prefetch thread
+    /// renders ahead of this, so it keeps serving even after a later
+    /// sweep chunk restarts the stream from index 0.
+    last_requested: Option<usize>,
+}
+
+/// Shared multi-consumer batch hub over a deterministic source.
+///
+/// One hub serves every concurrent sweep cell of a configuration: the
+/// first thread to need batch `b` renders it (a single optional prefetch
+/// thread renders ahead of the front-runner), everyone else reads the
+/// cached `Arc<Batch>`. Because the source is a pure function of the index
+/// (see [`BatchPlan`]), the cache is *only* an optimization:
+///
+/// * a consumer that falls behind the eviction window silently re-renders
+///   — it can never block on, or be corrupted by, faster consumers;
+/// * a panicking render clears its in-flight mark on unwind and wakes
+///   waiters, who then render the index themselves — no deadlock;
+/// * a source **error** is cached per index and surfaces as an `Err` to
+///   every consumer that reaches that index, so one poisoned batch fails
+///   each cell individually instead of wedging the sweep pool.
+pub struct SharedBatches {
+    source: Box<dyn Fn(usize) -> Result<Batch> + Send + Sync>,
+    total: usize,
+    window: usize,
+    state: Mutex<HubState>,
+    ready: Condvar,
+}
+
+impl SharedBatches {
+    /// Hub over a [`BatchPlan`]; `window` bounds the resident cache (it is
+    /// raised to cover twice the plan's prefetch depth). The plan's
+    /// `prefetch` also sets the look-ahead of the single prefetch thread.
+    pub fn spawn(plan: BatchPlan, window: usize) -> Arc<SharedBatches> {
+        let total = plan.total().unwrap_or(usize::MAX);
+        let lookahead = plan.cfg.prefetch;
+        Self::with_source(move |b| Ok(plan.batch(b)), total, window, lookahead)
+    }
+
+    /// Hub over an arbitrary fallible source (tests inject poisoned
+    /// sources here). `lookahead = 0` disables the prefetch thread.
+    pub fn with_source(
+        source: impl Fn(usize) -> Result<Batch> + Send + Sync + 'static,
+        total: usize,
+        window: usize,
+        lookahead: usize,
+    ) -> Arc<SharedBatches> {
+        let hub = Arc::new(SharedBatches {
+            source: Box::new(source),
+            total,
+            window: window.max(2 * lookahead).max(2),
+            state: Mutex::new(HubState::default()),
+            ready: Condvar::new(),
+        });
+        if lookahead > 0 {
+            let weak = Arc::downgrade(&hub);
+            let _ = std::thread::Builder::new()
+                .name("idkm-shared-loader".into())
+                .spawn(move || Self::prefetch_loop(weak, lookahead));
+        }
+        hub
+    }
+
+    /// A new consumer cursor over the full stream (always starts at 0).
+    pub fn stream(hub: &Arc<SharedBatches>) -> BatchStream {
+        BatchStream { hub: Arc::clone(hub), cursor: 0 }
+    }
+
+    /// Stream length in batches.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    fn get(&self, b: usize) -> Result<Arc<Batch>> {
+        let mut st = self.state.lock().unwrap();
+        st.last_requested = Some(b);
+        let slot = loop {
+            if let Some(s) = st.cache.get(&b) {
+                break s.clone();
+            }
+            if !st.in_flight.contains(&b) {
+                st.in_flight.insert(b);
+                drop(st);
+                break self.render(b);
+            }
+            // someone is rendering b right now; wait for the publish (a
+            // panicked render clears the mark, so the re-check falls
+            // through to rendering it ourselves)
+            st = self.ready.wait(st).unwrap();
+        };
+        match slot {
+            Slot::Ready(batch) => Ok(batch),
+            Slot::Failed(msg) => anyhow::bail!("shared loader: batch {b}: {msg}"),
+        }
+    }
+
+    /// Render `b` (the caller must have marked it in-flight) and publish
+    /// the slot. The in-flight mark is cleared and waiters are woken even
+    /// if the source panics.
+    fn render(&self, b: usize) -> Slot {
+        struct Publish<'a> {
+            hub: &'a SharedBatches,
+            b: usize,
+            slot: Option<Slot>,
+        }
+        impl Drop for Publish<'_> {
+            fn drop(&mut self) {
+                let mut st = self.hub.state.lock().unwrap();
+                st.in_flight.remove(&self.b);
+                if let Some(slot) = self.slot.take() {
+                    st.cache.insert(self.b, slot);
+                    // The just-published index approximates the active
+                    // frontier: evict whichever end of the cache is
+                    // farther from it, so both already-consumed low
+                    // entries AND stale high entries from a previous
+                    // consumer's pass get evicted (a late joiner at index
+                    // 0 must not thrash against dead end-of-stream
+                    // entries). Never evict the batch just published.
+                    while st.cache.len() > self.hub.window {
+                        let &lo = st.cache.keys().next().unwrap();
+                        let &hi = st.cache.keys().next_back().unwrap();
+                        let victim =
+                            if self.b.abs_diff(lo) >= self.b.abs_diff(hi) { lo } else { hi };
+                        if victim == self.b {
+                            break;
+                        }
+                        st.cache.remove(&victim);
+                    }
+                }
+                self.hub.ready.notify_all();
+            }
+        }
+        let mut publish = Publish { hub: self, b, slot: None };
+        let slot = match (self.source)(b) {
+            Ok(batch) => Slot::Ready(Arc::new(batch)),
+            Err(e) => Slot::Failed(format!("{e:#}")),
+        };
+        publish.slot = Some(slot.clone());
+        slot
+    }
+
+    /// The single prefetch thread: keep `lookahead` batches rendered ahead
+    /// of the most recent request (so it serves every pass over the
+    /// stream, not just the first). Holds only a `Weak` so dropping the
+    /// last trainer reference shuts the thread down (it re-checks every
+    /// few ms while idle).
+    fn prefetch_loop(weak: Weak<SharedBatches>, lookahead: usize) {
+        loop {
+            let Some(hub) = weak.upgrade() else { return };
+            let job = {
+                let mut st = hub.state.lock().unwrap();
+                let base = st.last_requested.map_or(0, |r| r + 1);
+                let hi = base.saturating_add(lookahead).min(hub.total);
+                let pick = (base..hi)
+                    .find(|t| !st.cache.contains_key(t) && !st.in_flight.contains(t));
+                if let Some(t) = pick {
+                    st.in_flight.insert(t);
+                }
+                pick
+            };
+            match job {
+                Some(t) => {
+                    hub.render(t);
+                }
+                None => {
+                    drop(hub);
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+}
+
+/// One consumer's cursor over a [`SharedBatches`] stream.
+pub struct BatchStream {
+    hub: Arc<SharedBatches>,
+    cursor: usize,
+}
+
+impl BatchStream {
+    /// Next batch of the shared stream; `Ok(None)` when the stream's
+    /// `total` is reached, `Err` when the source failed at this index.
+    pub fn next(&mut self) -> Result<Option<Arc<Batch>>> {
+        if self.cursor >= self.hub.total {
+            return Ok(None);
+        }
+        let b = self.hub.get(self.cursor)?;
+        self.cursor += 1;
+        Ok(Some(b))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthmnist::SynthMnist;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn produces_requested_batches() {
@@ -174,5 +490,133 @@ mod tests {
         );
         let _ = loader.next();
         drop(loader); // must not hang
+    }
+
+    fn small_plan(max_batches: usize) -> BatchPlan {
+        let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 96, 32));
+        BatchPlan::new(
+            ds,
+            LoaderConfig {
+                batch_size: 16,
+                prefetch: 2,
+                seed: 7,
+                max_batches: Some(max_batches),
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn batch_plan_is_a_pure_function_of_the_index() {
+        let plan_a = small_plan(12);
+        let plan_b = small_plan(12);
+        // out-of-order and repeated access give identical bytes
+        for &b in &[5usize, 0, 11, 5, 7, 0] {
+            let x = plan_a.batch(b);
+            let y = plan_b.batch(b);
+            assert_eq!(x.x, y.x, "batch {b}");
+            assert_eq!(x.y, y.y, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn batch_plan_epochs_reshuffle_and_batches_differ() {
+        let plan = small_plan(24);
+        assert_eq!(plan.batches_per_epoch(), 6); // 96 / 16
+        // consecutive batches and consecutive epochs present different data
+        let a = plan.batch(0);
+        let b = plan.batch(1);
+        let c = plan.batch(6); // same slot, next epoch
+        assert_ne!(a.y.data(), b.y.data());
+        assert_ne!(a.y.data(), c.y.data());
+    }
+
+    #[test]
+    fn shared_streams_agree_with_the_plan() {
+        let total = 10usize;
+        let want: Vec<Batch> = (0..total).map(|b| small_plan(total).batch(b)).collect();
+        let hub = SharedBatches::spawn(small_plan(total), 4);
+        // fast consumer first (drives the cache through eviction), then a
+        // late joiner that starts at 0 after early batches were evicted
+        for _ in 0..2 {
+            let mut stream = SharedBatches::stream(&hub);
+            let mut got = Vec::new();
+            while let Some(b) = stream.next().unwrap() {
+                got.push(b);
+            }
+            assert_eq!(got.len(), total);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.x, w.x);
+                assert_eq!(g.y, w.y);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_hub_renders_each_index_once_for_lockstep_consumers() {
+        let renders = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&renders);
+        let ds = SynthMnist::with_lens(0, 64, 16);
+        let hub = SharedBatches::with_source(
+            move |b| {
+                r2.fetch_add(1, Ordering::Relaxed);
+                Ok(make_batch(&ds, Split::Train, &[b as u64]))
+            },
+            6,
+            8,
+            0, // no prefetch thread: renders are all consumer-driven
+        );
+        let mut s1 = SharedBatches::stream(&hub);
+        let mut s2 = SharedBatches::stream(&hub);
+        loop {
+            let a = s1.next().unwrap();
+            let b = s2.next().unwrap();
+            assert_eq!(a.is_some(), b.is_some());
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(renders.load(Ordering::Relaxed), 6, "lockstep consumers must share renders");
+    }
+
+    #[test]
+    fn poisoned_source_fails_every_consumer_without_hanging() {
+        let ds = SynthMnist::with_lens(0, 64, 16);
+        let hub = SharedBatches::with_source(
+            move |b| {
+                if b >= 2 {
+                    anyhow::bail!("poisoned at {b}")
+                }
+                Ok(make_batch(&ds, Split::Train, &[b as u64]))
+            },
+            5,
+            4,
+            1,
+        );
+        for _ in 0..2 {
+            let mut stream = SharedBatches::stream(&hub);
+            assert!(stream.next().unwrap().is_some());
+            assert!(stream.next().unwrap().is_some());
+            let err = stream.next().unwrap_err().to_string();
+            assert!(err.contains("poisoned at 2"), "{err}");
+        }
+    }
+
+    #[test]
+    fn prefetch_thread_fills_ahead_of_the_consumer() {
+        let hub = SharedBatches::spawn(small_plan(8), 6);
+        let mut stream = SharedBatches::stream(&hub);
+        let first = stream.next().unwrap().unwrap();
+        assert_eq!(first.y.data().len(), 16);
+        // give the prefetch thread a moment, then the cache should already
+        // hold batches the consumer never asked for
+        for _ in 0..100 {
+            std::thread::sleep(Duration::from_millis(2));
+            let st = hub.state.lock().unwrap();
+            if st.cache.keys().any(|&k| k > 0) {
+                return;
+            }
+        }
+        panic!("prefetch thread never rendered ahead");
     }
 }

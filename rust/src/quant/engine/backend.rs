@@ -9,11 +9,15 @@
 //!   fused multiply-adds against a precomputed codeword-norm table instead
 //!   of k subtract-square scans. Same fixed points; assignments may differ
 //!   from `ScalarRef` only on floating-point near-ties.
-//! * [`Blocked`] with the SIMD kernel (`Blocked::simd()`, backend kind
-//!   `simd`) — same row blocking, but the per-block E-step runs the 8-wide
-//!   lane kernel from [`super::simd`], which vectorizes across codewords
-//!   and (unlike the expanded form above) matches `ScalarRef` assignments
-//!   bit-for-bit.
+//! * [`Blocked`] with the SIMD kernels (`Blocked::simd()`, backend kind
+//!   `simd`) — same row blocking, but the per-block hard E-step runs the
+//!   8-wide lane kernel from [`super::simd`] and the per-block soft-EM
+//!   sweep runs [`soft_block_simd`]. Both vectorize across codewords and
+//!   (unlike the expanded form above) match `ScalarRef` bit-for-bit per
+//!   block: the soft kernel keeps the reference's max-subtraction pivot,
+//!   ascending-j normalizer sum, and f64 accumulation order, and both
+//!   sweeps share one [`exp_f32`] so no vectorization can shift a bit
+//!   (see the `super::simd` module docs for the full argument).
 //!
 //! All kernels are stateless with respect to the data: (w, d, codebook,
 //! assignments) go in, updated state comes out, so backends are trivially
@@ -21,7 +25,9 @@
 
 // Per-block cost is exactly `quant::cost_with_assignments` — both backends
 // call it directly so the oracle relationship can never diverge.
-use super::simd::{assign_block_fused_simd, CodebookTiles};
+use super::simd::{
+    assign_block_fused_simd, exp_f32, soft_block_simd, CodebookTiles, SoftBlockAccum,
+};
 use super::BackendKind;
 use crate::quant::{cost_with_assignments as cost_block, dist2, kmeans::kmeanspp_init, nearest};
 use crate::util::rng::Rng;
@@ -116,13 +122,16 @@ fn apply_mstep(codebook: &mut [f32], d: usize, sums: &[f64], counts: &[u64]) {
     }
 }
 
-/// Partial soft-EM accumulators for a row block: attention-weighted
-/// (numerators k×d, denominators k). Arithmetic mirrors the original
-/// `soft_kmeans` inner loop exactly (max-subtracted softmax, f64 sums).
-fn soft_block(w: &[f32], d: usize, codebook: &[f32], tau: f32) -> (Vec<f64>, Vec<f64>) {
+/// Scalar-reference soft-EM sweep for a row block: attention-weighted
+/// partials ([`SoftBlockAccum`]) from the max-subtracted softmax over
+/// `-‖w − c_j‖ / tau`, with f64 sums. This is the numerics oracle the SIMD
+/// sweep reproduces bit-for-bit; the one deliberate departure from libm is
+/// that `exp` routes through the engine-shared [`exp_f32`] (a pure
+/// arithmetic polynomial) so every backend computes identical exponential
+/// bits — see the `super::simd` module docs.
+fn soft_block(w: &[f32], d: usize, codebook: &[f32], tau: f32) -> SoftBlockAccum {
     let k = codebook.len() / d;
-    let mut num = vec![0.0f64; k * d];
-    let mut den = vec![0.0f64; k];
+    let mut acc = SoftBlockAccum::new(k, d);
     let mut attn = vec![0.0f32; k];
     for sub in w.chunks_exact(d) {
         let mut max_logit = f32::MIN;
@@ -133,26 +142,26 @@ fn soft_block(w: &[f32], d: usize, codebook: &[f32], tau: f32) -> (Vec<f64>, Vec
         }
         let mut z = 0.0f32;
         for a in attn.iter_mut() {
-            *a = (*a - max_logit).exp();
+            *a = exp_f32(*a - max_logit);
             z += *a;
         }
         for j in 0..k {
             let a = (attn[j] / z) as f64;
-            den[j] += a;
-            for (n, &x) in num[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
+            acc.den[j] += a;
+            for (n, &x) in acc.num[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
                 *n += a * x as f64;
             }
         }
     }
-    (num, den)
+    acc
 }
 
-fn apply_soft(codebook: &[f32], d: usize, num: &[f64], den: &[f64]) -> Vec<f32> {
+fn apply_soft(codebook: &[f32], d: usize, acc: &SoftBlockAccum) -> Vec<f32> {
     let mut out = codebook.to_vec();
-    for (j, &dj) in den.iter().enumerate() {
+    for (j, &dj) in acc.den.iter().enumerate() {
         if dj > DEN_EPS {
             for c in 0..d {
-                out[j * d + c] = (num[j * d + c] / dj) as f32;
+                out[j * d + c] = (acc.num[j * d + c] / dj) as f32;
             }
         }
     }
@@ -183,8 +192,7 @@ impl Clusterer for ScalarRef {
     }
 
     fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
-        let (num, den) = soft_block(w, d, codebook, tau);
-        apply_soft(codebook, d, &num, &den)
+        apply_soft(codebook, d, &soft_block(w, d, codebook, tau))
     }
 
     fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
@@ -204,9 +212,11 @@ impl Clusterer for ScalarRef {
 /// chunk order.
 ///
 /// With `simd = true` the per-block E-step swaps the scalar fused loop for
-/// the 8-wide lane kernel ([`assign_block_fused_simd`]); M-step, soft
-/// sweep, and cost are unchanged (they are reduction-bound, not
-/// distance-scan-bound).
+/// the 8-wide lane kernel ([`assign_block_fused_simd`]) and the per-block
+/// soft-EM sweep swaps the scalar reference loop for [`soft_block_simd`]
+/// (lane-wide distance rows, vectorized shared exp, identical softmax
+/// pivot and f64 accumulation order — bit-for-bit per block). M-step and
+/// cost are unchanged (reduction-bound, not distance-scan-bound).
 pub struct Blocked {
     pool: Pool,
     threads: usize,
@@ -251,6 +261,40 @@ impl Blocked {
     /// Rows per parallel task: ~4 tasks per worker amortizes imbalance.
     fn grain(&self, m: usize) -> usize {
         (m / (self.threads * 4)).max(self.min_grain)
+    }
+
+    /// Shared soft-sweep scaffolding: run `block` over the whole matrix
+    /// (single block) or fan row chunks across the pool and fold the
+    /// per-chunk partials in ascending chunk order. `block` fills one
+    /// zeroed [`SoftBlockAccum`] for its rows.
+    fn soft_partials<F>(&self, w: &[f32], d: usize, k: usize, block: F) -> SoftBlockAccum
+    where
+        F: Fn(&[f32], &mut SoftBlockAccum) + Sync,
+    {
+        let m = w.len() / d;
+        let grain = self.grain(m);
+        if m <= grain {
+            let mut acc = SoftBlockAccum::new(k, d);
+            block(w, &mut acc);
+            return acc;
+        }
+        let n_chunks = m.div_ceil(grain);
+        let mut partials: Vec<SoftBlockAccum> =
+            (0..n_chunks).map(|_| SoftBlockAccum::new(k, d)).collect();
+        let block_ref = &block;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
+            .chunks(grain * d)
+            .zip(partials.iter_mut())
+            .map(|(wc, slot)| {
+                Box::new(move || block_ref(wc, slot)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.pool.run_all(jobs);
+        let mut total = SoftBlockAccum::new(k, d);
+        for p in &partials {
+            total.merge(p);
+        }
+        total
     }
 }
 
@@ -345,36 +389,17 @@ impl Clusterer for Blocked {
     }
 
     fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
-        let m = w.len() / d;
         let k = codebook.len() / d;
-        let grain = self.grain(m);
-        if m <= grain {
-            let (num, den) = soft_block(w, d, codebook, tau);
-            return apply_soft(codebook, d, &num, &den);
-        }
-        let n_chunks = m.div_ceil(grain);
-        let mut partials: Vec<(Vec<f64>, Vec<f64>)> =
-            (0..n_chunks).map(|_| (Vec::new(), Vec::new())).collect();
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
-            .chunks(grain * d)
-            .zip(partials.iter_mut())
-            .map(|(wc, slot)| {
-                Box::new(move || *slot = soft_block(wc, d, codebook, tau))
-                    as Box<dyn FnOnce() + Send + '_>
+        let acc = if self.simd {
+            // Transpose once; every row block reads the tiles immutably.
+            let tiles = CodebookTiles::new(codebook, d);
+            self.soft_partials(w, d, k, |wc, slot| {
+                soft_block_simd(wc, d, codebook, &tiles, tau, slot)
             })
-            .collect();
-        self.pool.run_all(jobs);
-        let mut num = vec![0.0f64; k * d];
-        let mut den = vec![0.0f64; k];
-        for (pn, pd) in &partials {
-            for (n, p) in num.iter_mut().zip(pn.iter()) {
-                *n += p;
-            }
-            for (dn, p) in den.iter_mut().zip(pd.iter()) {
-                *dn += p;
-            }
-        }
-        apply_soft(codebook, d, &num, &den)
+        } else {
+            self.soft_partials(w, d, k, |wc, slot| *slot = soft_block(wc, d, codebook, tau))
+        };
+        apply_soft(codebook, d, &acc)
     }
 
     fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
@@ -457,6 +482,50 @@ mod tests {
         let soft_b = blocked.soft_update(&w, d, &codebook, 5e-3);
         for (x, y) in soft_s.iter().zip(&soft_b) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn simd_soft_sweep_is_bit_identical_to_scalar_per_block() {
+        // Single-block (m <= grain): the SIMD soft sweep must reproduce the
+        // scalar reference bit-for-bit — distance order, max pivot, shared
+        // exp, normalizer order, and f64 accumulation order all line up
+        // (see the super::simd module docs for the argument).
+        for &(m, d, k, tau) in &[
+            (513usize, 1usize, 9usize, 5e-4f32),
+            (256, 2, 16, 5e-3),
+            (100, 4, 7, 1e-3),
+            (64, 3, 8, 1e-6),
+            (31, 2, 2, 10.0), // k < LANES: all-tail distance row
+        ] {
+            let w = random_w(m, d, (m * 7 + k) as u64);
+            let codebook = ScalarRef.seed(&w, d, k, &mut Rng::new(99));
+            let wide = Blocked::with_kernel(2, usize::MAX, true);
+            let s = ScalarRef.soft_update(&w, d, &codebook, tau);
+            let v = wide.soft_update(&w, d, &codebook, tau);
+            assert_eq!(s.len(), v.len());
+            for (i, (a, b)) in s.iter().zip(&v).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "m={m} d={d} k={k} tau={tau} codeword component {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_soft_multiblock_fold_matches_scalar_to_tolerance() {
+        // Across blocks the f64 partial-sum fold can differ in the last
+        // ulp (chunk-ordered merge vs one sequential scan) — that is the
+        // same 1e-4 contract the scalar-fused Blocked path has.
+        let (m, d, k) = (8192, 4, 16);
+        let w = random_w(m, d, 21);
+        let codebook = ScalarRef.seed(&w, d, k, &mut Rng::new(8));
+        let s = ScalarRef.soft_update(&w, d, &codebook, 5e-3);
+        let v = Blocked::with_kernel(3, 64, true).soft_update(&w, d, &codebook, 5e-3);
+        for (a, b) in s.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }
 

@@ -6,7 +6,10 @@
 //! * [`Method`] — the closed method vocabulary that replaced string dispatch
 //! * [`Clusterer`] + [`ScalarRef`] / [`Blocked`] — interchangeable kernels
 //!   (exact scalar reference vs cache-blocked multi-threaded)
-//! * [`simd`] — portable 8-wide f32 lanes behind the SIMD fused E-step
+//! * [`simd`] — portable 8-wide f32 lanes behind the SIMD fused E-step and
+//!   the fused soft-EM sweep (attention partials in
+//!   [`simd::SoftBlockAccum`], exponentials through the engine-shared
+//!   [`simd::exp_f32`])
 //! * [`FixedPointSolver`] — the paper's Picard iteration with convergence
 //!   tracking, powering the IDKM/IDKM-JFB host fixed points
 //! * [`Engine`] — backend selection + method-dispatched clustering
@@ -20,16 +23,29 @@
 //!
 //! * `scalar` ([`ScalarRef`]) — the straight-line loops, bit-for-bit equal
 //!   to the free functions in [`crate::quant::kmeans`]. The numerics
-//!   oracle; use it when reproducing exact historical numbers.
+//!   oracle. (Hard-EM paths reproduce pre-engine numbers exactly; soft-EM
+//!   numbers shifted by ≤ ~2 ulp per exponential when the sweep moved
+//!   from libm `expf` to the engine-shared [`simd::exp_f32`] — from that
+//!   point on, `scalar` is the pinned reference.)
 //! * `blocked` ([`Blocked`]) — row blocks fanned across the thread pool
 //!   with the codeword-norm fused E-step. Assignments can differ from
 //!   `scalar` on floating-point near-ties (costs agree to ~1e-5).
 //! * `simd` (`Blocked::simd()`, the default) — same blocking, but the
-//!   E-step runs the [`simd`] lane kernel: 8 codewords per wide op with a
-//!   scalar tail for `k % 8`. The lanes kick in for k ≥ 8 (every paper
-//!   grid cell except k ∈ {2, 4}, which fall through to the scalar tail);
-//!   assignments match `scalar` **exactly** because the kernel keeps the
-//!   reference subtract-square numerics and tie-breaks.
+//!   E-step runs the [`simd`] lane kernel (8 codewords per wide op, scalar
+//!   tail for `k % 8`) and the soft-EM sweep runs the fused
+//!   [`simd::soft_block_simd`] kernel, so [`FixedPointSolver`]'s Picard
+//!   iterations hit lane speed too. The lanes kick in for k ≥ 8 (every
+//!   paper grid cell except k ∈ {2, 4}, which fall through to the scalar
+//!   tail); assignments match `scalar` **exactly** because the kernel
+//!   keeps the reference subtract-square numerics and tie-breaks, and the
+//!   soft sweep matches `scalar` **bit-for-bit per row block** because it
+//!   keeps the reference's max-subtraction pivot, ascending-j normalizer
+//!   order, f64 accumulation order, and the shared [`simd::exp_f32`] —
+//!   max-subtraction order matters: the pivot feeds every exponent, so a
+//!   pivot off by one ulp would shift the whole attention row. Residual
+//!   traces are therefore identical across backends whenever a sweep runs
+//!   in one row block (m ≤ the 1024 grain floor); across blocks only the
+//!   f64 partial fold order differs (≤ last-ulp, gated at 1e-4).
 //!
 //! ```no_run
 //! use idkm::quant::engine::{ClusterSpec, Engine, Method};
@@ -48,7 +64,7 @@ mod solver;
 
 pub use backend::{Blocked, Clusterer, ScalarRef};
 pub use method::{Method, ParseEnumError};
-pub use solver::{FixedPointSolver, FixedPointTrace};
+pub use solver::{first_residual_divergence, FixedPointSolver, FixedPointTrace};
 
 use crate::util::rng::Rng;
 use std::fmt;

@@ -1,4 +1,4 @@
-//! Portable SIMD lanes for the fused E-step.
+//! Portable SIMD lanes for the fused E-step and the soft-EM sweep.
 //!
 //! There is no `std::simd` on stable and no intrinsics crate in this image,
 //! so the wide ops are written the way LLVM's autovectorizer reliably
@@ -15,14 +15,43 @@
 //! paper configuration that matters) rather than across the tiny d ≤ 4
 //! sub-vector dimension.
 //!
-//! Numerics: the kernel accumulates the plain squared distance
-//! `Σ_c (w_c − c_jc)²` in exactly the per-codeword operation order of
+//! # Hard E-step numerics
+//!
+//! The kernel accumulates the plain squared distance `Σ_c (w_c − c_jc)²`
+//! in exactly the per-codeword operation order of
 //! [`dist2`](crate::quant::dist2), and resolves ties toward the lowest
 //! codeword index like [`nearest`](crate::quant::nearest). Assignments are
 //! therefore **bit-for-bit identical** to the `ScalarRef` backend — unlike
 //! the expanded `|c|² − 2·w·c` form, which trades exactness for fewer ops.
 //! The speedup comes purely from the 8-wide lanes. Codewords beyond the
 //! last full lane chunk (`k % LANES` of them) take a scalar tail.
+//!
+//! # Soft-EM sweep numerics (why the operation order matters)
+//!
+//! [`soft_block_simd`] reproduces the scalar reference sweep bit-for-bit
+//! by splitting each row into phases whose reordering provably cannot
+//! change any result bit:
+//!
+//! 1. **distance row** — per codeword, `dist2` accumulates components in
+//!    ascending order inside one lane; `sqrt` and the `/tau` scaling are
+//!    IEEE-exact elementwise ops, so lane-parallelism is invisible.
+//! 2. **max subtraction** — the max over the logit row is folded by the
+//!    exact scalar scan (ascending j, `f32::max`), not a lane reduction,
+//!    so the subtracted pivot is the reference's pivot bit-for-bit. This
+//!    is the step that makes softmax finite at the paper's tau = 5e-4; a
+//!    pivot that differs in the last ulp would shift *every* exponent.
+//! 3. **exp** — elementwise through the shared [`exp_f32`] (see below).
+//! 4. **normalizer and accumulation** — `z` sums the exponentials in
+//!    ascending j exactly like the reference's interleaved loop, and each
+//!    `num[j·d + c]` / `den[j]` slot receives exactly one `+=` per row, in
+//!    row order, so the f64 accumulation order per block is unchanged.
+//!
+//! `exp` is the one transcendental in the sweep. libm's `expf` is an
+//! opaque call the vectorizer cannot touch (and whose result bits a
+//! vectorized variant would not reproduce), so both the scalar reference
+//! and the wide kernel route through [`exp_f32`] — a Cephes-style
+//! polynomial written as straight-line arithmetic. Same function ⇒ same
+//! bits; pure arithmetic ⇒ the wide kernel's exp pass vectorizes.
 
 use crate::quant::dist2;
 
@@ -37,6 +66,54 @@ fn accum_sq_diff(acc: &mut [f32; LANES], x: f32, c: &[f32; LANES]) {
     for l in 0..LANES {
         let diff = x - c[l];
         acc[l] += diff * diff;
+    }
+}
+
+/// Vectorizer-friendly `e^x` shared by the scalar-reference and SIMD soft
+/// sweeps (Cephes `expf`: range reduction by ln 2 split in two parts, then
+/// a degree-5 minimax polynomial, then a 2^n exponent-bit scale).
+///
+/// Accuracy is ~2 ulp against libm. Saturation: inputs below ≈ −87.34
+/// (including −∞) return exactly 0.0 like libm; inputs above ≈ 88.72
+/// return +∞ (the top ~0.35 octaves of the finite range overflow early —
+/// irrelevant for softmax, whose max-subtracted logits are ≤ 0). NaN
+/// propagates.
+///
+/// The parity contract of the soft sweep hinges on every path calling this
+/// one function: identical inputs then give identical bits no matter how
+/// the surrounding loop is vectorized, which an opaque libm call cannot
+/// guarantee (and cannot vectorize).
+#[inline(always)]
+pub fn exp_f32(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    // ln 2 split so `x - n*LN2_HI` is exact for |n| < 2^15 (the literal is
+    // the shortest spelling of exactly 0.693359375 = 710/1024).
+    const LN2_HI: f32 = 0.693_359_4;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    const EXP_LO: f32 = -87.336_54;
+    const EXP_HI: f32 = 88.722_83;
+    // Clamp keeps the exponent-bit scale in range; the selects at the end
+    // restore the saturated values. NaN survives the clamp and the
+    // comparisons below are false for it, so NaN propagates through `y`.
+    let xc = x.clamp(EXP_LO, EXP_HI);
+    let n = (xc * LOG2E).round();
+    let r = (xc - n * LN2_HI) - n * LN2_LO;
+    let mut p = 1.987_569_1e-4_f32;
+    p = p * r + 1.398_199_9e-3;
+    p = p * r + 8.333_452e-3;
+    p = p * r + 4.166_579_6e-2;
+    p = p * r + 1.666_666_6e-1;
+    p = p * r + 0.5;
+    // n ∈ [-126, 128] after the clamp; n = 128 yields +∞, folded into the
+    // saturation select below.
+    let scale = f32::from_bits((((n as i32) + 127) << 23) as u32);
+    let y = (p * r * r + r + 1.0) * scale;
+    if x < EXP_LO {
+        0.0
+    } else if x > EXP_HI {
+        f32::INFINITY
+    } else {
+        y
     }
 }
 
@@ -133,6 +210,137 @@ pub fn assign_block_fused_simd(
     }
 }
 
+/// Partial soft-EM accumulators for one row block: attention-weighted f64
+/// numerators (k × d) and denominators (k). Both the scalar reference and
+/// the SIMD sweep fill one of these per block; a parallel backend folds
+/// block partials in chunk order so the merged sums stay deterministic.
+pub struct SoftBlockAccum {
+    /// Attention-weighted component sums, row-major (k, d).
+    pub num: Vec<f64>,
+    /// Attention mass per codeword.
+    pub den: Vec<f64>,
+}
+
+impl SoftBlockAccum {
+    pub fn new(k: usize, d: usize) -> Self {
+        SoftBlockAccum { num: vec![0.0f64; k * d], den: vec![0.0f64; k] }
+    }
+
+    /// Fold another block's partials into this one (element-wise adds; call
+    /// in ascending chunk order to keep the reduction deterministic).
+    pub fn merge(&mut self, other: &SoftBlockAccum) {
+        debug_assert_eq!(self.num.len(), other.num.len());
+        debug_assert_eq!(self.den.len(), other.den.len());
+        for (a, b) in self.num.iter_mut().zip(other.num.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.den.iter_mut().zip(other.den.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// SIMD-wide soft-EM sweep for one row block at temperature `tau`:
+/// max-subtracted softmax over `-‖w − c_j‖ / tau`, accumulated into `acc`.
+///
+/// `tiles` must have been built from `codebook` with the same `d`. The
+/// accumulated partials are **bit-for-bit identical** to the scalar
+/// reference sweep over the same block — see the module docs for the
+/// phase-by-phase argument.
+pub fn soft_block_simd(
+    w: &[f32],
+    d: usize,
+    codebook: &[f32],
+    tiles: &CodebookTiles,
+    tau: f32,
+    acc: &mut SoftBlockAccum,
+) {
+    debug_assert_eq!(tiles.d, d);
+    let k = codebook.len() / d;
+    debug_assert_eq!(tiles.k_main, k - k % LANES);
+    debug_assert_eq!(acc.den.len(), k);
+    let mut row = vec![0.0f32; k];
+    for sub in w.chunks_exact(d) {
+        // Phase 1: wide distance row. Each lane accumulates its codeword's
+        // components in ascending order — dist2's exact operation order —
+        // then sqrt / tau-scale elementwise (IEEE-exact, so lane-safe).
+        for (chunk, tile) in tiles.tiles.chunks_exact(d).enumerate() {
+            let mut sq = [0.0f32; LANES];
+            for (&x, c) in sub.iter().zip(tile.iter()) {
+                accum_sq_diff(&mut sq, x, c);
+            }
+            for (o, &s) in row[chunk * LANES..(chunk + 1) * LANES].iter_mut().zip(sq.iter()) {
+                *o = -s.sqrt() / tau;
+            }
+        }
+        for j in tiles.k_main..k {
+            row[j] = -dist2(sub, &codebook[j * d..(j + 1) * d]).sqrt() / tau;
+        }
+        // Phase 2: the reference's exact max scan (ascending j, f32::max).
+        let mut max_logit = f32::MIN;
+        for &v in row.iter() {
+            max_logit = max_logit.max(v);
+        }
+        // Phase 3: elementwise exp through the shared exp_f32 — this loop
+        // is the one the split-phase layout exists to vectorize.
+        for v in row.iter_mut() {
+            *v = exp_f32(*v - max_logit);
+        }
+        // Phase 4: normalizer in ascending j (the reference's interleaved
+        // sum visits the same values in the same order), then one `+=` per
+        // accumulator slot, exactly like the scalar loop.
+        let mut z = 0.0f32;
+        for &v in row.iter() {
+            z += v;
+        }
+        accumulate_attention(sub, d, &row, z, acc);
+    }
+}
+
+/// One row's attention-weighted contribution to the block partials.
+/// Dispatches to a const-d body so the paper's d ∈ {1, 2, 4} inner loops
+/// fully unroll; every `num`/`den` slot sees exactly one add per row, so
+/// the specialization cannot change the f64 accumulation order.
+#[inline(always)]
+fn accumulate_attention(sub: &[f32], d: usize, weights: &[f32], z: f32, acc: &mut SoftBlockAccum) {
+    match d {
+        1 => accumulate_attention_d::<1>(sub, weights, z, acc),
+        2 => accumulate_attention_d::<2>(sub, weights, z, acc),
+        3 => accumulate_attention_d::<3>(sub, weights, z, acc),
+        4 => accumulate_attention_d::<4>(sub, weights, z, acc),
+        _ => {
+            for (j, &e) in weights.iter().enumerate() {
+                let a = (e / z) as f64;
+                acc.den[j] += a;
+                for (n, &x) in acc.num[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
+                    *n += a * x as f64;
+                }
+            }
+        }
+    }
+}
+
+fn accumulate_attention_d<const D: usize>(
+    sub: &[f32],
+    weights: &[f32],
+    z: f32,
+    acc: &mut SoftBlockAccum,
+) {
+    let mut x = [0.0f64; D];
+    for c in 0..D {
+        x[c] = sub[c] as f64;
+    }
+    for ((&e, den), num) in
+        weights.iter().zip(acc.den.iter_mut()).zip(acc.num.chunks_exact_mut(D))
+    {
+        let a = (e / z) as f64;
+        *den += a;
+        for c in 0..D {
+            num[c] += a * x[c];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +417,74 @@ mod tests {
         assert_eq!(tiles.lanes_cover(), 8);
         let cb = vec![0.0f32; 5 * 1];
         assert_eq!(CodebookTiles::new(&cb, 1).lanes_cover(), 0);
+    }
+
+    #[test]
+    fn exp_f32_anchors_and_saturation() {
+        assert_eq!(exp_f32(0.0), 1.0);
+        assert_eq!(exp_f32(-0.0), 1.0);
+        assert_eq!(exp_f32(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp_f32(-1.0e4), 0.0);
+        assert_eq!(exp_f32(f32::INFINITY), f32::INFINITY);
+        assert!(exp_f32(f32::NAN).is_nan());
+        // softmax range: strictly positive and ≤ 1 for x ≤ 0
+        for i in 0..1000 {
+            let x = -(i as f32) * 0.08;
+            let y = exp_f32(x);
+            assert!(y.is_finite() && (0.0..=1.0).contains(&y), "exp({x}) = {y}");
+        }
+    }
+
+    #[test]
+    fn exp_f32_tracks_libm_closely() {
+        // ~2 ulp accuracy over the softmax-relevant range.
+        for i in 0..4000 {
+            let x = -40.0 + i as f32 * 0.02; // [-40, 40)
+            let got = exp_f32(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-6, "exp({x}): got {got:e}, libm {want:e}, rel {rel:e}");
+        }
+    }
+
+    #[test]
+    fn exp_f32_monotone_on_grid() {
+        let mut prev = 0.0f32;
+        for i in 0..2000 {
+            let x = -90.0 + i as f32 * 0.09;
+            let y = exp_f32(x);
+            assert!(y >= prev, "exp not monotone at {x}: {y} < {prev}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn soft_accum_merge_adds_elementwise() {
+        let mut a = SoftBlockAccum::new(2, 2);
+        let mut b = SoftBlockAccum::new(2, 2);
+        a.num[0] = 1.5;
+        a.den[1] = 0.25;
+        b.num[0] = 2.5;
+        b.num[3] = -1.0;
+        b.den[1] = 0.75;
+        a.merge(&b);
+        assert_eq!(a.num, vec![4.0, 0.0, 0.0, -1.0]);
+        assert_eq!(a.den, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn soft_block_simd_handles_all_tail_and_empty_rows() {
+        // k < LANES: the whole codebook is scalar tail; zero rows leave the
+        // accumulators untouched.
+        let codebook = [-1.0f32, 1.0];
+        let tiles = CodebookTiles::new(&codebook, 1);
+        let mut acc = SoftBlockAccum::new(2, 1);
+        soft_block_simd(&[], 1, &codebook, &tiles, 5e-3, &mut acc);
+        assert!(acc.den.iter().all(|&x| x == 0.0));
+        let w = [-1.0f32, 1.0, -1.0, 1.0];
+        soft_block_simd(&w, 1, &codebook, &tiles, 5e-3, &mut acc);
+        // symmetric data: equal attention mass on both codewords
+        assert!((acc.den[0] - acc.den[1]).abs() < 1e-12, "{:?}", acc.den);
+        assert!(acc.den[0] > 0.0);
     }
 }

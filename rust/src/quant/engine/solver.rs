@@ -26,6 +26,21 @@ pub struct FixedPointTrace {
     pub converged: bool,
 }
 
+/// Index of the first sweep where two residual traces differ bit-for-bit
+/// (or where one trace ends early), `None` when they agree exactly.
+///
+/// Golden-trajectory tests use this to report *which* Picard iteration
+/// drifted — the iteration index localizes a numerics regression to a
+/// single sweep instead of a whole trace dump. Bit comparison (`to_bits`)
+/// rather than `==` so NaN residuals from degenerate inputs still compare
+/// deterministically.
+pub fn first_residual_divergence(a: &[f64], b: &[f64]) -> Option<usize> {
+    (0..a.len().max(b.len())).find(|&i| match (a.get(i), b.get(i)) {
+        (Some(x), Some(y)) => x.to_bits() != y.to_bits(),
+        _ => true,
+    })
+}
+
 impl FixedPointSolver {
     pub fn new(tol: f32, max_iter: usize) -> Self {
         Self { tol, max_iter }
@@ -86,6 +101,19 @@ mod tests {
         let (_, trace) = solver.solve(vec![1.0], |c| vec![-c[0]]);
         assert!(!trace.converged);
         assert_eq!(trace.iterations, 7);
+    }
+
+    #[test]
+    fn residual_divergence_reports_first_differing_sweep() {
+        let a = [1.0f64, 0.5, 0.25];
+        assert_eq!(first_residual_divergence(&a, &a), None);
+        assert_eq!(first_residual_divergence(&a, &[1.0, 0.5, 0.2500001]), Some(2));
+        // length mismatch diverges at the shorter trace's end
+        assert_eq!(first_residual_divergence(&a, &a[..2]), Some(2));
+        // NaN compares bitwise, so identical NaN traces agree
+        let n = [f64::NAN];
+        assert_eq!(first_residual_divergence(&n, &n), None);
+        assert_eq!(first_residual_divergence(&n, &[0.0]), Some(0));
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! wrappers over [`Engine::scalar`]'s exact scalar backend — same numerics,
 //! same signatures — kept as the stable reference API. Consumers that want
 //! the parallel blocked kernels or method dispatch use the engine directly.
+//!
+//! One numerics note: the soft sweep's exponential routes through the
+//! engine-shared [`exp_f32`](super::engine::simd::exp_f32) (a ~2-ulp
+//! polynomial) rather than libm, so the scalar reference and the SIMD
+//! backend compute identical bits; `soft_kmeans` fixed points shift by at
+//! most that rounding, far inside every consumer's tolerance.
 
 use crate::util::rng::Rng;
 

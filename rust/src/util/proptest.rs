@@ -106,6 +106,80 @@ impl Gen for VecF32 {
     }
 }
 
+/// A full clustering instance for cross-backend parity properties: flat
+/// sub-vectors `w` (m × d), codebook size request `k`, and soft temperature
+/// `tau`, with deliberate degenerate coverage — duplicate rows, constant
+/// data, k > m (the seeding-clamp case), and tau at both extremes (1e-30
+/// drives every logit to ±∞; 1e3 flattens the attention to uniform).
+#[derive(Debug, Clone)]
+pub struct ClusterCaseVal {
+    pub w: Vec<f32>,
+    pub d: usize,
+    pub k: usize,
+    pub tau: f32,
+}
+
+impl ClusterCaseVal {
+    pub fn rows(&self) -> usize {
+        self.w.len() / self.d
+    }
+}
+
+/// Generator for [`ClusterCaseVal`]; `max_rows` bounds m.
+pub struct ClusterCase {
+    pub max_rows: usize,
+}
+
+impl Gen for ClusterCase {
+    type Value = ClusterCaseVal;
+
+    fn generate(&self, rng: &mut Rng) -> ClusterCaseVal {
+        let d = 1 + rng.below(4);
+        let m = 1 + rng.below(self.max_rows);
+        let mut w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+        // Duplicate-point degeneracy: smear one row over a random stretch
+        // (k-means++ then seeds duplicate codewords, forcing exact ties).
+        if m >= 2 && rng.below(4) == 0 {
+            let src = rng.below(m);
+            let dups = 1 + rng.below(m - 1);
+            for t in 0..dups {
+                let dst = (src + 1 + t) % m;
+                for c in 0..d {
+                    w[dst * d + c] = w[src * d + c];
+                }
+            }
+        }
+        // Constant data: every row identical (zero distances everywhere).
+        if rng.below(8) == 0 {
+            let first = w[..d].to_vec();
+            for row in w.chunks_exact_mut(d) {
+                row.copy_from_slice(&first);
+            }
+        }
+        let k = 1 + rng.below(2 * m.min(12) + 4);
+        const TAUS: [f32; 6] = [5e-4, 5e-3, 1e-3, 1e-6, 1e3, 1e-30];
+        let tau = TAUS[rng.below(TAUS.len())];
+        ClusterCaseVal { w, d, k, tau }
+    }
+
+    fn shrink(&self, v: &ClusterCaseVal) -> Vec<ClusterCaseVal> {
+        let m = v.rows();
+        let mut out = Vec::new();
+        if m > 1 {
+            let half = (m / 2).max(1);
+            out.push(ClusterCaseVal { w: v.w[..half * v.d].to_vec(), ..v.clone() });
+            out.push(ClusterCaseVal { w: v.w[..(m - 1) * v.d].to_vec(), ..v.clone() });
+        }
+        if v.k > 1 {
+            out.push(ClusterCaseVal { k: 1, ..v.clone() });
+        }
+        if v.w.iter().any(|&x| x != 0.0) {
+            out.push(ClusterCaseVal { w: vec![0.0; v.w.len()], ..v.clone() });
+        }
+        out
+    }
+}
+
 /// Pair of independent generators.
 pub struct PairOf<A, B>(pub A, pub B);
 
@@ -146,6 +220,30 @@ mod tests {
         check("len_lt_3", 200, &VecF32 { min_len: 0, max_len: 64, scale: 1.0 }, |v| {
             v.len() < 3
         });
+    }
+
+    #[test]
+    fn cluster_case_is_well_formed() {
+        let g = ClusterCase { max_rows: 48 };
+        let mut rng = Rng::new(2);
+        let mut saw_k_above_m = false;
+        let mut saw_tiny_tau = false;
+        for _ in 0..500 {
+            let v = g.generate(&mut rng);
+            assert!((1..=4).contains(&v.d));
+            assert_eq!(v.w.len() % v.d, 0);
+            assert!((1..=48).contains(&v.rows()));
+            assert!(v.k >= 1);
+            assert!(v.tau > 0.0);
+            saw_k_above_m |= v.k > v.rows();
+            saw_tiny_tau |= v.tau < 1e-20;
+            for s in g.shrink(&v) {
+                assert_eq!(s.w.len() % s.d, 0);
+                assert!(s.rows() >= 1);
+            }
+        }
+        assert!(saw_k_above_m, "degenerate k > m never generated");
+        assert!(saw_tiny_tau, "extreme tau never generated");
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Cross-backend parity matrix: every `BackendKind` × {hard E-step,
+//! soft-EM sweep} against the `ScalarRef` oracle on randomized inputs with
+//! deliberate degenerate coverage — k > m (the seeding clamp), duplicate
+//! points (exact-tie codebooks), constant data, and tau extremes (1e-30
+//! drives logits to ±∞, 1e3 flattens attention to uniform).
+//!
+//! Contracts checked (inputs stay inside one row block, m ≪ the 1024
+//! grain floor, where bit-level parity is the engine's guarantee):
+//!
+//! * SIMD backend — hard assignments AND soft attention sums bit-identical
+//!   to `ScalarRef` on every input.
+//! * Blocked backend — soft sweep bit-identical (it runs the same
+//!   per-block reference kernel); hard assignments bit-identical except on
+//!   provable floating-point near-ties of its expanded-form E-step, where
+//!   the two candidates' true distances must agree to ~f32 rounding.
+//! * ScalarRef against itself — trivially exact (sanity anchor for the
+//!   harness).
+//!
+//! Soft results are compared through `to_bits` so NaN slots produced by
+//! degenerate tau values still compare deterministically.
+
+use idkm::quant::dist2;
+use idkm::quant::engine::{BackendKind, Clusterer, Engine};
+use idkm::util::proptest::{check, ClusterCase};
+use idkm::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn backend_matrix_hard_and_soft_parity() {
+    let scalar = Engine::scalar();
+    let gen = ClusterCase { max_rows: 96 };
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        check(&format!("backend_parity_{kind}"), 40, &gen, |case| {
+            let d = case.d;
+            let m = case.rows();
+            // seeding from the data means duplicate points become duplicate
+            // codewords (exact ties) and k > m exercises the clamp
+            let codebook = scalar.backend().seed(&case.w, d, case.k, &mut Rng::new(17));
+            let mut a_s = vec![0u32; m];
+            let mut a_e = vec![0u32; m];
+            scalar.backend().assign(&case.w, d, &codebook, &mut a_s);
+            engine.backend().assign(&case.w, d, &codebook, &mut a_e);
+            for i in 0..m {
+                if a_s[i] == a_e[i] {
+                    continue;
+                }
+                if kind != BackendKind::Blocked {
+                    return false; // the SIMD kernel must be exact
+                }
+                // expanded-form near-tie: both candidates equally near
+                let sub = &case.w[i * d..(i + 1) * d];
+                let ja = a_s[i] as usize;
+                let jb = a_e[i] as usize;
+                let da = dist2(sub, &codebook[ja * d..(ja + 1) * d]);
+                let db = dist2(sub, &codebook[jb * d..(jb + 1) * d]);
+                if ((da - db).abs() as f64) > 1e-4 * (da.max(db) as f64).max(1e-9) {
+                    return false;
+                }
+            }
+            // soft-EM sweep: attention-weighted sums must match bit-for-bit
+            // on every backend
+            let s = scalar.backend().soft_update(&case.w, d, &codebook, case.tau);
+            let e = engine.backend().soft_update(&case.w, d, &codebook, case.tau);
+            bits(&s) == bits(&e)
+        });
+    }
+}
+
+#[test]
+fn soft_parity_survives_tau_extremes_on_constant_data() {
+    // Constant data: one exact-hit codeword (distance 0 → logit −0.0) and
+    // far codewords whose logits overflow to −∞ at tiny tau. Every backend
+    // must reproduce the reference bits across the whole tau range.
+    let w = vec![1.5f32; 64];
+    let codebook = vec![1.5f32, 9.0, -3.0, 0.25];
+    let scalar = Engine::scalar();
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        for tau in [1e-30f32, 1e-6, 5e-4, 5e-3, 1e3] {
+            let s = scalar.backend().soft_update(&w, 1, &codebook, tau);
+            let e = engine.backend().soft_update(&w, 1, &codebook, tau);
+            assert_eq!(bits(&s), bits(&e), "{kind} tau={tau}: {s:?} vs {e:?}");
+        }
+    }
+}
+
+#[test]
+fn k_above_m_clamped_seed_is_exact_on_every_backend() {
+    // Three well-separated rows, k = 8: the seed clamps to 3 distinct
+    // centers; hard and soft sweeps agree exactly everywhere (no ties).
+    let w = [0.5f32, -1.0, 2.0];
+    let scalar = Engine::scalar();
+    let codebook = scalar.backend().seed(&w, 1, 8, &mut Rng::new(3));
+    assert_eq!(codebook.len(), 3, "k > m must clamp to m centers");
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        let mut a_s = vec![0u32; 3];
+        let mut a_e = vec![0u32; 3];
+        scalar.backend().assign(&w, 1, &codebook, &mut a_s);
+        engine.backend().assign(&w, 1, &codebook, &mut a_e);
+        assert_eq!(a_s, a_e, "{kind}");
+        let s = scalar.backend().soft_update(&w, 1, &codebook, 5e-4);
+        let e = engine.backend().soft_update(&w, 1, &codebook, 5e-4);
+        assert_eq!(bits(&s), bits(&e), "{kind}");
+    }
+}

@@ -1,0 +1,285 @@
+//! Golden-trajectory tests: small fixed-seed Lloyd and Picard (the
+//! implicit methods) runs pinned as JSON fixtures under `tests/golden/`,
+//! plus cross-backend exactness of the same trajectories.
+//!
+//! Two layers of protection against numeric drift:
+//!
+//! 1. **Cross-backend, every run** — the `FixedPointSolver` residual trace
+//!    of each case must be bit-for-bit identical on every `BackendKind`
+//!    (the sweeps run in one row block at these sizes, where the engine
+//!    guarantees exact parity). A mismatch names the diverging iteration
+//!    index via `first_residual_divergence`.
+//! 2. **Against the committed fixture** — the scalar-reference outcome
+//!    (residuals, codebook bits, cost, iteration count, assignment hash)
+//!    must match `tests/golden/<case>.json` exactly, so an unintended
+//!    numerics change fails loudly in CI even when it changes all backends
+//!    consistently.
+//!
+//! Fixtures bootstrap themselves: a missing file is written from the
+//! current scalar reference (commit it), and
+//! `IDKM_BLESS_GOLDEN=1 cargo test --test golden_trajectory` refreshes all
+//! of them after an *intentional* numerics change.
+//!
+//! The float encoding round-trips exactly: Rust's shortest-representation
+//! `Display` for f64 (which the JSON writer uses) parses back to the same
+//! bits, and f32 values are stored through their exact f64 widening.
+
+use idkm::quant::engine::{
+    first_residual_divergence, BackendKind, ClusterOutcome, ClusterSpec, Engine, Method,
+};
+use idkm::util::json::{obj, Json};
+use idkm::util::rng::Rng;
+use std::path::PathBuf;
+
+struct Golden {
+    /// Fixture file stem (kept free of method spellings — the CI grep
+    /// guard rejects quoted method literals anywhere under tests/).
+    name: &'static str,
+    method: Method,
+    m: usize,
+    d: usize,
+    k: usize,
+    tau: f32,
+    tol: f32,
+    max_iter: usize,
+    seed: u64,
+}
+
+/// All cases stay well under the 1024-row grain floor so every backend
+/// runs each sweep in a single row block — the bit-exactness regime.
+const CASES: &[Golden] = &[
+    Golden {
+        name: "picard_implicit_k4d2",
+        method: Method::Idkm,
+        m: 192,
+        d: 2,
+        k: 4,
+        tau: 5e-3,
+        tol: 1e-5,
+        max_iter: 40,
+        seed: 11,
+    },
+    Golden {
+        name: "picard_jfb_k8d1",
+        method: Method::IdkmJfb,
+        m: 256,
+        d: 1,
+        k: 8,
+        tau: 1e-3,
+        tol: 1e-6,
+        max_iter: 50,
+        seed: 23,
+    },
+    Golden {
+        name: "lloyd_k8d2",
+        method: Method::Dkm,
+        m: 256,
+        d: 2,
+        k: 8,
+        tau: 5e-4,
+        tol: 1e-6,
+        max_iter: 25,
+        seed: 5,
+    },
+];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn run_case(g: &Golden, kind: BackendKind) -> ClusterOutcome {
+    let mut rng = Rng::new(g.seed);
+    let w: Vec<f32> = (0..g.m * g.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let spec = ClusterSpec::new(g.method, g.k, g.d)
+        .with_max_iter(g.max_iter)
+        .with_tau(g.tau)
+        .with_tol(g.tol);
+    Engine::new(kind).cluster(&spec, &w, &mut Rng::new(g.seed ^ 0xC1E0))
+}
+
+fn assignments_hash(a: &[u32]) -> usize {
+    let mut h: u32 = 0x811c_9dc5;
+    for &v in a {
+        for b in v.to_le_bytes() {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x0100_0193);
+        }
+    }
+    h as usize
+}
+
+fn fixture(out: &ClusterOutcome) -> Json {
+    obj(vec![
+        ("iterations", Json::from(out.iterations)),
+        ("converged", Json::from(out.converged)),
+        ("cost", Json::from(out.cost)),
+        ("assignments_hash", Json::from(assignments_hash(&out.assignments))),
+        (
+            "residuals",
+            Json::Arr(out.residuals.iter().map(|&r| Json::from(r)).collect()),
+        ),
+        (
+            "codebook",
+            Json::Arr(out.codebook.iter().map(|&c| Json::from(c as f64)).collect()),
+        ),
+    ])
+}
+
+fn f64s_of(j: &Json, key: &str) -> Vec<f64> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+fn assert_residuals_match(case: &str, who: &str, got: &[f64], want: &[f64]) {
+    if let Some(i) = first_residual_divergence(got, want) {
+        panic!(
+            "{case}: residual trace diverges at iteration {i} ({who}): \
+             got {:?}, want {:?} (full traces: {got:?} vs {want:?})",
+            got.get(i),
+            want.get(i)
+        );
+    }
+}
+
+#[test]
+fn golden_trajectories_match_on_all_backends_and_fixtures() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let bless = std::env::var("IDKM_BLESS_GOLDEN").is_ok();
+    for g in CASES {
+        let reference = run_case(g, BackendKind::ScalarRef);
+        if g.method.is_implicit() {
+            assert_eq!(
+                reference.residuals.len(),
+                reference.iterations,
+                "{}: solver must report one residual per sweep",
+                g.name
+            );
+        }
+
+        // layer 1: cross-backend exactness
+        for kind in [BackendKind::Blocked, BackendKind::Simd] {
+            let got = run_case(g, kind);
+            let who = format!("{kind}");
+            assert_residuals_match(g.name, &who, &got.residuals, &reference.residuals);
+            // Soft (Picard) trajectories are bit-exact everywhere; the
+            // hard Lloyd path is bit-exact on the SIMD backend, while the
+            // expanded-form Blocked E-step may flip exact-cost near-ties,
+            // so its Lloyd outcome is held to the cost contract instead.
+            let exact = g.method.is_implicit() || kind == BackendKind::Simd;
+            if exact {
+                assert_eq!(
+                    got.iterations, reference.iterations,
+                    "{}: iteration count differs on {who}",
+                    g.name
+                );
+                for (i, (a, b)) in reference.codebook.iter().zip(&got.codebook).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{}: codebook[{i}] differs on {who}: {a} vs {b}",
+                        g.name
+                    );
+                }
+            }
+            if g.method.is_implicit() && kind == BackendKind::Simd {
+                assert_eq!(
+                    got.assignments, reference.assignments,
+                    "{}: final assignments differ on {who}",
+                    g.name
+                );
+            }
+            let rel =
+                (got.cost - reference.cost).abs() / reference.cost.abs().max(1e-12);
+            assert!(
+                rel <= 1e-5,
+                "{}: cost {} vs {} on {who} (rel {rel:e})",
+                g.name,
+                got.cost,
+                reference.cost
+            );
+        }
+
+        // layer 2: the committed fixture
+        let path = dir.join(format!("{}.json", g.name));
+        let want = fixture(&reference);
+        if bless || !path.exists() {
+            // Self-bootstrap: a missing fixture is written and the run
+            // passes (the cross-backend layer above still ran). Set
+            // IDKM_REQUIRE_GOLDEN in CI once the fixtures are committed
+            // to turn a missing file into a hard failure — otherwise the
+            // pinning layer is inert on fresh checkouts.
+            assert!(
+                bless || std::env::var("IDKM_REQUIRE_GOLDEN").is_err(),
+                "{}: fixture {path:?} missing but IDKM_REQUIRE_GOLDEN is set — \
+                 generate and commit it (IDKM_BLESS_GOLDEN=1)",
+                g.name
+            );
+            std::fs::write(&path, want.to_string_pretty()).unwrap();
+            eprintln!("golden: wrote {path:?} — commit this fixture");
+            continue;
+        }
+        let disk = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("{}: unparseable fixture: {e}", g.name));
+        assert_residuals_match(
+            g.name,
+            "fixture",
+            &reference.residuals,
+            &f64s_of(&disk, "residuals"),
+        );
+        assert_eq!(
+            disk.usize_of("iterations"),
+            Some(reference.iterations),
+            "{}: iteration count drifted from fixture",
+            g.name
+        );
+        assert_eq!(
+            disk.get("converged").and_then(Json::as_bool),
+            Some(reference.converged),
+            "{}: convergence flag drifted from fixture",
+            g.name
+        );
+        let cost = disk.f64_of("cost").unwrap_or(f64::NAN);
+        assert_eq!(
+            cost.to_bits(),
+            reference.cost.to_bits(),
+            "{}: cost drifted from fixture: {cost} vs {}",
+            g.name,
+            reference.cost
+        );
+        assert_eq!(
+            disk.usize_of("assignments_hash"),
+            Some(assignments_hash(&reference.assignments)),
+            "{}: assignments drifted from fixture",
+            g.name
+        );
+        let cb = f64s_of(&disk, "codebook");
+        assert_eq!(cb.len(), reference.codebook.len(), "{}: codebook size", g.name);
+        for (i, (w, got)) in cb.iter().zip(&reference.codebook).enumerate() {
+            assert_eq!(
+                (*w as f32).to_bits(),
+                got.to_bits(),
+                "{}: codebook[{i}] drifted from fixture: {w} vs {got}",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_cases_actually_iterate() {
+    // Guard against a degenerate fixture: the Picard cases must run a
+    // non-trivial number of sweeps and report shrinking residuals.
+    for g in CASES.iter().filter(|g| g.method.is_implicit()) {
+        let out = run_case(g, BackendKind::ScalarRef);
+        assert!(out.iterations >= 2, "{}: trivial trajectory", g.name);
+        assert!(
+            out.residuals.last().unwrap() < out.residuals.first().unwrap(),
+            "{}: residuals do not shrink: {:?}",
+            g.name,
+            out.residuals
+        );
+    }
+}
