@@ -5,6 +5,11 @@
 //!   (single-threaded), plus the thread-pooled Blocked variants
 //! * soft-EM sweep (the IDKM Picard step) on the same workload: scalar
 //!   reference vs the fused SIMD soft kernel, single-threaded and pooled
+//! * M-step reduction: runtime-d scalar loop vs the f64 const-d lanes
+//! * end-to-end `soft_solve` (full t=30 Picard solve through the
+//!   fixed-point solver with a reused workspace) plus the steady-state
+//!   allocation count per sweep (this binary registers the counting
+//!   allocator; 0 is the contract)
 //! * executor round-trip latency (smallest eval artifact, steady state)
 //! * host->literal staging throughput for a resnet-sized parameter set
 //! * data-loader batch synthesis throughput (SynthMNIST / SynthCIFAR)
@@ -37,13 +42,21 @@ use std::time::Instant;
 
 use anyhow::Context;
 use idkm::data::{self, loader, Split};
-use idkm::quant::engine::{Blocked, Clusterer, Engine, ScalarRef};
+use idkm::quant::engine::{
+    Blocked, Clusterer, Engine, EngineScratch, FixedPointSolver, ScalarRef,
+};
 use idkm::quant::kmeans::lloyd;
 use idkm::runtime::{Runtime, Value};
 use idkm::tensor::{init, Tensor};
+use idkm::util::alloc_count::{self, CountingAllocator};
 use idkm::util::cli::Args;
 use idkm::util::json::{obj, Json};
 use idkm::util::rng::Rng;
+
+// Count every heap allocation so the report can pin the engine's
+// zero-allocation steady state alongside the timing rows.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn time_it(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
     // warm-up
@@ -82,8 +95,9 @@ const BENCH_D: usize = 4;
 const BENCH_K: usize = 16;
 
 /// The engine kernel matrix on the acceptance workload. Returns
-/// (median_ns rows, speedup rows) for the BENCH json.
-fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>) {
+/// (median_ns rows, speedup rows, steady-state allocations per sweep) for
+/// the BENCH json.
+fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>, u64) {
     let (m, d, k) = (BENCH_M, BENCH_D, BENCH_K);
     println!("-- engine E-step kernels (m={m}, k={k}, d={d}) --");
     let mut rng = Rng::new(11);
@@ -98,45 +112,99 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>)
     let blocked_simd = Blocked::simd();
     let codebook = scalar.seed(&w, d, k, &mut Rng::new(5));
     let mut assign = vec![0u32; m];
+    // One workspace for every row below — the steady state the engine runs
+    // in (scratches carry capacity, never state, so sharing is exact).
+    let mut ws = EngineScratch::new();
     let iters = 30;
 
     let t_scalar = time_median("estep scalar-ref", iters, || {
-        scalar.assign(&w, d, &codebook, &mut assign);
+        scalar.assign(&w, d, &codebook, &mut assign, &mut ws);
         std::hint::black_box(&assign);
     });
     let t_fused = time_median("estep fused (1 thread)", iters, || {
-        fused_1t.assign(&w, d, &codebook, &mut assign);
+        fused_1t.assign(&w, d, &codebook, &mut assign, &mut ws);
         std::hint::black_box(&assign);
     });
     let t_simd = time_median("estep simd fused (1 thread)", iters, || {
-        simd_1t.assign(&w, d, &codebook, &mut assign);
+        simd_1t.assign(&w, d, &codebook, &mut assign, &mut ws);
         std::hint::black_box(&assign);
     });
     let t_blocked = time_median("estep fused blocked (pool)", iters, || {
-        blocked.assign(&w, d, &codebook, &mut assign);
+        blocked.assign(&w, d, &codebook, &mut assign, &mut ws);
         std::hint::black_box(&assign);
     });
     let t_blocked_simd = time_median("estep simd blocked (pool)", iters, || {
-        blocked_simd.assign(&w, d, &codebook, &mut assign);
+        blocked_simd.assign(&w, d, &codebook, &mut assign, &mut ws);
         std::hint::black_box(&assign);
+    });
+
+    // M-step reduction on fixed assignments: the runtime-d scalar loop vs
+    // the f64 const-d lanes (same bits — see quant::engine::simd docs).
+    let mut cb_m = codebook.clone();
+    let t_mstep_scalar = time_median("mstep scalar (1 thread)", iters, || {
+        fused_1t.update(&w, d, &mut cb_m, &assign, &mut ws);
+        std::hint::black_box(&cb_m);
+    });
+    let t_mstep_simd = time_median("mstep f64 lanes (1 thread)", iters, || {
+        simd_1t.update(&w, d, &mut cb_m, &assign, &mut ws);
+        std::hint::black_box(&cb_m);
     });
 
     // soft-EM sweep (the IDKM Picard step): scalar reference vs the fused
     // SIMD kernel, single-threaded to isolate the kernel, plus the pool.
+    // In-place sweeps into a reused next-codebook buffer, like the solver.
     let tau = 5e-4f32;
     let soft_iters = 10;
+    let mut next = vec![0.0f32; codebook.len()];
     let t_soft_scalar = time_median("soft sweep scalar-ref", soft_iters, || {
-        let c = scalar.soft_update(&w, d, &codebook, tau);
-        std::hint::black_box(c);
+        scalar.soft_update_into(&w, d, &codebook, tau, &mut next, &mut ws);
+        std::hint::black_box(&next);
     });
     let t_soft_simd = time_median("soft sweep simd (1 thread)", soft_iters, || {
-        let c = simd_1t.soft_update(&w, d, &codebook, tau);
-        std::hint::black_box(c);
+        simd_1t.soft_update_into(&w, d, &codebook, tau, &mut next, &mut ws);
+        std::hint::black_box(&next);
     });
     let t_soft_pool = time_median("soft sweep simd blocked (pool)", soft_iters, || {
-        let c = blocked_simd.soft_update(&w, d, &codebook, tau);
+        blocked_simd.soft_update_into(&w, d, &codebook, tau, &mut next, &mut ws);
+        std::hint::black_box(&next);
+    });
+
+    // End-to-end Picard solve (the t-sweep steady state the workspace
+    // refactor targets): full t = 30 through the fixed-point solver, tol 0
+    // so no early convergence exit shortens the run.
+    let solver = FixedPointSolver::new(0.0, 30);
+    let t_solve_1t = time_median("soft_solve simd (1 thread, t=30)", 3, || {
+        let (c, _) = solver.solve(codebook.clone(), |c, out| {
+            simd_1t.soft_update_into(&w, d, c, tau, out, &mut ws)
+        });
         std::hint::black_box(c);
     });
+    let t_solve_pool = time_median("soft_solve simd (pool, t=30)", 3, || {
+        let (c, _) = solver.solve(codebook.clone(), |c, out| {
+            blocked_simd.soft_update_into(&w, d, c, tau, out, &mut ws)
+        });
+        std::hint::black_box(c);
+    });
+
+    // Steady-state allocator traffic for one full sweep set (soft sweep +
+    // E-step + M-step + cost) on the pooled SIMD backend. The timing loops
+    // above warmed assign/soft; one explicit warm-up round grows the
+    // pooled update/cost partial buffers too, and min over a few repeats
+    // shields the metric from unrelated background allocations.
+    blocked_simd.update(&w, d, &mut cb_m, &assign, &mut ws);
+    std::hint::black_box(blocked_simd.cost(&w, d, &codebook, &assign, &mut ws));
+    let steady_allocs = (0..3)
+        .map(|_| {
+            let before = alloc_count::allocations();
+            blocked_simd.soft_update_into(&w, d, &codebook, tau, &mut next, &mut ws);
+            blocked_simd.assign(&w, d, &codebook, &mut assign, &mut ws);
+            blocked_simd.update(&w, d, &mut cb_m, &assign, &mut ws);
+            std::hint::black_box(blocked_simd.cost(&w, d, &codebook, &assign, &mut ws));
+            alloc_count::allocations() - before
+        })
+        .min()
+        .unwrap();
+    println!("{:<44} {steady_allocs:>10} allocs (target 0)", "steady-state sweep allocations");
 
     let speedup = vec![
         ("fused_over_scalar", t_scalar / t_fused),
@@ -145,6 +213,7 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>)
         ("blocked_simd_over_scalar", t_scalar / t_blocked_simd),
         ("soft_simd_over_soft_scalar", t_soft_scalar / t_soft_simd),
         ("soft_blocked_simd_over_scalar", t_soft_scalar / t_soft_pool),
+        ("mstep_simd_over_scalar", t_mstep_scalar / t_mstep_simd),
     ];
     for (name, s) in &speedup {
         println!("engine speedup {name:<30} {s:>6.2}x");
@@ -157,6 +226,10 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>)
         "simd soft sweep over scalar soft sweep: {:.2}x (target >= 1.5x)",
         t_soft_scalar / t_soft_simd
     );
+    println!(
+        "f64-lane M-step over scalar M-step: {:.2}x (target >= 1.5x)",
+        t_mstep_scalar / t_mstep_simd
+    );
 
     let median_ns = vec![
         ("estep_scalar_ref", t_scalar * 1e9),
@@ -164,11 +237,15 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>)
         ("estep_simd_1t", t_simd * 1e9),
         ("estep_blocked", t_blocked * 1e9),
         ("estep_blocked_simd", t_blocked_simd * 1e9),
+        ("mstep_scalar_1t", t_mstep_scalar * 1e9),
+        ("mstep_simd_1t", t_mstep_simd * 1e9),
         ("soft_scalar_ref", t_soft_scalar * 1e9),
         ("soft_simd_1t", t_soft_simd * 1e9),
         ("soft_blocked_simd", t_soft_pool * 1e9),
+        ("soft_solve_simd_1t", t_solve_1t * 1e9),
+        ("soft_solve_pool", t_solve_pool * 1e9),
     ];
-    (median_ns, speedup)
+    (median_ns, speedup, steady_allocs)
 }
 
 /// Compare `current` speedups against the committed baseline; Err on any
@@ -243,8 +320,9 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(b);
         });
 
-        // prefetching loader steady-state
-        let loader = loader::Loader::spawn(
+        // prefetching shared-hub steady-state (the sequential Loader was
+        // retired; pretrain and QAT both read SharedBatches hubs)
+        let plan = loader::BatchPlan::new(
             Arc::clone(&ds),
             loader::LoaderConfig {
                 batch_size: 128,
@@ -253,22 +331,24 @@ fn main() -> anyhow::Result<()> {
                 ..Default::default()
             },
         );
+        let hub = loader::SharedBatches::spawn(plan, 8);
+        let mut stream = loader::SharedBatches::stream(&hub);
         let t0 = Instant::now();
         let mut n = 0;
-        while loader.next().is_some() {
+        while stream.next()?.is_some() {
             n += 1;
         }
         let per = t0.elapsed().as_secs_f64() / n as f64;
         println!(
             "{:<44} {:>10.3} ms/iter (overlap vs {:.3} ms sync)",
-            "loader.next() steady state (128)",
+            "hub stream.next() steady state (128)",
             per * 1e3,
             mnist_batch * 1e3
         );
     }
 
     // engine kernel matrix + regression gate
-    let (median_ns, speedup) = engine_kernel_bench();
+    let (median_ns, speedup, steady_allocs) = engine_kernel_bench();
     let report = obj(vec![
         ("bench", Json::from("runtime_micro")),
         // Emitted so a regenerated baseline keeps the same shape and
@@ -280,12 +360,16 @@ fn main() -> anyhow::Result<()> {
                  informational only; CI gates the `gated` speedup ratios with \
                  `tolerance` (0.8 = fail on a >20% regression). Only the \
                  single-threaded ratios are gated (simd_over_fused for the hard \
-                 E-step, soft_simd_over_soft_scalar for the soft-EM sweep): both \
-                 sides of each are single-threaded, so the ratios are core-count \
+                 E-step, soft_simd_over_soft_scalar for the soft-EM sweep, \
+                 mstep_simd_over_scalar for the M-step reduction): both sides \
+                 of each are single-threaded, so the ratios are core-count \
                  independent, and their floors equal the kernels' acceptance \
-                 targets. The pool-parallel ratios depend on runner core count \
-                 and are recorded ungated. Refresh with the `regen` command after \
-                 intentional kernel changes.",
+                 targets. The pool-parallel ratios and the end-to-end \
+                 soft_solve medians depend on runner core count and are \
+                 recorded ungated. steady_state_allocs is the heap-allocation \
+                 count of one warm sweep set (0 is the contract; the hard \
+                 assert lives in tests/alloc_steady_state.rs). Refresh with \
+                 the `regen` command after intentional kernel changes.",
             ),
         ),
         (
@@ -304,6 +388,7 @@ fn main() -> anyhow::Result<()> {
             "speedup",
             obj(speedup.iter().map(|&(name, v)| (name, Json::from(v))).collect()),
         ),
+        ("steady_state_allocs", Json::from(steady_allocs as usize)),
         // Only the single-thread ratios are gated: they are core-count
         // independent. The pool ratios scale with runner cores and are
         // recorded ungated.
@@ -312,6 +397,7 @@ fn main() -> anyhow::Result<()> {
             Json::Arr(vec![
                 Json::from("simd_over_fused"),
                 Json::from("soft_simd_over_soft_scalar"),
+                Json::from("mstep_simd_over_scalar"),
             ]),
         ),
         ("tolerance", Json::from(0.8)),

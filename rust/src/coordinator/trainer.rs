@@ -24,7 +24,7 @@ use crate::coordinator::config::ExperimentConfig;
 use crate::data::loader::{BatchPlan, SharedBatches};
 use crate::data::{self, loader, Batch, Dataset, Split};
 use crate::memory::{rss_bytes, Budget};
-use crate::quant::engine::{Engine, Method};
+use crate::quant::engine::{Engine, EngineScratch, Method};
 use crate::quant::packing::{pack, CompressionReport};
 use crate::runtime::{ArtifactInfo, Executable, Runtime, Value, ValueRef};
 use crate::tensor::metrics::{Accuracy, Running, Series};
@@ -168,13 +168,20 @@ impl<'a> Trainer<'a> {
 
     /// Train the float model from scratch and checkpoint it (the paper
     /// quantizes *pretrained* networks).
+    ///
+    /// Batches come from a [`SharedBatches`] hub over a [`BatchPlan`] — the
+    /// same index-pure machinery QAT uses — rather than the retired
+    /// sequential-RNG `Loader`, so pretraining is deterministic under any
+    /// prefetch/schedule timing. (Same compatibility note as QAT: the plan
+    /// derives its shuffle/augment randomness per index, so the batch
+    /// *sequence* differs from the pre-hub loader's at equal seed.)
     pub fn pretrain(&self) -> Result<PretrainResult> {
         let exe = self.runtime.load(&self.cfg.pretrain_artifact())?;
         let info = exe.info.clone();
         let batch_size = info.batch.context("pretrain artifact missing batch")?;
         let ds = self.dataset()?;
-        let loader = loader::Loader::spawn(
-            Arc::clone(&ds),
+        let plan = BatchPlan::new(
+            ds,
             loader::LoaderConfig {
                 batch_size,
                 prefetch: 4,
@@ -184,6 +191,8 @@ impl<'a> Trainer<'a> {
                 augment: self.cfg.augment,
             },
         );
+        let hub = SharedBatches::spawn(plan, self.cfg.loader_window);
+        let mut stream = SharedBatches::stream(&hub);
 
         let mut params = init::init_params(&info.params, self.cfg.seed);
         let mut vels: Vec<Tensor> =
@@ -192,7 +201,7 @@ impl<'a> Trainer<'a> {
         let mut acc = Accuracy::default();
         let t0 = Instant::now();
         let mut step = 0u64;
-        while let Some(batch) = loader.next() {
+        while let Some(batch) = stream.next()? {
             let mut args: Vec<ValueRef> = Vec::with_capacity(2 * params.len() + 2);
             args.extend(params.iter().map(ValueRef::F32));
             args.extend(vels.iter().map(ValueRef::F32));
@@ -322,7 +331,9 @@ impl<'a> Trainer<'a> {
 
     /// Warm-start codebooks with host k-means++/Lloyd on pretrained weights
     /// (mirrors DKM's init-from-float-model practice), on the configured
-    /// engine backend.
+    /// engine backend. One [`EngineScratch`] is shared across all layers so
+    /// the per-layer kernel buffers are allocated once per cell, not once
+    /// per layer.
     pub fn init_codebooks(
         &self,
         info: &ArtifactInfo,
@@ -331,15 +342,17 @@ impl<'a> Trainer<'a> {
         d: usize,
     ) -> Vec<Tensor> {
         let mut rng = Rng::new(self.cfg.seed ^ 0xC0DE_B00C);
+        let mut ws = EngineScratch::new();
         info.clustered_indices()
             .into_iter()
             .map(|i| {
-                let r = self.engine.lloyd(
+                let r = self.engine.lloyd_with(
                     params[i].data(),
                     d,
                     k,
                     self.cfg.warmstart_iters,
                     &mut rng,
+                    &mut ws,
                 );
                 // QAT artifacts bake a fixed (k, d) codebook shape, but the
                 // seeding guard clamps to m rows when a layer has fewer than

@@ -1,25 +1,25 @@
-//! Batch loading: a classic prefetching producer ([`Loader`]), a pure
-//! index-addressable batch plan ([`BatchPlan`]), and a shared multi-consumer
-//! hub ([`SharedBatches`]) that lets every concurrent sweep cell read one
-//! prefetched stream instead of spawning its own loader threads.
+//! Batch loading: a pure index-addressable batch plan ([`BatchPlan`]) and
+//! a shared multi-consumer hub ([`SharedBatches`]) that lets every
+//! consumer — the pretrain loop and all concurrent QAT sweep cells — read
+//! one prefetched stream instead of spawning per-consumer loader threads.
 //!
-//! [`Loader`] walks shuffled index permutations of the split and renders
-//! batches into a `Bounded` channel of depth `prefetch`; the trainer pops
-//! fully-staged batches. Because the datasets are pure functions of the
-//! index, the loader is deterministic given (seed, batch, epoch order).
+//! [`BatchPlan`] makes batch `b` a pure function of `(dataset, config, b)`
+//! — the epoch permutation is seeded per epoch and augmentation per batch,
+//! with no sequential RNG state threading through the stream. That is what
+//! makes *sharing* trivial: any consumer, on any thread, at any time,
+//! asking for batch `b` gets identical bytes, so the [`SharedBatches`]
+//! cache is purely an optimization — eviction, prefetch timing, and
+//! consumer scheduling can never change a result, only how often a batch
+//! is re-rendered.
 //!
-//! [`BatchPlan`] goes one step further: batch `b` is a pure function of
-//! `(dataset, config, b)` — the epoch permutation is seeded per epoch and
-//! augmentation per batch, with no sequential RNG state threading through
-//! the stream. That is what makes *sharing* trivial: any consumer, on any
-//! thread, at any time, asking for batch `b` gets identical bytes, so the
-//! [`SharedBatches`] cache is purely an optimization — eviction, prefetch
-//! timing, and consumer scheduling can never change a result, only how
-//! often a batch is re-rendered.
+//! The classic single-consumer `Loader` (a prefetch thread walking one
+//! sequential RNG into a bounded channel) is retired: the hub serves its
+//! last consumer (pretraining) too, and nothing else depended on its
+//! stream order. Its determinism was schedule-independent only for a
+//! single consumer; plans are schedule-independent for any number.
 
 use std::collections::{BTreeMap, HashSet};
 use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -27,7 +27,6 @@ use anyhow::Result;
 use super::augment::Augment;
 use super::{make_batch, Batch, Dataset, Split};
 use crate::util::rng::Rng;
-use crate::util::threadpool::Bounded;
 
 /// Salt mixed into loader / epoch-shuffle seeds ("LOADER").
 const LOADER_SALT: u64 = 0x4c4f_4144_4552;
@@ -60,65 +59,6 @@ impl Default for LoaderConfig {
     }
 }
 
-/// Streaming batch source backed by a producer thread.
-pub struct Loader {
-    rx: Bounded<Batch>,
-    handle: Option<JoinHandle<()>>,
-}
-
-impl Loader {
-    pub fn spawn(ds: Arc<dyn Dataset>, cfg: LoaderConfig) -> Self {
-        let ch: Bounded<Batch> = Bounded::new(cfg.prefetch.max(1));
-        let tx = ch.clone();
-        let handle = std::thread::Builder::new()
-            .name("idkm-loader".into())
-            .spawn(move || {
-                let mut rng = Rng::new(cfg.seed ^ LOADER_SALT);
-                let n = ds.len(cfg.split).max(cfg.batch_size);
-                let mut order: Vec<u64> = (0..n as u64).collect();
-                let mut produced = 0usize;
-                'outer: loop {
-                    rng.shuffle(&mut order);
-                    for chunk in order.chunks(cfg.batch_size) {
-                        if chunk.len() < cfg.batch_size {
-                            break; // drop ragged tail; AOT shapes are static
-                        }
-                        let mut batch = make_batch(ds.as_ref(), cfg.split, chunk);
-                        if cfg.split == Split::Train {
-                            cfg.augment.apply(&mut batch, &mut rng);
-                        }
-                        if tx.push(batch).is_err() {
-                            break 'outer; // consumer closed
-                        }
-                        produced += 1;
-                        if let Some(max) = cfg.max_batches {
-                            if produced >= max {
-                                break 'outer;
-                            }
-                        }
-                    }
-                }
-                tx.close();
-            })
-            .expect("spawn loader");
-        Self { rx: ch, handle: Some(handle) }
-    }
-
-    /// Next staged batch (blocks on the producer); None when exhausted.
-    pub fn next(&self) -> Option<Batch> {
-        self.rx.pop()
-    }
-}
-
-impl Drop for Loader {
-    fn drop(&mut self) {
-        self.rx.close();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
 /// Deterministic, non-threaded iterator over `n` eval batches — evaluation
 /// must see a fixed set regardless of prefetch timing.
 pub fn eval_batches(
@@ -146,14 +86,14 @@ pub fn eval_batches(
 /// Epoch `e`'s shuffled permutation is seeded by `(seed, e)` and batch
 /// `b`'s augmentation stream by `(seed, b)`, so no sequential RNG state
 /// links one batch to the next. Shuffled epochs, static batch shapes
-/// (ragged tails dropped), and train-split augmentation all match
-/// [`Loader`]'s behavior; only the derivation of the randomness differs,
-/// which is what lets any number of consumers read the same stream without
-/// coordination.
+/// (ragged tails dropped), and train-split augmentation all match the
+/// retired sequential loader's behavior; only the derivation of the
+/// randomness differs, which is what lets any number of consumers read the
+/// same stream without coordination.
 ///
 /// **Compatibility note:** for the same `(seed, config)` this produces a
-/// *different* (equally distributed) batch sequence than the
-/// sequential-RNG [`Loader`] — QAT results from before the trainer
+/// *different* (equally distributed) batch sequence than the retired
+/// sequential-RNG loader — QAT/pretrain results from before the trainer
 /// switched to plans are not batch-for-batch reproducible afterwards.
 /// Within the plan world everything is deterministic: same config, same
 /// stream, on any thread count.
@@ -161,7 +101,8 @@ pub struct BatchPlan {
     ds: Arc<dyn Dataset>,
     cfg: LoaderConfig,
     /// Epoch length in examples (≥ batch_size; tiny datasets index past
-    /// `len` like [`Loader`] does — samples are pure functions of index).
+    /// `len` — samples are pure functions of the index, so out-of-range
+    /// indices still render deterministically).
     n: usize,
     per_epoch: usize,
     /// Last epoch permutation touched — consumers walk the stream roughly
@@ -312,6 +253,12 @@ impl SharedBatches {
 
     fn get(&self, b: usize) -> Result<Arc<Batch>> {
         let mut st = self.state.lock().unwrap();
+        if st.last_requested.is_none_or(|r| b > r) {
+            // Frontier advanced: wake the parked prefetch thread even when
+            // this request is a pure cache hit (consumer waiters woken too
+            // re-check their slot and wait again — harmless).
+            self.ready.notify_all();
+        }
         st.last_requested = Some(b);
         let slot = loop {
             if let Some(s) = st.cache.get(&b) {
@@ -380,31 +327,41 @@ impl SharedBatches {
 
     /// The single prefetch thread: keep `lookahead` batches rendered ahead
     /// of the most recent request (so it serves every pass over the
-    /// stream, not just the first). Holds only a `Weak` so dropping the
-    /// last trainer reference shuts the thread down (it re-checks every
-    /// few ms while idle).
+    /// stream, not just the first). Holds only a `Weak` between rounds so
+    /// dropping the last consumer reference shuts the thread down. While
+    /// there is nothing to render ahead it parks on the hub condvar —
+    /// woken instantly by frontier-advancing requests (see `get`) and
+    /// publishes — with a coarse timeout whose only job is noticing
+    /// abandonment, so a fully prefetched or drained stream costs a few
+    /// wakeups per second instead of constant polling.
     fn prefetch_loop(weak: Weak<SharedBatches>, lookahead: usize) {
         loop {
             let Some(hub) = weak.upgrade() else { return };
+            if Weak::strong_count(&weak) <= 1 {
+                return; // every consumer handle is gone; don't keep it alive
+            }
             let job = {
                 let mut st = hub.state.lock().unwrap();
                 let base = st.last_requested.map_or(0, |r| r + 1);
                 let hi = base.saturating_add(lookahead).min(hub.total);
                 let pick = (base..hi)
                     .find(|t| !st.cache.contains_key(t) && !st.in_flight.contains(t));
-                if let Some(t) = pick {
-                    st.in_flight.insert(t);
+                match pick {
+                    Some(t) => {
+                        st.in_flight.insert(t);
+                        Some(t)
+                    }
+                    None => {
+                        let _ = hub
+                            .ready
+                            .wait_timeout(st, Duration::from_millis(250))
+                            .unwrap();
+                        None
+                    }
                 }
-                pick
             };
-            match job {
-                Some(t) => {
-                    hub.render(t);
-                }
-                None => {
-                    drop(hub);
-                    std::thread::sleep(Duration::from_millis(5));
-                }
+            if let Some(t) = job {
+                hub.render(t);
             }
         }
     }
@@ -436,37 +393,22 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
-    fn produces_requested_batches() {
+    fn hub_stream_produces_requested_batches() {
+        // the retired Loader's basic contract, now through the hub: the
+        // stream yields exactly max_batches fully-shaped batches
         let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 256, 64));
-        let loader = Loader::spawn(
+        let plan = BatchPlan::new(
             ds,
             LoaderConfig { batch_size: 32, max_batches: Some(5), ..Default::default() },
         );
+        let hub = SharedBatches::spawn(plan, 4);
+        let mut stream = SharedBatches::stream(&hub);
         let mut n = 0;
-        while let Some(b) = loader.next() {
+        while let Some(b) = stream.next().unwrap() {
             assert_eq!(b.x.shape(), &[32, 28, 28, 1]);
             n += 1;
         }
         assert_eq!(n, 5);
-    }
-
-    #[test]
-    fn epochs_reshuffle() {
-        // 64 examples, batch 64 => each epoch is one batch; two consecutive
-        // epochs should present different orders (so different x tensors).
-        let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 64, 64));
-        let loader = Loader::spawn(
-            ds,
-            LoaderConfig {
-                batch_size: 64,
-                max_batches: Some(2),
-                prefetch: 1,
-                ..Default::default()
-            },
-        );
-        let a = loader.next().unwrap();
-        let b = loader.next().unwrap();
-        assert_ne!(a.y.data(), b.y.data());
     }
 
     #[test]
@@ -482,14 +424,21 @@ mod tests {
     }
 
     #[test]
-    fn drop_unblocks_producer() {
+    fn hub_drop_shuts_down_prefetch() {
+        // The prefetch thread holds only a Weak: dropping the last hub
+        // reference must let it exit instead of keeping the process alive
+        // against a dead stream. Can't join an anonymous thread, but a
+        // consumer-then-drop round trip must at least not hang here.
         let ds: Arc<dyn Dataset> = Arc::new(SynthMnist::with_lens(0, 10_000, 64));
-        let loader = Loader::spawn(
+        let plan = BatchPlan::new(
             ds,
             LoaderConfig { batch_size: 16, prefetch: 1, ..Default::default() },
         );
-        let _ = loader.next();
-        drop(loader); // must not hang
+        let hub = SharedBatches::spawn(plan, 4);
+        let mut stream = SharedBatches::stream(&hub);
+        let _ = stream.next().unwrap();
+        drop(stream);
+        drop(hub); // must not hang
     }
 
     fn small_plan(max_batches: usize) -> BatchPlan {

@@ -130,10 +130,13 @@ pub fn package_checkpoint(
         let spec =
             crate::quant::engine::ClusterSpec::new(crate::quant::engine::Method::Ptq, k, d)
                 .with_max_iter(cfg.warmstart_iters);
+        // One workspace shared by every fallback layer (scratches carry
+        // capacity, never state — reuse across layers is exact).
+        let mut ws = crate::quant::engine::EngineScratch::new();
         for (name, t, clustered) in &layers {
             if *clustered && !cb_map.contains_key(name) {
                 let mut rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDE91_0704);
-                let r = engine.cluster(&spec, t.data(), &mut rng);
+                let r = engine.cluster_with(&spec, t.data(), &mut rng, &mut ws);
                 cb_map.insert(name.clone(), (r.codebook, k, d));
             }
         }

@@ -11,13 +11,36 @@
 //!   from `ScalarRef` only on floating-point near-ties.
 //! * [`Blocked`] with the SIMD kernels (`Blocked::simd()`, backend kind
 //!   `simd`) — same row blocking, but the per-block hard E-step runs the
-//!   8-wide lane kernel from [`super::simd`] and the per-block soft-EM
-//!   sweep runs [`soft_block_simd`]. Both vectorize across codewords and
-//!   (unlike the expanded form above) match `ScalarRef` bit-for-bit per
-//!   block: the soft kernel keeps the reference's max-subtraction pivot,
-//!   ascending-j normalizer sum, and f64 accumulation order, and both
-//!   sweeps share one [`exp_f32`] so no vectorization can shift a bit
-//!   (see the `super::simd` module docs for the full argument).
+//!   8-wide lane kernel from [`super::simd`], the per-block soft-EM sweep
+//!   runs [`soft_block_simd`], and the M-step reduction runs the f64
+//!   const-d lanes ([`mstep_block_simd`]). All three match `ScalarRef`
+//!   bit-for-bit per block: the soft kernel keeps the reference's
+//!   max-subtraction pivot, ascending-j normalizer sum, and f64
+//!   accumulation order, the M-step lanes add the same f64 values in the
+//!   same row order, and both sweeps share one [`exp_f32`] so no
+//!   vectorization can shift a bit (see the `super::simd` module docs).
+//!
+//! # The workspace ([`EngineScratch`])
+//!
+//! Every entry point is **in-place and workspace-carrying**: outputs go
+//! into caller buffers and all intermediate storage — M-step partial sums,
+//! soft-EM accumulators, per-chunk attention rows, the SIMD codebook
+//! transpose, codeword norms, per-chunk cost slots — lives in one
+//! [`EngineScratch`] the caller threads through. A scratch is created once
+//! per clustering call (or once for a whole stack of layers) and reused
+//! across all sweeps; after the first sweep has grown its buffers to the
+//! workload's shape, **a sweep performs zero heap allocations** (pinned by
+//! the counting-allocator test in `tests/alloc_steady_state.rs`). The pool
+//! fan-out is allocation-free too:
+//! [`run_indexed`](crate::util::threadpool::Pool::run_indexed) dispatches
+//! row chunks through one stack-resident region instead of boxing a
+//! closure per chunk per sweep.
+//!
+//! A scratch carries capacity, never results: every entry point re-derives
+//! all values it reads from its inputs and resets whatever it accumulates
+//! into, so reusing one scratch across backends, shapes, sweep cells, or
+//! layers cannot leak state between calls (the dirty-scratch proptest in
+//! `tests/backend_parity.rs` pins this).
 //!
 //! All kernels are stateless with respect to the data: (w, d, codebook,
 //! assignments) go in, updated state comes out, so backends are trivially
@@ -26,7 +49,8 @@
 // Per-block cost is exactly `quant::cost_with_assignments` — both backends
 // call it directly so the oracle relationship can never diverge.
 use super::simd::{
-    assign_block_fused_simd, exp_f32, soft_block_simd, CodebookTiles, SoftBlockAccum,
+    assign_block_fused_simd, exp_f32, mstep_block_simd, soft_block_simd, CodebookTiles,
+    SoftBlockAccum,
 };
 use super::BackendKind;
 use crate::quant::{cost_with_assignments as cost_block, dist2, kmeans::kmeanspp_init, nearest};
@@ -37,8 +61,101 @@ use crate::util::threadpool::Pool;
 /// DEN_EPS).
 const DEN_EPS: f64 = 1e-8;
 
+/// Reusable kernel workspace: every buffer a clustering call needs beyond
+/// its inputs and outputs, owned in one place so the steady state is
+/// allocation-free (see the module docs for the lifetime story and the
+/// no-state-leak contract).
+pub struct EngineScratch {
+    /// M-step totals: (k × d) f64 sums + k counts.
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+    /// Per-chunk M-step partials, flattened chunk-major so the pool path
+    /// reuses two allocations instead of a boxed Vec pair per chunk.
+    part_sums: Vec<f64>,
+    part_counts: Vec<u64>,
+    /// Soft-EM accumulators: slot 0 is the single-block accumulator and the
+    /// multi-chunk fold target; chunks fill slots 1..=n_chunks.
+    soft: Vec<SoftBlockAccum>,
+    /// Per-chunk attention/logit rows (k each), flattened chunk-major.
+    rows: Vec<f32>,
+    /// Per-chunk cost partials.
+    cost_part: Vec<f64>,
+    /// SIMD codebook transpose, rebuilt in place per call.
+    tiles: CodebookTiles,
+    /// Codeword norms for the expanded-form fused E-step.
+    cnorm: Vec<f32>,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        EngineScratch {
+            sums: Vec::new(),
+            counts: Vec::new(),
+            part_sums: Vec::new(),
+            part_counts: Vec::new(),
+            soft: Vec::new(),
+            rows: Vec::new(),
+            cost_part: Vec::new(),
+            tiles: CodebookTiles::empty(),
+            cnorm: Vec::new(),
+        }
+    }
+
+    /// Size the M-step total buffers for (k, d); contents are overwritten
+    /// by the reduction, so no zeroing happens here.
+    fn mstep_totals(&mut self, k: usize, d: usize) -> (&mut [f64], &mut [u64]) {
+        self.sums.resize(k * d, 0.0);
+        self.counts.resize(k, 0);
+        (&mut self.sums, &mut self.counts)
+    }
+
+    /// Size and reset `1 + n_chunks` soft accumulators plus the per-chunk
+    /// logit rows.
+    fn soft_slots(&mut self, k: usize, d: usize, n_chunks: usize) {
+        while self.soft.len() < n_chunks + 1 {
+            self.soft.push(SoftBlockAccum::new(k, d));
+        }
+        for acc in self.soft.iter_mut().take(n_chunks + 1) {
+            acc.reset(k, d);
+        }
+        self.rows.resize(n_chunks.max(1) * k, 0.0);
+    }
+}
+
+impl Default for EngineScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shared-to-exclusive projection for the pool fan-out: wraps a raw slice
+/// so a `Fn(usize)` task can carve out its own chunk mutably. Sound only
+/// because every task index touches a disjoint range — which is exactly how
+/// the blocked kernels partition rows and slots by chunk index — and
+/// because `run_indexed` blocks until every task has finished, keeping the
+/// backing storage alive.
+struct DisjointMut<T>(*mut T, usize);
+
+unsafe impl<T: Send> Send for DisjointMut<T> {}
+unsafe impl<T: Send> Sync for DisjointMut<T> {}
+
+impl<T> DisjointMut<T> {
+    fn new(s: &mut [T]) -> Self {
+        DisjointMut(s.as_mut_ptr(), s.len())
+    }
+
+    /// SAFETY: concurrent callers must use disjoint `(start, len)` ranges.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.1);
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
 /// The engine's kernel interface: seed → assign (E) → update (M) → cost,
-/// plus the soft (attention-weighted) sweep the fixed-point solver iterates.
+/// plus the soft (attention-weighted) sweep the fixed-point solver
+/// iterates. Every method writes into caller buffers and draws scratch
+/// storage from the [`EngineScratch`] it is handed.
 pub trait Clusterer: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -49,24 +166,59 @@ pub trait Clusterer: Send + Sync {
     }
 
     /// Hard E-step: nearest codeword per sub-vector. `out.len() == m`.
-    fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]);
+    fn assign(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        out: &mut [u32],
+        ws: &mut EngineScratch,
+    );
 
     /// Hard M-step: move each codeword to the mean of its assigned rows;
     /// empty clusters keep their previous center.
-    fn update(&self, w: &[f32], d: usize, codebook: &mut [f32], assign: &[u32]);
+    fn update(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &mut [f32],
+        assign: &[u32],
+        ws: &mut EngineScratch,
+    );
 
     /// One soft-k-means sweep (paper algorithm 1) at temperature `tau`:
-    /// returns the attention-weighted new codebook.
-    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32>;
+    /// writes the attention-weighted new codebook into `next`
+    /// (`next.len() == codebook.len()`). This is the Picard step the
+    /// fixed-point solver ping-pongs, so it must not allocate in the
+    /// steady state.
+    fn soft_update_into(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        tau: f32,
+        next: &mut [f32],
+        ws: &mut EngineScratch,
+    );
 
     /// Quantization cost (paper eq. 2) reusing existing assignments — one
     /// dist² per row instead of a k-way rescan.
-    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64;
+    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32], ws: &mut EngineScratch)
+        -> f64;
+
+    /// Allocating convenience wrapper over [`Self::soft_update_into`] for
+    /// oracle and test call sites that don't carry a workspace.
+    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
+        let mut ws = EngineScratch::new();
+        let mut next = codebook.to_vec();
+        self.soft_update_into(w, d, codebook, tau, &mut next, &mut ws);
+        next
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Shared single-block kernels (ScalarRef runs these over the whole matrix;
-// Blocked runs them — or its fused variants — per row chunk).
+// Blocked runs them — or its fused/lane variants — per row chunk).
 // ---------------------------------------------------------------------------
 
 fn assign_block_scalar(w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
@@ -96,11 +248,20 @@ fn assign_block_fused(w: &[f32], d: usize, codebook: &[f32], cnorm: &[f32], out:
     }
 }
 
-/// Partial M-step accumulators for a row block: (per-codeword f64 sums,
-/// per-codeword counts).
-fn mstep_block(w: &[f32], d: usize, k: usize, assign: &[u32]) -> (Vec<f64>, Vec<u64>) {
-    let mut sums = vec![0.0f64; k * d];
-    let mut counts = vec![0u64; k];
+/// Partial M-step reduction for a row block into caller buffers (zeroed
+/// here): per-codeword f64 sums + counts, in the scalar reference order.
+fn mstep_block(
+    w: &[f32],
+    d: usize,
+    k: usize,
+    assign: &[u32],
+    sums: &mut [f64],
+    counts: &mut [u64],
+) {
+    debug_assert_eq!(sums.len(), k * d);
+    debug_assert_eq!(counts.len(), k);
+    sums.fill(0.0);
+    counts.fill(0);
     for (sub, &a) in w.chunks_exact(d).zip(assign.iter()) {
         let j = a as usize;
         counts[j] += 1;
@@ -108,7 +269,6 @@ fn mstep_block(w: &[f32], d: usize, k: usize, assign: &[u32]) -> (Vec<f64>, Vec<
             *c += x as f64;
         }
     }
-    (sums, counts)
 }
 
 fn apply_mstep(codebook: &mut [f32], d: usize, sums: &[f64], counts: &[u64]) {
@@ -124,15 +284,22 @@ fn apply_mstep(codebook: &mut [f32], d: usize, sums: &[f64], counts: &[u64]) {
 
 /// Scalar-reference soft-EM sweep for a row block: attention-weighted
 /// partials ([`SoftBlockAccum`]) from the max-subtracted softmax over
-/// `-‖w − c_j‖ / tau`, with f64 sums. This is the numerics oracle the SIMD
-/// sweep reproduces bit-for-bit; the one deliberate departure from libm is
-/// that `exp` routes through the engine-shared [`exp_f32`] (a pure
-/// arithmetic polynomial) so every backend computes identical exponential
-/// bits — see the `super::simd` module docs.
-fn soft_block(w: &[f32], d: usize, codebook: &[f32], tau: f32) -> SoftBlockAccum {
+/// `-‖w − c_j‖ / tau`, with f64 sums. `attn` is caller-provided logit
+/// scratch of length k. This is the numerics oracle the SIMD sweep
+/// reproduces bit-for-bit; the one deliberate departure from libm is that
+/// `exp` routes through the engine-shared [`exp_f32`] (a pure arithmetic
+/// polynomial) so every backend computes identical exponential bits — see
+/// the `super::simd` module docs.
+fn soft_block(
+    w: &[f32],
+    d: usize,
+    codebook: &[f32],
+    tau: f32,
+    attn: &mut [f32],
+    acc: &mut SoftBlockAccum,
+) {
     let k = codebook.len() / d;
-    let mut acc = SoftBlockAccum::new(k, d);
-    let mut attn = vec![0.0f32; k];
+    debug_assert_eq!(attn.len(), k);
     for sub in w.chunks_exact(d) {
         let mut max_logit = f32::MIN;
         for j in 0..k {
@@ -153,11 +320,12 @@ fn soft_block(w: &[f32], d: usize, codebook: &[f32], tau: f32) -> SoftBlockAccum
             }
         }
     }
-    acc
 }
 
-fn apply_soft(codebook: &[f32], d: usize, acc: &SoftBlockAccum) -> Vec<f32> {
-    let mut out = codebook.to_vec();
+/// Attention-weighted codebook from folded partials, written into `out`
+/// (codewords with no attention mass keep their previous center).
+fn apply_soft(codebook: &[f32], d: usize, acc: &SoftBlockAccum, out: &mut [f32]) {
+    out.copy_from_slice(codebook);
     for (j, &dj) in acc.den.iter().enumerate() {
         if dj > DEN_EPS {
             for c in 0..d {
@@ -165,7 +333,6 @@ fn apply_soft(codebook: &[f32], d: usize, acc: &SoftBlockAccum) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -181,21 +348,54 @@ impl Clusterer for ScalarRef {
         BackendKind::ScalarRef.as_str()
     }
 
-    fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
+    fn assign(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        out: &mut [u32],
+        _ws: &mut EngineScratch,
+    ) {
         assign_block_scalar(w, d, codebook, out);
     }
 
-    fn update(&self, w: &[f32], d: usize, codebook: &mut [f32], assign: &[u32]) {
+    fn update(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &mut [f32],
+        assign: &[u32],
+        ws: &mut EngineScratch,
+    ) {
         let k = codebook.len() / d;
-        let (sums, counts) = mstep_block(w, d, k, assign);
-        apply_mstep(codebook, d, &sums, &counts);
+        let (sums, counts) = ws.mstep_totals(k, d);
+        mstep_block(w, d, k, assign, sums, counts);
+        apply_mstep(codebook, d, sums, counts);
     }
 
-    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
-        apply_soft(codebook, d, &soft_block(w, d, codebook, tau))
+    fn soft_update_into(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        tau: f32,
+        next: &mut [f32],
+        ws: &mut EngineScratch,
+    ) {
+        let k = codebook.len() / d;
+        ws.soft_slots(k, d, 0);
+        soft_block(w, d, codebook, tau, &mut ws.rows[..k], &mut ws.soft[0]);
+        apply_soft(codebook, d, &ws.soft[0], next);
     }
 
-    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
+    fn cost(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        assign: &[u32],
+        _ws: &mut EngineScratch,
+    ) -> f64 {
         cost_block(w, d, codebook, assign)
     }
 }
@@ -208,15 +408,15 @@ impl Clusterer for ScalarRef {
 /// [`Self::grain`] sub-vectors; each chunk streams against the (k × d)
 /// codebook tile (which stays resident in L1 for the paper's k ≤ 16, d ≤ 4
 /// regime) on a pool worker. Reductions (M-step sums, costs, soft-EM
-/// accumulators) land in one slot per chunk and fold deterministically in
-/// chunk order.
+/// accumulators) land in one workspace slot per chunk and fold
+/// deterministically in chunk order. Fan-out goes through
+/// [`Pool::run_indexed`], so dispatch allocates nothing per sweep.
 ///
 /// With `simd = true` the per-block E-step swaps the scalar fused loop for
-/// the 8-wide lane kernel ([`assign_block_fused_simd`]) and the per-block
-/// soft-EM sweep swaps the scalar reference loop for [`soft_block_simd`]
-/// (lane-wide distance rows, vectorized shared exp, identical softmax
-/// pivot and f64 accumulation order — bit-for-bit per block). M-step and
-/// cost are unchanged (reduction-bound, not distance-scan-bound).
+/// the 8-wide lane kernel ([`assign_block_fused_simd`]), the per-block
+/// soft-EM sweep swaps the scalar reference loop for [`soft_block_simd`],
+/// and the M-step reduction swaps the runtime-d scalar loop for the f64
+/// const-d lanes ([`mstep_block_simd`]) — all bit-for-bit per block.
 pub struct Blocked {
     pool: Pool,
     threads: usize,
@@ -230,7 +430,7 @@ impl Blocked {
         Self::with_kernel(Self::host_threads(), 1024, false)
     }
 
-    /// Host-sized backend running the SIMD-wide fused E-step.
+    /// Host-sized backend running the SIMD-wide kernels.
     pub fn simd() -> Self {
         Self::with_kernel(Self::host_threads(), 1024, true)
     }
@@ -246,7 +446,7 @@ impl Blocked {
         Self::with_kernel(threads, min_grain, false)
     }
 
-    /// Full control: worker count, grain floor, and E-step kernel choice
+    /// Full control: worker count, grain floor, and kernel choice
     /// (`simd = false` is the scalar fused loop). Benches use this to pin
     /// single-threaded single-block variants of each kernel.
     pub fn with_kernel(threads: usize, min_grain: usize, simd: bool) -> Self {
@@ -261,40 +461,6 @@ impl Blocked {
     /// Rows per parallel task: ~4 tasks per worker amortizes imbalance.
     fn grain(&self, m: usize) -> usize {
         (m / (self.threads * 4)).max(self.min_grain)
-    }
-
-    /// Shared soft-sweep scaffolding: run `block` over the whole matrix
-    /// (single block) or fan row chunks across the pool and fold the
-    /// per-chunk partials in ascending chunk order. `block` fills one
-    /// zeroed [`SoftBlockAccum`] for its rows.
-    fn soft_partials<F>(&self, w: &[f32], d: usize, k: usize, block: F) -> SoftBlockAccum
-    where
-        F: Fn(&[f32], &mut SoftBlockAccum) + Sync,
-    {
-        let m = w.len() / d;
-        let grain = self.grain(m);
-        if m <= grain {
-            let mut acc = SoftBlockAccum::new(k, d);
-            block(w, &mut acc);
-            return acc;
-        }
-        let n_chunks = m.div_ceil(grain);
-        let mut partials: Vec<SoftBlockAccum> =
-            (0..n_chunks).map(|_| SoftBlockAccum::new(k, d)).collect();
-        let block_ref = &block;
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
-            .chunks(grain * d)
-            .zip(partials.iter_mut())
-            .map(|(wc, slot)| {
-                Box::new(move || block_ref(wc, slot)) as Box<dyn FnOnce() + Send + '_>
-            })
-            .collect();
-        self.pool.run_all(jobs);
-        let mut total = SoftBlockAccum::new(k, d);
-        for p in &partials {
-            total.merge(p);
-        }
-        total
     }
 }
 
@@ -313,113 +479,208 @@ impl Clusterer for Blocked {
         }
     }
 
-    fn assign(&self, w: &[f32], d: usize, codebook: &[f32], out: &mut [u32]) {
-        let grain = self.grain(out.len());
+    fn assign(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        out: &mut [u32],
+        ws: &mut EngineScratch,
+    ) {
+        let m = out.len();
+        let grain = self.grain(m);
         if self.simd {
             // Transpose once; every row block reads the tiles immutably.
-            let tiles = CodebookTiles::new(codebook, d);
-            if out.len() <= grain {
-                assign_block_fused_simd(w, d, codebook, &tiles, out);
+            ws.tiles.refill(codebook, d);
+            let tiles = &ws.tiles;
+            if m <= grain {
+                assign_block_fused_simd(w, d, codebook, tiles, out);
                 return;
             }
-            let tiles_ref = &tiles;
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
-                .chunks(grain * d)
-                .zip(out.chunks_mut(grain))
-                .map(|(wc, oc)| {
-                    Box::new(move || assign_block_fused_simd(wc, d, codebook, tiles_ref, oc))
-                        as Box<dyn FnOnce() + Send + '_>
-                })
-                .collect();
-            self.pool.run_all(jobs);
+            let n_chunks = m.div_ceil(grain);
+            let out_ptr = DisjointMut::new(out);
+            self.pool.run_indexed(n_chunks, &|ci| {
+                let start = ci * grain;
+                let len = grain.min(m - start);
+                // SAFETY: chunk ci owns rows [start, start + len) alone.
+                let oc = unsafe { out_ptr.slice(start, len) };
+                assign_block_fused_simd(&w[start * d..(start + len) * d], d, codebook, tiles, oc);
+            });
             return;
         }
-        let cnorm: Vec<f32> = codebook
-            .chunks_exact(d)
-            .map(|c| c.iter().map(|x| x * x).sum())
-            .collect();
-        if out.len() <= grain {
-            assign_block_fused(w, d, codebook, &cnorm, out);
+        ws.cnorm.clear();
+        ws.cnorm.extend(codebook.chunks_exact(d).map(|c| c.iter().map(|x| x * x).sum::<f32>()));
+        let cnorm = &ws.cnorm;
+        if m <= grain {
+            assign_block_fused(w, d, codebook, cnorm, out);
             return;
         }
-        let cnorm_ref = &cnorm;
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
-            .chunks(grain * d)
-            .zip(out.chunks_mut(grain))
-            .map(|(wc, oc)| {
-                Box::new(move || assign_block_fused(wc, d, codebook, cnorm_ref, oc))
-                    as Box<dyn FnOnce() + Send + '_>
-            })
-            .collect();
-        self.pool.run_all(jobs);
+        let n_chunks = m.div_ceil(grain);
+        let out_ptr = DisjointMut::new(out);
+        self.pool.run_indexed(n_chunks, &|ci| {
+            let start = ci * grain;
+            let len = grain.min(m - start);
+            // SAFETY: chunk ci owns rows [start, start + len) alone.
+            let oc = unsafe { out_ptr.slice(start, len) };
+            assign_block_fused(&w[start * d..(start + len) * d], d, codebook, cnorm, oc);
+        });
     }
 
-    fn update(&self, w: &[f32], d: usize, codebook: &mut [f32], assign: &[u32]) {
+    fn update(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &mut [f32],
+        assign: &[u32],
+        ws: &mut EngineScratch,
+    ) {
         let k = codebook.len() / d;
-        let grain = self.grain(assign.len());
-        if assign.len() <= grain {
-            let (sums, counts) = mstep_block(w, d, k, assign);
-            apply_mstep(codebook, d, &sums, &counts);
+        let m = assign.len();
+        let grain = self.grain(m);
+        if m <= grain {
+            let simd = self.simd;
+            let (sums, counts) = ws.mstep_totals(k, d);
+            if simd {
+                mstep_block_simd(w, d, k, assign, sums, counts);
+            } else {
+                mstep_block(w, d, k, assign, sums, counts);
+            }
+            apply_mstep(codebook, d, sums, counts);
             return;
         }
-        let n_chunks = assign.len().div_ceil(grain);
-        let mut partials: Vec<(Vec<f64>, Vec<u64>)> =
-            (0..n_chunks).map(|_| (Vec::new(), Vec::new())).collect();
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
-            .chunks(grain * d)
-            .zip(assign.chunks(grain))
-            .zip(partials.iter_mut())
-            .map(|((wc, ac), slot)| {
-                Box::new(move || *slot = mstep_block(wc, d, k, ac))
-                    as Box<dyn FnOnce() + Send + '_>
-            })
-            .collect();
-        self.pool.run_all(jobs);
-        let mut sums = vec![0.0f64; k * d];
-        let mut counts = vec![0u64; k];
-        for (ps, pc) in &partials {
-            for (s, p) in sums.iter_mut().zip(ps.iter()) {
+        let n_chunks = m.div_ceil(grain);
+        ws.part_sums.resize(n_chunks * k * d, 0.0);
+        ws.part_counts.resize(n_chunks * k, 0);
+        let simd = self.simd;
+        {
+            let ps = DisjointMut::new(&mut ws.part_sums);
+            let pc = DisjointMut::new(&mut ws.part_counts);
+            self.pool.run_indexed(n_chunks, &|ci| {
+                let start = ci * grain;
+                let len = grain.min(m - start);
+                // SAFETY: chunk ci owns partial-slot ranges ci alone.
+                let (sums, counts) =
+                    unsafe { (ps.slice(ci * k * d, k * d), pc.slice(ci * k, k)) };
+                let wc = &w[start * d..(start + len) * d];
+                let ac = &assign[start..start + len];
+                if simd {
+                    mstep_block_simd(wc, d, k, ac, sums, counts);
+                } else {
+                    mstep_block(wc, d, k, ac, sums, counts);
+                }
+            });
+        }
+        // Fold the chunk partials in ascending chunk order — the
+        // deterministic-reduction contract the sweep scheduler relies on.
+        ws.sums.resize(k * d, 0.0);
+        ws.sums.fill(0.0);
+        ws.counts.resize(k, 0);
+        ws.counts.fill(0);
+        for ci in 0..n_chunks {
+            for (s, p) in ws.sums.iter_mut().zip(&ws.part_sums[ci * k * d..(ci + 1) * k * d]) {
                 *s += p;
             }
-            for (c, p) in counts.iter_mut().zip(pc.iter()) {
+            for (c, p) in ws.counts.iter_mut().zip(&ws.part_counts[ci * k..(ci + 1) * k]) {
                 *c += p;
             }
         }
-        apply_mstep(codebook, d, &sums, &counts);
+        apply_mstep(codebook, d, &ws.sums, &ws.counts);
     }
 
-    fn soft_update(&self, w: &[f32], d: usize, codebook: &[f32], tau: f32) -> Vec<f32> {
+    fn soft_update_into(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        tau: f32,
+        next: &mut [f32],
+        ws: &mut EngineScratch,
+    ) {
         let k = codebook.len() / d;
-        let acc = if self.simd {
-            // Transpose once; every row block reads the tiles immutably.
-            let tiles = CodebookTiles::new(codebook, d);
-            self.soft_partials(w, d, k, |wc, slot| {
-                soft_block_simd(wc, d, codebook, &tiles, tau, slot)
-            })
-        } else {
-            self.soft_partials(w, d, k, |wc, slot| *slot = soft_block(wc, d, codebook, tau))
-        };
-        apply_soft(codebook, d, &acc)
+        let m = w.len() / d;
+        let grain = self.grain(m);
+        if self.simd {
+            ws.tiles.refill(codebook, d);
+        }
+        if m <= grain {
+            ws.soft_slots(k, d, 0);
+            if self.simd {
+                soft_block_simd(
+                    w,
+                    d,
+                    codebook,
+                    &ws.tiles,
+                    tau,
+                    &mut ws.rows[..k],
+                    &mut ws.soft[0],
+                );
+            } else {
+                soft_block(w, d, codebook, tau, &mut ws.rows[..k], &mut ws.soft[0]);
+            }
+            apply_soft(codebook, d, &ws.soft[0], next);
+            return;
+        }
+        let n_chunks = m.div_ceil(grain);
+        ws.soft_slots(k, d, n_chunks);
+        let simd = self.simd;
+        {
+            let tiles = &ws.tiles;
+            let accs = DisjointMut::new(&mut ws.soft[1..n_chunks + 1]);
+            let rows = DisjointMut::new(&mut ws.rows);
+            self.pool.run_indexed(n_chunks, &|ci| {
+                let start = ci * grain;
+                let len = grain.min(m - start);
+                let wc = &w[start * d..(start + len) * d];
+                // SAFETY: chunk ci owns accumulator slot ci and row ci alone.
+                let acc = unsafe { &mut accs.slice(ci, 1)[0] };
+                let row = unsafe { rows.slice(ci * k, k) };
+                if simd {
+                    soft_block_simd(wc, d, codebook, tiles, tau, row, acc);
+                } else {
+                    soft_block(wc, d, codebook, tau, row, acc);
+                }
+            });
+        }
+        // Fold into the zeroed slot 0 in ascending chunk order.
+        let (total, parts) = ws.soft.split_at_mut(1);
+        let total = &mut total[0];
+        for p in &parts[..n_chunks] {
+            total.merge(p);
+        }
+        apply_soft(codebook, d, total, next);
     }
 
-    fn cost(&self, w: &[f32], d: usize, codebook: &[f32], assign: &[u32]) -> f64 {
-        let grain = self.grain(assign.len());
-        if assign.len() <= grain {
+    fn cost(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        assign: &[u32],
+        ws: &mut EngineScratch,
+    ) -> f64 {
+        let m = assign.len();
+        let grain = self.grain(m);
+        if m <= grain {
             return cost_block(w, d, codebook, assign);
         }
-        let n_chunks = assign.len().div_ceil(grain);
-        let mut partials = vec![0.0f64; n_chunks];
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = w
-            .chunks(grain * d)
-            .zip(assign.chunks(grain))
-            .zip(partials.iter_mut())
-            .map(|((wc, ac), slot)| {
-                Box::new(move || *slot = cost_block(wc, d, codebook, ac))
-                    as Box<dyn FnOnce() + Send + '_>
-            })
-            .collect();
-        self.pool.run_all(jobs);
-        partials.iter().sum()
+        let n_chunks = m.div_ceil(grain);
+        ws.cost_part.resize(n_chunks, 0.0);
+        {
+            let parts = DisjointMut::new(&mut ws.cost_part);
+            self.pool.run_indexed(n_chunks, &|ci| {
+                let start = ci * grain;
+                let len = grain.min(m - start);
+                // SAFETY: chunk ci owns cost slot ci alone.
+                let slot = unsafe { &mut parts.slice(ci, 1)[0] };
+                *slot = cost_block(
+                    &w[start * d..(start + len) * d],
+                    d,
+                    codebook,
+                    &assign[start..start + len],
+                );
+            });
+        }
+        ws.cost_part[..n_chunks].iter().sum()
     }
 }
 
@@ -438,13 +699,14 @@ mod tests {
         let w = random_w(512, 2, 1);
         let mut rng = Rng::new(2);
         let codebook = ScalarRef.seed(&w, 2, 8, &mut rng);
+        let mut ws = EngineScratch::new();
         let mut a = vec![0u32; 512];
         let mut b = vec![0u32; 512];
-        ScalarRef.assign(&w, 2, &codebook, &mut a);
-        Blocked::with_params(2, 64).assign(&w, 2, &codebook, &mut b);
+        ScalarRef.assign(&w, 2, &codebook, &mut a, &mut ws);
+        Blocked::with_params(2, 64).assign(&w, 2, &codebook, &mut b, &mut ws);
         let costs_match = {
-            let ca = ScalarRef.cost(&w, 2, &codebook, &a);
-            let cb = ScalarRef.cost(&w, 2, &codebook, &b);
+            let ca = ScalarRef.cost(&w, 2, &codebook, &a, &mut ws);
+            let cb = ScalarRef.cost(&w, 2, &codebook, &b, &mut ws);
             (ca - cb).abs() <= 1e-5 * ca.max(1.0)
         };
         assert!(costs_match);
@@ -453,26 +715,29 @@ mod tests {
     #[test]
     fn blocked_parallel_path_reduces_like_scalar() {
         // Large enough that with min_grain = 64 the pool path definitely
-        // runs (many chunks), exercising the partial-sum reductions.
+        // runs (many chunks), exercising the partial-sum reductions. One
+        // scratch is deliberately shared across every call and backend —
+        // the workspace carries capacity, never state.
         let (m, d, k) = (8192, 4, 16);
         let w = random_w(m, d, 7);
         let mut rng = Rng::new(8);
         let codebook = ScalarRef.seed(&w, d, k, &mut rng);
         let blocked = Blocked::with_params(3, 64);
+        let mut ws = EngineScratch::new();
 
         let mut a_s = vec![0u32; m];
         let mut a_b = vec![0u32; m];
-        ScalarRef.assign(&w, d, &codebook, &mut a_s);
-        blocked.assign(&w, d, &codebook, &mut a_b);
-        let cs = ScalarRef.cost(&w, d, &codebook, &a_s);
-        let cb = blocked.cost(&w, d, &codebook, &a_b);
+        ScalarRef.assign(&w, d, &codebook, &mut a_s, &mut ws);
+        blocked.assign(&w, d, &codebook, &mut a_b, &mut ws);
+        let cs = ScalarRef.cost(&w, d, &codebook, &a_s, &mut ws);
+        let cb = blocked.cost(&w, d, &codebook, &a_b, &mut ws);
         assert!((cs - cb).abs() <= 1e-5 * cs.max(1.0), "{cs} vs {cb}");
 
         // M-step parity on identical assignments
         let mut cb_s = codebook.clone();
         let mut cb_b = codebook.clone();
-        ScalarRef.update(&w, d, &mut cb_s, &a_s);
-        blocked.update(&w, d, &mut cb_b, &a_s);
+        ScalarRef.update(&w, d, &mut cb_s, &a_s, &mut ws);
+        blocked.update(&w, d, &mut cb_b, &a_s, &mut ws);
         for (x, y) in cb_s.iter().zip(&cb_b) {
             assert!((x - y).abs() < 1e-5, "{x} vs {y}");
         }
@@ -482,6 +747,48 @@ mod tests {
         let soft_b = blocked.soft_update(&w, d, &codebook, 5e-3);
         for (x, y) in soft_s.iter().zip(&soft_b) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn simd_mstep_parallel_path_is_bit_identical_to_scalar_total() {
+        // The bit contract is per row block: in one block the f64 lanes add
+        // the same values in the same order as the scalar loop. Across
+        // blocks the fold adds chunk subtotals rather than rows, so the
+        // totals match the single-scan reduction only within rounding — but
+        // the simd and scalar kernels still agree with EACH OTHER exactly,
+        // because they produce identical partials and fold identically.
+        let (m, d, k) = (4096, 4, 16);
+        let w = random_w(m, d, 13);
+        let codebook = ScalarRef.seed(&w, d, k, &mut Rng::new(3));
+        let mut ws = EngineScratch::new();
+        let mut assign = vec![0u32; m];
+        ScalarRef.assign(&w, d, &codebook, &mut assign, &mut ws);
+
+        // single-block (grain = MAX): SIMD M-step bit-identical to scalar
+        let wide_1 = Blocked::with_kernel(1, usize::MAX, true);
+        let mut cb_scalar = codebook.clone();
+        let mut cb_wide = codebook.clone();
+        ScalarRef.update(&w, d, &mut cb_scalar, &assign, &mut ws);
+        wide_1.update(&w, d, &mut cb_wide, &assign, &mut ws);
+        for (i, (a, b)) in cb_scalar.iter().zip(&cb_wide).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "codeword component {i}");
+        }
+
+        // multi-chunk pooled path: near-equal (fold order differs), and the
+        // simd/scalar kernels agree with EACH OTHER bit-for-bit because
+        // they produce identical per-chunk partials and fold identically.
+        let wide_n = Blocked::with_kernel(3, 64, true);
+        let fused_n = Blocked::with_params(3, 64);
+        let mut cb_wide_n = codebook.clone();
+        let mut cb_fused_n = codebook.clone();
+        wide_n.update(&w, d, &mut cb_wide_n, &assign, &mut ws);
+        fused_n.update(&w, d, &mut cb_fused_n, &assign, &mut ws);
+        for (i, (a, b)) in cb_fused_n.iter().zip(&cb_wide_n).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "pooled codeword component {i}");
+        }
+        for (a, b) in cb_scalar.iter().zip(&cb_wide_n) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
     }
 
@@ -530,11 +837,36 @@ mod tests {
     }
 
     #[test]
+    fn soft_update_into_reuses_scratch_across_shapes() {
+        // Shrinking then regrowing (k, d, m) through one scratch must give
+        // the same bits as fresh scratches — no stale capacity leaks in.
+        let wide = Blocked::with_kernel(2, 128, true);
+        let mut shared = EngineScratch::new();
+        for &(m, d, k, tau) in &[
+            (2000usize, 4usize, 16usize, 5e-3f32),
+            (40, 1, 3, 1e-3),
+            (900, 2, 9, 5e-4),
+            (2000, 4, 16, 5e-3),
+        ] {
+            let w = random_w(m, d, (m + k) as u64);
+            let codebook = ScalarRef.seed(&w, d, k, &mut Rng::new(4));
+            let kk = codebook.len() / d;
+            let mut a = vec![0.0f32; kk * d];
+            let mut b = vec![0.0f32; kk * d];
+            wide.soft_update_into(&w, d, &codebook, tau, &mut a, &mut shared);
+            wide.soft_update_into(&w, d, &codebook, tau, &mut b, &mut EngineScratch::new());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "m={m} d={d} k={k}");
+            }
+        }
+    }
+
+    #[test]
     fn empty_cluster_keeps_previous_center() {
         let w = vec![0.0f32, 0.1, -0.1, 0.05];
         let mut codebook = vec![0.0f32, 9.0]; // second codeword unused
         let assign = vec![0u32; 4];
-        ScalarRef.update(&w, 1, &mut codebook, &assign);
+        ScalarRef.update(&w, 1, &mut codebook, &assign, &mut EngineScratch::new());
         assert!((codebook[0] - 0.0125).abs() < 1e-6);
         assert_eq!(codebook[1], 9.0);
     }

@@ -32,29 +32,62 @@
 //!   `scalar` on floating-point near-ties (costs agree to ~1e-5).
 //! * `simd` (`Blocked::simd()`, the default) — same blocking, but the
 //!   E-step runs the [`simd`] lane kernel (8 codewords per wide op, scalar
-//!   tail for `k % 8`) and the soft-EM sweep runs the fused
-//!   [`simd::soft_block_simd`] kernel, so [`FixedPointSolver`]'s Picard
-//!   iterations hit lane speed too. The lanes kick in for k ≥ 8 (every
-//!   paper grid cell except k ∈ {2, 4}, which fall through to the scalar
-//!   tail); assignments match `scalar` **exactly** because the kernel
-//!   keeps the reference subtract-square numerics and tie-breaks, and the
-//!   soft sweep matches `scalar` **bit-for-bit per row block** because it
-//!   keeps the reference's max-subtraction pivot, ascending-j normalizer
-//!   order, f64 accumulation order, and the shared [`simd::exp_f32`] —
-//!   max-subtraction order matters: the pivot feeds every exponent, so a
-//!   pivot off by one ulp would shift the whole attention row. Residual
-//!   traces are therefore identical across backends whenever a sweep runs
-//!   in one row block (m ≤ the 1024 grain floor); across blocks only the
-//!   f64 partial fold order differs (≤ last-ulp, gated at 1e-4).
+//!   tail for `k % 8`), the soft-EM sweep runs the fused
+//!   [`simd::soft_block_simd`] kernel, and the M-step reduction runs the
+//!   f64 const-d lanes ([`simd::mstep_block_simd`]), so
+//!   [`FixedPointSolver`]'s Picard iterations hit lane speed end to end.
+//!   The lanes kick in for k ≥ 8 (every paper grid cell except k ∈ {2, 4},
+//!   which fall through to the scalar tail); assignments match `scalar`
+//!   **exactly** because the kernel keeps the reference subtract-square
+//!   numerics and tie-breaks, the soft sweep matches `scalar`
+//!   **bit-for-bit per row block** because it keeps the reference's
+//!   max-subtraction pivot, ascending-j normalizer order, f64 accumulation
+//!   order, and the shared [`simd::exp_f32`] — max-subtraction order
+//!   matters: the pivot feeds every exponent, so a pivot off by one ulp
+//!   would shift the whole attention row — and the M-step lanes match
+//!   `scalar` **bit-for-bit per row block** because each partial-sum slot
+//!   receives exactly one f64 add per assigned row, in row order, whatever
+//!   width the convert-and-add compiles to. Residual traces are therefore
+//!   identical across backends whenever a sweep runs in one row block
+//!   (m ≤ the 1024 grain floor); across blocks only the f64 partial fold
+//!   order differs (≤ last-ulp, gated at 1e-4).
+//!
+//! # Workspace reuse (the zero-allocation steady state)
+//!
+//! Every [`Clusterer`] entry point is in-place and draws its intermediate
+//! storage from an [`EngineScratch`] the caller threads through. [`Engine`]
+//! owns that plumbing: the plain entry points ([`Engine::cluster`],
+//! [`Engine::lloyd`], [`Engine::soft`], [`Engine::uniform`]) create one
+//! scratch per call and reuse it across **all** Lloyd iterations / Picard
+//! sweeps of that call, while the `_with` variants
+//! ([`Engine::cluster_with`] & co.) take an external scratch so callers
+//! that cluster many layers (trainer warm starts, PTQ, deploy packaging)
+//! amortize the buffers across the whole stack. A scratch carries capacity,
+//! never results — reuse across shapes, backends, or sweep cells cannot
+//! leak state (pinned by the dirty-scratch proptest in
+//! `tests/backend_parity.rs`) — and after warm-up a Picard sweep performs
+//! zero heap allocations (pinned by the counting-allocator test in
+//! `tests/alloc_steady_state.rs`): the solver ping-pongs two pre-allocated
+//! codebook buffers, and the pool fan-out dispatches through
+//! [`Pool::run_indexed`](crate::util::threadpool::Pool::run_indexed)
+//! instead of boxing per-chunk closures.
 //!
 //! ```no_run
-//! use idkm::quant::engine::{ClusterSpec, Engine, Method};
+//! use idkm::quant::engine::{ClusterSpec, Engine, EngineScratch, Method};
 //! use idkm::util::rng::Rng;
 //!
 //! let engine = Engine::simd();
 //! let w = vec![0.0f32; 4096];
 //! let out = engine.cluster(&ClusterSpec::new(Method::Ptq, 16, 4), &w, &mut Rng::new(0));
 //! assert_eq!(out.codebook.len(), out.k * out.d);
+//!
+//! // Many layers: one workspace amortizes every per-call buffer.
+//! let mut ws = EngineScratch::new();
+//! for layer in [&w[..2048], &w[2048..]] {
+//!     let spec = ClusterSpec::new(Method::Idkm, 16, 4);
+//!     let out = engine.cluster_with(&spec, layer, &mut Rng::new(1), &mut ws);
+//!     assert_eq!(out.codebook.len(), out.k * out.d);
+//! }
 //! ```
 
 mod backend;
@@ -62,7 +95,7 @@ mod method;
 pub mod simd;
 mod solver;
 
-pub use backend::{Blocked, Clusterer, ScalarRef};
+pub use backend::{Blocked, Clusterer, EngineScratch, ScalarRef};
 pub use method::{Method, ParseEnumError};
 pub use solver::{first_residual_divergence, FixedPointSolver, FixedPointTrace};
 
@@ -222,20 +255,34 @@ impl Engine {
     }
 
     /// Method-dispatched clustering — the one entry point trainer / sweep /
-    /// PTQ / deploy all route through.
+    /// PTQ / deploy all route through. Creates one workspace for the whole
+    /// call (reused across every sweep/iteration inside it).
     pub fn cluster(&self, spec: &ClusterSpec, w: &[f32], rng: &mut Rng) -> ClusterOutcome {
+        self.cluster_with(spec, w, rng, &mut EngineScratch::new())
+    }
+
+    /// [`Self::cluster`] with an external, reusable workspace — callers
+    /// clustering many layers (warm starts, PTQ, deploy) create one scratch
+    /// and amortize every per-call buffer across the stack.
+    pub fn cluster_with(
+        &self,
+        spec: &ClusterSpec,
+        w: &[f32],
+        rng: &mut Rng,
+        ws: &mut EngineScratch,
+    ) -> ClusterOutcome {
         match spec.method {
             // Hard EM: DKM's host-side warm start and the Han-style PTQ
             // baseline share Lloyd's iteration.
-            Method::Dkm | Method::Ptq => self.lloyd(w, spec.d, spec.k, spec.max_iter, rng),
+            Method::Dkm | Method::Ptq => self.lloyd_with(w, spec.d, spec.k, spec.max_iter, rng, ws),
             // Implicit family: k-means++ seed, then the soft fixed point.
             Method::Idkm | Method::IdkmJfb => {
                 let init = self.backend.seed(w, spec.d, spec.k, rng);
-                self.soft(w, spec.d, &init, spec.tau, spec.tol, spec.max_iter)
+                self.soft_with(w, spec.d, &init, spec.tau, spec.tol, spec.max_iter, ws)
             }
             Method::Uniform => {
                 assert!(spec.d == 1, "uniform grids quantize scalars (d = 1), got d = {}", spec.d);
-                self.uniform(w, spec.k)
+                self.uniform_with(w, spec.k, ws)
             }
         }
     }
@@ -251,6 +298,19 @@ impl Engine {
         max_iter: usize,
         rng: &mut Rng,
     ) -> ClusterOutcome {
+        self.lloyd_with(w, d, k, max_iter, rng, &mut EngineScratch::new())
+    }
+
+    /// [`Self::lloyd`] with an external workspace.
+    pub fn lloyd_with(
+        &self,
+        w: &[f32],
+        d: usize,
+        k: usize,
+        max_iter: usize,
+        rng: &mut Rng,
+        ws: &mut EngineScratch,
+    ) -> ClusterOutcome {
         let m = w.len() / d;
         let mut codebook = self.backend.seed(w, d, k, rng);
         let k = codebook.len() / d; // seed clamps k > m
@@ -260,23 +320,23 @@ impl Engine {
         let mut at_fixpoint = false;
         for it in 0..max_iter {
             iterations = it + 1;
-            self.backend.assign(w, d, &codebook, &mut next);
+            self.backend.assign(w, d, &codebook, &mut next, ws);
             let changed = next != assign;
             std::mem::swap(&mut assign, &mut next);
             if !changed && it > 0 {
                 at_fixpoint = true;
                 break;
             }
-            self.backend.update(w, d, &mut codebook, &assign);
+            self.backend.update(w, d, &mut codebook, &assign, ws);
         }
         // When the loop exits via max_iter the final M-step moved the
         // codebook, so assignments are stale: refresh once. At a fixpoint
         // they are already consistent — the rescan `cluster_cost` used to do
         // unconditionally is skipped.
         if !at_fixpoint {
-            self.backend.assign(w, d, &codebook, &mut assign);
+            self.backend.assign(w, d, &codebook, &mut assign, ws);
         }
-        let cost = self.backend.cost(w, d, &codebook, &assign);
+        let cost = self.backend.cost(w, d, &codebook, &assign, ws);
         ClusterOutcome {
             codebook,
             assignments: assign,
@@ -300,14 +360,32 @@ impl Engine {
         tol: f32,
         max_iter: usize,
     ) -> ClusterOutcome {
+        self.soft_with(w, d, init, tau, tol, max_iter, &mut EngineScratch::new())
+    }
+
+    /// [`Self::soft`] with an external workspace. The solver ping-pongs two
+    /// codebook buffers allocated in its prologue and every sweep draws
+    /// scratch from `ws`, so the per-sweep steady state is allocation-free.
+    #[allow(clippy::too_many_arguments)]
+    pub fn soft_with(
+        &self,
+        w: &[f32],
+        d: usize,
+        init: &[f32],
+        tau: f32,
+        tol: f32,
+        max_iter: usize,
+        ws: &mut EngineScratch,
+    ) -> ClusterOutcome {
         let m = w.len() / d;
         let k = init.len() / d;
         let solver = FixedPointSolver::new(tol, max_iter);
-        let (codebook, trace) =
-            solver.solve(init.to_vec(), |c| self.backend.soft_update(w, d, c, tau));
+        let (codebook, trace) = solver.solve(init.to_vec(), |c, next| {
+            self.backend.soft_update_into(w, d, c, tau, next, ws)
+        });
         let mut assign = vec![0u32; m];
-        self.backend.assign(w, d, &codebook, &mut assign);
-        let cost = self.backend.cost(w, d, &codebook, &assign);
+        self.backend.assign(w, d, &codebook, &mut assign, ws);
+        let cost = self.backend.cost(w, d, &codebook, &assign, ws);
         ClusterOutcome {
             codebook,
             assignments: assign,
@@ -323,11 +401,16 @@ impl Engine {
     /// Uniform (affine) k-level grid over the data range, as a codebook —
     /// interoperates with the same packing/eval machinery (d = 1).
     pub fn uniform(&self, w: &[f32], k: usize) -> ClusterOutcome {
+        self.uniform_with(w, k, &mut EngineScratch::new())
+    }
+
+    /// [`Self::uniform`] with an external workspace.
+    pub fn uniform_with(&self, w: &[f32], k: usize, ws: &mut EngineScratch) -> ClusterOutcome {
         let params = crate::quant::uniform::UniformParams::fit(w, k.max(2));
         let codebook = params.codebook();
         let mut assign = vec![0u32; w.len()];
-        self.backend.assign(w, 1, &codebook, &mut assign);
-        let cost = self.backend.cost(w, 1, &codebook, &assign);
+        self.backend.assign(w, 1, &codebook, &mut assign, ws);
+        let cost = self.backend.cost(w, 1, &codebook, &assign, ws);
         ClusterOutcome {
             codebook,
             assignments: assign,
@@ -402,13 +485,14 @@ mod tests {
                 return true;
             }
             let m = w.len() / d;
+            let mut ws = EngineScratch::new();
             let codebook = scalar.backend().seed(&w, d, k, &mut Rng::new(9));
             let mut a_s = vec![0u32; m];
             let mut a_b = vec![0u32; m];
-            scalar.backend().assign(&w, d, &codebook, &mut a_s);
-            blocked.backend().assign(&w, d, &codebook, &mut a_b);
-            let cs = scalar.backend().cost(&w, d, &codebook, &a_s);
-            let cb = blocked.backend().cost(&w, d, &codebook, &a_b);
+            scalar.backend().assign(&w, d, &codebook, &mut a_s, &mut ws);
+            blocked.backend().assign(&w, d, &codebook, &mut a_b, &mut ws);
+            let cs = scalar.backend().cost(&w, d, &codebook, &a_s, &mut ws);
+            let cb = blocked.backend().cost(&w, d, &codebook, &a_b, &mut ws);
             (cs - cb).abs() <= 1e-5 * cs.abs().max(1.0)
         });
     }
@@ -432,16 +516,17 @@ mod tests {
                 return true;
             }
             let m = w.len() / d;
+            let mut ws = EngineScratch::new();
             let codebook = scalar.backend().seed(&w, d, k, &mut Rng::new(23));
             let mut a_s = vec![0u32; m];
             let mut a_v = vec![0u32; m];
-            scalar.backend().assign(&w, d, &codebook, &mut a_s);
-            simd.backend().assign(&w, d, &codebook, &mut a_v);
+            scalar.backend().assign(&w, d, &codebook, &mut a_s, &mut ws);
+            simd.backend().assign(&w, d, &codebook, &mut a_v, &mut ws);
             if a_s != a_v {
                 return false;
             }
-            let cs = scalar.backend().cost(&w, d, &codebook, &a_s);
-            let cv = simd.backend().cost(&w, d, &codebook, &a_v);
+            let cs = scalar.backend().cost(&w, d, &codebook, &a_s, &mut ws);
+            let cv = simd.backend().cost(&w, d, &codebook, &a_v, &mut ws);
             (cs - cv).abs() <= 1e-4 * cs.abs().max(1.0)
         });
     }
@@ -513,6 +598,34 @@ mod tests {
         assert!(out.converged, "residuals: {:?}", out.residuals);
         // residual series trends down on a contraction
         assert!(out.residuals.last().unwrap() < out.residuals.first().unwrap());
+    }
+
+    #[test]
+    fn cluster_with_shared_scratch_reproduces_fresh_scratch_exactly() {
+        // One scratch across every method, shape, and backend must produce
+        // the same bits as a fresh scratch per call — the workspace carries
+        // capacity, never state.
+        let mut rng = Rng::new(9);
+        let w: Vec<f32> = (0..2048).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for kind in BackendKind::ALL {
+            let engine = Engine::new(kind);
+            let mut shared = EngineScratch::new();
+            for method in Method::ALL {
+                let d = if method == Method::Uniform { 1 } else { 4 };
+                let spec = ClusterSpec::new(method, 16, d);
+                let a = engine.cluster_with(&spec, &w, &mut Rng::new(2), &mut shared);
+                let b = engine.cluster(&spec, &w, &mut Rng::new(2));
+                assert_eq!(a.assignments, b.assignments, "{kind} {method}");
+                assert_eq!(a.iterations, b.iterations, "{kind} {method}");
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{kind} {method}");
+                for (i, (x, y)) in a.codebook.iter().zip(&b.codebook).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{kind} {method} codebook[{i}]");
+                }
+                for (x, y) in a.residuals.iter().zip(&b.residuals) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{kind} {method}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Portable SIMD lanes for the fused E-step and the soft-EM sweep.
+//! Portable SIMD lanes for the fused E-step, the soft-EM sweep, and the
+//! f64 M-step reduction.
 //!
 //! There is no `std::simd` on stable and no intrinsics crate in this image,
 //! so the wide ops are written the way LLVM's autovectorizer reliably
@@ -52,6 +53,21 @@
 //! and the wide kernel route through [`exp_f32`] — a Cephes-style
 //! polynomial written as straight-line arithmetic. Same function ⇒ same
 //! bits; pure arithmetic ⇒ the wide kernel's exp pass vectorizes.
+//!
+//! # M-step numerics (f64 lanes over the sub-vector dimension)
+//!
+//! [`mstep_block_simd`] vectorizes the last scalar reduction in the engine:
+//! the per-codeword f64 partial sums of the hard M-step. Rows scatter into
+//! codeword slots by assignment index, so lanes cannot run across *rows*
+//! without reordering the f64 adds; instead the kernel dispatches on the
+//! paper's d ∈ {1, 2, 4} (plus 3) to a const-generic body whose inner loop
+//! is a fixed-width f64 add — d = 4 is exactly one AVX2 256-bit
+//! convert-and-add per row instead of four scalar ops behind runtime
+//! bounds checks. Every `sums[j·d + c]` slot still receives exactly one
+//! `+=` per assigned row, in row order, so the result is **bit-for-bit
+//! identical** to the scalar reference reduction for every d — the same
+//! argument that makes the soft sweep's const-d attention specialization
+//! safe.
 
 use crate::quant::dist2;
 
@@ -73,11 +89,14 @@ fn accum_sq_diff(acc: &mut [f32; LANES], x: f32, c: &[f32; LANES]) {
 /// sweeps (Cephes `expf`: range reduction by ln 2 split in two parts, then
 /// a degree-5 minimax polynomial, then a 2^n exponent-bit scale).
 ///
-/// Accuracy is ~2 ulp against libm. Saturation: inputs below ≈ −87.34
-/// (including −∞) return exactly 0.0 like libm; inputs above ≈ 88.72
-/// return +∞ (the top ~0.35 octaves of the finite range overflow early —
-/// irrelevant for softmax, whose max-subtracted logits are ≤ 0). NaN
-/// propagates.
+/// Accuracy is ~2 ulp against libm over the normal range. Saturation:
+/// inputs below ≈ −87.34 (including −∞) flush to exactly 0.0 — libm's
+/// `expf` still returns subnormals down to ≈ −103.97, so this trades the
+/// subnormal band for the clamp's vectorizability (softmax discards that
+/// mass anyway: attention below DEN_EPS never updates a codeword). Inputs
+/// above ≈ 88.72 return +∞ (the top ~0.35 octaves of the finite range
+/// overflow early — irrelevant for softmax, whose max-subtracted logits
+/// are ≤ 0). NaN propagates.
 ///
 /// The parity contract of the soft sweep hinges on every path calling this
 /// one function: identical inputs then give identical bits no matter how
@@ -119,8 +138,10 @@ pub fn exp_f32(x: f32) -> f32 {
 
 /// The codebook transposed into lane-major tiles (see module docs).
 ///
-/// Built once per E-step call (k·d floats — trivial next to the m×k scan)
-/// and shared read-only by every row block a parallel backend fans out.
+/// Rebuilt once per E-step / soft-sweep call (k·d floats — trivial next to
+/// the m×k scan) and shared read-only by every row block a parallel backend
+/// fans out. The workspace path keeps one instance alive across calls and
+/// [`Self::refill`]s it in place, so the steady state never allocates.
 pub struct CodebookTiles {
     /// `tiles[chunk * d + c][l]` = component `c` of codeword
     /// `chunk * LANES + l`.
@@ -133,19 +154,35 @@ pub struct CodebookTiles {
 
 impl CodebookTiles {
     pub fn new(codebook: &[f32], d: usize) -> Self {
+        let mut t = Self::empty();
+        t.refill(codebook, d);
+        t
+    }
+
+    /// An unfilled instance (workspace slot); [`Self::refill`] before use.
+    pub fn empty() -> Self {
+        CodebookTiles { tiles: Vec::new(), d: 1, k_main: 0 }
+    }
+
+    /// Rebuild the transpose in place for a (possibly reshaped) codebook,
+    /// reusing the tile storage — allocation-free once the buffer has grown
+    /// to the largest (k, d) seen.
+    pub fn refill(&mut self, codebook: &[f32], d: usize) {
         let k = codebook.len() / d;
         let k_main = k - k % LANES;
-        let mut tiles = Vec::with_capacity((k_main / LANES) * d);
+        self.d = d;
+        self.k_main = k_main;
+        self.tiles.clear();
+        self.tiles.reserve((k_main / LANES) * d);
         for chunk in 0..k_main / LANES {
             for c in 0..d {
                 let mut lane = [0.0f32; LANES];
                 for (l, slot) in lane.iter_mut().enumerate() {
                     *slot = codebook[(chunk * LANES + l) * d + c];
                 }
-                tiles.push(lane);
+                self.tiles.push(lane);
             }
         }
-        CodebookTiles { tiles, d, k_main }
     }
 
     /// Codewords handled by the wide path (the rest take the scalar tail).
@@ -226,6 +263,15 @@ impl SoftBlockAccum {
         SoftBlockAccum { num: vec![0.0f64; k * d], den: vec![0.0f64; k] }
     }
 
+    /// Resize for (k, d) and zero, reusing the allocations — the workspace
+    /// path keeps one accumulator per chunk alive across sweeps and cells.
+    pub fn reset(&mut self, k: usize, d: usize) {
+        self.num.clear();
+        self.num.resize(k * d, 0.0);
+        self.den.clear();
+        self.den.resize(k, 0.0);
+    }
+
     /// Fold another block's partials into this one (element-wise adds; call
     /// in ascending chunk order to keep the reduction deterministic).
     pub fn merge(&mut self, other: &SoftBlockAccum) {
@@ -243,23 +289,25 @@ impl SoftBlockAccum {
 /// SIMD-wide soft-EM sweep for one row block at temperature `tau`:
 /// max-subtracted softmax over `-‖w − c_j‖ / tau`, accumulated into `acc`.
 ///
-/// `tiles` must have been built from `codebook` with the same `d`. The
-/// accumulated partials are **bit-for-bit identical** to the scalar
-/// reference sweep over the same block — see the module docs for the
-/// phase-by-phase argument.
+/// `tiles` must have been built from `codebook` with the same `d`; `row` is
+/// caller-provided logit scratch of length k (the workspace hands every
+/// chunk its own, so a sweep allocates nothing). The accumulated partials
+/// are **bit-for-bit identical** to the scalar reference sweep over the
+/// same block — see the module docs for the phase-by-phase argument.
 pub fn soft_block_simd(
     w: &[f32],
     d: usize,
     codebook: &[f32],
     tiles: &CodebookTiles,
     tau: f32,
+    row: &mut [f32],
     acc: &mut SoftBlockAccum,
 ) {
     debug_assert_eq!(tiles.d, d);
     let k = codebook.len() / d;
     debug_assert_eq!(tiles.k_main, k - k % LANES);
     debug_assert_eq!(acc.den.len(), k);
-    let mut row = vec![0.0f32; k];
+    debug_assert_eq!(row.len(), k);
     for sub in w.chunks_exact(d) {
         // Phase 1: wide distance row. Each lane accumulates its codeword's
         // components in ascending order — dist2's exact operation order —
@@ -293,7 +341,7 @@ pub fn soft_block_simd(
         for &v in row.iter() {
             z += v;
         }
-        accumulate_attention(sub, d, &row, z, acc);
+        accumulate_attention(sub, d, row, z, acc);
     }
 }
 
@@ -337,6 +385,56 @@ fn accumulate_attention_d<const D: usize>(
         *den += a;
         for c in 0..D {
             num[c] += a * x[c];
+        }
+    }
+}
+
+/// Hard M-step partial reduction for one row block with f64 lanes over the
+/// sub-vector dimension: `sums[a·d + c] += w[row·d + c] as f64` and
+/// `counts[a] += 1` per row, into caller-provided (zeroed here) buffers.
+///
+/// Dispatches to a const-d body so the paper's d ∈ {1, 2, 4} inner loops
+/// compile to fixed-width convert-and-add ops (d = 4 is one AVX2 256-bit
+/// `vcvtps2pd` + `vaddpd` per row). Bit-for-bit identical to the scalar
+/// reference reduction for every d — each slot receives exactly one f64
+/// add per assigned row, in row order (module docs).
+pub fn mstep_block_simd(
+    w: &[f32],
+    d: usize,
+    k: usize,
+    assign: &[u32],
+    sums: &mut [f64],
+    counts: &mut [u64],
+) {
+    debug_assert_eq!(sums.len(), k * d);
+    debug_assert_eq!(counts.len(), k);
+    sums.fill(0.0);
+    counts.fill(0);
+    match d {
+        1 => mstep_block_d::<1>(w, assign, sums, counts),
+        2 => mstep_block_d::<2>(w, assign, sums, counts),
+        3 => mstep_block_d::<3>(w, assign, sums, counts),
+        4 => mstep_block_d::<4>(w, assign, sums, counts),
+        _ => {
+            // Generic tail: the scalar reference loop verbatim.
+            for (sub, &a) in w.chunks_exact(d).zip(assign.iter()) {
+                let j = a as usize;
+                counts[j] += 1;
+                for (s, &x) in sums[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
+                    *s += x as f64;
+                }
+            }
+        }
+    }
+}
+
+fn mstep_block_d<const D: usize>(w: &[f32], assign: &[u32], sums: &mut [f64], counts: &mut [u64]) {
+    for (sub, &a) in w.chunks_exact(D).zip(assign.iter()) {
+        let j = a as usize;
+        counts[j] += 1;
+        let slot = &mut sums[j * D..(j + 1) * D];
+        for c in 0..D {
+            slot[c] += sub[c] as f64;
         }
     }
 }
@@ -479,12 +577,84 @@ mod tests {
         let codebook = [-1.0f32, 1.0];
         let tiles = CodebookTiles::new(&codebook, 1);
         let mut acc = SoftBlockAccum::new(2, 1);
-        soft_block_simd(&[], 1, &codebook, &tiles, 5e-3, &mut acc);
+        let mut row = vec![0.0f32; 2];
+        soft_block_simd(&[], 1, &codebook, &tiles, 5e-3, &mut row, &mut acc);
         assert!(acc.den.iter().all(|&x| x == 0.0));
         let w = [-1.0f32, 1.0, -1.0, 1.0];
-        soft_block_simd(&w, 1, &codebook, &tiles, 5e-3, &mut acc);
+        soft_block_simd(&w, 1, &codebook, &tiles, 5e-3, &mut row, &mut acc);
         // symmetric data: equal attention mass on both codewords
         assert!((acc.den[0] - acc.den[1]).abs() < 1e-12, "{:?}", acc.den);
         assert!(acc.den[0] > 0.0);
+    }
+
+    #[test]
+    fn soft_accum_reset_reuses_and_reshapes() {
+        let mut a = SoftBlockAccum::new(2, 2);
+        a.num[3] = 7.0;
+        a.den[1] = 1.0;
+        a.reset(3, 1);
+        assert_eq!(a.num, vec![0.0; 3]);
+        assert_eq!(a.den, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn tiles_refill_matches_fresh_construction() {
+        let mut rng = Rng::new(41);
+        let big: Vec<f32> = (0..24 * 4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let small: Vec<f32> = (0..9 * 2).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut reused = CodebookTiles::new(&big, 4);
+        // shrink then regrow through refill; compare against fresh tiles by
+        // driving the assignment kernel (tiles fields are private)
+        for (cb, d, m) in [(&small, 2usize, 40usize), (&big, 4, 33), (&small, 2, 17)] {
+            reused.refill(cb, d);
+            let fresh = CodebookTiles::new(cb, d);
+            let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+            let mut a = vec![0u32; m];
+            let mut b = vec![0u32; m];
+            assign_block_fused_simd(&w, d, cb, &reused, &mut a);
+            assign_block_fused_simd(&w, d, cb, &fresh, &mut b);
+            assert_eq!(a, b);
+            assert_eq!(reused.lanes_cover(), fresh.lanes_cover());
+        }
+    }
+
+    #[test]
+    fn mstep_lanes_are_bit_identical_to_scalar_reduction() {
+        // Const-d lanes add the same f64 values in the same order, so the
+        // partials must equal the straight scalar loop bit-for-bit on every
+        // d, including the generic fallback (d = 5) and empty clusters.
+        for &(m, d, k) in &[
+            (257usize, 1usize, 9usize),
+            (128, 2, 7),
+            (96, 3, 5),
+            (200, 4, 16),
+            (64, 5, 4),
+            (0, 2, 3), // no rows: all-zero partials
+        ] {
+            let mut rng = Rng::new((m * 31 + d * 7 + k) as u64);
+            let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            // biased assignments leave some clusters empty
+            let assign: Vec<u32> =
+                (0..m).map(|_| (rng.below(k * 2).min(k - 1)) as u32).collect();
+
+            let mut want_sums = vec![0.0f64; k * d];
+            let mut want_counts = vec![0u64; k];
+            for (sub, &a) in w.chunks_exact(d).zip(assign.iter()) {
+                let j = a as usize;
+                want_counts[j] += 1;
+                for (s, &x) in want_sums[j * d..(j + 1) * d].iter_mut().zip(sub.iter()) {
+                    *s += x as f64;
+                }
+            }
+
+            // deliberately dirty buffers: the kernel must zero them itself
+            let mut sums = vec![f64::NAN; k * d];
+            let mut counts = vec![u64::MAX; k];
+            mstep_block_simd(&w, d, k, &assign, &mut sums, &mut counts);
+            assert_eq!(counts, want_counts, "m={m} d={d} k={k}");
+            for (i, (a, b)) in sums.iter().zip(&want_sums).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "m={m} d={d} k={k} sum[{i}]");
+            }
+        }
     }
 }

@@ -46,33 +46,40 @@ impl FixedPointSolver {
         Self { tol, max_iter }
     }
 
-    /// Run the iteration from `c0`. `step` maps the current iterate to the
-    /// next one (e.g. [`Clusterer::soft_update`](super::Clusterer::soft_update)).
+    /// Run the iteration from `c0`, ping-ponging between two codebook
+    /// buffers. `step` writes the next iterate into its second argument
+    /// (e.g.
+    /// [`Clusterer::soft_update_into`](super::Clusterer::soft_update_into)).
+    /// The buffer pair and the residual trace are allocated once up front,
+    /// so with an allocation-free step the whole solve performs zero heap
+    /// allocations after this prologue — the engine's steady-state
+    /// contract (`tests/alloc_steady_state.rs`).
     pub fn solve(
         &self,
         c0: Vec<f32>,
-        mut step: impl FnMut(&[f32]) -> Vec<f32>,
+        mut step: impl FnMut(&[f32], &mut [f32]),
     ) -> (Vec<f32>, FixedPointTrace) {
-        let mut c = c0;
+        let mut cur = c0;
+        let mut next = vec![0.0f32; cur.len()];
         let mut trace = FixedPointTrace::default();
+        trace.residuals.reserve(self.max_iter);
         for _ in 0..self.max_iter {
-            let next = step(&c);
-            debug_assert_eq!(next.len(), c.len());
+            step(&cur, &mut next);
             let residual = next
                 .iter()
-                .zip(&c)
+                .zip(&cur)
                 .map(|(a, b)| ((a - b) as f64).powi(2))
                 .sum::<f64>()
                 .sqrt();
             trace.iterations += 1;
             trace.residuals.push(residual);
-            c = next;
+            std::mem::swap(&mut cur, &mut next);
             if (residual as f32) < self.tol {
                 trace.converged = true;
                 break;
             }
         }
-        (c, trace)
+        (cur, trace)
     }
 }
 
@@ -84,7 +91,7 @@ mod tests {
     fn contraction_converges_to_fixed_point() {
         // f(x) = 0.5x + 1 has the fixed point x* = 2 and contracts at 0.5.
         let solver = FixedPointSolver::new(1e-6, 100);
-        let (c, trace) = solver.solve(vec![10.0], |c| vec![0.5 * c[0] + 1.0]);
+        let (c, trace) = solver.solve(vec![10.0], |c, out| out[0] = 0.5 * c[0] + 1.0);
         assert!(trace.converged);
         assert!((c[0] - 2.0).abs() < 1e-5, "{c:?}");
         // residuals shrink geometrically
@@ -98,9 +105,24 @@ mod tests {
     fn hits_iteration_cap_without_convergence() {
         // rotation-like map that never settles
         let solver = FixedPointSolver::new(1e-9, 7);
-        let (_, trace) = solver.solve(vec![1.0], |c| vec![-c[0]]);
+        let (_, trace) = solver.solve(vec![1.0], |c, out| out[0] = -c[0]);
         assert!(!trace.converged);
         assert_eq!(trace.iterations, 7);
+    }
+
+    #[test]
+    fn ping_pong_hands_step_the_previous_iterate() {
+        // The two buffers must swap roles every sweep: step i sees the
+        // output of step i − 1, never a stale buffer.
+        let solver = FixedPointSolver::new(0.0, 5);
+        let mut seen = Vec::new();
+        let (c, trace) = solver.solve(vec![1.0], |c, out| {
+            seen.push(c[0]);
+            out[0] = c[0] + 1.0;
+        });
+        assert_eq!(seen, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(c, vec![6.0]);
+        assert_eq!(trace.iterations, 5);
     }
 
     #[test]
@@ -119,7 +141,7 @@ mod tests {
     #[test]
     fn already_converged_stops_after_one_sweep() {
         let solver = FixedPointSolver::new(1e-6, 50);
-        let (c, trace) = solver.solve(vec![3.0, -1.0], |c| c.to_vec());
+        let (c, trace) = solver.solve(vec![3.0, -1.0], |c, out| out.copy_from_slice(c));
         assert!(trace.converged);
         assert_eq!(trace.iterations, 1);
         assert_eq!(c, vec![3.0, -1.0]);

@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-use super::engine::{ClusterSpec, Engine, Method};
+use super::engine::{ClusterSpec, Engine, EngineScratch, Method};
 use super::kmeans::KMeansResult;
 use super::packing::{pack, CompressionReport, PackedLayer};
 
@@ -38,6 +38,9 @@ pub fn quantize_model(
 ) -> Result<(Vec<PtqLayer>, Vec<Tensor>, CompressionReport)> {
     let mut rng = Rng::new(seed ^ 0x5054_5100);
     let spec = ClusterSpec::new(Method::Ptq, k, d).with_max_iter(max_iter);
+    // One workspace across all layers: per-layer kernel buffers are
+    // allocated once for the whole model, not once per layer.
+    let mut ws = EngineScratch::new();
     let mut detailed = Vec::new();
     let mut out_tensors = Vec::with_capacity(layers.len());
     let mut report = CompressionReport::default();
@@ -47,7 +50,7 @@ pub fn quantize_model(
             continue;
         }
         let w = tensor.data();
-        let result: KMeansResult = engine.cluster(&spec, w, &mut rng).into();
+        let result: KMeansResult = engine.cluster_with(&spec, w, &mut rng, &mut ws).into();
         let packed = pack(w, d, &result.codebook)?;
         let rec = super::packing::unpack(&packed);
         report.add(&packed);

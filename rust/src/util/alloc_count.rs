@@ -1,0 +1,55 @@
+//! Heap-allocation counting for the engine's zero-allocation steady-state
+//! contract.
+//!
+//! [`CountingAllocator`] wraps the system allocator and bumps one global
+//! counter per `alloc`/`realloc` across every thread. A binary opts in by
+//! registering it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: idkm::util::alloc_count::CountingAllocator = CountingAllocator;
+//! ```
+//!
+//! `tests/alloc_steady_state.rs` asserts the count stays flat across warm
+//! Picard sweeps, and `benches/runtime_micro` records the per-sweep count
+//! in its JSON report. The counter only moves in binaries that register the
+//! allocator, so the library itself pays nothing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Total `alloc` + `realloc` calls (all threads) since process start.
+/// Deallocations are not counted: the steady-state contract is about
+/// allocator traffic, and every steady-state `dealloc` implies a matching
+/// earlier `alloc` anyway.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// System allocator with a global allocation counter (see module docs).
+pub struct CountingAllocator;
+
+// SAFETY: defers entirely to `System`; the counter bump has no effect on
+// allocation semantics.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

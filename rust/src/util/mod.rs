@@ -1,7 +1,10 @@
 //! Utility substrates the vendored crate set lacks: JSON, TOML-subset
-//! config parsing, PRNG, CLI parsing, logging, a thread pool with bounded
-//! (backpressured) channels, and a mini property-testing harness.
+//! config parsing, PRNG, CLI parsing, logging, a worker thread pool with
+//! a zero-allocation broadcast parallel-for, a mini property-testing
+//! harness, and a counting allocator backing the engine's steady-state
+//! allocation gate.
 
+pub mod alloc_count;
 pub mod cli;
 pub mod json;
 pub mod log;

@@ -1,103 +1,132 @@
-//! Thread pool + bounded MPMC channel (tokio is not vendored; the data
-//! loaders and the sweep runner use these instead).
+//! Worker thread pool (tokio/rayon are not vendored; the clustering
+//! kernels and the sweep runner use this instead).
 //!
-//! `Bounded<T>` is a condvar-based bounded queue providing backpressure:
-//! dataset prefetch threads block in `push` when the trainer falls behind,
-//! capping staging memory. `Pool` runs closures on N workers and joins them
-//! on drop (used by the sweep runner to parallelize independent experiment
-//! cells).
+//! `Pool` runs work on N workers and joins them on drop. It offers two
+//! dispatch paths:
+//!
+//! * [`Pool::run_all`] — heterogeneous boxed `FnOnce` jobs (the sweep
+//!   scheduler's cells). Boxes once per job; fine for coarse work.
+//! * [`Pool::run_indexed`] — a broadcast parallel-for over `0..n` through
+//!   one shared `Fn(usize)`. The entire dispatch state is a single
+//!   stack-resident [`Region`] pushed into a pre-sized list, so the hot
+//!   clustering kernels can fan out once per sweep with **zero allocator
+//!   traffic** (the engine's steady-state contract; see
+//!   `quant::engine::EngineScratch`). The caller participates in running
+//!   tasks, so a fan-out issued while every worker is busy — even one
+//!   issued from inside a pool task — still completes.
+//!
+//! (The `Bounded` MPMC backpressure channel that used to live here was
+//! retired with the sequential data `Loader`: `SharedBatches` coordinates
+//! its consumers with a plain mutex/condvar cache instead.)
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-struct Inner<T> {
-    q: Mutex<State<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+/// A boxed one-shot job (the queue path; the hot kernel path is
+/// [`Pool::run_indexed`], which never boxes).
+type BoxedJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// One broadcast parallel-for in flight: a type-erased `Fn(usize)` plus the
+/// claim/completion counters. The struct lives on the stack of the
+/// `run_indexed` caller, which cannot return before every task has finished,
+/// so the raw pointer workers hold stays valid exactly as long as they can
+/// reach it through the region list. All fields are guarded by the pool
+/// mutex.
+struct Region {
+    /// Invokes the caller's closure with a task index.
+    call: unsafe fn(*const (), usize),
+    /// The caller's closure, type- and lifetime-erased.
+    data: *const (),
+    n: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Claimed-but-unfinished tasks.
+    running: usize,
+    panicked: bool,
 }
 
-struct State<T> {
-    items: VecDeque<T>,
-    cap: usize,
+/// Pointer to a caller-stack [`Region`]; `Send` so a worker can hold it
+/// across the unlock while it executes a task (validity argued above).
+#[derive(Clone, Copy, PartialEq)]
+struct RegionPtr(*mut Region);
+
+unsafe impl Send for RegionPtr {}
+
+struct PoolState {
+    queue: VecDeque<BoxedJob>,
+    /// Active parallel-for regions (pointers into caller stacks, valid
+    /// until the owning `run_indexed` returns).
+    regions: Vec<RegionPtr>,
     closed: bool,
 }
 
-/// Bounded multi-producer multi-consumer channel.
-pub struct Bounded<T> {
-    inner: Arc<Inner<T>>,
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers sleep here when there is neither region nor queue work.
+    work: Condvar,
+    /// `run_indexed` callers sleep here waiting for in-flight tasks.
+    done: Condvar,
 }
 
-impl<T> Clone for Bounded<T> {
-    fn clone(&self) -> Self {
-        Self { inner: Arc::clone(&self.inner) }
-    }
-}
-
-impl<T> Bounded<T> {
-    pub fn new(cap: usize) -> Self {
-        assert!(cap > 0);
-        Self {
-            inner: Arc::new(Inner {
-                q: Mutex::new(State { items: VecDeque::new(), cap, closed: false }),
-                not_empty: Condvar::new(),
-                not_full: Condvar::new(),
-            }),
+fn worker_loop(shared: &PoolShared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        // Regions first: they are the latency-sensitive kernel fan-outs;
+        // boxed jobs (sweep cells) are coarse and can wait a task.
+        let open = st
+            .regions
+            .iter()
+            .copied()
+            // SAFETY: every pointer in the list refers to a live caller
+            // frame (see `Region`); fields are read under the pool mutex.
+            .find(|rp| unsafe { (*rp.0).next < (*rp.0).n });
+        if let Some(rp) = open {
+            let (call, data, i) = unsafe {
+                let r = &mut *rp.0;
+                let i = r.next;
+                r.next += 1;
+                r.running += 1;
+                (r.call, r.data, i)
+            };
+            drop(st);
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                call(data, i)
+            }))
+            .is_ok();
+            st = shared.state.lock().unwrap();
+            unsafe {
+                let r = &mut *rp.0;
+                r.running -= 1;
+                if !ok {
+                    r.panicked = true;
+                }
+                if r.next >= r.n && r.running == 0 {
+                    // Last task done: detach the region and wake its owner.
+                    st.regions.retain(|q| *q != rp);
+                    shared.done.notify_all();
+                }
+            }
+            continue;
         }
-    }
-
-    /// Blocking push; returns Err(item) if the channel is closed.
-    pub fn push(&self, item: T) -> Result<(), T> {
-        let mut st = self.inner.q.lock().unwrap();
-        loop {
-            if st.closed {
-                return Err(item);
-            }
-            if st.items.len() < st.cap {
-                st.items.push_back(item);
-                self.inner.not_empty.notify_one();
-                return Ok(());
-            }
-            st = self.inner.not_full.wait(st).unwrap();
+        if let Some(job) = st.queue.pop_front() {
+            drop(st);
+            // A panicking one-shot job must not take the worker down
+            // (run_all re-raises panics itself via run_indexed).
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            st = shared.state.lock().unwrap();
+            continue;
         }
-    }
-
-    /// Blocking pop; None when closed and drained.
-    pub fn pop(&self) -> Option<T> {
-        let mut st = self.inner.q.lock().unwrap();
-        loop {
-            if let Some(item) = st.items.pop_front() {
-                self.inner.not_full.notify_one();
-                return Some(item);
-            }
-            if st.closed {
-                return None;
-            }
-            st = self.inner.not_empty.wait(st).unwrap();
+        if st.closed {
+            return;
         }
-    }
-
-    /// Close: producers fail, consumers drain then get None.
-    pub fn close(&self) {
-        let mut st = self.inner.q.lock().unwrap();
-        st.closed = true;
-        self.inner.not_empty.notify_all();
-        self.inner.not_full.notify_all();
-    }
-
-    pub fn len(&self) -> usize {
-        self.inner.q.lock().unwrap().items.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        st = shared.work.wait(st).unwrap();
     }
 }
 
-/// Fixed-size worker pool executing boxed jobs.
+/// Fixed-size worker pool executing boxed jobs and broadcast parallel-fors.
 pub struct Pool {
-    jobs: Bounded<Box<dyn FnOnce() + Send + 'static>>,
+    shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -110,31 +139,48 @@ impl Pool {
     /// scheduler labels its cell workers (`idkm-sweep-*`) distinctly from
     /// the kernel pools so stack dumps attribute stalls to the right layer.
     pub fn with_name(n: usize, prefix: &str) -> Self {
-        let jobs: Bounded<Box<dyn FnOnce() + Send + 'static>> = Bounded::new(n.max(1) * 2);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                // Pre-sized so pushing a region in the steady state never
+                // touches the allocator (the engine's zero-allocation-
+                // per-sweep contract).
+                regions: Vec::with_capacity(16),
+                closed: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
         let workers = (0..n.max(1))
             .map(|i| {
-                let jobs = jobs.clone();
+                let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("{prefix}-{i}"))
-                    .spawn(move || {
-                        while let Some(job) = jobs.pop() {
-                            job();
-                        }
-                    })
+                    .spawn(move || worker_loop(&shared))
                     .expect("spawn worker")
             })
             .collect();
-        Self { jobs, workers }
+        Self { shared, workers }
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        // Err only if closed, which join() is the sole caller of.
-        let _ = self.jobs.push(Box::new(f));
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return; // matches the old closed-channel drop semantics
+        }
+        st.queue.push_back(Box::new(f));
+        drop(st);
+        self.shared.work.notify_one();
     }
 
     /// Close the queue and wait for all workers to finish outstanding jobs.
     pub fn join(mut self) {
-        self.jobs.close();
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.work.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -145,66 +191,118 @@ impl Pool {
         self.workers.len()
     }
 
-    /// Scoped fork-join: run a batch of jobs that may borrow from the
-    /// caller's stack, blocking until every job has completed. This is what
-    /// lets the blocked clustering kernels fan borrowed row chunks out
-    /// across the pool without cloning the weight matrix.
+    /// Broadcast parallel-for: run `f(0), …, f(n − 1)` across the worker
+    /// threads (the caller claims and runs tasks too) and return when all
+    /// have finished. Unlike [`Self::run_all`] this boxes nothing and — once
+    /// the pre-sized region list has warmed up — allocates nothing: the
+    /// entire dispatch state is one stack-resident [`Region`], which is what
+    /// makes the per-sweep kernel fan-out allocation-free.
     ///
-    /// A panicking job is caught on the worker (so the pool survives and the
-    /// latch still counts down) and re-raised here once the batch drains.
-    /// Must not be called from inside a pool job: the batch would wait on
-    /// workers that are themselves waiting.
+    /// `f` may borrow from the caller's stack and must be `Sync`: several
+    /// threads invoke it concurrently, each with a distinct index. A panic
+    /// in any task is re-raised here after the whole batch drains; the pool
+    /// itself survives. Because the caller participates, a fan-out issued
+    /// while every worker is busy (even one issued from inside a pool task)
+    /// still completes on the calling thread.
+    pub fn run_indexed<F: Fn(usize) + Sync>(&self, n: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.workers.is_empty() {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Type-erased trampoline; `data` is `&F`, valid for this frame.
+        unsafe fn trampoline<F: Fn(usize)>(data: *const (), i: usize) {
+            (*(data as *const F))(i);
+        }
+        // SAFETY (for every raw access below): the region lives in this
+        // frame, which blocks until `next == n && running == 0`, i.e. until
+        // no thread can still reach it; all field access happens with the
+        // pool mutex held. The lifetime erasure of `data` is sound for the
+        // same reason run_all's scoped borrows are: `f` outlives every task.
+        let region = std::cell::UnsafeCell::new(Region {
+            call: trampoline::<F>,
+            data: f as *const F as *const (),
+            n,
+            next: 0,
+            running: 0,
+            panicked: false,
+        });
+        let rp = RegionPtr(region.get());
+        let shared = &*self.shared;
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.regions.push(rp);
+        }
+        shared.work.notify_all();
+        // Claim and run tasks alongside the workers.
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            let i = unsafe {
+                let r = &mut *rp.0;
+                if r.next >= r.n {
+                    break;
+                }
+                let i = r.next;
+                r.next += 1;
+                r.running += 1;
+                i
+            };
+            drop(st);
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_ok();
+            st = shared.state.lock().unwrap();
+            unsafe {
+                let r = &mut *rp.0;
+                r.running -= 1;
+                if !ok {
+                    r.panicked = true;
+                }
+            }
+        }
+        // Wait for workers still running claimed tasks.
+        unsafe {
+            while (*rp.0).running > 0 {
+                st = shared.done.wait(st).unwrap();
+            }
+        }
+        // Whoever finished last may not have detached the region (the
+        // caller finishing its own final task does not) — ensure it.
+        st.regions.retain(|q| *q != rp);
+        let panicked = unsafe { (*rp.0).panicked };
+        drop(st);
+        if panicked {
+            panic!("a task panicked inside Pool::run_indexed");
+        }
+    }
+
+    /// Scoped fork-join over heterogeneous boxed jobs that may borrow from
+    /// the caller's stack, blocking until every job has completed (the sweep
+    /// scheduler's cell batches). Implemented on [`Self::run_indexed`], so
+    /// panic propagation and caller participation behave identically; the
+    /// per-job boxing is fine for coarse work — hot kernel fan-outs use
+    /// `run_indexed` directly.
     pub fn run_all<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
         if jobs.is_empty() {
             return;
         }
-        struct Latch {
-            remaining: Mutex<usize>,
-            done: Condvar,
-            panicked: AtomicBool,
-        }
-        let latch = Arc::new(Latch {
-            remaining: Mutex::new(jobs.len()),
-            done: Condvar::new(),
-            panicked: AtomicBool::new(false),
-        });
-        for job in jobs {
-            // SAFETY: this function does not return until the latch reports
-            // every submitted job finished, so all `'scope` borrows captured
-            // by `job` strictly outlive its execution; the transmute erases
-            // only that lifetime (the two trait-object types are otherwise
-            // identical).
-            let job: Box<dyn FnOnce() + Send + 'static> =
-                unsafe { std::mem::transmute(job) };
-            let latch = Arc::clone(&latch);
-            self.submit(move || {
-                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
-                    latch.panicked.store(true, Ordering::SeqCst);
-                }
-                let mut rem = latch.remaining.lock().unwrap();
-                *rem -= 1;
-                if *rem == 0 {
-                    latch.done.notify_all();
-                }
-            });
-        }
-        let mut rem = latch.remaining.lock().unwrap();
-        while *rem > 0 {
-            rem = latch.done.wait(rem).unwrap();
-        }
-        drop(rem);
-        if latch.panicked.load(Ordering::SeqCst) {
-            panic!("a job panicked inside Pool::run_all");
-        }
+        let slots: Vec<Mutex<Option<Box<dyn FnOnce() + Send + 'scope>>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let run_one = |i: usize| {
+            let job = slots[i].lock().unwrap().take();
+            if let Some(job) = job {
+                job();
+            }
+        };
+        self.run_indexed(slots.len(), &run_one);
     }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        self.jobs.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.close_and_join();
     }
 }
 
@@ -212,46 +310,6 @@ impl Drop for Pool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-
-    #[test]
-    fn fifo_order_single_consumer() {
-        let ch = Bounded::new(4);
-        for i in 0..4 {
-            ch.push(i).unwrap();
-        }
-        ch.close();
-        let got: Vec<i32> = std::iter::from_fn(|| ch.pop()).collect();
-        assert_eq!(got, vec![0, 1, 2, 3]);
-    }
-
-    #[test]
-    fn backpressure_blocks_until_pop() {
-        let ch = Bounded::new(1);
-        ch.push(1u32).unwrap();
-        let ch2 = ch.clone();
-        let t = std::thread::spawn(move || ch2.push(2).is_ok());
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        assert_eq!(ch.pop(), Some(1)); // unblocks the producer
-        assert!(t.join().unwrap());
-        assert_eq!(ch.pop(), Some(2));
-    }
-
-    #[test]
-    fn close_wakes_consumers() {
-        let ch: Bounded<u32> = Bounded::new(2);
-        let ch2 = ch.clone();
-        let t = std::thread::spawn(move || ch2.pop());
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        ch.close();
-        assert_eq!(t.join().unwrap(), None);
-    }
-
-    #[test]
-    fn push_after_close_fails() {
-        let ch = Bounded::new(2);
-        ch.close();
-        assert!(ch.push(5u8).is_err());
-    }
 
     #[test]
     fn pool_runs_all_jobs() {
@@ -265,6 +323,89 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn run_indexed_covers_every_index_and_is_reusable() {
+        let pool = Pool::new(4);
+        let out: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let f = |i: usize| {
+            out[i].fetch_add(i + 1, Ordering::Relaxed);
+        };
+        pool.run_indexed(100, &f);
+        pool.run_indexed(100, &f);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.load(Ordering::Relaxed), 2 * (i + 1), "index {i}");
+        }
+        // n = 0 and n = 1 take the inline path
+        pool.run_indexed(0, &f);
+        pool.run_indexed(1, &f);
+        assert_eq!(out[0].load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_indexed_writes_disjoint_borrowed_chunks() {
+        // the engine's usage pattern: tasks carve disjoint ranges out of a
+        // caller-stack buffer through a shared raw pointer
+        struct Ptr(*mut u64);
+        unsafe impl Sync for Ptr {}
+        let pool = Pool::new(3);
+        let mut out = vec![0u64; 1000];
+        let p = Ptr(out.as_mut_ptr());
+        let f = |ci: usize| {
+            let start = ci * 128;
+            let len = 128.min(1000 - start);
+            // SAFETY: each task index owns a disjoint range.
+            let dst = unsafe { std::slice::from_raw_parts_mut(p.0.add(start), len) };
+            for (off, d) in dst.iter_mut().enumerate() {
+                *d = 2 * (start + off) as u64;
+            }
+        };
+        pool.run_indexed(1000usize.div_ceil(128), &f);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == 2 * i as u64));
+    }
+
+    #[test]
+    fn run_indexed_propagates_panic_and_pool_survives() {
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let f = |i: usize| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            };
+            pool.run_indexed(8, &f);
+        }));
+        assert!(r.is_err());
+        // workers caught the panic: the pool still executes new batches
+        let hits = AtomicUsize::new(0);
+        let f = |_i: usize| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.run_indexed(8, &f);
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn run_indexed_nested_inside_pool_task_completes() {
+        // caller participation makes a same-pool nested fan-out safe: the
+        // outer task drains the inner region itself if workers are busy
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let total = &total;
+                let pool_ref = &pool;
+                Box::new(move || {
+                    let f = |_i: usize| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    };
+                    pool_ref.run_indexed(10, &f);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_all(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 40);
     }
 
     #[test]

@@ -1,26 +1,35 @@
 //! Cross-backend parity matrix: every `BackendKind` × {hard E-step,
-//! soft-EM sweep} against the `ScalarRef` oracle on randomized inputs with
-//! deliberate degenerate coverage — k > m (the seeding clamp), duplicate
-//! points (exact-tie codebooks), constant data, and tau extremes (1e-30
-//! drives logits to ±∞, 1e3 flattens attention to uniform).
+//! soft-EM sweep, M-step reduction} against the `ScalarRef` oracle on
+//! randomized inputs with deliberate degenerate coverage — k > m (the
+//! seeding clamp), duplicate points (exact-tie codebooks), constant data,
+//! and tau extremes (1e-30 drives logits to ±∞, 1e3 flattens attention to
+//! uniform).
 //!
 //! Contracts checked (inputs stay inside one row block, m ≪ the 1024
 //! grain floor, where bit-level parity is the engine's guarantee):
 //!
-//! * SIMD backend — hard assignments AND soft attention sums bit-identical
-//!   to `ScalarRef` on every input.
-//! * Blocked backend — soft sweep bit-identical (it runs the same
-//!   per-block reference kernel); hard assignments bit-identical except on
-//!   provable floating-point near-ties of its expanded-form E-step, where
-//!   the two candidates' true distances must agree to ~f32 rounding.
-//! * ScalarRef against itself — trivially exact (sanity anchor for the
-//!   harness).
+//! * SIMD backend — hard assignments AND soft attention sums AND M-step
+//!   codebooks bit-identical to `ScalarRef` on every input.
+//! * Blocked backend — soft sweep and M-step bit-identical (they run the
+//!   same per-block reference kernels); hard assignments bit-identical
+//!   except on provable floating-point near-ties of its expanded-form
+//!   E-step, where the two candidates' true distances must agree to ~f32
+//!   rounding.
+//! * ScalarRef against itself — trivially exact (sanity anchor).
+//! * **Workspace reuse is state-free** — all comparisons run through the
+//!   in-place, scratch-carrying entry points with one deliberately dirty
+//!   [`EngineScratch`] reused across every random case and shape, and a
+//!   dedicated poisoning proptest re-checks each backend against a fresh
+//!   scratch after differently-shaped garbage calls. A scratch carries
+//!   capacity, never state; these tests are the teeth of that claim.
 //!
 //! Soft results are compared through `to_bits` so NaN slots produced by
 //! degenerate tau values still compare deterministically.
 
+use std::cell::RefCell;
+
 use idkm::quant::dist2;
-use idkm::quant::engine::{BackendKind, Clusterer, Engine};
+use idkm::quant::engine::{BackendKind, Clusterer, Engine, EngineScratch};
 use idkm::util::proptest::{check, ClusterCase};
 use idkm::util::rng::Rng;
 
@@ -34,16 +43,23 @@ fn backend_matrix_hard_and_soft_parity() {
     let gen = ClusterCase { max_rows: 96 };
     for kind in BackendKind::ALL {
         let engine = Engine::new(kind);
+        // One scratch per side, reused dirty across all 40 random cases —
+        // parity must survive any shape history in the workspace.
+        let ws_scalar = RefCell::new(EngineScratch::new());
+        let ws_engine = RefCell::new(EngineScratch::new());
         check(&format!("backend_parity_{kind}"), 40, &gen, |case| {
             let d = case.d;
             let m = case.rows();
+            let mut ws_s = ws_scalar.borrow_mut();
+            let mut ws_e = ws_engine.borrow_mut();
             // seeding from the data means duplicate points become duplicate
             // codewords (exact ties) and k > m exercises the clamp
             let codebook = scalar.backend().seed(&case.w, d, case.k, &mut Rng::new(17));
+            let k = codebook.len() / d;
             let mut a_s = vec![0u32; m];
             let mut a_e = vec![0u32; m];
-            scalar.backend().assign(&case.w, d, &codebook, &mut a_s);
-            engine.backend().assign(&case.w, d, &codebook, &mut a_e);
+            scalar.backend().assign(&case.w, d, &codebook, &mut a_s, &mut ws_s);
+            engine.backend().assign(&case.w, d, &codebook, &mut a_e, &mut ws_e);
             for i in 0..m {
                 if a_s[i] == a_e[i] {
                     continue;
@@ -61,11 +77,85 @@ fn backend_matrix_hard_and_soft_parity() {
                     return false;
                 }
             }
-            // soft-EM sweep: attention-weighted sums must match bit-for-bit
-            // on every backend
-            let s = scalar.backend().soft_update(&case.w, d, &codebook, case.tau);
-            let e = engine.backend().soft_update(&case.w, d, &codebook, case.tau);
-            bits(&s) == bits(&e)
+            // soft-EM sweep through the in-place entry point: attention
+            // sums must match bit-for-bit on every backend
+            let mut s = vec![0.0f32; k * d];
+            let mut e = vec![0.0f32; k * d];
+            scalar.backend().soft_update_into(&case.w, d, &codebook, case.tau, &mut s, &mut ws_s);
+            engine.backend().soft_update_into(&case.w, d, &codebook, case.tau, &mut e, &mut ws_e);
+            if bits(&s) != bits(&e) {
+                return false;
+            }
+            // M-step on the scalar assignments: bit-identical codebooks
+            // (both lane and scalar reductions add the same f64s in the
+            // same order inside one block)
+            let mut cb_s = codebook.clone();
+            let mut cb_e = codebook.clone();
+            scalar.backend().update(&case.w, d, &mut cb_s, &a_s, &mut ws_s);
+            engine.backend().update(&case.w, d, &mut cb_e, &a_s, &mut ws_e);
+            bits(&cb_s) == bits(&cb_e)
+        });
+    }
+}
+
+#[test]
+fn dirty_scratch_reuse_is_state_free() {
+    // Run every case twice on the same backend: once with a fresh scratch,
+    // once with a scratch deliberately poisoned by differently-shaped
+    // clustering calls on garbage data (huge magnitudes, mismatched k/d/m).
+    // Bit-identical outputs across assign/update/soft/cost prove no state
+    // leaks between cells through the workspace.
+    let gen = ClusterCase { max_rows: 80 };
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        let dirty_cell = RefCell::new(EngineScratch::new());
+        check(&format!("dirty_scratch_{kind}"), 25, &gen, |case| {
+            let d = case.d;
+            let m = case.rows();
+            let codebook = engine.backend().seed(&case.w, d, case.k, &mut Rng::new(7));
+            let k = codebook.len() / d;
+            let mut dirty = dirty_cell.borrow_mut();
+
+            // Poison: a (d = 3, k = 2) soft sweep + E-step + M-step on
+            // garbage data with extreme magnitudes.
+            let junk: Vec<f32> = (0..37 * 3)
+                .map(|i| if i % 5 == 0 { 1e30 } else { -(i as f32) * 977.0 })
+                .collect();
+            let jcb = vec![1e30f32, -1e30, 5.0, 0.25, -3.5, 7.75];
+            let mut jnext = vec![0.0f32; jcb.len()];
+            let mut jassign = vec![0u32; 37];
+            engine.backend().soft_update_into(&junk, 3, &jcb, 1e-3, &mut jnext, &mut dirty);
+            engine.backend().assign(&junk, 3, &jcb, &mut jassign, &mut dirty);
+            let mut jcb2 = jcb.clone();
+            engine.backend().update(&junk, 3, &mut jcb2, &jassign, &mut dirty);
+
+            // Fresh vs dirty must agree bit-for-bit on every entry point.
+            let mut fresh = EngineScratch::new();
+            let mut out_f = vec![0.0f32; k * d];
+            let mut out_d = vec![0.0f32; k * d];
+            let b = engine.backend();
+            b.soft_update_into(&case.w, d, &codebook, case.tau, &mut out_f, &mut fresh);
+            b.soft_update_into(&case.w, d, &codebook, case.tau, &mut out_d, &mut dirty);
+            if bits(&out_f) != bits(&out_d) {
+                return false;
+            }
+            let mut a_f = vec![0u32; m];
+            let mut a_d = vec![0u32; m];
+            engine.backend().assign(&case.w, d, &codebook, &mut a_f, &mut fresh);
+            engine.backend().assign(&case.w, d, &codebook, &mut a_d, &mut dirty);
+            if a_f != a_d {
+                return false;
+            }
+            let mut cb_f = codebook.clone();
+            let mut cb_d = codebook.clone();
+            engine.backend().update(&case.w, d, &mut cb_f, &a_f, &mut fresh);
+            engine.backend().update(&case.w, d, &mut cb_d, &a_d, &mut dirty);
+            if bits(&cb_f) != bits(&cb_d) {
+                return false;
+            }
+            let c_f = engine.backend().cost(&case.w, d, &codebook, &a_f, &mut fresh);
+            let c_d = engine.backend().cost(&case.w, d, &codebook, &a_d, &mut dirty);
+            c_f.to_bits() == c_d.to_bits()
         });
     }
 }
@@ -94,14 +184,15 @@ fn k_above_m_clamped_seed_is_exact_on_every_backend() {
     // centers; hard and soft sweeps agree exactly everywhere (no ties).
     let w = [0.5f32, -1.0, 2.0];
     let scalar = Engine::scalar();
+    let mut ws = EngineScratch::new();
     let codebook = scalar.backend().seed(&w, 1, 8, &mut Rng::new(3));
     assert_eq!(codebook.len(), 3, "k > m must clamp to m centers");
     for kind in BackendKind::ALL {
         let engine = Engine::new(kind);
         let mut a_s = vec![0u32; 3];
         let mut a_e = vec![0u32; 3];
-        scalar.backend().assign(&w, 1, &codebook, &mut a_s);
-        engine.backend().assign(&w, 1, &codebook, &mut a_e);
+        scalar.backend().assign(&w, 1, &codebook, &mut a_s, &mut ws);
+        engine.backend().assign(&w, 1, &codebook, &mut a_e, &mut ws);
         assert_eq!(a_s, a_e, "{kind}");
         let s = scalar.backend().soft_update(&w, 1, &codebook, 5e-4);
         let e = engine.backend().soft_update(&w, 1, &codebook, 5e-4);

@@ -1,0 +1,400 @@
+#!/usr/bin/env python3
+"""Bit-exact generator for the golden-trajectory fixtures.
+
+Reproduces, operation for operation, the Rust scalar-reference path that
+`tests/golden_trajectory.rs` pins: Xoshiro256++ / SplitMix64 randomness,
+Box-Muller normals (f64 libm log/sin/cos — the only libm dependency, which
+the committed fixtures share with any Rust-generated fixture), k-means++
+seeding, Lloyd iteration, and the soft-EM Picard solve with the engine's
+`exp_f32` polynomial. Every f32 operation runs through numpy float32
+scalars (IEEE-754 single, one rounding per op — the same semantics rustc
+emits); every f64 accumulation preserves the Rust iteration order.
+
+Exists because the build container for this repo has no Rust toolchain:
+`IDKM_BLESS_GOLDEN=1 cargo test --test golden_trajectory` is the canonical
+regeneration path and supersedes this script wherever cargo is available.
+A fixture produced here must be byte-equivalent in value (the JSON floats
+parse to the same bits) to what the Rust test would bless.
+"""
+
+import decimal
+import math
+import os
+import struct
+import sys
+from fractions import Fraction
+
+import numpy as np
+
+F32 = np.float32
+F32_MAX = np.finfo(np.float32).max  # f32::MAX
+F32_MIN = np.finfo(np.float32).min  # f32::MIN (most negative finite)
+MASK64 = (1 << 64) - 1
+
+
+def f32_lit(s: str) -> np.float32:
+    """Parse a decimal literal to f32 with a single correct rounding, the
+    way rustc parses f32 literals (np.float32(float(s)) double-rounds
+    through f64, which can differ at ties)."""
+    target = Fraction(decimal.Decimal(s))
+    cand = F32(float(s))
+    # examine the candidate and its neighbors, pick nearest (ties-to-even)
+    best = None
+    for c in {cand, np.nextafter(cand, F32(np.inf)), np.nextafter(cand, F32(-np.inf))}:
+        if not np.isfinite(c):
+            continue
+        err = abs(Fraction(float(c)) - target)
+        key = (err, struct.unpack("<I", struct.pack("<f", c))[0] & 1)
+        if best is None or key < best[0]:
+            best = (key, c)
+    return best[1]
+
+
+# -- PRNG (util/rng.rs) -----------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed: int):
+        s = seed & MASK64
+        st = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & MASK64
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            st.append(z ^ (z >> 31))
+        self.s = st
+        self.spare = None
+
+    def next_u64(self) -> int:
+        s = self.s
+        r = (self._rotl((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return r
+
+    @staticmethod
+    def _rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (64 - k))) & MASK64
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / float(1 << 53))
+
+    def below(self, n: int) -> int:
+        return (self.next_u64() * n) >> 64
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            v, self.spare = self.spare, None
+            return v
+        while True:
+            u1 = self.f64()
+            if u1 <= sys.float_info.min:
+                continue
+            u2 = self.f64()
+            r = math.sqrt(-2.0 * math.log(u1))
+            ang = (2.0 * math.pi) * u2
+            s, c = math.sin(ang), math.cos(ang)
+            self.spare = r * s
+            return r * c
+
+    def normal_f32(self, mean: float, std: float) -> np.float32:
+        return F32(mean) + F32(std) * F32(self.normal())
+
+
+# -- f32 kernels (quant/mod.rs, quant/engine) -------------------------------
+
+
+def dist2(a, b) -> np.float32:
+    acc = F32(0.0)
+    for x, y in zip(a, b):
+        diff = x - y
+        acc = acc + diff * diff
+    return acc
+
+
+def nearest(cb, d, sub) -> int:
+    k = len(cb) // d
+    best, best_d = 0, F32_MAX
+    for j in range(k):
+        dd = dist2(sub, cb[j * d : (j + 1) * d])
+        if dd < best_d:
+            best_d, best = dd, j
+    return best
+
+
+def kmeanspp(w, d, k, rng: Rng):
+    m = len(w) // d
+    assert m >= 1 and k >= 1
+    if k >= m:
+        return list(w[: m * d])
+    cb = []
+    first = rng.below(m)
+    cb.extend(w[first * d : (first + 1) * d])
+    d2 = [dist2(w[i * d : (i + 1) * d], cb[0:d]) for i in range(m)]
+    for _ in range(1, k):
+        total = 0.0
+        for x in d2:
+            total += float(x)
+        if total <= 0.0:
+            pick = rng.below(m)
+        else:
+            target = rng.f64() * total
+            pick = m - 1
+            for i, x in enumerate(d2):
+                target -= float(x)
+                if target <= 0.0:
+                    pick = i
+                    break
+        start = len(cb)
+        cb.extend(w[pick * d : (pick + 1) * d])
+        new_c = cb[start : start + d]
+        for i in range(m):
+            dd = dist2(w[i * d : (i + 1) * d], new_c)
+            if dd < d2[i]:
+                d2[i] = dd
+    return cb
+
+
+# exp_f32 constants (quant/engine/simd.rs), single-rounded like rustc
+LOG2E = f32_lit("1.4426950408889634")  # std::f32::consts::LOG2_E
+LN2_HI = f32_lit("0.6933594")
+LN2_LO = f32_lit("-2.1219444e-4")
+EXP_LO = f32_lit("-87.33654")
+EXP_HI = f32_lit("88.72283")
+POLY = [
+    f32_lit("1.9875691e-4"),
+    f32_lit("1.3981999e-3"),
+    f32_lit("8.333452e-3"),
+    f32_lit("4.1665796e-2"),
+    f32_lit("1.6666666e-1"),
+    f32_lit("0.5"),
+]
+
+
+def exp_f32(x: np.float32) -> np.float32:
+    xc = EXP_LO if x < EXP_LO else (EXP_HI if x > EXP_HI else x)
+    v = float(xc * LOG2E)  # exact widen of the f32 product
+    n_int = math.floor(v + 0.5) if v >= 0.0 else math.ceil(v - 0.5)
+    n = F32(n_int)
+    r = (xc - n * LN2_HI) - n * LN2_LO
+    p = POLY[0]
+    for c in POLY[1:]:
+        p = p * r + c
+    scale = F32(
+        np.uint32((n_int + 127) << 23).view(np.float32)
+    )
+    y = (p * r * r + r + F32(1.0)) * scale
+    if x < EXP_LO:
+        return F32(0.0)
+    if x > EXP_HI:
+        return F32(np.inf)
+    return y
+
+
+DEN_EPS = 1e-8
+
+
+def soft_update(w, d, cb, tau: np.float32):
+    """ScalarRef::soft_update_into — soft_block + apply_soft."""
+    k = len(cb) // d
+    m = len(w) // d
+    num = [0.0] * (k * d)
+    den = [0.0] * k
+    attn = [F32(0.0)] * k
+    for i in range(m):
+        sub = w[i * d : (i + 1) * d]
+        max_logit = F32_MIN
+        for j in range(k):
+            dist = np.sqrt(dist2(sub, cb[j * d : (j + 1) * d]))
+            attn[j] = -dist / tau
+            if attn[j] > max_logit:
+                max_logit = attn[j]
+        z = F32(0.0)
+        for j in range(k):
+            attn[j] = exp_f32(attn[j] - max_logit)
+            z = z + attn[j]
+        for j in range(k):
+            a = float(attn[j] / z)
+            den[j] += a
+            for c in range(d):
+                num[j * d + c] += a * float(sub[c])
+    out = list(cb)
+    for j in range(k):
+        if den[j] > DEN_EPS:
+            for c in range(d):
+                out[j * d + c] = F32(num[j * d + c] / den[j])
+    return out
+
+
+def mstep(w, d, k, assign, cb):
+    sums = [0.0] * (k * d)
+    counts = [0] * k
+    m = len(w) // d
+    for i in range(m):
+        j = assign[i]
+        counts[j] += 1
+        for c in range(d):
+            sums[j * d + c] += float(w[i * d + c])
+    for j in range(k):
+        if counts[j] > 0:
+            for c in range(d):
+                cb[j * d + c] = F32(sums[j * d + c] / float(counts[j]))
+
+
+def cost_with_assignments(w, d, cb, assign) -> float:
+    total = 0.0
+    m = len(w) // d
+    for i in range(m):
+        a = assign[i]
+        total += float(dist2(w[i * d : (i + 1) * d], cb[a * d : (a + 1) * d]))
+    return total
+
+
+def lloyd(w, d, k_req, max_iter, rng: Rng):
+    """Engine::lloyd_with on ScalarRef."""
+    m = len(w) // d
+    cb = kmeanspp(w, d, k_req, rng)
+    k = len(cb) // d
+    assign = [0xFFFFFFFF] * m
+    iterations = 0
+    at_fixpoint = False
+    for it in range(max_iter):
+        iterations = it + 1
+        new = [nearest(cb, d, w[i * d : (i + 1) * d]) for i in range(m)]
+        changed = new != assign
+        assign = new
+        if not changed and it > 0:
+            at_fixpoint = True
+            break
+        mstep(w, d, k, assign, cb)
+    if not at_fixpoint:
+        assign = [nearest(cb, d, w[i * d : (i + 1) * d]) for i in range(m)]
+    cost = cost_with_assignments(w, d, cb, assign)
+    return dict(
+        codebook=cb,
+        assignments=assign,
+        iterations=iterations,
+        cost=cost,
+        residuals=[],
+        converged=at_fixpoint,
+    )
+
+
+def soft_solve(w, d, init, tau32, tol32, max_iter):
+    """Engine::soft_with on ScalarRef (ping-pong FixedPointSolver)."""
+    m = len(w) // d
+    cur = list(init)
+    residuals = []
+    iterations = 0
+    converged = False
+    for _ in range(max_iter):
+        nxt = soft_update(w, d, cur, tau32)
+        rsum = 0.0
+        for a, b in zip(nxt, cur):
+            diff = float(a - b)  # f32 subtract, then exact widen
+            rsum += diff * diff
+        residual = math.sqrt(rsum)
+        iterations += 1
+        residuals.append(residual)
+        cur = nxt
+        if F32(residual) < tol32:
+            converged = True
+            break
+    assign = [nearest(cur, d, w[i * d : (i + 1) * d]) for i in range(m)]
+    cost = cost_with_assignments(w, d, cur, assign)
+    return dict(
+        codebook=cur,
+        assignments=assign,
+        iterations=iterations,
+        cost=cost,
+        residuals=residuals,
+        converged=converged,
+    )
+
+
+# -- cases (tests/golden_trajectory.rs CASES) -------------------------------
+
+# tau/tol as strings: rustc parses f32 literals with a single rounding, so
+# they go through f32_lit rather than a float64 round trip.
+CASES = [
+    dict(name="picard_implicit_k4d2", method="implicit", m=192, d=2, k=4,
+         tau="5e-3", tol="1e-5", max_iter=40, seed=11),
+    dict(name="picard_jfb_k8d1", method="implicit", m=256, d=1, k=8,
+         tau="1e-3", tol="1e-6", max_iter=50, seed=23),
+    dict(name="lloyd_k8d2", method="lloyd", m=256, d=2, k=8,
+         tau="5e-4", tol="1e-6", max_iter=25, seed=5),
+]
+
+
+def assignments_hash(assign) -> int:
+    h = 0x811C9DC5
+    for v in assign:
+        for b in struct.pack("<I", v):
+            h ^= b
+            h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def fmt(x: float) -> str:
+    """Shortest-roundtrip decimal, like Rust's f64 Display (repr is also
+    shortest-roundtrip; any such string parses back to identical bits)."""
+    return repr(float(x))
+
+
+def run_case(g):
+    rng = Rng(g["seed"])
+    w = [rng.normal_f32(0.0, 1.0) for _ in range(g["m"] * g["d"])]
+    rng2 = Rng(g["seed"] ^ 0xC1E0)
+    if g["method"] == "lloyd":
+        return lloyd(w, g["d"], g["k"], g["max_iter"], rng2)
+    init = kmeanspp(w, g["d"], g["k"], rng2)
+    return soft_solve(w, g["d"], init, f32_lit(g["tau"]), f32_lit(g["tol"]), g["max_iter"])
+
+
+def fixture_json(out) -> str:
+    # Hand-rendered so float formatting is exactly shortest-roundtrip.
+    lines = ["{"]
+    lines.append('  "assignments_hash": %d,' % assignments_hash(out["assignments"]))
+    cbs = ",\n".join("    " + fmt(float(c)) for c in out["codebook"])
+    lines.append('  "codebook": [\n%s\n  ],' % cbs)
+    lines.append('  "converged": %s,' % ("true" if out["converged"] else "false"))
+    lines.append('  "cost": %s,' % fmt(out["cost"]))
+    lines.append('  "iterations": %d,' % out["iterations"])
+    if out["residuals"]:
+        rs = ",\n".join("    " + fmt(r) for r in out["residuals"])
+        lines.append('  "residuals": [\n%s\n  ]' % rs)
+    else:
+        lines.append('  "residuals": []')
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    for g in CASES:
+        out = run_case(g)
+        # sanity: mirror golden_cases_actually_iterate
+        if g["method"] == "implicit":
+            assert out["iterations"] >= 2, (g["name"], out["iterations"])
+            assert out["residuals"][-1] < out["residuals"][0], g["name"]
+        assert math.isfinite(out["cost"]) and out["cost"] >= 0.0
+        path = os.path.join(here, g["name"] + ".json")
+        with open(path, "w") as f:
+            f.write(fixture_json(out) + "\n")
+        print(
+            "%-24s iters=%-3d converged=%-5s cost=%.6g hash=%d"
+            % (g["name"], out["iterations"], out["converged"], out["cost"],
+               assignments_hash(out["assignments"]))
+        )
+        if out["residuals"]:
+            print("    residuals: first=%.3e last=%.3e" % (out["residuals"][0], out["residuals"][-1]))
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,8 @@
 //! bits, and f32 values are stored through their exact f64 widening.
 
 use idkm::quant::engine::{
-    first_residual_divergence, BackendKind, ClusterOutcome, ClusterSpec, Engine, Method,
+    first_residual_divergence, BackendKind, ClusterOutcome, ClusterSpec, Engine, EngineScratch,
+    Method,
 };
 use idkm::util::json::{obj, Json};
 use idkm::util::rng::Rng;
@@ -88,13 +89,19 @@ fn golden_dir() -> PathBuf {
 }
 
 fn run_case(g: &Golden, kind: BackendKind) -> ClusterOutcome {
+    run_case_with(g, kind, &mut EngineScratch::new())
+}
+
+/// Same trajectory through the scratch-carrying entry point — golden runs
+/// also pin that workspace reuse cannot shift a bit.
+fn run_case_with(g: &Golden, kind: BackendKind, ws: &mut EngineScratch) -> ClusterOutcome {
     let mut rng = Rng::new(g.seed);
     let w: Vec<f32> = (0..g.m * g.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let spec = ClusterSpec::new(g.method, g.k, g.d)
         .with_max_iter(g.max_iter)
         .with_tau(g.tau)
         .with_tol(g.tol);
-    Engine::new(kind).cluster(&spec, &w, &mut Rng::new(g.seed ^ 0xC1E0))
+    Engine::new(kind).cluster_with(&spec, &w, &mut Rng::new(g.seed ^ 0xC1E0), ws)
 }
 
 fn assignments_hash(a: &[u32]) -> usize {
@@ -264,6 +271,27 @@ fn golden_trajectories_match_on_all_backends_and_fixtures() {
                 "{}: codebook[{i}] drifted from fixture: {w} vs {got}",
                 g.name
             );
+        }
+    }
+}
+
+#[test]
+fn shared_dirty_scratch_reproduces_every_golden_trajectory() {
+    // One workspace reused (dirty) across all cases and backends must
+    // reproduce the fresh-scratch trajectories bit-for-bit: the scratch
+    // carries capacity, never state.
+    let mut ws = EngineScratch::new();
+    for g in CASES {
+        for kind in [BackendKind::ScalarRef, BackendKind::Simd] {
+            let fresh = run_case(g, kind);
+            let shared = run_case_with(g, kind, &mut ws);
+            assert_residuals_match(g.name, "shared-scratch", &shared.residuals, &fresh.residuals);
+            assert_eq!(shared.iterations, fresh.iterations, "{}: {kind}", g.name);
+            assert_eq!(shared.assignments, fresh.assignments, "{}: {kind}", g.name);
+            assert_eq!(shared.cost.to_bits(), fresh.cost.to_bits(), "{}: {kind}", g.name);
+            for (i, (a, b)) in fresh.codebook.iter().zip(&shared.codebook).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: {kind} codebook[{i}]", g.name);
+            }
         }
     }
 }
