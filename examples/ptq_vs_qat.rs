@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     println!("|---|---|---|---|---|---|");
     for (k, d) in [(2usize, 1usize), (2, 2), (4, 1)] {
         let (_, quantized, rep) =
-            ptq::quantize_model(trainer.engine(), &layers, k, d, 50, cfg.seed)?;
+            ptq::quantize_model(trainer.engine(), &layers, k, d, 50, cfg.seed, cfg.anderson_depth)?;
         let ptq_acc = trainer.eval_float(&quantized)?;
         let idkm_cell = trainer.qat_cell(k, d, Method::Idkm)?;
         let jfb_cell = trainer.qat_cell(k, d, Method::IdkmJfb)?;

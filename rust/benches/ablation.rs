@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         .map(|(s, t)| (s.name.clone(), t.clone(), s.clustered))
         .collect();
     let (_, quantized, rep) =
-        ptq::quantize_model(trainer.engine(), &layers, 2, 1, 50, cfg.seed)?;
+        ptq::quantize_model(trainer.engine(), &layers, 2, 1, 50, cfg.seed, cfg.anderson_depth)?;
     let ptq_acc = trainer.eval_float(&quantized)?;
     let qat_cell = trainer.qat_cell(2, 1, Method::Idkm)?;
     println!(

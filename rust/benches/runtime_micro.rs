@@ -248,6 +248,111 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>,
     (median_ns, speedup, steady_allocs)
 }
 
+/// Anderson-vs-plain Picard on convergent soft_solve cases at the paper's
+/// tau = 5e-4 (ISSUE 5 acceptance: ≥ 25% fewer sweeps). Every case runs
+/// the single-threaded single-block SIMD kernel — bit-exact to ScalarRef
+/// and independent of runner core count — so the aggregate sweep counts
+/// (and therefore the gated `picard_anderson_over_plain` ratio) are a
+/// deterministic function of the committed code, unlike the wall-clock
+/// totals, which are machine-relative and recorded ungated. Aggregating
+/// ten cases smooths the per-case variance of mixing on the only
+/// piecewise-smooth soft-EM map (single cases can land anywhere from ~1x
+/// to ~5x; the aggregate is the stable acceptance signal).
+///
+/// Returns (counts rows, speedup rows) — sweep counts are dimensionless
+/// and land in the report's `counts` section, not under `median_ns`, and
+/// the wall-clock story is carried only by the (ungated)
+/// `picard_anderson_walltime_speedup` ratio: the per-case totals are
+/// single-shot, so they are printed for the log but not committed as if
+/// they were medians.
+fn picard_anderson_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>) {
+    const DEPTH: usize = 4;
+    const TOL: f32 = 1e-5;
+    const MAX_SWEEPS: usize = 400;
+    // (m, d, k, seed): d = 1 keeps the soft map smooth enough for mixing
+    // to pay across the whole set; seeds span independent instances.
+    const CASES: [(usize, usize, usize, u64); 10] = [
+        (8192, 1, 8, 3),
+        (8192, 1, 8, 5),
+        (8192, 1, 8, 7),
+        (8192, 1, 8, 17),
+        (8192, 1, 8, 101),
+        (8192, 1, 16, 3),
+        (8192, 1, 16, 5),
+        (8192, 1, 16, 7),
+        (8192, 1, 16, 17),
+        (8192, 1, 16, 101),
+    ];
+    println!("-- picard anderson vs plain (tau = 5e-4, tol = {TOL:.0e}, depth {DEPTH}) --");
+    let kernel = Blocked::with_kernel(1, usize::MAX, true);
+    let plain = FixedPointSolver::new(TOL, MAX_SWEEPS);
+    let anderson = plain.with_anderson(DEPTH);
+    let mut ws = EngineScratch::new();
+    let mut aa = idkm::quant::engine::AndersonScratch::new();
+    let mut total_plain = 0usize;
+    let mut total_aa = 0usize;
+    let mut secs_plain = 0.0f64;
+    let mut secs_aa = 0.0f64;
+    // Untimed warm-up on the first case's shape so the scratch growth
+    // (kernel buffers + Anderson rings) is not billed to the first timed
+    // plain solve.
+    {
+        let (m, d, k, seed) = CASES[0];
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let init = ScalarRef.seed(&w, d, k, &mut Rng::new(seed ^ 0xC1E0));
+        let warm = FixedPointSolver::new(0.0, 3).with_anderson(DEPTH);
+        let _ = warm.solve_with(init, &mut aa, |c, out| {
+            kernel.soft_update_into(&w, d, c, 5e-4, out, &mut ws)
+        });
+    }
+    for &(m, d, k, seed) in &CASES {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let init = ScalarRef.seed(&w, d, k, &mut Rng::new(seed ^ 0xC1E0));
+        let tau = 5e-4f32;
+        let t0 = Instant::now();
+        let (_, tp) = plain.solve_with(init.clone(), &mut aa, |c, out| {
+            kernel.soft_update_into(&w, d, c, tau, out, &mut ws)
+        });
+        secs_plain += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let (_, ta) = anderson.solve_with(init, &mut aa, |c, out| {
+            kernel.soft_update_into(&w, d, c, tau, out, &mut ws)
+        });
+        secs_aa += t0.elapsed().as_secs_f64();
+        println!(
+            "  m={m} d={d} k={k} seed={seed}: plain {}{} vs anderson {}{} sweeps \
+             ({} mixed, {} fallbacks)",
+            tp.iterations,
+            if tp.converged { "" } else { "!" },
+            ta.iterations,
+            if ta.converged { "" } else { "!" },
+            ta.mixed_steps,
+            ta.fallbacks,
+        );
+        total_plain += tp.iterations;
+        total_aa += ta.iterations;
+    }
+    let ratio = total_plain as f64 / total_aa as f64;
+    println!(
+        "picard_anderson_over_plain: {total_plain} / {total_aa} sweeps = {ratio:.2}x \
+         (target >= 1.33x, i.e. >= 25% fewer sweeps); wall {:.0} ms vs {:.0} ms",
+        secs_plain * 1e3,
+        secs_aa * 1e3
+    );
+    (
+        vec![
+            ("picard_plain_sweeps", total_plain as f64),
+            ("picard_anderson_sweeps", total_aa as f64),
+        ],
+        vec![
+            ("picard_anderson_over_plain", ratio),
+            ("picard_anderson_walltime_speedup", secs_plain / secs_aa),
+        ],
+    )
+}
+
 /// Compare `current` speedups against the committed baseline; Err on any
 /// gated ratio regressing past the baseline's tolerance.
 fn check_regression(current: &Json, baseline_path: &str) -> anyhow::Result<()> {
@@ -260,7 +365,7 @@ fn check_regression(current: &Json, baseline_path: &str) -> anyhow::Result<()> {
         .get("gated")
         .and_then(Json::as_arr)
         .context("baseline has no gated list")?;
-    let mut failed = false;
+    let mut offenders: Vec<String> = Vec::new();
     for g in gated {
         let name = g.as_str().context("gated entries must be speedup names")?;
         let want = base
@@ -277,16 +382,20 @@ fn check_regression(current: &Json, baseline_path: &str) -> anyhow::Result<()> {
                 "BENCH REGRESSION {name}: {got:.2}x < {floor:.2}x \
                  (baseline {want:.2}x, tolerance {tol})"
             );
-            failed = true;
+            offenders.push(format!("{name} = {got:.2}x (floor {floor:.2}x)"));
         } else {
             println!("bench gate {name}: {got:.2}x >= {floor:.2}x floor — ok");
         }
     }
-    if failed {
+    if !offenders.is_empty() {
+        // Name the offending ratios in the error itself: the CI step shows
+        // this line even when stderr interleaving buries the per-ratio
+        // report above.
         anyhow::bail!(
-            "bench regression gate failed against {baseline_path}; if the \
+            "bench regression gate failed against {baseline_path}: {}; if the \
              change is intentional, regenerate the baseline (its `regen` \
-             field holds the command) and commit it"
+             field holds the command) and commit it",
+            offenders.join(", ")
         );
     }
     Ok(())
@@ -347,8 +456,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // engine kernel matrix + regression gate
-    let (median_ns, speedup, steady_allocs) = engine_kernel_bench();
+    // engine kernel matrix + Anderson solver comparison + regression gate
+    let (median_ns, mut speedup, steady_allocs) = engine_kernel_bench();
+    let (aa_counts, aa_speedup) = picard_anderson_bench();
+    speedup.extend(aa_speedup);
     let report = obj(vec![
         ("bench", Json::from("runtime_micro")),
         // Emitted so a regenerated baseline keeps the same shape and
@@ -358,18 +469,31 @@ fn main() -> anyhow::Result<()> {
             Json::from(
                 "Bench-regression baseline. median_ns are machine-relative and \
                  informational only; CI gates the `gated` speedup ratios with \
-                 `tolerance` (0.8 = fail on a >20% regression). Only the \
-                 single-threaded ratios are gated (simd_over_fused for the hard \
-                 E-step, soft_simd_over_soft_scalar for the soft-EM sweep, \
-                 mstep_simd_over_scalar for the M-step reduction): both sides \
-                 of each are single-threaded, so the ratios are core-count \
-                 independent, and their floors equal the kernels' acceptance \
-                 targets. The pool-parallel ratios and the end-to-end \
-                 soft_solve medians depend on runner core count and are \
-                 recorded ungated. steady_state_allocs is the heap-allocation \
-                 count of one warm sweep set (0 is the contract; the hard \
-                 assert lives in tests/alloc_steady_state.rs). Refresh with \
-                 the `regen` command after intentional kernel changes.",
+                 `tolerance` (0.8 = fail on a >20% regression). Only \
+                 core-count-independent ratios are gated: the single-threaded \
+                 kernel ratios (simd_over_fused for the hard E-step, \
+                 soft_simd_over_soft_scalar for the soft-EM sweep, \
+                 mstep_simd_over_scalar for the M-step reduction), whose \
+                 floors equal the kernels' acceptance targets, and \
+                 picard_anderson_over_plain — the deterministic \
+                 sweeps-to-converge ratio of the Anderson-mixed vs plain \
+                 Picard solver over the bench's convergent soft_solve case \
+                 set (single-threaded single-block kernels, so the sweep \
+                 counts are a pure function of the committed code; its \
+                 1.66 * 0.8 = 1.33 floor is exactly the >= 25%-fewer-sweeps \
+                 acceptance target; the dimensionless sweep totals behind \
+                 it live under `counts`, not `median_ns`). The \
+                 pool-parallel ratios, the end-to-end soft_solve medians, \
+                 and the Anderson wall-clock speedup depend on the runner \
+                 and are recorded ungated. steady_state_allocs is the \
+                 heap-allocation count of one warm sweep set (0 is the \
+                 contract; the hard assert lives in \
+                 tests/alloc_steady_state.rs). Refresh with the `regen` \
+                 command after intentional kernel changes — but never \
+                 commit a picard_anderson_over_plain baseline below 1.66: \
+                 that silently drops the floor beneath the acceptance \
+                 target, and a measured ratio under 1.33 means the solver \
+                 regressed, not the gate.",
             ),
         ),
         (
@@ -383,6 +507,13 @@ fn main() -> anyhow::Result<()> {
         (
             "median_ns",
             obj(median_ns.iter().map(|&(name, v)| (name, Json::from(v))).collect()),
+        ),
+        // Dimensionless per-run tallies (the Anderson sweeps-to-converge
+        // totals behind picard_anderson_over_plain) — deliberately not
+        // under median_ns, whose unit is nanoseconds.
+        (
+            "counts",
+            obj(aa_counts.iter().map(|&(name, v)| (name, Json::from(v as usize))).collect()),
         ),
         (
             "speedup",
@@ -398,6 +529,7 @@ fn main() -> anyhow::Result<()> {
                 Json::from("simd_over_fused"),
                 Json::from("soft_simd_over_soft_scalar"),
                 Json::from("mstep_simd_over_scalar"),
+                Json::from("picard_anderson_over_plain"),
             ]),
         ),
         ("tolerance", Json::from(0.8)),

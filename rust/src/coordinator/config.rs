@@ -59,6 +59,16 @@ pub struct ExperimentConfig {
     pub budget_bytes: u64,
     /// k-means warm-start iterations (host Lloyd on pretrained weights)
     pub warmstart_iters: usize,
+    /// Anderson mixing depth for host fixed-point (Picard) solves — the
+    /// engine's implicit-method clustering. 0 = plain Picard (bit-identical
+    /// to the pre-Anderson engine); the default sits in the solver's 3–5
+    /// sweet spot. Hard-EM methods ignore it, and the built-in
+    /// subcommands' own host clustering (warm starts, PTQ, deploy
+    /// fallback) is hard-EM today — the knob rides every config-built
+    /// `ClusterSpec`, so it takes effect wherever an implicit-method spec
+    /// reaches the engine (library consumers, benches, future implicit
+    /// host paths), not in the stock CLI flows.
+    pub anderson_depth: usize,
     /// training-time augmentation recipe
     pub augment: Augment,
     /// which clustering-engine backend hosts warm starts / PTQ / packaging
@@ -89,6 +99,7 @@ impl Default for ExperimentConfig {
             methods: Method::QAT.to_vec(),
             budget_bytes: 2 << 30,
             warmstart_iters: 25,
+            anderson_depth: 4,
             augment: Augment::mnist(),
             backend: BackendKind::default(),
             sweep_threads: 1,
@@ -166,6 +177,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = usize_of("warmstart_iters") {
             self.warmstart_iters = v;
+        }
+        if let Some(v) = usize_of("anderson_depth") {
+            self.anderson_depth = v;
         }
         if let Some(v) = usize_of("sweep_threads") {
             self.sweep_threads = v.max(1);
@@ -287,6 +301,7 @@ model_tag = "resnet18w16"
 qat_steps = 7
 sweep_threads = 4
 loader_window = 6
+anderson_depth = 2
 tau = 0.001
 grid = [[2, 1], [16, 4]]
 methods = ["{}"]
@@ -303,6 +318,7 @@ backend = "{}"
         assert_eq!(c.qat_steps, 7);
         assert_eq!(c.sweep_threads, 4);
         assert_eq!(c.loader_window, 6);
+        assert_eq!(c.anderson_depth, 2);
         assert_eq!(c.tau, TauSchedule::Constant(1e-3));
         assert_eq!(c.grid, vec![(2, 1), (16, 4)]);
         assert_eq!(c.methods, vec![Method::Idkm]);

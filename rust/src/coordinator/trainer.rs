@@ -24,7 +24,7 @@ use crate::coordinator::config::ExperimentConfig;
 use crate::data::loader::{BatchPlan, SharedBatches};
 use crate::data::{self, loader, Batch, Dataset, Split};
 use crate::memory::{rss_bytes, Budget};
-use crate::quant::engine::{Engine, EngineScratch, Method};
+use crate::quant::engine::{ClusterSpec, Engine, EngineScratch, Method};
 use crate::quant::packing::{pack, CompressionReport};
 use crate::runtime::{ArtifactInfo, Executable, Runtime, Value, ValueRef};
 use crate::tensor::metrics::{Accuracy, Running, Series};
@@ -333,7 +333,11 @@ impl<'a> Trainer<'a> {
     /// (mirrors DKM's init-from-float-model practice), on the configured
     /// engine backend. One [`EngineScratch`] is shared across all layers so
     /// the per-layer kernel buffers are allocated once per cell, not once
-    /// per layer.
+    /// per layer. The spec is built from the experiment config, so every
+    /// solver knob — including `anderson_depth`, which only bites if the
+    /// warm-start method is ever switched to an implicit one — flows from
+    /// one place; `Method::Dkm` dispatches to the same Lloyd iteration the
+    /// old direct call ran, bit for bit.
     pub fn init_codebooks(
         &self,
         info: &ArtifactInfo,
@@ -343,17 +347,13 @@ impl<'a> Trainer<'a> {
     ) -> Vec<Tensor> {
         let mut rng = Rng::new(self.cfg.seed ^ 0xC0DE_B00C);
         let mut ws = EngineScratch::new();
+        let spec = ClusterSpec::new(Method::Dkm, k, d)
+            .with_max_iter(self.cfg.warmstart_iters)
+            .with_anderson(self.cfg.anderson_depth);
         info.clustered_indices()
             .into_iter()
             .map(|i| {
-                let r = self.engine.lloyd_with(
-                    params[i].data(),
-                    d,
-                    k,
-                    self.cfg.warmstart_iters,
-                    &mut rng,
-                    &mut ws,
-                );
+                let r = self.engine.cluster_with(&spec, params[i].data(), &mut rng, &mut ws);
                 // QAT artifacts bake a fixed (k, d) codebook shape, but the
                 // seeding guard clamps to m rows when a layer has fewer than
                 // k sub-vectors — pad by repeating the last center (the

@@ -129,7 +129,8 @@ pub fn package_checkpoint(
         let engine = crate::quant::engine::Engine::new(cfg.backend);
         let spec =
             crate::quant::engine::ClusterSpec::new(crate::quant::engine::Method::Ptq, k, d)
-                .with_max_iter(cfg.warmstart_iters);
+                .with_max_iter(cfg.warmstart_iters)
+                .with_anderson(cfg.anderson_depth);
         // One workspace shared by every fallback layer (scratches carry
         // capacity, never state — reuse across layers is exact).
         let mut ws = crate::quant::engine::EngineScratch::new();

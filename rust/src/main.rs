@@ -71,7 +71,9 @@ fn usage() -> String {
      common options: --artifacts DIR --runs DIR --config FILE --preset NAME\n\
                      --model TAG --seed N --steps N --pretrain-steps N --budget-mb N\n\
                      --backend scalar|blocked|simd (clustering engine backend)\n\
-                     --sweep-threads N (concurrent sweep cells; default 1)"
+                     --sweep-threads N (concurrent sweep cells; default 1)\n\
+                     --anderson-depth M (implicit-method host Picard solves; 0 = plain;\n\
+                                         hard-EM host clustering ignores it)"
         .to_string()
 }
 
@@ -89,6 +91,12 @@ fn shared(extra: Args) -> Args {
         .opt("budget-mb", "", "device memory budget in MiB")
         .opt("backend", "", "clustering engine backend: scalar | blocked | simd")
         .opt("sweep-threads", "", "concurrent sweep cells (default: preset, usually 1)")
+        .opt(
+            "anderson-depth",
+            "",
+            "Anderson mixing depth for implicit-method host Picard solves (0 = plain; \
+             the built-in subcommands' own host clustering is hard-EM, which ignores it)",
+        )
 }
 
 /// Parse argv and materialize (args, config, runtime).
@@ -123,6 +131,9 @@ fn setup(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig, Runtim
         args.get_opt_parsed("sweep-threads").map_err(|e| anyhow::anyhow!(e))?;
     if let Some(t) = sweep_threads {
         cfg.sweep_threads = t.max(1);
+    }
+    if let Some(a) = args.get_opt_parsed("anderson-depth").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.anderson_depth = a;
     }
     let runtime = Runtime::new(&cfg.artifacts_dir)?;
     Ok((args, cfg, runtime))
@@ -230,7 +241,7 @@ fn cmd_ptq(rest: &[String]) -> Result<()> {
         .map(|(spec, t)| (spec.name.clone(), t.clone(), spec.clustered))
         .collect();
     let (detail, quantized, rep) =
-        ptq::quantize_model(trainer.engine(), &layers, k, d, 50, cfg.seed)?;
+        ptq::quantize_model(trainer.engine(), &layers, k, d, 50, cfg.seed, cfg.anderson_depth)?;
     let acc = trainer.eval_float(&quantized)?;
     let facc = trainer.eval_float(&params)?;
     println!(

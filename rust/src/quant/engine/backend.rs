@@ -52,6 +52,7 @@ use super::simd::{
     assign_block_fused_simd, exp_f32, mstep_block_simd, soft_block_simd, CodebookTiles,
     SoftBlockAccum,
 };
+use super::solver::AndersonScratch;
 use super::BackendKind;
 use crate::quant::{cost_with_assignments as cost_block, dist2, kmeans::kmeanspp_init, nearest};
 use crate::util::rng::Rng;
@@ -84,6 +85,10 @@ pub struct EngineScratch {
     tiles: CodebookTiles,
     /// Codeword norms for the expanded-form fused E-step.
     cnorm: Vec<f32>,
+    /// Anderson mixing history for the fixed-point solver (Δf/Δg rings +
+    /// LS buffers); detached for the duration of a solve because the step
+    /// closure borrows the rest of the scratch.
+    anderson: AndersonScratch,
 }
 
 impl EngineScratch {
@@ -98,7 +103,21 @@ impl EngineScratch {
             cost_part: Vec::new(),
             tiles: CodebookTiles::empty(),
             cnorm: Vec::new(),
+            anderson: AndersonScratch::new(),
         }
+    }
+
+    /// Detach the Anderson history for a fixed-point solve: the solver
+    /// needs it mutably while the step closure mutably borrows the rest of
+    /// this scratch, so the engine moves it out for the solve's duration
+    /// (a struct move — no heap traffic) and puts it back with
+    /// [`Self::restore_anderson`] so the ring buffers keep amortizing.
+    pub(super) fn take_anderson(&mut self) -> AndersonScratch {
+        std::mem::take(&mut self.anderson)
+    }
+
+    pub(super) fn restore_anderson(&mut self, aa: AndersonScratch) {
+        self.anderson = aa;
     }
 
     /// Size the M-step total buffers for (k, d); contents are overwritten

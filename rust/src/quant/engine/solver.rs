@@ -1,4 +1,5 @@
-//! Host-side fixed-point solver for the paper's implicit clustering layer.
+//! Host-side fixed-point solver for the paper's implicit clustering layer,
+//! with optional Anderson acceleration.
 //!
 //! IDKM's forward pass is the Picard iteration C_{t+1} = F(C_t) where F is
 //! one soft-k-means sweep; the implicit/JFB backward only ever needs the
@@ -6,14 +7,107 @@
 //! story. This solver makes the iteration a first-class object: it runs any
 //! step map to tolerance and reports the convergence evidence (iteration
 //! count + residual series) that used to be an ad-hoc loop-local variable.
+//!
+//! # Anderson acceleration (type-II mixing over the codebook iterates)
+//!
+//! With depth `m_aa > 0` ([`FixedPointSolver::with_anderson`]) the solver
+//! augments the Picard step with Anderson mixing. Writing `g_t = F(x_t)`
+//! and the fixed-point residual `f_t = g_t − x_t`, it keeps a ring of the
+//! last `h ≤ m_aa` *differences*
+//!
+//! ```text
+//!   Δf_i = f_{t−i+1} − f_{t−i},   Δg_i = g_{t−i+1} − g_{t−i}
+//! ```
+//!
+//! and chooses mixing weights γ by the least-squares problem
+//!
+//! ```text
+//!   min_γ ‖ f_t − Σ_i γ_i Δf_i ‖₂        (h unknowns, h ≤ m_aa ≤ ~5)
+//! ```
+//!
+//! then proposes the mixed iterate `x_{t+1} = g_t − Σ_i γ_i Δg_i`. For an
+//! affine F the mixed iterate is exact once the history spans the residual
+//! space (on a scalar affine map the very first mixed step lands on the
+//! fixed point — see the unit tests); for the soft-EM sweep it shortens
+//! the geometric tail of the
+//! contraction without touching the kernel numerics at all: acceleration
+//! happens purely between sweeps, on the flattened codebook vectors.
+//!
+//! ## The least-squares solve: f64 normal equations
+//!
+//! The LS system is solved by forming the h×h Gram matrix ΔFᵀΔF in f64 and
+//! running Gaussian elimination with partial pivoting — no external linear
+//! algebra. Normal equations square the condition number, which is exactly
+//! why textbook advice prefers QR; at depth ≤ 5, however, the Gram matrix
+//! is at most 5×5, f64 carries ~15.9 significant digits against the f32
+//! history's ~7.2, and the safeguard below rejects any system whose pivots
+//! collapse — so the squared conditioning is far inside the f64 budget and
+//! the hand-rolled solve stays a dozen lines. (A Householder QR would only
+//! start paying for itself at depths no clustering workload uses.)
+//!
+//! ## Safeguard policy (when the solver falls back to plain Picard)
+//!
+//! Anderson mixing is an extrapolation and can misfire on the soft-EM map,
+//! which is only piecewise-smooth (attention rows saturate at the paper's
+//! tau). Every sweep the solver therefore takes the *plain* step `x_{t+1} =
+//! g_t` instead of the mixed one when any of the following holds, and each
+//! check is deterministic so trajectories are reproducible bit-for-bit:
+//!
+//! * **the previous step increased the residual** — `‖f_t‖ > ‖f_{t−1}‖`
+//!   means the last accepted step (mixed or not) overshot; the history is
+//!   cleared (restart) and this sweep is plain. On a genuinely divergent
+//!   map this fires every sweep, so the trajectory degrades to exactly the
+//!   plain Picard one (pinned by a unit test below).
+//! * **the LS system is ill-conditioned** — a pivot below `1e-12 ×
+//!   max|diag|` (or a non-finite Gram entry) aborts the solve.
+//! * **the weights are implausible** — non-finite γ or `Σ|γ_i| > 1e4`
+//!   (a wild extrapolation no contraction needs).
+//! * **budget exhaustion after a mixed step** — a mixed iterate is only
+//!   vetted by the *following* sweep's residual; when `max_iter` runs out
+//!   right after accepting one, the solver returns the last F-image `g_t`
+//!   (what plain Picard would return at the same budget) instead of the
+//!   untested extrapolation.
+//!
+//! `m_aa = 0` bypasses every Anderson code path and runs the exact plain
+//! loop, reproducing pre-Anderson trajectories bit-for-bit (golden and
+//! parity suites run in this mode; a proptest pins the equivalence).
+//!
+//! ## Memory
+//!
+//! All history lives in an [`AndersonScratch`] — `2·m_aa·n` f32 ring
+//! entries plus three n-vectors and the tiny f64 LS buffers — which the
+//! caller can reuse across solves ([`FixedPointSolver::solve_with`]; the
+//! engine stores one inside `EngineScratch`). Like every engine workspace
+//! it carries **capacity, never state**: ring validity is tracked by
+//! solve-local counters, so a dirty scratch cannot leak history between
+//! solves, and a warm re-solve performs no heap allocation beyond the
+//! solver's fixed prologue (ping-pong buffer + trace).
 
-/// Anderson-free Picard solver: iterate `step` until the update norm falls
-/// under `tol` or `max_iter` sweeps have run.
+/// Cap on the residual-trace pre-reservation: callers legitimately pass
+/// `max_iter = usize::MAX` ("run to tolerance"), and reserving that would
+/// abort on capacity overflow. Traces longer than this grow amortized.
+const TRACE_RESERVE_CAP: usize = 1024;
+
+/// Relative pivot floor for the normal-equations solve: a pivot below
+/// `COND_EPS × max|diag(Gram)|` marks the LS system ill-conditioned.
+const COND_EPS: f64 = 1e-12;
+
+/// Mixing-weight sanity cap: `Σ|γ_i|` beyond this is a wild extrapolation
+/// (a well-behaved contraction keeps γ at O(1)); fall back to plain.
+const GAMMA_CAP: f64 = 1e4;
+
+/// Picard solver with optional depth-`m_aa` Anderson mixing: iterate
+/// `step` until the update norm falls under `tol` or `max_iter` sweeps
+/// have run.
 #[derive(Debug, Clone, Copy)]
 pub struct FixedPointSolver {
     /// Convergence threshold on ‖C_{t+1} − C_t‖₂.
     pub tol: f32,
     pub max_iter: usize,
+    /// Anderson mixing depth (0 = plain Picard, bit-identical to the
+    /// pre-Anderson solver; the paper-range default for accelerated host
+    /// solves is 3–5, wired as `anderson_depth` in the experiment config).
+    pub m_aa: usize,
 }
 
 /// Convergence evidence from one solve.
@@ -21,9 +115,59 @@ pub struct FixedPointSolver {
 pub struct FixedPointTrace {
     /// Sweeps performed (counting the converging one).
     pub iterations: usize,
-    /// ‖C_{t+1} − C_t‖₂ per sweep.
+    /// ‖C_{t+1} − C_t‖₂ per sweep (the fixed-point residual ‖F(x_t) − x_t‖
+    /// — with Anderson mixing, at the *accepted* iterates).
     pub residuals: Vec<f64>,
     pub converged: bool,
+    /// Sweeps whose next iterate was Anderson-mixed (0 for plain Picard).
+    pub mixed_steps: usize,
+    /// Sweeps where a safeguard forced the plain step (residual-increase
+    /// restarts + rejected least-squares systems).
+    pub fallbacks: usize,
+}
+
+/// Reusable Anderson history storage: the Δf/Δg rings, the previous
+/// (f, g) pair, the current residual vector, and the f64 least-squares
+/// buffers. Carries capacity, never state — every solve re-derives ring
+/// validity from its own counters, so reuse across solves (or a dirty
+/// scratch from another shape) cannot leak history.
+#[derive(Debug, Default)]
+pub struct AndersonScratch {
+    /// Residual differences Δf, slot-major (`slot·n .. (slot+1)·n`).
+    df: Vec<f32>,
+    /// Update differences Δg, same layout.
+    dg: Vec<f32>,
+    /// Previous sweep's residual vector f_{t−1}.
+    prev_f: Vec<f32>,
+    /// Previous sweep's update g_{t−1}.
+    prev_g: Vec<f32>,
+    /// Current residual vector f_t.
+    f: Vec<f32>,
+    /// Gram matrix ΔFᵀΔF, row-major h×h (sized m_aa²).
+    gram: Vec<f64>,
+    /// Right-hand side ΔFᵀ f_t.
+    rhs: Vec<f64>,
+    /// Mixing weights γ.
+    gamma: Vec<f64>,
+}
+
+impl AndersonScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for problem size `n` and ring depth `depth`;
+    /// allocation-free once grown (contents are overwritten before use).
+    fn reset(&mut self, n: usize, depth: usize) {
+        self.df.resize(depth * n, 0.0);
+        self.dg.resize(depth * n, 0.0);
+        self.prev_f.resize(n, 0.0);
+        self.prev_g.resize(n, 0.0);
+        self.f.resize(n, 0.0);
+        self.gram.resize(depth * depth, 0.0);
+        self.rhs.resize(depth, 0.0);
+        self.gamma.resize(depth, 0.0);
+    }
 }
 
 /// Index of the first sweep where two residual traces differ bit-for-bit
@@ -42,8 +186,15 @@ pub fn first_residual_divergence(a: &[f64], b: &[f64]) -> Option<usize> {
 }
 
 impl FixedPointSolver {
+    /// Plain Picard solver (`m_aa = 0`).
     pub fn new(tol: f32, max_iter: usize) -> Self {
-        Self { tol, max_iter }
+        Self { tol, max_iter, m_aa: 0 }
+    }
+
+    /// Enable depth-`m_aa` Anderson mixing (0 keeps plain Picard).
+    pub fn with_anderson(mut self, m_aa: usize) -> Self {
+        self.m_aa = m_aa;
+        self
     }
 
     /// Run the iteration from `c0`, ping-ponging between two codebook
@@ -53,8 +204,123 @@ impl FixedPointSolver {
     /// The buffer pair and the residual trace are allocated once up front,
     /// so with an allocation-free step the whole solve performs zero heap
     /// allocations after this prologue — the engine's steady-state
-    /// contract (`tests/alloc_steady_state.rs`).
+    /// contract (`tests/alloc_steady_state.rs`). With `m_aa > 0` the
+    /// Anderson history is allocated here too; callers that solve
+    /// repeatedly should prefer [`Self::solve_with`] and a reused
+    /// [`AndersonScratch`].
+    ///
+    /// `max_iter = 0` returns `c0` untouched without invoking `step`.
     pub fn solve(
+        &self,
+        c0: Vec<f32>,
+        step: impl FnMut(&[f32], &mut [f32]),
+    ) -> (Vec<f32>, FixedPointTrace) {
+        if self.m_aa == 0 {
+            return self.solve_plain(c0, step);
+        }
+        self.solve_with(c0, &mut AndersonScratch::new(), step)
+    }
+
+    /// [`Self::solve`] drawing the Anderson history from a caller-owned
+    /// [`AndersonScratch`] (ignored when `m_aa = 0`, which runs the exact
+    /// plain loop). A warm scratch makes repeated solves allocation-free
+    /// beyond the per-solve ping-pong prologue.
+    pub fn solve_with(
+        &self,
+        c0: Vec<f32>,
+        aa: &mut AndersonScratch,
+        mut step: impl FnMut(&[f32], &mut [f32]),
+    ) -> (Vec<f32>, FixedPointTrace) {
+        if self.m_aa == 0 {
+            return self.solve_plain(c0, step);
+        }
+        let n = c0.len();
+        let depth = self.m_aa;
+        aa.reset(n, depth);
+        let mut cur = c0;
+        let mut next = vec![0.0f32; n];
+        let mut trace = FixedPointTrace::default();
+        trace.residuals.reserve(self.max_iter.min(TRACE_RESERVE_CAP));
+        // Ring state is solve-local (the scratch carries capacity only):
+        // slots `0..hist` are valid; `head` is the next slot to overwrite.
+        let mut hist = 0usize;
+        let mut head = 0usize;
+        let mut prev_residual = f64::INFINITY;
+        let mut have_prev = false;
+        let mut last_mixed = false;
+        for _ in 0..self.max_iter {
+            step(&cur, &mut next);
+            let mut rsum = 0.0f64;
+            for j in 0..n {
+                let fj = next[j] - cur[j];
+                aa.f[j] = fj;
+                rsum += (fj as f64) * (fj as f64);
+            }
+            let residual = rsum.sqrt();
+            trace.iterations += 1;
+            trace.residuals.push(residual);
+            if (residual as f32) < self.tol {
+                trace.converged = true;
+                std::mem::swap(&mut cur, &mut next);
+                break;
+            }
+            // Push (Δf, Δg) against the previous sweep into the ring.
+            if have_prev {
+                for j in 0..n {
+                    aa.df[head * n + j] = aa.f[j] - aa.prev_f[j];
+                    aa.dg[head * n + j] = next[j] - aa.prev_g[j];
+                }
+                head = (head + 1) % depth;
+                hist = (hist + 1).min(depth);
+            }
+            aa.prev_f.copy_from_slice(&aa.f);
+            aa.prev_g.copy_from_slice(&next);
+            // Safeguard: a residual increase means the last accepted step
+            // overshot — restart the history and take the plain step. NaN
+            // residuals compare false here and fall through to the LS
+            // guards, which reject non-finite systems.
+            let mut mixed = false;
+            if have_prev && residual > prev_residual {
+                hist = 0;
+                head = 0;
+                trace.fallbacks += 1;
+            } else if hist > 0 && solve_mixing(aa, n, hist) {
+                // Mixed iterate x_{t+1} = g_t − Σ γ_s Δg_s, accumulated in
+                // f64; `next` still holds g_t, `cur` (x_t) is overwritten.
+                for j in 0..n {
+                    let mut x = next[j] as f64;
+                    for s in 0..hist {
+                        x -= aa.gamma[s] * aa.dg[s * n + j] as f64;
+                    }
+                    cur[j] = x as f32;
+                }
+                mixed = true;
+                trace.mixed_steps += 1;
+            } else if hist > 0 {
+                trace.fallbacks += 1; // LS rejected (singular / wild γ)
+            }
+            if !mixed {
+                std::mem::swap(&mut cur, &mut next);
+            }
+            last_mixed = mixed;
+            prev_residual = residual;
+            have_prev = true;
+        }
+        // Budget exhaustion after a mixed step: the extrapolated iterate in
+        // `cur` was never residual-vetted (the overshoot safeguard only
+        // fires on the *next* sweep, which the budget just denied), so hand
+        // back the last F-image `g_t` still sitting in `next` — the same
+        // iterate plain Picard would return at this sweep budget — instead
+        // of an untested extrapolation that can be up to Σ|γ| away.
+        if !trace.converged && last_mixed {
+            std::mem::swap(&mut cur, &mut next);
+        }
+        (cur, trace)
+    }
+
+    /// The pre-Anderson loop, verbatim: `m_aa = 0` trajectories are
+    /// bit-identical to every solver release before mixing existed.
+    fn solve_plain(
         &self,
         c0: Vec<f32>,
         mut step: impl FnMut(&[f32], &mut [f32]),
@@ -62,7 +328,7 @@ impl FixedPointSolver {
         let mut cur = c0;
         let mut next = vec![0.0f32; cur.len()];
         let mut trace = FixedPointTrace::default();
-        trace.residuals.reserve(self.max_iter);
+        trace.residuals.reserve(self.max_iter.min(TRACE_RESERVE_CAP));
         for _ in 0..self.max_iter {
             step(&cur, &mut next);
             let residual = next
@@ -81,6 +347,82 @@ impl FixedPointSolver {
         }
         (cur, trace)
     }
+}
+
+/// Solve the depth-`hist` normal equations `(ΔFᵀΔF) γ = ΔFᵀ f` into
+/// `aa.gamma[..hist]`. Returns false (leaving γ unspecified) when the
+/// system is ill-conditioned or the weights fail the sanity cap — the
+/// caller then takes the plain Picard step. Slot order is the ring's
+/// physical order, fixed per sweep, so the f64 arithmetic is deterministic.
+fn solve_mixing(aa: &mut AndersonScratch, n: usize, hist: usize) -> bool {
+    let h = hist;
+    for i in 0..h {
+        for j in i..h {
+            let mut dot = 0.0f64;
+            for t in 0..n {
+                dot += aa.df[i * n + t] as f64 * aa.df[j * n + t] as f64;
+            }
+            aa.gram[i * h + j] = dot;
+            aa.gram[j * h + i] = dot;
+        }
+        let mut dot = 0.0f64;
+        for t in 0..n {
+            dot += aa.df[i * n + t] as f64 * aa.f[t] as f64;
+        }
+        aa.rhs[i] = dot;
+    }
+    let mut scale = 0.0f64;
+    for i in 0..h {
+        let d = aa.gram[i * h + i].abs();
+        if !d.is_finite() {
+            return false;
+        }
+        scale = scale.max(d);
+    }
+    if scale <= 0.0 {
+        return false; // all-zero history (e.g. a constant map)
+    }
+    // Gaussian elimination with partial pivoting on [gram | rhs].
+    for col in 0..h {
+        let mut piv = col;
+        for row in col + 1..h {
+            if aa.gram[row * h + col].abs() > aa.gram[piv * h + col].abs() {
+                piv = row;
+            }
+        }
+        let p = aa.gram[piv * h + col];
+        if !p.is_finite() || p.abs() <= COND_EPS * scale {
+            return false;
+        }
+        if piv != col {
+            for c in col..h {
+                aa.gram.swap(piv * h + c, col * h + c);
+            }
+            aa.rhs.swap(piv, col);
+        }
+        for row in col + 1..h {
+            let factor = aa.gram[row * h + col] / aa.gram[col * h + col];
+            for c in col..h {
+                aa.gram[row * h + c] -= factor * aa.gram[col * h + c];
+            }
+            aa.rhs[row] -= factor * aa.rhs[col];
+        }
+    }
+    for col in (0..h).rev() {
+        let mut v = aa.rhs[col];
+        for c in col + 1..h {
+            v -= aa.gram[col * h + c] * aa.gamma[c];
+        }
+        aa.gamma[col] = v / aa.gram[col * h + col];
+    }
+    let mut l1 = 0.0f64;
+    for g in &aa.gamma[..h] {
+        if !g.is_finite() {
+            return false;
+        }
+        l1 += g.abs();
+    }
+    l1 <= GAMMA_CAP
 }
 
 #[cfg(test)]
@@ -145,5 +487,173 @@ mod tests {
         assert!(trace.converged);
         assert_eq!(trace.iterations, 1);
         assert_eq!(c, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn max_iter_zero_returns_initial_codebook_without_stepping() {
+        for m_aa in [0usize, 4] {
+            let solver = FixedPointSolver::new(1e-6, 0).with_anderson(m_aa);
+            let mut calls = 0usize;
+            let (c, trace) = solver.solve(vec![1.5, -2.5], |_, _| calls += 1);
+            assert_eq!(calls, 0, "m_aa={m_aa}: step must not run");
+            assert_eq!(c, vec![1.5, -2.5], "m_aa={m_aa}");
+            assert_eq!(trace.iterations, 0, "m_aa={m_aa}");
+            assert!(trace.residuals.is_empty() && !trace.converged, "m_aa={m_aa}");
+        }
+    }
+
+    #[test]
+    fn huge_max_iter_does_not_reserve_the_trace() {
+        // `reserve(usize::MAX)` would abort with a capacity overflow; the
+        // trace reservation must be capped. Run-to-tolerance still works.
+        for m_aa in [0usize, 3] {
+            let solver = FixedPointSolver::new(1e-6, usize::MAX).with_anderson(m_aa);
+            let (c, trace) = solver.solve(vec![8.0], |c, out| out[0] = 0.5 * c[0] + 1.0);
+            assert!(trace.converged, "m_aa={m_aa}");
+            assert!((c[0] - 2.0).abs() < 1e-5, "m_aa={m_aa}: {c:?}");
+            assert!(trace.residuals.capacity() <= 2 * TRACE_RESERVE_CAP, "m_aa={m_aa}");
+        }
+    }
+
+    #[test]
+    fn anderson_zero_depth_is_bit_identical_to_plain() {
+        // with_anderson(0) and solve_with at depth 0 must run the exact
+        // plain loop, not an Anderson path that happens to agree.
+        let mk = |x: &[f32], out: &mut [f32]| {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = 0.7 * x[i] + 0.1 * x[(i + 1) % x.len()] + 0.3;
+            }
+        };
+        let c0 = vec![4.0f32, -3.0, 0.5];
+        let plain = FixedPointSolver::new(1e-6, 60);
+        let zero = plain.with_anderson(0);
+        let (ca, ta) = plain.solve(c0.clone(), mk);
+        let (cb, tb) = zero.solve_with(c0, &mut AndersonScratch::new(), mk);
+        assert_eq!(first_residual_divergence(&ta.residuals, &tb.residuals), None);
+        assert_eq!(ta.iterations, tb.iterations);
+        for (a, b) in ca.iter().zip(&cb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn anderson_solves_affine_map_on_the_second_mixed_sweep() {
+        // For a scalar affine map the depth-1 LS recovers the fixed point
+        // exactly: sweep 0 is plain, sweep 1 mixes to x* = 2, sweep 2
+        // observes residual 0 and converges. Plain Picard needs ~24 sweeps
+        // from x0 = 10 at this tolerance.
+        let step = |c: &[f32], out: &mut [f32]| out[0] = 0.5 * c[0] + 1.0;
+        let solver = FixedPointSolver::new(1e-6, 100).with_anderson(3);
+        let (c, trace) = solver.solve(vec![10.0], step);
+        assert!(trace.converged);
+        assert_eq!(trace.iterations, 3, "residuals: {:?}", trace.residuals);
+        assert_eq!(trace.mixed_steps, 1);
+        assert_eq!(c[0], 2.0);
+        let (_, plain) = FixedPointSolver::new(1e-6, 100).solve(vec![10.0], step);
+        assert!(plain.iterations > 3 * trace.iterations);
+    }
+
+    #[test]
+    fn anderson_accelerates_a_linear_contraction() {
+        // 4-dim affine contraction with coupled coordinates: depth-4 AA
+        // must converge in far fewer sweeps than plain Picard and to the
+        // same fixed point.
+        let step = |c: &[f32], out: &mut [f32]| {
+            // x' = A x + b with spectral radius ~0.9
+            out[0] = 0.8 * c[0] + 0.1 * c[1] + 1.0;
+            out[1] = 0.1 * c[0] + 0.8 * c[1] - 0.5 * c[2] + 0.2;
+            out[2] = 0.85 * c[2] + 0.05 * c[3] - 1.0;
+            out[3] = 0.2 * c[1] + 0.7 * c[3] + 0.4;
+        };
+        let c0 = vec![5.0f32, -5.0, 3.0, -3.0];
+        let (cp, tp) = FixedPointSolver::new(1e-5, 500).solve(c0.clone(), step);
+        let (ca, ta) = FixedPointSolver::new(1e-5, 500).with_anderson(4).solve(c0, step);
+        assert!(tp.converged && ta.converged);
+        assert!(
+            4 * ta.iterations <= 3 * tp.iterations,
+            "anderson {} vs plain {} sweeps",
+            ta.iterations,
+            tp.iterations
+        );
+        for (a, b) in cp.iter().zip(&ca) {
+            assert!((a - b).abs() < 1e-3, "{cp:?} vs {ca:?}");
+        }
+    }
+
+    #[test]
+    fn divergent_map_falls_back_to_plain_picard_exactly() {
+        // On x' = 2x + 1 the residual grows every sweep, so the restart
+        // safeguard must force the plain step each time: the Anderson
+        // trajectory is bit-identical to plain Picard, never worse.
+        let step = |c: &[f32], out: &mut [f32]| out[0] = 2.0 * c[0] + 1.0;
+        let (cp, tp) = FixedPointSolver::new(1e-9, 12).solve(vec![1.0], step);
+        let (ca, ta) = FixedPointSolver::new(1e-9, 12).with_anderson(4).solve(vec![1.0], step);
+        assert!(!tp.converged && !ta.converged);
+        assert_eq!(ta.mixed_steps, 0, "safeguard must suppress every mixed step");
+        assert!(ta.fallbacks > 0);
+        assert_eq!(first_residual_divergence(&tp.residuals, &ta.residuals), None);
+        assert_eq!(cp[0].to_bits(), ca[0].to_bits());
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_the_last_f_image_not_an_unvetted_mix() {
+        // max_iter = 2 on the scalar affine map: sweep 0 is plain (x = 6),
+        // sweep 1 accepts a mixed step (to exactly 2, the fixed point) but
+        // the budget ends before any sweep can vet it — the solver must
+        // hand back g_1 = F(6) = 4, the iterate plain Picard would return,
+        // not the unvalidated extrapolation.
+        let step = |c: &[f32], out: &mut [f32]| out[0] = 0.5 * c[0] + 1.0;
+        let solver = FixedPointSolver::new(1e-9, 2).with_anderson(2);
+        let (c, trace) = solver.solve(vec![10.0], step);
+        assert!(!trace.converged);
+        assert_eq!(trace.iterations, 2);
+        assert_eq!(trace.mixed_steps, 1);
+        assert_eq!(c[0], 4.0, "must return g_t, not the mixed iterate");
+        // one more sweep of budget lets the mix be vetted and converge
+        let (c3, t3) = FixedPointSolver::new(1e-9, 3).with_anderson(2).solve(vec![10.0], step);
+        assert!(t3.converged);
+        assert_eq!(c3[0], 2.0);
+    }
+
+    #[test]
+    fn degenerate_history_is_rejected_not_divided_by() {
+        // tol = 0 forces the solver past convergence on a constant map:
+        // once the iterate settles, Δf rows are zero, the Gram matrix is
+        // singular, and the LS guard must fall back to plain instead of
+        // emitting NaN weights that would corrupt the iterate.
+        let solver = FixedPointSolver { tol: 0.0, max_iter: 8, m_aa: 3 };
+        let (c, trace) = solver.solve(vec![7.0], |_, out| out[0] = 4.0);
+        assert!(!trace.converged);
+        assert_eq!(trace.iterations, 8);
+        assert_eq!(c[0], 4.0);
+        for (i, r) in trace.residuals.iter().enumerate() {
+            assert!(r.is_finite(), "sweep {i}: {r}");
+            if i > 0 {
+                assert_eq!(*r, 0.0, "sweep {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn anderson_scratch_reuse_is_state_free() {
+        // A dirty scratch (different shape, leftover history) must produce
+        // the same bits as a fresh one.
+        let step = |c: &[f32], out: &mut [f32]| {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = 0.6 * c[i] + 0.2 * c[(i + 1) % c.len()] + 0.5;
+            }
+        };
+        let solver = FixedPointSolver::new(1e-6, 200).with_anderson(3);
+        let mut dirty = AndersonScratch::new();
+        // poison: a different-shaped solve leaves stale history behind
+        let _ = solver.solve_with(vec![9.0f32; 7], &mut dirty, step);
+        let c0 = vec![1.0f32, -2.0, 3.0];
+        let (ca, ta) = solver.solve_with(c0.clone(), &mut dirty, step);
+        let (cb, tb) = solver.solve_with(c0, &mut AndersonScratch::new(), step);
+        assert_eq!(first_residual_divergence(&ta.residuals, &tb.residuals), None);
+        assert_eq!(ta.iterations, tb.iterations);
+        for (a, b) in ca.iter().zip(&cb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -27,7 +27,11 @@ pub struct PtqLayer {
 }
 
 /// Quantize a named set of layers (name, tensor, clustered?) in place:
-/// clustered layers are snapped to k-means codebooks, the rest pass through.
+/// clustered layers are snapped to k-means codebooks, the rest pass
+/// through. `anderson` is the config's Picard-solver mixing depth — the
+/// hard `Method::Ptq` path ignores it, but it rides the spec so a caller
+/// that switches the method to an implicit one inherits the accelerated
+/// solve (the config plumbing is exercised either way).
 pub fn quantize_model(
     engine: &Engine,
     layers: &[(String, Tensor, bool)],
@@ -35,9 +39,11 @@ pub fn quantize_model(
     d: usize,
     max_iter: usize,
     seed: u64,
+    anderson: usize,
 ) -> Result<(Vec<PtqLayer>, Vec<Tensor>, CompressionReport)> {
     let mut rng = Rng::new(seed ^ 0x5054_5100);
-    let spec = ClusterSpec::new(Method::Ptq, k, d).with_max_iter(max_iter);
+    let spec =
+        ClusterSpec::new(Method::Ptq, k, d).with_max_iter(max_iter).with_anderson(anderson);
     // One workspace across all layers: per-layer kernel buffers are
     // allocated once for the whole model, not once per layer.
     let mut ws = EngineScratch::new();
@@ -76,7 +82,7 @@ mod tests {
             ("b".to_string(), Tensor::new(&[4], vec![0.5; 4]), false),
         ];
         let engine = Engine::scalar();
-        let (detailed, out, report) = quantize_model(&engine, &layers, 4, 1, 20, 0).unwrap();
+        let (detailed, out, report) = quantize_model(&engine, &layers, 4, 1, 20, 0, 0).unwrap();
         assert_eq!(detailed.len(), 1);
         assert_eq!(out.len(), 2);
         // with k=4 and 4 distinct values the snap is exact
@@ -94,7 +100,7 @@ mod tests {
         let engine = Engine::scalar();
         let mut prev = f64::MAX;
         for k in [2usize, 4, 8, 16] {
-            let (d, _, _) = quantize_model(&engine, &layers, k, 1, 30, 7).unwrap();
+            let (d, _, _) = quantize_model(&engine, &layers, k, 1, 30, 7, 0).unwrap();
             assert!(d[0].result.cost <= prev + 1e-9, "k={k}");
             prev = d[0].result.cost;
         }
@@ -105,8 +111,8 @@ mod tests {
         let mut rng = Rng::new(9);
         let t = Tensor::from_fn(&[1024], |_| rng.normal_f32(0.0, 1.0));
         let layers = vec![("w".to_string(), t, true)];
-        let (ds, _, _) = quantize_model(&Engine::scalar(), &layers, 8, 1, 30, 11).unwrap();
-        let (db, _, _) = quantize_model(&Engine::blocked(), &layers, 8, 1, 30, 11).unwrap();
+        let (ds, _, _) = quantize_model(&Engine::scalar(), &layers, 8, 1, 30, 11, 0).unwrap();
+        let (db, _, _) = quantize_model(&Engine::blocked(), &layers, 8, 1, 30, 11, 0).unwrap();
         let (cs, cb) = (ds[0].result.cost, db[0].result.cost);
         // Same seed and seeding path; a floating-point near-tie can steer
         // Lloyd's to a different (equally good) local optimum, so compare

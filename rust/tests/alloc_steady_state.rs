@@ -82,4 +82,20 @@ fn steady_state_sweeps_do_not_allocate() {
     // the returned trace — a handful of allocations for 20 sweeps. Anything
     // per-sweep would add ≥ 20.
     assert!(delta <= 8, "solve prologue should be O(1) allocations, got {delta}");
+
+    // Anderson-accelerated solves through the engine's workspace entry
+    // point: the history rings live inside the shared EngineScratch, so a
+    // warm accelerated solve also costs only the fixed prologue — nothing
+    // per sweep, nothing per mixing step (Gram/γ buffers included).
+    let engine = idkm::quant::engine::Engine::simd();
+    let warm_anderson = |ws: &mut EngineScratch| {
+        let out = engine.soft_with(&w, d, &codebook, 5e-3, 0.0, 20, 4, ws);
+        assert_eq!(out.iterations, 20);
+        std::hint::black_box(out.cost);
+    };
+    warm_anderson(&mut ws);
+    let before = allocations();
+    warm_anderson(&mut ws);
+    let delta = allocations() - before;
+    assert!(delta <= 10, "anderson solve prologue should be O(1) allocations, got {delta}");
 }

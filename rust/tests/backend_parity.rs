@@ -29,7 +29,7 @@
 use std::cell::RefCell;
 
 use idkm::quant::dist2;
-use idkm::quant::engine::{BackendKind, Clusterer, Engine, EngineScratch};
+use idkm::quant::engine::{first_residual_divergence, BackendKind, Clusterer, Engine, EngineScratch};
 use idkm::util::proptest::{check, ClusterCase};
 use idkm::util::rng::Rng;
 
@@ -156,6 +156,47 @@ fn dirty_scratch_reuse_is_state_free() {
             let c_f = engine.backend().cost(&case.w, d, &codebook, &a_f, &mut fresh);
             let c_d = engine.backend().cost(&case.w, d, &codebook, &a_d, &mut dirty);
             c_f.to_bits() == c_d.to_bits()
+        });
+    }
+}
+
+#[test]
+fn anderson_depth_zero_is_bit_identical_to_plain_picard() {
+    // The tentpole's compatibility contract, on the full degenerate
+    // ClusterCase matrix (k > m, duplicate points, constant data, tau
+    // extremes) and every backend: `anderson = 0` through the
+    // scratch-carrying soft entry point must reproduce the plain Picard
+    // solve bit-for-bit — residual traces, iteration counts, codebooks.
+    // An interleaved depth-3 solve on the SAME dirty scratch must leave no
+    // history behind that could shift the next plain solve by a bit.
+    let gen = ClusterCase { max_rows: 64 };
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        let dirty = RefCell::new(EngineScratch::new());
+        check(&format!("anderson_zero_plain_{kind}"), 30, &gen, |case| {
+            let d = case.d;
+            let codebook = engine.backend().seed(&case.w, d, case.k, &mut Rng::new(41));
+            let mut ws = dirty.borrow_mut();
+            let reference = engine.soft(&case.w, d, &codebook, case.tau, 1e-5, 25);
+            let plain = engine.soft_with(&case.w, d, &codebook, case.tau, 1e-5, 25, 0, &mut ws);
+            if plain.iterations != reference.iterations
+                || first_residual_divergence(&plain.residuals, &reference.residuals).is_some()
+                || bits(&plain.codebook) != bits(&reference.codebook)
+            {
+                return false;
+            }
+            // A mixed solve on the same scratch (degenerate inputs
+            // included — NaN logits at tau = 1e-30 must hit the LS guards,
+            // never a panic) ...
+            let mixed = engine.soft_with(&case.w, d, &codebook, case.tau, 1e-5, 25, 3, &mut ws);
+            if mixed.residuals.len() != mixed.iterations {
+                return false;
+            }
+            // ... and the scratch stays state-free afterwards.
+            let again = engine.soft_with(&case.w, d, &codebook, case.tau, 1e-5, 25, 0, &mut ws);
+            again.iterations == reference.iterations
+                && first_residual_divergence(&again.residuals, &reference.residuals).is_none()
+                && bits(&again.codebook) == bits(&reference.codebook)
         });
     }
 }
