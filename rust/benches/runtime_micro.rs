@@ -10,6 +10,9 @@
 //!   fixed-point solver with a reused workspace) plus the steady-state
 //!   allocation count per sweep (this binary registers the counting
 //!   allocator; 0 is the contract)
+//! * deploy bundle path: eager load+hydrate vs the lazy `BundleReader`
+//!   cold start, pool-parallel hydrate fan-out, and the hydration LRU's
+//!   miss/hit cost
 //! * executor round-trip latency (smallest eval artifact, steady state)
 //! * host->literal staging throughput for a resnet-sized parameter set
 //! * data-loader batch synthesis throughput (SynthMNIST / SynthCIFAR)
@@ -353,6 +356,104 @@ fn picard_anderson_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)
     )
 }
 
+/// Deploy-bundle path (the V2 block format rung): eager whole-file
+/// load+hydrate vs the lazy reader's single-layer cold start, full-model
+/// hydrate single-threaded vs fanned over the pool, and the hydration
+/// LRU's miss vs hit cost on the same layer set.
+///
+/// Gating policy mirrors the kernel benches: only ratios that are
+/// core-count independent by construction get gated —
+/// `lazy_first_layer_over_eager_load` (same thread does strictly less I/O
+/// and decode work: one block vs sixteen) and `hydrate_lru_hit_over_miss`
+/// (a map lookup vs a full bit-unpack decode). The pool-fan-out ratio
+/// scales with runner cores and is recorded ungated.
+fn deploy_bundle_bench() -> anyhow::Result<(Vec<(&'static str, f64)>, Vec<(&'static str, f64)>)> {
+    use idkm::deploy::{format, BundleReader, CompressedModel, HydratedLru};
+    use idkm::util::threadpool::Pool;
+    use std::collections::BTreeMap;
+
+    const LAYERS: usize = 16;
+    const ELEMS: usize = 16_384;
+    println!("-- deploy bundle: lazy reader + hydration cache ({LAYERS} layers x {ELEMS} f32) --");
+    let mut rng = Rng::new(23);
+    let mut layers = Vec::new();
+    let mut cbs = BTreeMap::new();
+    for i in 0..LAYERS {
+        let name = format!("layer{i:02}");
+        let t = Tensor::from_fn(&[ELEMS], |_| rng.normal_f32(0.0, 1.0));
+        let km = lloyd(t.data(), 1, 16, 10, &mut rng);
+        cbs.insert(name.clone(), (km.codebook, 16usize, 1usize));
+        layers.push((name, t, true));
+    }
+    let model = CompressedModel::build(&layers, &cbs)?;
+    let path = std::env::temp_dir().join("idkm_bench_bundle/model.idkm");
+    model.save(&path)?;
+
+    let iters = 20;
+    let t_eager = time_median("bundle eager load + hydrate", iters, || {
+        let m = CompressedModel::load(&path).unwrap();
+        std::hint::black_box(m.hydrate().unwrap());
+    });
+    let t_lazy = time_median("bundle lazy open + first layer", iters, || {
+        let mut r = BundleReader::open(&path).unwrap();
+        std::hint::black_box(r.layer(0).unwrap());
+    });
+    // Reuse one reader for the full-hydrate comparison: both variants pay
+    // identical per-call seek+read I/O, so the delta is decode fan-out.
+    let mut reader = BundleReader::open(&path)?;
+    let t_h1 = time_median("bundle hydrate_all (1 thread)", iters, || {
+        std::hint::black_box(reader.hydrate_all().unwrap());
+    });
+    let pool = Pool::with_name(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(LAYERS),
+        "idkm-bench-hydrate",
+    );
+    let t_hp = time_median("bundle hydrate_all_on (pool)", iters, || {
+        std::hint::black_box(reader.hydrate_all_on(&pool).unwrap());
+    });
+
+    // LRU miss vs hit on pre-read raw layers, isolating decode-vs-lookup
+    // from file I/O. A local cache keeps the process-global one untouched.
+    let raws = reader.read_all_raw()?;
+    let id = reader.id().to_string();
+    let cache = HydratedLru::new(1 << 30);
+    let hydrate_cached = |c: &HydratedLru| {
+        for l in &raws {
+            let t = c
+                .get_or_try_insert_with(&id, &l.name, || format::decode_layer(l))
+                .unwrap();
+            std::hint::black_box(t);
+        }
+    };
+    let t_miss = time_median("bundle hydrate, LRU cold (miss)", iters, || {
+        cache.clear();
+        hydrate_cached(&cache);
+    });
+    // time_median's warm-up pass leaves the cache filled, so every timed
+    // iteration here is all hits.
+    let t_hit = time_median("bundle hydrate, LRU warm (hit)", iters, || {
+        hydrate_cached(&cache);
+    });
+
+    let speedup = vec![
+        ("lazy_first_layer_over_eager_load", t_eager / t_lazy),
+        ("hydrate_pool_over_hydrate_1t", t_h1 / t_hp),
+        ("hydrate_lru_hit_over_miss", t_miss / t_hit),
+    ];
+    for (name, s) in &speedup {
+        println!("bundle speedup {name:<33} {s:>6.2}x");
+    }
+    let median_ns = vec![
+        ("bundle_eager_load_hydrate", t_eager * 1e9),
+        ("bundle_lazy_first_layer", t_lazy * 1e9),
+        ("bundle_hydrate_1t", t_h1 * 1e9),
+        ("bundle_hydrate_pool", t_hp * 1e9),
+        ("bundle_lru_miss", t_miss * 1e9),
+        ("bundle_lru_hit", t_hit * 1e9),
+    ];
+    Ok((median_ns, speedup))
+}
+
 /// Compare `current` speedups against the committed baseline; Err on any
 /// gated ratio regressing past the baseline's tolerance.
 fn check_regression(current: &Json, baseline_path: &str) -> anyhow::Result<()> {
@@ -456,10 +557,14 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // engine kernel matrix + Anderson solver comparison + regression gate
-    let (median_ns, mut speedup, steady_allocs) = engine_kernel_bench();
+    // engine kernel matrix + Anderson solver comparison + deploy bundle
+    // path + regression gate
+    let (mut median_ns, mut speedup, steady_allocs) = engine_kernel_bench();
     let (aa_counts, aa_speedup) = picard_anderson_bench();
     speedup.extend(aa_speedup);
+    let (bundle_ns, bundle_speedup) = deploy_bundle_bench()?;
+    median_ns.extend(bundle_ns);
+    speedup.extend(bundle_speedup);
     let report = obj(vec![
         ("bench", Json::from("runtime_micro")),
         // Emitted so a regenerated baseline keeps the same shape and
@@ -482,10 +587,15 @@ fn main() -> anyhow::Result<()> {
                  counts are a pure function of the committed code; its \
                  1.66 * 0.8 = 1.33 floor is exactly the >= 25%-fewer-sweeps \
                  acceptance target; the dimensionless sweep totals behind \
-                 it live under `counts`, not `median_ns`). The \
-                 pool-parallel ratios, the end-to-end soft_solve medians, \
-                 and the Anderson wall-clock speedup depend on the runner \
-                 and are recorded ungated. steady_state_allocs is the \
+                 it live under `counts`, not `median_ns`), plus two \
+                 deploy-bundle ratios that are core-count independent by \
+                 construction: lazy_first_layer_over_eager_load (one block \
+                 read+decoded vs all sixteen on the same thread) and \
+                 hydrate_lru_hit_over_miss (a cache lookup vs a full \
+                 bit-unpack decode). The pool-parallel ratios (including \
+                 hydrate_pool_over_hydrate_1t), the end-to-end soft_solve \
+                 medians, and the Anderson wall-clock speedup depend on \
+                 the runner and are recorded ungated. steady_state_allocs is the \
                  heap-allocation count of one warm sweep set (0 is the \
                  contract; the hard assert lives in \
                  tests/alloc_steady_state.rs). Refresh with the `regen` \
@@ -530,6 +640,8 @@ fn main() -> anyhow::Result<()> {
                 Json::from("soft_simd_over_soft_scalar"),
                 Json::from("mstep_simd_over_scalar"),
                 Json::from("picard_anderson_over_plain"),
+                Json::from("lazy_first_layer_over_eager_load"),
+                Json::from("hydrate_lru_hit_over_miss"),
             ]),
         ),
         ("tolerance", Json::from(0.8)),

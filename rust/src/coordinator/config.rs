@@ -81,6 +81,10 @@ pub struct ExperimentConfig {
     /// window re-renders deterministically, so this only trades memory for
     /// re-render work)
     pub loader_window: usize,
+    /// capacity of the deploy-path hydration LRU in MiB of *decoded*
+    /// tensor bytes (`deploy::cache::HydratedLru`; 0 disables caching so
+    /// every bundle evaluation re-decodes)
+    pub hydrate_cache_mb: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -104,6 +108,7 @@ impl Default for ExperimentConfig {
             backend: BackendKind::default(),
             sweep_threads: 1,
             loader_window: 8,
+            hydrate_cache_mb: 256,
         }
     }
 }
@@ -187,6 +192,9 @@ impl ExperimentConfig {
         if let Some(v) = usize_of("loader_window") {
             self.loader_window = v.max(2);
         }
+        if let Some(v) = usize_of("hydrate_cache_mb") {
+            self.hydrate_cache_mb = v;
+        }
         if let Some(v) = get("budget_bytes").and_then(toml::Value::as_i64) {
             self.budget_bytes = v as u64;
         }
@@ -250,6 +258,12 @@ impl ExperimentConfig {
         format!("{}_eval_float", self.model_tag)
     }
 
+    /// `hydrate_cache_mb` in bytes (saturating: a silly TOML value must
+    /// not wrap into a tiny capacity).
+    pub fn hydrate_cache_bytes(&self) -> usize {
+        self.hydrate_cache_mb.saturating_mul(1 << 20)
+    }
+
     pub fn eval_quant_artifact(&self, k: usize, d: usize) -> String {
         format!("{}_eval_quant_k{k}d{d}", self.model_tag)
     }
@@ -302,6 +316,7 @@ qat_steps = 7
 sweep_threads = 4
 loader_window = 6
 anderson_depth = 2
+hydrate_cache_mb = 64
 tau = 0.001
 grid = [[2, 1], [16, 4]]
 methods = ["{}"]
@@ -319,6 +334,8 @@ backend = "{}"
         assert_eq!(c.sweep_threads, 4);
         assert_eq!(c.loader_window, 6);
         assert_eq!(c.anderson_depth, 2);
+        assert_eq!(c.hydrate_cache_mb, 64);
+        assert_eq!(c.hydrate_cache_bytes(), 64 << 20);
         assert_eq!(c.tau, TauSchedule::Constant(1e-3));
         assert_eq!(c.grid, vec![(2, 1), (16, 4)]);
         assert_eq!(c.methods, vec![Method::Idkm]);

@@ -1,0 +1,283 @@
+//! Bounded hydration cache: decoded layer tensors keyed by
+//! `(bundle id, layer name)`.
+//!
+//! Decoding a clustered layer (bit-unpack or Huffman + codebook gather) is
+//! pure CPU work repeated identically on every touch, so the infer path
+//! funnels through this LRU: a second `evaluate_bundle` over the same
+//! bundle — or a packaging round-trip that re-reads what it just wrote —
+//! costs cache hits instead of re-decodes. Capacity is measured in
+//! **decoded bytes** (`4 × element count`), because that is the resident
+//! cost being bounded; the configured knob is `hydrate_cache_mb` /
+//! `--hydrate-cache-mb`.
+//!
+//! Semantics:
+//! * Entries are `Arc<Tensor>` — eviction never invalidates a tensor a
+//!   caller still holds, it only drops the cache's reference.
+//! * An entry larger than the whole capacity is decode-through: returned
+//!   to the caller, never cached (capacity 0 therefore disables caching).
+//! * Eviction is least-recently-used via a monotonic touch stamp; the
+//!   victim scan is O(entries), which is fine at per-layer granularity
+//!   (entry counts are tens, not millions).
+//! * [`HydratedLru::get_or_try_insert_with`] runs the decode closure
+//!   outside the lock; two racing fill attempts may both decode, and the
+//!   later insert wins — wasted work, never wrong bytes. Errors propagate
+//!   and are not cached.
+//!
+//! The bundle-id half of the key comes from `BundleReader::id()`, which
+//! hashes the header/table, so rewriting a bundle in place changes the key
+//! and stale entries simply age out.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// Default capacity of the process-wide cache: 256 MiB of decoded f32s.
+pub const DEFAULT_CAPACITY_BYTES: usize = 256 << 20;
+
+type Key = (String, String);
+
+struct Entry {
+    tensor: Arc<Tensor>,
+    bytes: usize,
+    stamp: u64,
+}
+
+struct Inner {
+    capacity: usize,
+    used: usize,
+    tick: u64,
+    map: HashMap<Key, Entry>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe LRU of hydrated layer tensors, bounded in decoded bytes.
+pub struct HydratedLru {
+    inner: Mutex<Inner>,
+}
+
+impl HydratedLru {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                capacity: capacity_bytes,
+                used: 0,
+                tick: 0,
+                map: HashMap::new(),
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// The process-wide instance the infer path uses.
+    pub fn global() -> &'static HydratedLru {
+        static GLOBAL: OnceLock<HydratedLru> = OnceLock::new();
+        GLOBAL.get_or_init(|| HydratedLru::new(DEFAULT_CAPACITY_BYTES))
+    }
+
+    /// Re-bound the cache, evicting LRU-first if it now overflows.
+    pub fn set_capacity(&self, capacity_bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.capacity = capacity_bytes;
+        evict_to_fit(&mut g, 0);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses)` counters since construction (or last `clear`).
+    pub fn stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses)
+    }
+
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.used = 0;
+        g.hits = 0;
+        g.misses = 0;
+    }
+
+    /// Fetch and touch (refreshes LRU recency).
+    pub fn get(&self, bundle: &str, layer: &str) -> Option<Arc<Tensor>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(&(bundle.to_string(), layer.to_string())) {
+            Some(e) => {
+                e.stamp = tick;
+                g.hits += 1;
+                Some(Arc::clone(&e.tensor))
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (replacing any previous entry for the key), evicting
+    /// LRU-first to fit. Oversized tensors are silently not cached.
+    pub fn insert(&self, bundle: &str, layer: &str, tensor: Arc<Tensor>) {
+        let bytes = tensor.data().len() * 4;
+        let mut g = self.inner.lock().unwrap();
+        if bytes > g.capacity {
+            return;
+        }
+        let key = (bundle.to_string(), layer.to_string());
+        if let Some(old) = g.map.remove(&key) {
+            g.used -= old.bytes;
+        }
+        evict_to_fit(&mut g, bytes);
+        g.tick += 1;
+        let stamp = g.tick;
+        g.used += bytes;
+        g.map.insert(key, Entry { tensor, bytes, stamp });
+    }
+
+    /// Cached fetch with a fallible fill. The decode closure runs outside
+    /// the lock; its error is returned uncached.
+    pub fn get_or_try_insert_with(
+        &self,
+        bundle: &str,
+        layer: &str,
+        decode: impl FnOnce() -> Result<Tensor>,
+    ) -> Result<Arc<Tensor>> {
+        if let Some(t) = self.get(bundle, layer) {
+            return Ok(t);
+        }
+        let t = Arc::new(decode()?);
+        self.insert(bundle, layer, Arc::clone(&t));
+        Ok(t)
+    }
+}
+
+fn evict_to_fit(g: &mut Inner, incoming: usize) {
+    while g.used.saturating_add(incoming) > g.capacity && !g.map.is_empty() {
+        let victim = g
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(k, _)| k.clone())
+            .unwrap();
+        let e = g.map.remove(&victim).unwrap();
+        g.used -= e.bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(elems: usize, fill: f32) -> Arc<Tensor> {
+        Arc::new(Tensor::new(&[elems], vec![fill; elems]))
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let c = HydratedLru::new(1 << 20);
+        assert!(c.get("b", "l").is_none());
+        c.insert("b", "l", tensor(8, 1.0));
+        assert_eq!(c.get("b", "l").unwrap().data()[0], 1.0);
+        assert_eq!(c.stats(), (1, 1));
+        // same layer name under another bundle id is a distinct key
+        assert!(c.get("other", "l").is_none());
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        // room for exactly two 8-elem (32-byte) tensors
+        let c = HydratedLru::new(64);
+        c.insert("b", "a", tensor(8, 1.0));
+        c.insert("b", "b", tensor(8, 2.0));
+        // touch "a" so "b" is the LRU victim
+        assert!(c.get("b", "a").is_some());
+        c.insert("b", "c", tensor(8, 3.0));
+        assert!(c.get("b", "a").is_some(), "recently used entry evicted");
+        assert!(c.get("b", "b").is_none(), "LRU entry survived");
+        assert!(c.get("b", "c").is_some());
+        assert_eq!(c.used_bytes(), 64);
+    }
+
+    #[test]
+    fn oversized_entry_is_decode_through() {
+        let c = HydratedLru::new(16);
+        c.insert("b", "big", tensor(8, 1.0)); // 32 bytes > 16
+        assert_eq!(c.len(), 0);
+        assert!(c.get("b", "big").is_none());
+    }
+
+    #[test]
+    fn capacity_zero_disables_caching() {
+        let c = HydratedLru::new(0);
+        let t = c
+            .get_or_try_insert_with("b", "l", || Ok(Tensor::new(&[4], vec![1.0; 4])))
+            .unwrap();
+        assert_eq!(t.data().len(), 4);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn get_or_try_insert_fills_once_and_propagates_errors() {
+        let c = HydratedLru::new(1 << 20);
+        let mut calls = 0;
+        for _ in 0..3 {
+            let t = c
+                .get_or_try_insert_with("b", "l", || {
+                    calls += 1;
+                    Ok(Tensor::new(&[4], vec![2.0; 4]))
+                })
+                .unwrap();
+            assert_eq!(t.data()[0], 2.0);
+        }
+        assert_eq!(calls, 1, "decode ran on every fetch");
+        let err = c.get_or_try_insert_with("b", "bad", || anyhow::bail!("corrupt"));
+        assert!(err.is_err());
+        // the failure was not cached: a later good decode succeeds
+        let ok = c.get_or_try_insert_with("b", "bad", || Ok(Tensor::new(&[1], vec![0.0])));
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_down() {
+        let c = HydratedLru::new(128);
+        for (i, name) in ["a", "b", "c", "d"].iter().enumerate() {
+            c.insert("b", name, tensor(8, i as f32));
+        }
+        assert_eq!(c.len(), 4);
+        c.set_capacity(64);
+        assert_eq!(c.len(), 2);
+        assert!(c.used_bytes() <= 64);
+        // the two most recently inserted survive
+        assert!(c.get("b", "c").is_some());
+        assert!(c.get("b", "d").is_some());
+    }
+
+    #[test]
+    fn replacing_an_entry_adjusts_used_bytes() {
+        let c = HydratedLru::new(1 << 20);
+        c.insert("b", "l", tensor(8, 1.0));
+        c.insert("b", "l", tensor(4, 2.0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 16);
+        assert_eq!(c.get("b", "l").unwrap().data()[0], 2.0);
+    }
+}

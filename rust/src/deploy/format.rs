@@ -1,13 +1,35 @@
-//! On-disk compressed model bundle.
+//! On-disk compressed model bundle: layout constants, the layer model, and
+//! the writers for both format versions.
 //!
-//! Layout: `IDKM` magic, u32 version, u64 JSON header length, JSON header
-//! describing every layer (name, shape, encoding, offsets), then the
-//! payload: codebooks (f32 LE), packed or Huffman-coded address streams,
-//! and raw f32 layers. Offsets are payload-relative; everything is
-//! byte-exact reproducible.
+//! Two layouts share the `IDKM` magic + u32 LE version prefix:
+//!
+//! * **V1 (legacy, monolithic)** — u64 LE header length, one JSON header
+//!   describing every layer (name, shape, encoding, payload-relative
+//!   offsets), then a single concatenated payload. Readable only by
+//!   slurping the whole header; still written by [`CompressedModel::save_v1`]
+//!   and loaded byte-for-byte by the versioned reader.
+//! * **V2 (current, block-structured)** — u64 LE block count, an LE block
+//!   table of `(header_len, payload_len)` u64 pairs (one per layer), then
+//!   the blocks themselves: per-layer JSON meta followed by that layer's
+//!   payload (codebook f32 LE ‖ address bytes ‖ Huffman code lengths).
+//!   Every block is independently decodable from its table entry alone,
+//!   which is what makes `deploy::reader::BundleReader` lazy: open parses
+//!   16 bytes + the table, and `layer(i)` seeks straight to block `i`.
+//!
+//! Versioning policy for V3+: bump [`FORMAT_V2`]'s successor constant here
+//! (this module is the only place a version literal may appear — CI greps
+//! for strays), keep every older branch in `BundleReader::from_reader`
+//! alive, and never change the meaning of existing fields — add new
+//! meta keys instead (readers ignore unknown keys). A reader that sees a
+//! version it does not know must fail loudly, not guess.
+//!
+//! Decoding corrupt bytes must never panic or abort: every length is
+//! validated against the actual byte buffers before any allocation sized
+//! from it (see [`decode_layer`]); `tests/bundle_fuzz.rs` byte-flips whole
+//! bundles to hold the line.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -16,8 +38,13 @@ use crate::quant::packing::{self, PackedLayer};
 use crate::tensor::Tensor;
 use crate::util::json::{obj, Json};
 
-const MAGIC: &[u8; 4] = b"IDKM";
-const VERSION: u32 = 1;
+/// Bundle magic. Exported so tests and tools name it instead of re-typing
+/// the literal (the CI grep guard rejects `b"IDKM"` outside this file).
+pub const MAGIC: &[u8; 4] = b"IDKM";
+/// Legacy monolithic-header layout.
+pub const FORMAT_V1: u32 = 1;
+/// Block-structured layout (current writer default).
+pub const FORMAT_V2: u32 = 2;
 
 /// How a layer's weights are encoded in the bundle.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,7 +58,7 @@ pub enum Encoding {
 }
 
 /// One layer in the bundle.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
     pub name: String,
     pub shape: Vec<usize>,
@@ -48,6 +75,127 @@ pub struct Layer {
 #[derive(Debug, Clone, Default)]
 pub struct CompressedModel {
     pub layers: Vec<Layer>,
+}
+
+/// `(tag, k, d)` for serializing an encoding.
+pub(crate) fn encoding_parts(e: &Encoding) -> (&'static str, usize, usize) {
+    match *e {
+        Encoding::Raw => ("raw", 0, 0),
+        Encoding::Packed { k, d } => ("packed", k, d),
+        Encoding::Huffman { k, d } => ("huffman", k, d),
+    }
+}
+
+/// Inverse of [`encoding_parts`] for the reader.
+pub(crate) fn parse_encoding(tag: Option<&str>, k: usize, d: usize) -> Result<Encoding> {
+    match tag {
+        Some("raw") => Ok(Encoding::Raw),
+        Some("packed") => Ok(Encoding::Packed { k, d }),
+        Some("huffman") => Ok(Encoding::Huffman { k, d }),
+        other => bail!("unknown encoding {other:?}"),
+    }
+}
+
+/// Element count of a shape, refusing overflow (a corrupt meta can claim
+/// astronomically large dims; sizing a Vec from the wrapped product would
+/// abort the process instead of returning an error).
+fn checked_numel(name: &str, shape: &[usize]) -> Result<usize> {
+    shape
+        .iter()
+        .try_fold(1usize, |acc, &s| acc.checked_mul(s))
+        .with_context(|| format!("layer {name}: shape {shape:?} element count overflows"))
+}
+
+/// For clustered encodings: validate (k, d) against the shape and the
+/// codebook actually present, returning the sub-vector count m. Everything
+/// downstream (bit math, codebook indexing) relies on these invariants.
+fn check_clustered(layer: &Layer, k: usize, d: usize, n: usize) -> Result<usize> {
+    if k == 0 || d == 0 {
+        bail!("layer {}: invalid k={k} d={d}", layer.name);
+    }
+    if n % d != 0 {
+        bail!("layer {}: {n} elements not divisible by d={d}", layer.name);
+    }
+    let kd = k
+        .checked_mul(d)
+        .with_context(|| format!("layer {}: k*d overflows", layer.name))?;
+    if layer.codebook.len() != kd {
+        bail!(
+            "layer {}: codebook has {} entries, k*d wants {kd}",
+            layer.name,
+            layer.codebook.len()
+        );
+    }
+    Ok(n / d)
+}
+
+/// Decode one layer's stored bytes back to a full-shaped f32 tensor. This
+/// is the single decompression path — eager [`CompressedModel::hydrate`],
+/// the lazy reader, and the hydration cache all funnel through it — and it
+/// is total over corrupt input: malformed lengths, out-of-range cluster
+/// addresses, and overflowing shapes come back as errors, never panics.
+pub fn decode_layer(layer: &Layer) -> Result<Tensor> {
+    let n = checked_numel(&layer.name, &layer.shape)?;
+    let data: Vec<f32> = match &layer.encoding {
+        Encoding::Raw => {
+            let want = n
+                .checked_mul(4)
+                .with_context(|| format!("layer {}: byte count overflows", layer.name))?;
+            if layer.bytes.len() != want {
+                bail!(
+                    "layer {}: raw payload is {} bytes, shape wants {want}",
+                    layer.name,
+                    layer.bytes.len()
+                );
+            }
+            layer
+                .bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()
+        }
+        Encoding::Packed { k, d } => {
+            let m = check_clustered(layer, *k, *d, n)?;
+            let pl = PackedLayer {
+                k: *k,
+                d: *d,
+                m,
+                codebook: layer.codebook.clone(),
+                packed: layer.bytes.clone(),
+                huffman: Vec::new(),
+                huffman_bits: 0,
+                huffman_lengths: Vec::new(),
+            };
+            packing::try_unpack(&pl)
+                .with_context(|| format!("layer {}: packed stream", layer.name))?
+        }
+        Encoding::Huffman { k, d } => {
+            let m = check_clustered(layer, *k, *d, n)?;
+            if layer.code_lengths.len() != *k {
+                bail!(
+                    "layer {}: {} code lengths, k wants {k}",
+                    layer.name,
+                    layer.code_lengths.len()
+                );
+            }
+            let pl = PackedLayer {
+                k: *k,
+                d: *d,
+                m,
+                codebook: layer.codebook.clone(),
+                packed: Vec::new(),
+                huffman: layer.bytes.clone(),
+                huffman_bits: 0,
+                huffman_lengths: layer.code_lengths.clone(),
+            };
+            packing::unpack_huffman(&pl)
+                .with_context(|| format!("layer {}: huffman stream", layer.name))?
+        }
+    };
+    if data.len() != n {
+        bail!("layer {}: hydrated {} elems, shape wants {n}", layer.name, data.len());
+    }
+    Ok(Tensor::new(&layer.shape, data))
 }
 
 impl CompressedModel {
@@ -101,48 +249,10 @@ impl CompressedModel {
 
     /// Reconstruct full-shaped f32 weights (the decompress-at-load path).
     pub fn hydrate(&self) -> Result<Vec<(String, Tensor)>> {
-        let mut out = Vec::with_capacity(self.layers.len());
-        for layer in &self.layers {
-            let n: usize = layer.shape.iter().product();
-            let data: Vec<f32> = match &layer.encoding {
-                Encoding::Raw => layer
-                    .bytes
-                    .chunks_exact(4)
-                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                    .collect(),
-                Encoding::Packed { k, d } => {
-                    let pl = PackedLayer {
-                        k: *k,
-                        d: *d,
-                        m: n / d,
-                        codebook: layer.codebook.clone(),
-                        packed: layer.bytes.clone(),
-                        huffman: Vec::new(),
-                        huffman_bits: 0,
-                        huffman_lengths: Vec::new(),
-                    };
-                    packing::unpack(&pl)
-                }
-                Encoding::Huffman { k, d } => {
-                    let pl = PackedLayer {
-                        k: *k,
-                        d: *d,
-                        m: n / d,
-                        codebook: layer.codebook.clone(),
-                        packed: Vec::new(),
-                        huffman: layer.bytes.clone(),
-                        huffman_bits: 0,
-                        huffman_lengths: layer.code_lengths.clone(),
-                    };
-                    packing::unpack_huffman(&pl)?
-                }
-            };
-            if data.len() != n {
-                bail!("{}: hydrated {} elems, shape wants {n}", layer.name, data.len());
-            }
-            out.push((layer.name.clone(), Tensor::new(&layer.shape, data)));
-        }
-        Ok(out)
+        self.layers
+            .iter()
+            .map(|l| Ok((l.name.clone(), decode_layer(l)?)))
+            .collect()
     }
 
     /// Total bundle payload size (the number the compression ratio quotes).
@@ -166,7 +276,46 @@ impl CompressedModel {
 
     // -- serialization ----------------------------------------------------
 
+    /// Write the current (V2, block-structured) layout.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.save_v2(path)
+    }
+
+    /// V2: magic, version, u64 block count, `(header_len, payload_len)`
+    /// table, then per-layer blocks of JSON meta + payload. Per-block meta
+    /// carries only lengths — block offsets come from the table, so every
+    /// layer is independently seekable.
+    pub fn save_v2(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let metas: Vec<String> = self.layers.iter().map(block_meta_json).collect();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&FORMAT_V2.to_le_bytes())?;
+        f.write_all(&(self.layers.len() as u64).to_le_bytes())?;
+        for (l, meta) in self.layers.iter().zip(&metas) {
+            let plen = l.codebook.len() * 4 + l.bytes.len() + l.code_lengths.len();
+            f.write_all(&(meta.len() as u64).to_le_bytes())?;
+            f.write_all(&(plen as u64).to_le_bytes())?;
+        }
+        for (l, meta) in self.layers.iter().zip(&metas) {
+            f.write_all(meta.as_bytes())?;
+            for v in &l.codebook {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            f.write_all(&l.bytes)?;
+            f.write_all(&l.code_lengths)?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    /// V1: the legacy monolithic layout, byte-identical to what pre-V2
+    /// releases wrote. Kept as a writer so compatibility tests (and anyone
+    /// targeting an old reader) can still produce V1 bundles.
+    pub fn save_v1(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -182,11 +331,7 @@ impl CompressedModel {
             payload.extend_from_slice(&l.bytes);
             let lens_off = payload.len();
             payload.extend_from_slice(&l.code_lengths);
-            let (enc, k, d) = match l.encoding {
-                Encoding::Raw => ("raw", 0usize, 0usize),
-                Encoding::Packed { k, d } => ("packed", k, d),
-                Encoding::Huffman { k, d } => ("huffman", k, d),
-            };
+            let (enc, k, d) = encoding_parts(&l.encoding);
             metas.push(obj(vec![
                 ("name", Json::from(l.name.as_str())),
                 ("shape", Json::Arr(l.shape.iter().map(|&s| Json::from(s)).collect())),
@@ -204,7 +349,7 @@ impl CompressedModel {
         let header = obj(vec![("layers", Json::Arr(metas))]).to_string_pretty();
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&FORMAT_V1.to_le_bytes())?;
         f.write_all(&(header.len() as u64).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
         f.write_all(&payload)?;
@@ -212,70 +357,30 @@ impl CompressedModel {
         Ok(())
     }
 
+    /// Load a bundle of any supported version through the versioned
+    /// reader — V1 and V2 land in the same in-memory representation.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let path = path.as_ref();
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-        );
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{path:?}: not an IDKM bundle");
-        }
-        let mut b4 = [0u8; 4];
-        f.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != VERSION {
-            bail!("{path:?}: unsupported version");
-        }
-        let mut b8 = [0u8; 8];
-        f.read_exact(&mut b8)?;
-        let hlen = u64::from_le_bytes(b8) as usize;
-        let mut hbytes = vec![0u8; hlen];
-        f.read_exact(&mut hbytes)?;
-        let header = Json::parse(std::str::from_utf8(&hbytes)?)
-            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
-        let mut payload = Vec::new();
-        f.read_to_end(&mut payload)?;
-
-        let mut layers = Vec::new();
-        for m in header.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
-            let name = m.str_of("name").unwrap_or("?").to_string();
-            let shape: Vec<usize> = m
-                .get("shape")
-                .and_then(Json::as_arr)
-                .map(|s| s.iter().filter_map(Json::as_usize).collect())
-                .unwrap_or_default();
-            let k = m.usize_of("k").unwrap_or(0);
-            let d = m.usize_of("d").unwrap_or(0);
-            let encoding = match m.str_of("encoding") {
-                Some("raw") => Encoding::Raw,
-                Some("packed") => Encoding::Packed { k, d },
-                Some("huffman") => Encoding::Huffman { k, d },
-                other => bail!("{path:?}: unknown encoding {other:?}"),
-            };
-            let slice = |off_key: &str, len_key: &str, scale: usize| -> Result<Vec<u8>> {
-                let off = m.usize_of(off_key).unwrap_or(0);
-                let len = m.usize_of(len_key).unwrap_or(0) * scale;
-                if off + len > payload.len() {
-                    bail!("layer slice out of bounds at offset {off}");
-                }
-                Ok(payload[off..off + len].to_vec())
-            };
-            let codebook: Vec<f32> = slice("codebook_offset", "codebook_len", 4)?
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
-            layers.push(Layer {
-                name,
-                shape,
-                encoding,
-                codebook,
-                bytes: slice("bytes_offset", "bytes_len", 1)?,
-                code_lengths: slice("lengths_offset", "lengths_len", 1)?,
-            });
-        }
-        Ok(Self { layers })
+        let mut r = super::reader::BundleReader::open(path)?;
+        Ok(Self { layers: r.read_all_raw()? })
     }
+}
+
+/// Per-block JSON meta for the V2 layout (lengths only; offsets live in
+/// the block table). Compact form: block headers are read per-layer, so
+/// pretty-printing would just pad every lazy read.
+fn block_meta_json(l: &Layer) -> String {
+    let (enc, k, d) = encoding_parts(&l.encoding);
+    obj(vec![
+        ("name", Json::from(l.name.as_str())),
+        ("shape", Json::Arr(l.shape.iter().map(|&s| Json::from(s)).collect())),
+        ("encoding", Json::from(enc)),
+        ("k", Json::from(k)),
+        ("d", Json::from(d)),
+        ("codebook_len", Json::from(l.codebook.len())),
+        ("bytes_len", Json::from(l.bytes.len())),
+        ("lengths_len", Json::from(l.code_lengths.len())),
+    ])
+    .to_string_compact()
 }
 
 #[cfg(test)]
@@ -318,13 +423,23 @@ mod tests {
         let path = std::env::temp_dir().join("idkm_deploy_test/model.idkm");
         model.save(&path).unwrap();
         let back = CompressedModel::load(&path).unwrap();
-        assert_eq!(back.layers.len(), model.layers.len());
+        assert_eq!(back.layers, model.layers);
         let a = model.hydrate().unwrap();
         let b = back.hydrate().unwrap();
         for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
             assert_eq!(na, nb);
             assert_eq!(ta, tb);
         }
+    }
+
+    #[test]
+    fn v1_writer_roundtrips_through_versioned_reader() {
+        let (layers, cbs) = demo_model();
+        let model = CompressedModel::build(&layers, &cbs).unwrap();
+        let path = std::env::temp_dir().join("idkm_deploy_test/model_v1.idkm");
+        model.save_v1(&path).unwrap();
+        let back = CompressedModel::load(&path).unwrap();
+        assert_eq!(back.layers, model.layers);
     }
 
     #[test]
@@ -349,5 +464,49 @@ mod tests {
         let (layers, _) = demo_model();
         let empty = BTreeMap::new();
         assert!(CompressedModel::build(&layers, &empty).is_err());
+    }
+
+    #[test]
+    fn decode_layer_rejects_malformed_metadata() {
+        // wrong raw byte count
+        let bad_raw = Layer {
+            name: "r".into(),
+            shape: vec![4],
+            encoding: Encoding::Raw,
+            codebook: Vec::new(),
+            bytes: vec![0u8; 9],
+            code_lengths: Vec::new(),
+        };
+        assert!(decode_layer(&bad_raw).is_err());
+        // codebook shorter than k*d
+        let bad_cb = Layer {
+            name: "p".into(),
+            shape: vec![8],
+            encoding: Encoding::Packed { k: 4, d: 1 },
+            codebook: vec![0.0; 3],
+            bytes: vec![0u8; 2],
+            code_lengths: Vec::new(),
+        };
+        assert!(decode_layer(&bad_cb).is_err());
+        // k = 0 must not wrap in addr_bits
+        let zero_k = Layer {
+            name: "z".into(),
+            shape: vec![8],
+            encoding: Encoding::Packed { k: 0, d: 1 },
+            codebook: Vec::new(),
+            bytes: vec![0u8; 2],
+            code_lengths: Vec::new(),
+        };
+        assert!(decode_layer(&zero_k).is_err());
+        // overflowing shape product must error, not abort on allocation
+        let huge = Layer {
+            name: "h".into(),
+            shape: vec![usize::MAX, usize::MAX],
+            encoding: Encoding::Raw,
+            codebook: Vec::new(),
+            bytes: Vec::new(),
+            code_lengths: Vec::new(),
+        };
+        assert!(decode_layer(&huge).is_err());
     }
 }

@@ -5,11 +5,45 @@
 //! A quantized model serializes as an `IDKM`-magic bundle: per clustered
 //! layer, the (k, d) codebook + bit-packed cluster addresses (optionally
 //! Huffman-coded, whichever is smaller); float layers (biases, norm
-//! affines) are stored raw. [`CompressedModel::hydrate`] reconstructs the
-//! full-precision-shaped weights so any eval artifact can execute them —
-//! the decompress-and-run path an edge runtime would use.
+//! affines) are stored raw.
+//!
+//! # On-disk layout (V2, current)
+//!
+//! ```text
+//! "IDKM"  u32 version  u64 n_blocks          ← 16-byte fixed header
+//! n_blocks × (u64 header_len, u64 payload_len)   ← LE block table
+//! block 0: JSON meta ‖ codebook f32 LE ‖ addresses ‖ code lengths
+//! block 1: …                                     (one block per layer)
+//! ```
+//!
+//! Block offsets are the running sums of the table, so any layer is
+//! locatable from the table alone and every block decodes independently.
+//! V1 (monolithic JSON header + one concatenated payload) is still read
+//! byte-for-byte by the same versioned entry points; see
+//! [`format`] for the full layout and the V3+ versioning policy.
+//!
+//! # Reading
+//!
+//! * [`CompressedModel::load`] + [`CompressedModel::hydrate`] — eager:
+//!   everything in memory, everything decoded.
+//! * [`BundleReader`] — lazy: `open` parses 16 bytes + the table;
+//!   `layer(i)` / `layer_by_name` seek-and-decode exactly one block;
+//!   `hydrate_all_on(&Pool)` fans full-model decode across the pool.
+//! * [`HydratedLru`] — bounded cache of decoded tensors keyed by
+//!   `(bundle id, layer name)`, capacity in decoded bytes
+//!   (`hydrate_cache_mb` config / `--hydrate-cache-mb` CLI). The infer
+//!   path consults it before touching the reader, so repeated
+//!   [`infer::evaluate_bundle`] calls stop re-decoding.
+//!
+//! Corrupt bundles — truncated, bit-flipped, hostile lengths — must
+//! surface as `Err`, never as panics or allocation aborts; the fuzz smoke
+//! test (`tests/bundle_fuzz.rs`) enforces this over whole-file byte flips.
 
+pub mod cache;
 pub mod format;
 pub mod infer;
+pub mod reader;
 
+pub use cache::HydratedLru;
 pub use format::CompressedModel;
+pub use reader::BundleReader;

@@ -1,0 +1,434 @@
+//! Versioned, lazy bundle reader.
+//!
+//! [`BundleReader::open`] parses only the fixed header and, for V2, the
+//! block table — O(layers) table entries, zero payload bytes. Each layer
+//! then decodes independently:
+//!
+//! * [`BundleReader::layer`] / [`BundleReader::layer_by_name`] seek to one
+//!   block and read exactly its bytes (the counting-reader test in
+//!   `tests/bundle_format.rs` proves no other block is touched), so a
+//!   cold start that needs one layer pays for one layer — resident bytes
+//!   and latency scale per-layer, not per-model.
+//! * [`BundleReader::hydrate_all_on`] reads the raw blocks sequentially
+//!   (one seekable source; interleaving seeks would not help) and fans the
+//!   CPU-bound decode across `Pool::run_indexed` for full-model loads.
+//!
+//! V1 bundles load through the same entry points: their monolithic header
+//! forces all metas to parse at open (unavoidable — V1 has no table), but
+//! payload reads are still per-layer spans. All span arithmetic is
+//! `checked_*` and validated against the real file length before any
+//! allocation is sized from it, so corrupt tables and headers produce
+//! errors, never panics or aborts.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::format::{self, decode_layer, Encoding, Layer, FORMAT_V1, FORMAT_V2, MAGIC};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::threadpool::Pool;
+
+/// Absolute byte span `(offset, len)` into the bundle file.
+type Span = (u64, u64);
+
+/// Per-layer metadata with payload locations resolved to absolute file
+/// spans — the version-independent form both layouts parse into.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub encoding: Encoding,
+    codebook: Span,
+    bytes: Span,
+    lengths: Span,
+}
+
+/// One V2 block's bounds from the table: JSON meta span + payload span.
+#[derive(Debug, Clone, Copy)]
+struct Block {
+    header: Span,
+    payload: Span,
+}
+
+/// Lazy, versioned reader over an `IDKM` bundle. Generic over the byte
+/// source so tests can wrap a counting reader around an in-memory cursor;
+/// real callers use [`BundleReader::open`].
+pub struct BundleReader<R: Read + Seek = BufReader<File>> {
+    src: R,
+    /// Total source length, learned once at open; every span is validated
+    /// against it before being read (or used to size an allocation).
+    len: u64,
+    version: u32,
+    /// Content-sensitive identity (origin + length + header hash): the
+    /// hydration-cache key prefix, so a rewritten bundle at the same path
+    /// does not serve stale tensors.
+    id: String,
+    origin: String,
+    /// V2 block bounds (empty for V1 — spans live in the metas directly).
+    blocks: Vec<Block>,
+    /// Lazily parsed metas: V2 fills slot `i` on first touch of layer `i`;
+    /// V1 fills all slots at open from the monolithic header.
+    metas: Vec<Option<LayerMeta>>,
+}
+
+fn read_u32(src: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    src.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(src: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    src.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl BundleReader<BufReader<File>> {
+    /// Open a bundle file, parsing only the header (+ block table for V2).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("opening {path:?}"))?;
+        Self::from_reader(BufReader::new(f), &path.display().to_string())
+    }
+}
+
+impl<R: Read + Seek> BundleReader<R> {
+    /// Build a reader over any seekable byte source; `origin` labels
+    /// errors and seeds the bundle id.
+    pub fn from_reader(mut src: R, origin: &str) -> Result<Self> {
+        let len = src.seek(SeekFrom::End(0))?;
+        src.seek(SeekFrom::Start(0))?;
+        let mut magic = [0u8; 4];
+        src.read_exact(&mut magic)
+            .with_context(|| format!("{origin}: truncated header"))?;
+        if &magic != MAGIC {
+            bail!("{origin}: not an IDKM bundle");
+        }
+        let version =
+            read_u32(&mut src).with_context(|| format!("{origin}: truncated header"))?;
+        // 4 magic + 4 version + 8 count: where both layouts' tables start.
+        let body_base = 16u64;
+        let mut hash = fnv(0xcbf29ce484222325, &version.to_le_bytes());
+        let (blocks, metas) = match version {
+            FORMAT_V1 => {
+                let hlen =
+                    read_u64(&mut src).with_context(|| format!("{origin}: truncated header"))?;
+                let payload_base = body_base
+                    .checked_add(hlen)
+                    .with_context(|| format!("{origin}: header length overflows"))?;
+                if payload_base > len {
+                    bail!("{origin}: header length {hlen} overruns EOF ({len} bytes)");
+                }
+                let mut hbytes = vec![0u8; hlen as usize];
+                src.read_exact(&mut hbytes)?;
+                hash = fnv(hash, &hbytes);
+                let header = Json::parse(
+                    std::str::from_utf8(&hbytes)
+                        .with_context(|| format!("{origin}: header is not UTF-8"))?,
+                )
+                .map_err(|e| anyhow::anyhow!("{origin}: {e}"))?;
+                let payload_len = len - payload_base;
+                let metas = header
+                    .get("layers")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|m| parse_v1_meta(origin, m, payload_base, payload_len).map(Some))
+                    .collect::<Result<Vec<_>>>()?;
+                (Vec::new(), metas)
+            }
+            FORMAT_V2 => {
+                let nblocks =
+                    read_u64(&mut src).with_context(|| format!("{origin}: truncated header"))?;
+                let table_len = nblocks
+                    .checked_mul(16)
+                    .with_context(|| format!("{origin}: block table size overflows"))?;
+                let blocks_base = body_base
+                    .checked_add(table_len)
+                    .with_context(|| format!("{origin}: block table size overflows"))?;
+                if blocks_base > len {
+                    bail!(
+                        "{origin}: block table ({nblocks} entries) overruns EOF ({len} bytes)"
+                    );
+                }
+                // nblocks is now bounded by len/16, so this cannot abort.
+                let mut blocks = Vec::with_capacity(nblocks as usize);
+                let mut off = blocks_base;
+                for i in 0..nblocks {
+                    let hlen = read_u64(&mut src)?;
+                    let plen = read_u64(&mut src)?;
+                    hash = fnv(hash, &hlen.to_le_bytes());
+                    hash = fnv(hash, &plen.to_le_bytes());
+                    let header = (off, hlen);
+                    off = off
+                        .checked_add(hlen)
+                        .with_context(|| format!("{origin}: block {i} spans overflow"))?;
+                    let payload = (off, plen);
+                    off = off
+                        .checked_add(plen)
+                        .with_context(|| format!("{origin}: block {i} spans overflow"))?;
+                    if off > len {
+                        bail!(
+                            "{origin}: block {i} overruns EOF (ends at {off}, file is {len} bytes)"
+                        );
+                    }
+                    blocks.push(Block { header, payload });
+                }
+                let metas = vec![None; blocks.len()];
+                (blocks, metas)
+            }
+            v => bail!(
+                "{origin}: unsupported bundle version {v} (this reader knows \
+                 v{FORMAT_V1} and v{FORMAT_V2})"
+            ),
+        };
+        Ok(Self {
+            src,
+            len,
+            version,
+            id: format!("{origin}#{len}#{hash:016x}"),
+            origin: origin.to_string(),
+            blocks,
+            metas,
+        })
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// Cache-key identity for this bundle's contents.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Layer metadata, parsed from the block header on first touch (V2).
+    /// Touches no payload bytes.
+    pub fn meta(&mut self, i: usize) -> Result<&LayerMeta> {
+        if i >= self.metas.len() {
+            bail!(
+                "{}: layer index {i} out of range ({} layers)",
+                self.origin,
+                self.metas.len()
+            );
+        }
+        if self.metas[i].is_none() {
+            let block = self.blocks[i];
+            let hbytes = self.read_span(block.header)?;
+            let m = Json::parse(
+                std::str::from_utf8(&hbytes)
+                    .with_context(|| format!("{}: block {i} meta is not UTF-8", self.origin))?,
+            )
+            .map_err(|e| anyhow::anyhow!("{}: block {i}: {e}", self.origin))?;
+            self.metas[i] = Some(parse_v2_meta(&self.origin, &m, block)?);
+        }
+        Ok(self.metas[i].as_ref().unwrap())
+    }
+
+    /// Index of the layer named `name`, scanning meta headers only (no
+    /// payload block is read).
+    pub fn find(&mut self, name: &str) -> Result<Option<usize>> {
+        for i in 0..self.metas.len() {
+            if self.meta(i)?.name == name {
+                return Ok(Some(i));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Read exactly layer `i`'s block (undecoded).
+    pub fn layer_raw(&mut self, i: usize) -> Result<Layer> {
+        let (name, shape, encoding, cb_span, bytes_span, lens_span) = {
+            let m = self.meta(i)?;
+            (m.name.clone(), m.shape.clone(), m.encoding.clone(), m.codebook, m.bytes, m.lengths)
+        };
+        let cb_bytes = self
+            .read_span(cb_span)
+            .with_context(|| format!("layer {name}: codebook"))?;
+        let bytes = self
+            .read_span(bytes_span)
+            .with_context(|| format!("layer {name}: payload"))?;
+        let code_lengths = self
+            .read_span(lens_span)
+            .with_context(|| format!("layer {name}: code lengths"))?;
+        let codebook = cb_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Layer { name, shape, encoding, codebook, bytes, code_lengths })
+    }
+
+    /// Read and decode exactly one layer (the per-layer cold-start path).
+    pub fn layer(&mut self, i: usize) -> Result<(String, Tensor)> {
+        let raw = self.layer_raw(i)?;
+        let t = decode_layer(&raw)?;
+        Ok((raw.name, t))
+    }
+
+    /// [`Self::layer`] addressed by name; scans meta headers to find it.
+    pub fn layer_by_name(&mut self, name: &str) -> Result<(String, Tensor)> {
+        match self.find(name)? {
+            Some(i) => self.layer(i),
+            None => bail!("{}: bundle has no layer {name:?}", self.origin),
+        }
+    }
+
+    /// All layers, raw (what `CompressedModel::load` slurps).
+    pub fn read_all_raw(&mut self) -> Result<Vec<Layer>> {
+        (0..self.metas.len()).map(|i| self.layer_raw(i)).collect()
+    }
+
+    /// Decode every layer on the calling thread.
+    pub fn hydrate_all(&mut self) -> Result<Vec<(String, Tensor)>> {
+        let raws = self.read_all_raw()?;
+        raws.iter().map(|l| Ok((l.name.clone(), decode_layer(l)?))).collect()
+    }
+
+    /// Full-model hydrate with the CPU-bound decode fanned out over the
+    /// pool. Output order and bytes are identical to [`Self::hydrate_all`].
+    pub fn hydrate_all_on(&mut self, pool: &Pool) -> Result<Vec<(String, Tensor)>> {
+        let raws = self.read_all_raw()?;
+        let decoded = decode_layers_on(&raws, pool)?;
+        Ok(raws
+            .into_iter()
+            .zip(decoded)
+            .map(|(l, t)| (l.name, t))
+            .collect())
+    }
+
+    /// Seek-and-read one validated span. Spans were checked against the
+    /// file length when resolved, so the defensive re-check here only
+    /// guards against future span-construction bugs.
+    fn read_span(&mut self, span: Span) -> Result<Vec<u8>> {
+        let end = span
+            .0
+            .checked_add(span.1)
+            .with_context(|| format!("{}: span overflows", self.origin))?;
+        if end > self.len {
+            bail!("{}: span {}..{end} overruns EOF ({} bytes)", self.origin, span.0, self.len);
+        }
+        self.src.seek(SeekFrom::Start(span.0))?;
+        let mut buf = vec![0u8; span.1 as usize];
+        self.src.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// Pool-parallel decode of already-read raw layers (shared by
+/// [`BundleReader::hydrate_all_on`] and the infer-path cache fill).
+pub fn decode_layers_on(raws: &[Layer], pool: &Pool) -> Result<Vec<Tensor>> {
+    let slots: Vec<Mutex<Option<Result<Tensor>>>> =
+        raws.iter().map(|_| Mutex::new(None)).collect();
+    pool.run_indexed(raws.len(), &|i| {
+        *slots[i].lock().unwrap() = Some(decode_layer(&raws[i]));
+    });
+    raws.iter()
+        .zip(slots)
+        .map(|(l, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .expect("decode slot filled by run_indexed")
+                .with_context(|| format!("decoding layer {}", l.name))
+        })
+        .collect()
+}
+
+/// Resolve one V1 header entry to absolute spans. This is where the old
+/// unchecked `off + len > payload.len()` lived: all arithmetic is now
+/// checked and failures carry the layer name.
+fn parse_v1_meta(
+    origin: &str,
+    m: &Json,
+    payload_base: u64,
+    payload_len: u64,
+) -> Result<LayerMeta> {
+    let name = m.str_of("name").unwrap_or("?").to_string();
+    let shape: Vec<usize> = m
+        .get("shape")
+        .and_then(Json::as_arr)
+        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default();
+    let k = m.usize_of("k").unwrap_or(0);
+    let d = m.usize_of("d").unwrap_or(0);
+    let encoding = format::parse_encoding(m.str_of("encoding"), k, d)
+        .with_context(|| format!("{origin}: layer {name}"))?;
+    let span = |off_key: &str, len_key: &str, scale: u64| -> Result<Span> {
+        let off = m.usize_of(off_key).unwrap_or(0) as u64;
+        let bytes = (m.usize_of(len_key).unwrap_or(0) as u64)
+            .checked_mul(scale)
+            .with_context(|| format!("{origin}: layer {name}: {len_key} overflows"))?;
+        let end = off
+            .checked_add(bytes)
+            .with_context(|| format!("{origin}: layer {name}: {off_key}+{len_key} overflows"))?;
+        if end > payload_len {
+            bail!(
+                "{origin}: layer {name}: {off_key} span {off}+{bytes} overruns \
+                 payload ({payload_len} bytes)"
+            );
+        }
+        // off <= payload_len and payload_base + payload_len == file len,
+        // so this cannot overflow.
+        Ok((payload_base + off, bytes))
+    };
+    let codebook = span("codebook_offset", "codebook_len", 4)?;
+    let bytes = span("bytes_offset", "bytes_len", 1)?;
+    let lengths = span("lengths_offset", "lengths_len", 1)?;
+    Ok(LayerMeta { name, shape, encoding, codebook, bytes, lengths })
+}
+
+/// Resolve one V2 block meta to absolute spans: payload sections are laid
+/// out back-to-back (codebook ‖ bytes ‖ lengths) from the block's payload
+/// offset, and their lengths must tile the table's payload length exactly.
+fn parse_v2_meta(origin: &str, m: &Json, block: Block) -> Result<LayerMeta> {
+    let name = m.str_of("name").unwrap_or("?").to_string();
+    let shape: Vec<usize> = m
+        .get("shape")
+        .and_then(Json::as_arr)
+        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default();
+    let k = m.usize_of("k").unwrap_or(0);
+    let d = m.usize_of("d").unwrap_or(0);
+    let encoding = format::parse_encoding(m.str_of("encoding"), k, d)
+        .with_context(|| format!("{origin}: layer {name}"))?;
+    let cb_bytes = (m.usize_of("codebook_len").unwrap_or(0) as u64)
+        .checked_mul(4)
+        .with_context(|| format!("{origin}: layer {name}: codebook_len overflows"))?;
+    let bytes_len = m.usize_of("bytes_len").unwrap_or(0) as u64;
+    let lens_len = m.usize_of("lengths_len").unwrap_or(0) as u64;
+    let total = cb_bytes
+        .checked_add(bytes_len)
+        .and_then(|t| t.checked_add(lens_len))
+        .with_context(|| format!("{origin}: layer {name}: section lengths overflow"))?;
+    if total != block.payload.1 {
+        bail!(
+            "{origin}: layer {name}: meta sections want {total} bytes, \
+             block payload is {} bytes",
+            block.payload.1
+        );
+    }
+    let base = block.payload.0;
+    Ok(LayerMeta {
+        name,
+        shape,
+        encoding,
+        // base + total <= EOF was proven when the table was parsed.
+        codebook: (base, cb_bytes),
+        bytes: (base + cb_bytes, bytes_len),
+        lengths: (base + cb_bytes + bytes_len, lens_len),
+    })
+}

@@ -285,8 +285,16 @@ fn cmd_deploy(rest: &[String]) -> Result<()> {
 fn cmd_infer(rest: &[String]) -> Result<()> {
     let extra = Args::new()
         .opt("bundle", "runs/model.idkm", "bundle path")
-        .opt("batches", "8", "test batches to score");
-    let (args, cfg, runtime) = setup(rest, extra)?;
+        .opt("batches", "8", "test batches to score")
+        .opt(
+            "hydrate-cache-mb",
+            "",
+            "hydration LRU capacity in MiB of decoded tensors (0 disables)",
+        );
+    let (args, mut cfg, runtime) = setup(rest, extra)?;
+    if let Some(mb) = args.get_opt_parsed("hydrate-cache-mb").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.hydrate_cache_mb = mb;
+    }
     let bundle = args.get("bundle").unwrap();
     let batches: usize = args.get_parsed("batches").map_err(|e| anyhow::anyhow!(e))?;
     let acc = idkm::deploy::infer::evaluate_bundle(&runtime, &cfg, &bundle, batches)?;

@@ -473,6 +473,17 @@ impl Blocked {
         Blocked { pool: Pool::new(threads), threads, min_grain: min_grain.max(1), simd }
     }
 
+    /// Toggle the pool's chunk→thread affinity hint (the pool field is
+    /// private; determinism tests flip this to prove outputs don't depend
+    /// on which thread runs which chunk).
+    pub fn set_pool_affinity(&self, on: bool) {
+        self.pool.set_affinity(on);
+    }
+
+    pub fn pool_affinity_enabled(&self) -> bool {
+        self.pool.affinity_enabled()
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }

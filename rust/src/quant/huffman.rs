@@ -98,11 +98,19 @@ pub fn encode(symbols: &[u32], num_symbols: usize) -> Result<(Vec<u8>, u64, Vec<
     Ok((out, total_bits, lengths))
 }
 
-/// Decode `n` symbols from a canonical-Huffman bit stream.
+/// Decode `n` symbols from a canonical-Huffman bit stream. Total over
+/// untrusted input: corrupt length tables and short streams are errors
+/// (a length byte > 32 would overflow the canonical-code shifts, and `n`
+/// is never trusted to size an allocation beyond what the stream could
+/// possibly hold).
 pub fn decode(bytes: &[u8], n: usize, lengths: &[u8]) -> Result<Vec<u32>> {
+    if let Some(&bad) = lengths.iter().find(|&&l| l > 32) {
+        bail!("invalid code length {bad} (max 32)");
+    }
     let codes = canonical_codes(lengths);
     // (code, len) -> symbol lookup; k is tiny so linear scan per bit-length.
-    let mut out = Vec::with_capacity(n);
+    // Every symbol costs at least one bit, so the stream bounds n.
+    let mut out = Vec::with_capacity(n.min(bytes.len().saturating_mul(8)));
     let mut acc: u32 = 0;
     let mut acc_len: u8 = 0;
     let mut bit_pos = 0usize;
@@ -193,5 +201,19 @@ mod tests {
     #[test]
     fn out_of_range_symbol_rejected() {
         assert!(encode(&[5], 4).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_table_rejected() {
+        // a length byte > 32 must error, not overflow the code shifts
+        assert!(decode(&[0xFF; 8], 4, &[40, 1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn huge_symbol_count_does_not_overallocate() {
+        // n far beyond what the stream can hold: clean exhaustion error,
+        // no usize::MAX-sized allocation attempt
+        let (bytes, _, lengths) = encode(&[0, 1, 2, 3], 4).unwrap();
+        assert!(decode(&bytes, usize::MAX, &lengths).is_err());
     }
 }

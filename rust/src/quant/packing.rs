@@ -6,7 +6,7 @@
 //! cluster address (optionally Huffman-coded below b bits), plus the k*d f32
 //! codebook itself.
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use super::{huffman, nearest};
 
@@ -69,10 +69,45 @@ pub fn pack(w: &[f32], d: usize, codebook: &[f32]) -> Result<PackedLayer> {
     })
 }
 
-/// Reconstruct the (lossy) weights from a packed layer.
+/// Reconstruct the (lossy) weights from a packed layer. Panics on
+/// malformed input — only for layers this process packed itself; decode
+/// paths fed from disk go through [`try_unpack`].
 pub fn unpack(layer: &PackedLayer) -> Vec<f32> {
+    try_unpack(layer).expect("unpack: malformed locally-packed layer")
+}
+
+/// [`unpack`] that is total over untrusted bytes: short streams,
+/// inconsistent (k, d, m) and out-of-range addresses (possible whenever k
+/// is not a power of two) come back as errors instead of panics, and no
+/// allocation is sized from an unvalidated length.
+pub fn try_unpack(layer: &PackedLayer) -> Result<Vec<f32>> {
+    if layer.k == 0 || layer.d == 0 {
+        bail!("invalid k={} d={}", layer.k, layer.d);
+    }
     let b = addr_bits(layer.k);
-    let mut out = Vec::with_capacity(layer.m * layer.d);
+    // Addresses are u32-sized everywhere else; a k needing more bits can
+    // only come from corrupt metadata (and would overflow the shifts).
+    if b > 32 {
+        bail!("k={} needs {b}-bit addresses", layer.k);
+    }
+    let need_bits = layer
+        .m
+        .checked_mul(b as usize)
+        .context("packed stream bit count overflows")?;
+    if layer.packed.len() < need_bits.div_ceil(8) {
+        bail!(
+            "packed stream has {} bytes, {} addresses at {b} bits need {}",
+            layer.packed.len(),
+            layer.m,
+            need_bits.div_ceil(8)
+        );
+    }
+    let kd = layer.k.checked_mul(layer.d).context("k*d overflows")?;
+    if layer.codebook.len() < kd {
+        bail!("codebook has {} entries, k*d wants {kd}", layer.codebook.len());
+    }
+    let out_len = layer.m.checked_mul(layer.d).context("output size overflows")?;
+    let mut out = Vec::with_capacity(out_len);
     let mut acc = 0u64;
     let mut nbits = 0u32;
     let mut byte_idx = 0usize;
@@ -82,19 +117,40 @@ pub fn unpack(layer: &PackedLayer) -> Vec<f32> {
             byte_idx += 1;
             nbits += 8;
         }
-        let addr = ((acc >> (nbits - b)) & ((1 << b) - 1)) as usize;
+        let addr = ((acc >> (nbits - b)) & ((1u64 << b) - 1)) as usize;
         nbits -= b;
+        if addr >= layer.k {
+            bail!("address {addr} out of range (k={})", layer.k);
+        }
         out.extend_from_slice(&layer.codebook[addr * layer.d..(addr + 1) * layer.d]);
     }
-    out
+    Ok(out)
 }
 
 /// Decode the Huffman stream back to addresses and reconstruct weights —
 /// verifies the entropy-coded path agrees with the fixed-width path.
+/// Total over untrusted bytes like [`try_unpack`].
 pub fn unpack_huffman(layer: &PackedLayer) -> Result<Vec<f32>> {
+    if layer.k == 0 || layer.d == 0 {
+        bail!("invalid k={} d={}", layer.k, layer.d);
+    }
+    if layer.huffman_lengths.len() != layer.k {
+        bail!(
+            "{} code lengths for k={} symbols",
+            layer.huffman_lengths.len(),
+            layer.k
+        );
+    }
+    let kd = layer.k.checked_mul(layer.d).context("k*d overflows")?;
+    if layer.codebook.len() < kd {
+        bail!("codebook has {} entries, k*d wants {kd}", layer.codebook.len());
+    }
     let addrs = huffman::decode(&layer.huffman, layer.m, &layer.huffman_lengths)?;
-    let mut out = Vec::with_capacity(layer.m * layer.d);
+    let out_len = layer.m.checked_mul(layer.d).context("output size overflows")?;
+    let mut out = Vec::with_capacity(out_len);
     for a in addrs {
+        // decode returns symbols < lengths.len() == k, so this indexing
+        // stays inside the validated k*d codebook.
         let a = a as usize;
         out.extend_from_slice(&layer.codebook[a * layer.d..(a + 1) * layer.d]);
     }
@@ -198,6 +254,43 @@ mod tests {
             let b = unpack_huffman(&layer).unwrap();
             a == b && a.len() == w.len()
         });
+    }
+
+    #[test]
+    fn try_unpack_rejects_corrupt_layers() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cb = vec![-1.0f32, -0.3, 0.3, 1.0];
+        let good = pack(&w, 1, &cb).unwrap();
+        assert_eq!(try_unpack(&good).unwrap(), unpack(&good));
+        // short stream
+        let mut short = good.clone();
+        short.packed.truncate(short.packed.len() / 2);
+        assert!(try_unpack(&short).is_err());
+        // k = 0 (addr_bits would wrap on k - 1)
+        let mut zero_k = good.clone();
+        zero_k.k = 0;
+        assert!(try_unpack(&zero_k).is_err());
+        // codebook shorter than k*d
+        let mut small_cb = good.clone();
+        small_cb.codebook.truncate(2);
+        assert!(try_unpack(&small_cb).is_err());
+        // out-of-range address: k=3 makes the 2-bit pattern 0b11 invalid
+        let bad_addr = PackedLayer {
+            k: 3,
+            d: 1,
+            m: 4,
+            codebook: vec![0.0, 1.0, 2.0],
+            packed: vec![0xFF],
+            huffman: Vec::new(),
+            huffman_bits: 0,
+            huffman_lengths: Vec::new(),
+        };
+        assert!(try_unpack(&bad_addr).is_err());
+        // huge claimed m must error before any allocation is sized from it
+        let mut huge = good.clone();
+        huge.m = usize::MAX / 2;
+        assert!(try_unpack(&huge).is_err());
     }
 
     #[test]

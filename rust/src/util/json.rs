@@ -122,6 +122,15 @@ impl Json {
         out
     }
 
+    /// Single-line form (no indentation or newlines) — for embedded
+    /// metadata records where the bytes are re-read often, like the
+    /// per-block headers of the V2 deploy bundle.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {

@@ -13,13 +13,19 @@
 //!   traffic** (the engine's steady-state contract; see
 //!   `quant::engine::EngineScratch`). The caller participates in running
 //!   tasks, so a fan-out issued while every worker is busy — even one
-//!   issued from inside a pool task — still completes.
+//!   issued from inside a pool task — still completes. Dispatch is
+//!   affinity-aware: each thread prefers re-claiming the index it ran in
+//!   the previous fan-out (sweep iterations reuse chunk geometry, so the
+//!   chunk's working set is likely still cache-resident) before falling
+//!   back to the lowest unclaimed index. [`Pool::set_affinity`] toggles
+//!   the hint; outputs are byte-identical either way.
 //!
 //! (The `Bounded` MPMC backpressure channel that used to live here was
 //! retired with the sequential data `Loader`: `SharedBatches` coordinates
 //! its consumers with a plain mutex/condvar cache instead.)
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -27,8 +33,15 @@ use std::thread::JoinHandle;
 /// [`Pool::run_indexed`], which never boxes).
 type BoxedJob = Box<dyn FnOnce() + Send + 'static>;
 
+/// Claim-bitmap extent for affinity-aware dispatch: fan-outs up to this
+/// many tasks track per-index claims in a stack-resident bitmap (so a
+/// thread can re-claim the index it ran last round); larger fan-outs fall
+/// back to the plain racing cursor.
+const INLINE_TASKS: usize = INLINE_WORDS * 64;
+const INLINE_WORDS: usize = 16;
+
 /// One broadcast parallel-for in flight: a type-erased `Fn(usize)` plus the
-/// claim/completion counters. The struct lives on the stack of the
+/// claim/completion state. The struct lives on the stack of the
 /// `run_indexed` caller, which cannot return before every task has finished,
 /// so the raw pointer workers hold stays valid exactly as long as they can
 /// reach it through the region list. All fields are guarded by the pool
@@ -39,11 +52,76 @@ struct Region {
     /// The caller's closure, type- and lifetime-erased.
     data: *const (),
     n: usize,
-    /// Next unclaimed task index.
-    next: usize,
+    /// Scan start for unclaimed indices: every index below it is claimed
+    /// (bitmap mode), or exactly the next index to hand out (cursor mode).
+    cursor: usize,
+    /// Total indices claimed so far; the region is drained when this
+    /// reaches `n`.
+    claimed: usize,
+    /// Per-index claim bitmap, used only when `n <= INLINE_TASKS`. Lives
+    /// inline so the zero-allocation steady state is preserved.
+    bits: [u64; INLINE_WORDS],
     /// Claimed-but-unfinished tasks.
     running: usize,
     panicked: bool,
+}
+
+fn bit_get(bits: &[u64; INLINE_WORDS], i: usize) -> bool {
+    bits[i / 64] >> (i % 64) & 1 == 1
+}
+
+fn bit_set(bits: &mut [u64; INLINE_WORDS], i: usize) {
+    bits[i / 64] |= 1 << (i % 64);
+}
+
+/// Claim one task index for the thread in `slot` (workers use their index;
+/// the `run_indexed` caller uses the trailing slot). Must be called with
+/// the pool mutex held and `rp` pointing at a live region.
+///
+/// With affinity on and the bitmap active, the thread first tries to
+/// re-claim the index it ran in the previous fan-out (`last_index`): the
+/// engine reuses chunk geometry across sweep iterations, so chunk `i`'s
+/// working set is likely still in that core's cache. Otherwise it takes
+/// the lowest unclaimed index. Termination: `cursor` only ever advances
+/// over claimed bits and all indices below it are claimed, so while
+/// `claimed < n` the scan finds an unclaimed index before `n`.
+///
+/// # Safety
+/// `rp` must point to a live `Region` and the pool mutex must be held.
+unsafe fn claim_task(rp: RegionPtr, st: &mut PoolState, slot: usize, affinity: bool) -> Option<usize> {
+    let r = &mut *rp.0;
+    if r.claimed >= r.n {
+        return None;
+    }
+    let use_bits = r.n <= INLINE_TASKS;
+    let mut i = usize::MAX;
+    if use_bits && affinity {
+        if let Some(&pref) = st.last_index.get(slot) {
+            if pref < r.n && !bit_get(&r.bits, pref) {
+                i = pref;
+            }
+        }
+    }
+    if i == usize::MAX {
+        if use_bits {
+            while bit_get(&r.bits, r.cursor) {
+                r.cursor += 1;
+            }
+            i = r.cursor;
+        } else {
+            i = r.cursor;
+            r.cursor += 1;
+        }
+    }
+    if use_bits {
+        bit_set(&mut r.bits, i);
+    }
+    r.claimed += 1;
+    r.running += 1;
+    if let Some(last) = st.last_index.get_mut(slot) {
+        *last = i;
+    }
+    Some(i)
 }
 
 /// Pointer to a caller-stack [`Region`]; `Send` so a worker can hold it
@@ -58,6 +136,10 @@ struct PoolState {
     /// Active parallel-for regions (pointers into caller stacks, valid
     /// until the owning `run_indexed` returns).
     regions: Vec<RegionPtr>,
+    /// Per-slot last-claimed task index (workers 0..N, then the caller
+    /// slot) — the affinity hint `claim_task` consults. Allocated once at
+    /// construction; never grows.
+    last_index: Vec<usize>,
     closed: bool,
 }
 
@@ -67,9 +149,13 @@ struct PoolShared {
     work: Condvar,
     /// `run_indexed` callers sleep here waiting for in-flight tasks.
     done: Condvar,
+    /// Chunk→thread affinity toggle for `run_indexed` (default on). Purely
+    /// a scheduling hint: claimed-index *sets* are identical either way,
+    /// only which thread runs which index changes.
+    affinity: AtomicBool,
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, slot: usize) {
     let mut st = shared.state.lock().unwrap();
     loop {
         // Regions first: they are the latency-sensitive kernel fan-outs;
@@ -80,13 +166,13 @@ fn worker_loop(shared: &PoolShared) {
             .copied()
             // SAFETY: every pointer in the list refers to a live caller
             // frame (see `Region`); fields are read under the pool mutex.
-            .find(|rp| unsafe { (*rp.0).next < (*rp.0).n });
+            .find(|rp| unsafe { (*rp.0).claimed < (*rp.0).n });
         if let Some(rp) = open {
+            let affinity = shared.affinity.load(Ordering::Relaxed);
             let (call, data, i) = unsafe {
-                let r = &mut *rp.0;
-                let i = r.next;
-                r.next += 1;
-                r.running += 1;
+                // `claimed < n` was just checked under this same lock.
+                let i = claim_task(rp, &mut st, slot, affinity).unwrap();
+                let r = &*rp.0;
                 (r.call, r.data, i)
             };
             drop(st);
@@ -101,7 +187,7 @@ fn worker_loop(shared: &PoolShared) {
                 if !ok {
                     r.panicked = true;
                 }
-                if r.next >= r.n && r.running == 0 {
+                if r.claimed >= r.n && r.running == 0 {
                     // Last task done: detach the region and wake its owner.
                     st.regions.retain(|q| *q != rp);
                     shared.done.notify_all();
@@ -139,6 +225,7 @@ impl Pool {
     /// scheduler labels its cell workers (`idkm-sweep-*`) distinctly from
     /// the kernel pools so stack dumps attribute stalls to the right layer.
     pub fn with_name(n: usize, prefix: &str) -> Self {
+        let n = n.max(1);
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
                 queue: VecDeque::new(),
@@ -146,21 +233,35 @@ impl Pool {
                 // touches the allocator (the engine's zero-allocation-
                 // per-sweep contract).
                 regions: Vec::with_capacity(16),
+                // One slot per worker plus the run_indexed caller slot.
+                last_index: vec![usize::MAX; n + 1],
                 closed: false,
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            affinity: AtomicBool::new(true),
         });
-        let workers = (0..n.max(1))
+        let workers = (0..n)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("{prefix}-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn worker")
             })
             .collect();
         Self { shared, workers }
+    }
+
+    /// Toggle chunk→thread affinity for [`Self::run_indexed`] (on by
+    /// default). A scheduling hint only — the set of indices run and the
+    /// bytes they produce are identical either way.
+    pub fn set_affinity(&self, on: bool) {
+        self.shared.affinity.store(on, Ordering::Relaxed);
+    }
+
+    pub fn affinity_enabled(&self) -> bool {
+        self.shared.affinity.load(Ordering::Relaxed)
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -219,15 +320,18 @@ impl Pool {
             (*(data as *const F))(i);
         }
         // SAFETY (for every raw access below): the region lives in this
-        // frame, which blocks until `next == n && running == 0`, i.e. until
-        // no thread can still reach it; all field access happens with the
-        // pool mutex held. The lifetime erasure of `data` is sound for the
-        // same reason run_all's scoped borrows are: `f` outlives every task.
+        // frame, which blocks until `claimed == n && running == 0`, i.e.
+        // until no thread can still reach it; all field access happens with
+        // the pool mutex held. The lifetime erasure of `data` is sound for
+        // the same reason run_all's scoped borrows are: `f` outlives every
+        // task.
         let region = std::cell::UnsafeCell::new(Region {
             call: trampoline::<F>,
             data: f as *const F as *const (),
             n,
-            next: 0,
+            cursor: 0,
+            claimed: 0,
+            bits: [0; INLINE_WORDS],
             running: 0,
             panicked: false,
         });
@@ -238,18 +342,15 @@ impl Pool {
             st.regions.push(rp);
         }
         shared.work.notify_all();
-        // Claim and run tasks alongside the workers.
+        // Claim and run tasks alongside the workers (trailing last_index
+        // slot; the caller gets affinity too — it is a thread like any
+        // other for cache-residency purposes).
+        let caller_slot = self.workers.len();
+        let affinity = shared.affinity.load(Ordering::Relaxed);
         let mut st = shared.state.lock().unwrap();
         loop {
-            let i = unsafe {
-                let r = &mut *rp.0;
-                if r.next >= r.n {
-                    break;
-                }
-                let i = r.next;
-                r.next += 1;
-                r.running += 1;
-                i
+            let Some(i) = (unsafe { claim_task(rp, &mut st, caller_slot, affinity) }) else {
+                break;
             };
             drop(st);
             let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_ok();
@@ -323,6 +424,42 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn affinity_toggle_still_covers_every_index() {
+        // affinity is a hint about *which thread* runs an index; with it
+        // on or off, every index runs exactly once per fan-out
+        let pool = Pool::new(4);
+        assert!(pool.affinity_enabled());
+        for &on in &[true, false, true] {
+            pool.set_affinity(on);
+            assert_eq!(pool.affinity_enabled(), on);
+            let out: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+            let f = |i: usize| {
+                out[i].fetch_add(1, Ordering::Relaxed);
+            };
+            // repeat so re-claim hints from round r are live in round r+1
+            for _ in 0..5 {
+                pool.run_indexed(257, &f);
+            }
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(v.load(Ordering::Relaxed), 5, "index {i} (affinity {on})");
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_beyond_bitmap_falls_back_to_cursor() {
+        // n > INLINE_TASKS takes the plain racing-cursor path
+        let pool = Pool::new(3);
+        let n = INLINE_TASKS + 17;
+        let out: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let f = |i: usize| {
+            out[i].fetch_add(1, Ordering::Relaxed);
+        };
+        pool.run_indexed(n, &f);
+        assert!(out.iter().all(|v| v.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -220,6 +220,49 @@ fn soft_parity_survives_tau_extremes_on_constant_data() {
 }
 
 #[test]
+fn pool_affinity_toggle_is_bit_invisible() {
+    // The thread pool's chunk->worker affinity (workers prefer re-claiming
+    // the chunk index they ran last) is a cache optimization and must be
+    // bit-invisible: per-chunk results land in disjoint output slots, so
+    // WHICH worker computes a chunk cannot change a single bit. Run the
+    // pooled SIMD backend over a multi-chunk workload with affinity on
+    // (default), off, and on again — every output must match exactly,
+    // including after the pool has accumulated claim history.
+    use idkm::quant::engine::Blocked;
+    let mut rng = Rng::new(29);
+    let (m, d, k) = (4096usize, 2usize, 8usize);
+    let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let backend = Blocked::with_kernel(4, 16, true); // many small chunks
+    let mut ws = EngineScratch::new();
+    let codebook = backend.seed(&w, d, k, &mut Rng::new(51));
+    assert!(backend.pool_affinity_enabled());
+
+    let mut runs: Vec<(Vec<u32>, Vec<u32>, Vec<u32>, u32)> = Vec::new();
+    for &affinity in &[true, false, true, false] {
+        backend.set_pool_affinity(affinity);
+        // two passes per setting so the second sees warm claim history
+        for _ in 0..2 {
+            let mut assign = vec![0u32; m];
+            backend.assign(&w, d, &codebook, &mut assign, &mut ws);
+            let mut soft = vec![0.0f32; codebook.len()];
+            backend.soft_update_into(&w, d, &codebook, 5e-4, &mut soft, &mut ws);
+            let mut cb = codebook.clone();
+            backend.update(&w, d, &mut cb, &assign, &mut ws);
+            let cost = backend.cost(&w, d, &codebook, &assign, &mut ws);
+            runs.push((assign, bits(&soft), bits(&cb), cost.to_bits()));
+        }
+    }
+    backend.set_pool_affinity(true);
+    let first = &runs[0];
+    for (i, run) in runs.iter().enumerate().skip(1) {
+        assert_eq!(run.0, first.0, "assignments diverged on run {i}");
+        assert_eq!(run.1, first.1, "soft sweep diverged on run {i}");
+        assert_eq!(run.2, first.2, "M-step diverged on run {i}");
+        assert_eq!(run.3, first.3, "cost diverged on run {i}");
+    }
+}
+
+#[test]
 fn k_above_m_clamped_seed_is_exact_on_every_backend() {
     // Three well-separated rows, k = 8: the seed clamps to 3 distinct
     // centers; hard and soft sweeps agree exactly everywhere (no ties).

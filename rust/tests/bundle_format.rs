@@ -1,0 +1,407 @@
+//! V2 block-format integration suite: randomized V1/V2 roundtrips, the
+//! committed V1 compatibility fixture, corruption handling, and the lazy
+//! reader's core promise — `layer(i)` touches only the header, the block
+//! table, and block `i`'s own bytes, proven with a counting reader.
+
+use std::io::{Cursor, Read, Seek, SeekFrom};
+use std::sync::{Arc, Mutex};
+
+use idkm::deploy::format::{
+    CompressedModel, Encoding, Layer, FORMAT_V1, FORMAT_V2, MAGIC,
+};
+use idkm::deploy::BundleReader;
+use idkm::quant::packing;
+use idkm::util::proptest::{check, Gen};
+use idkm::util::rng::Rng;
+use idkm::util::threadpool::Pool;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join("idkm_bundle_format_test").join(name)
+}
+
+fn hydrated_bits(model: &CompressedModel) -> Vec<(String, Vec<usize>, Vec<u32>)> {
+    model
+        .hydrate()
+        .unwrap()
+        .into_iter()
+        .map(|(n, t)| (n, t.shape().to_vec(), t.data().iter().map(|v| v.to_bits()).collect()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Random layer sets: all three encodings, empty layer lists, zero-length
+// payloads (m = 0 clustered layers and 0-element raw layers included).
+// ---------------------------------------------------------------------------
+
+struct LayerSet;
+
+impl Gen for LayerSet {
+    type Value = Vec<Layer>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<Layer> {
+        let n_layers = rng.below(6); // 0..=5, empty bundles included
+        (0..n_layers)
+            .map(|i| {
+                let name = format!("layer{i}");
+                match rng.below(3) {
+                    0 => {
+                        let n = rng.below(41); // 0..=40 elements
+                        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        Layer {
+                            name,
+                            shape: vec![n],
+                            encoding: Encoding::Raw,
+                            codebook: Vec::new(),
+                            bytes: data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+                            code_lengths: Vec::new(),
+                        }
+                    }
+                    variant => {
+                        let d = 1 + rng.below(3);
+                        let k = 2 + rng.below(8);
+                        let m = rng.below(41); // 0 subvectors allowed
+                        let w: Vec<f32> =
+                            (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        let cb: Vec<f32> =
+                            (0..k * d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                        let packed = packing::pack(&w, d, &cb).unwrap();
+                        if variant == 1 {
+                            Layer {
+                                name,
+                                shape: vec![m * d],
+                                encoding: Encoding::Packed { k, d },
+                                codebook: cb,
+                                bytes: packed.packed,
+                                code_lengths: Vec::new(),
+                            }
+                        } else {
+                            Layer {
+                                name,
+                                shape: vec![m * d],
+                                encoding: Encoding::Huffman { k, d },
+                                codebook: cb,
+                                bytes: packed.huffman,
+                                code_lengths: packed.huffman_lengths,
+                            }
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<Layer>) -> Vec<Vec<Layer>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() - 1].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+        }
+        out
+    }
+}
+
+#[test]
+fn random_layer_sets_roundtrip_both_versions() {
+    let v2_path = tmp("prop_v2.idkm");
+    let v1_path = tmp("prop_v1.idkm");
+    check("bundle_roundtrip", 40, &LayerSet, |layers| {
+        let model = CompressedModel { layers: layers.clone() };
+        model.save(&v2_path).unwrap();
+        model.save_v1(&v1_path).unwrap();
+        let via_v2 = CompressedModel::load(&v2_path).unwrap();
+        let via_v1 = CompressedModel::load(&v1_path).unwrap();
+        // field-for-field identical layers through both layouts, and the
+        // hydrated tensors are bit-identical to the source model's
+        via_v2.layers == model.layers
+            && via_v1.layers == model.layers
+            && hydrated_bits(&via_v2) == hydrated_bits(&model)
+            && hydrated_bits(&via_v1) == hydrated_bits(&model)
+    });
+}
+
+#[test]
+fn pool_hydrate_matches_sequential_hydrate() {
+    let mut rng = Rng::new(77);
+    let layers = (0..5)
+        .map(|i| {
+            let w: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let cb: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let packed = packing::pack(&w, 1, &cb).unwrap();
+            Layer {
+                name: format!("l{i}"),
+                shape: vec![256],
+                encoding: Encoding::Packed { k: 8, d: 1 },
+                codebook: cb,
+                bytes: packed.packed,
+                code_lengths: Vec::new(),
+            }
+        })
+        .collect();
+    let model = CompressedModel { layers };
+    let path = tmp("pool_hydrate.idkm");
+    model.save(&path).unwrap();
+    let mut seq = BundleReader::open(&path).unwrap();
+    let mut par = BundleReader::open(&path).unwrap();
+    let pool = Pool::new(4);
+    let a = seq.hydrate_all().unwrap();
+    let b = par.hydrate_all_on(&pool).unwrap();
+    assert_eq!(a.len(), b.len());
+    for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+        assert_eq!(na, nb);
+        assert_eq!(ta.shape(), tb.shape());
+        let ba: Vec<u32> = ta.data().iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = tb.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb, "pool hydrate diverged on {na}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Committed V1 fixture: bundles written before the V2 format existed must
+// keep loading byte-for-byte through the versioned reader, forever.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_v1_fixture_still_loads() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/v1_bundle.idkm");
+    let mut r = BundleReader::open(path).unwrap();
+    assert_eq!(r.version(), FORMAT_V1);
+    assert_eq!(r.num_layers(), 2);
+    // layer "w": k=4 d=1 codebook [-1.5,-0.5,0.5,1.5], addresses
+    // [0,1,2,3,3,2,1,0] at 2 bits
+    let (name, w) = r.layer(0).unwrap();
+    assert_eq!(name, "w");
+    assert_eq!(w.shape(), &[8]);
+    assert_eq!(w.data(), &[-1.5, -0.5, 0.5, 1.5, 1.5, 0.5, -0.5, -1.5][..]);
+    // layer "b": raw floats, addressed by name
+    let (name, b) = r.layer_by_name("b").unwrap();
+    assert_eq!(name, "b");
+    assert_eq!(b.data(), &[0.25, -0.5, 1.0, 2.0][..]);
+    // and the eager path sees the same thing
+    let model = CompressedModel::load(path).unwrap();
+    assert_eq!(model.layers.len(), 2);
+    assert_eq!(model.layers[0].encoding, Encoding::Packed { k: 4, d: 1 });
+    assert_eq!(model.layers[1].encoding, Encoding::Raw);
+}
+
+// ---------------------------------------------------------------------------
+// Corruption: truncated and mangled bundles must come back as errors with
+// no panic and no allocation sized from a bogus length.
+// ---------------------------------------------------------------------------
+
+fn demo_bytes_v2() -> Vec<u8> {
+    let mut rng = Rng::new(9);
+    let w: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let cb = vec![-1.0f32, -0.25, 0.25, 1.0];
+    let packed = packing::pack(&w, 1, &cb).unwrap();
+    let model = CompressedModel {
+        layers: vec![
+            Layer {
+                name: "w".into(),
+                shape: vec![64],
+                encoding: Encoding::Packed { k: 4, d: 1 },
+                codebook: cb,
+                bytes: packed.packed,
+                code_lengths: Vec::new(),
+            },
+            Layer {
+                name: "b".into(),
+                shape: vec![4],
+                encoding: Encoding::Raw,
+                codebook: Vec::new(),
+                bytes: vec![0u8; 16],
+                code_lengths: Vec::new(),
+            },
+        ],
+    };
+    let path = tmp("corrupt_donor.idkm");
+    model.save(&path).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+fn load_bytes(bytes: Vec<u8>) -> anyhow::Result<CompressedModel> {
+    let mut r = BundleReader::from_reader(Cursor::new(bytes), "mem")?;
+    Ok(CompressedModel { layers: r.read_all_raw()? })
+}
+
+#[test]
+fn truncated_bundles_error_cleanly() {
+    let good = demo_bytes_v2();
+    // before the magic ends, mid-version, mid-count, mid-table, mid-block
+    for cut in [0, 2, 4, 7, 12, 16 + 3, good.len() - 1] {
+        let err = load_bytes(good[..cut].to_vec());
+        assert!(err.is_err(), "truncation at {cut} bytes loaded");
+    }
+}
+
+#[test]
+fn bad_magic_and_unknown_version_are_rejected() {
+    let good = demo_bytes_v2();
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xFF;
+    let e = load_bytes(bad_magic).unwrap_err();
+    assert!(format!("{e:#}").contains("not an IDKM bundle"), "{e:#}");
+
+    let mut future = good.clone();
+    future[4..8].copy_from_slice(&(FORMAT_V2 + 41).to_le_bytes());
+    let e = load_bytes(future).unwrap_err();
+    assert!(format!("{e:#}").contains("unsupported bundle version"), "{e:#}");
+}
+
+#[test]
+fn block_table_overrunning_eof_is_rejected() {
+    let good = demo_bytes_v2();
+    // claim far more blocks than the file can hold
+    let mut huge_count = good.clone();
+    huge_count[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(load_bytes(huge_count).is_err());
+    // first block's payload length pushed past EOF
+    let mut long_block = good.clone();
+    long_block[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(load_bytes(long_block).is_err());
+    // meta/payload split no longer tiles the block
+    let mut skewed = good;
+    let hlen = u64::from_le_bytes(skewed[16..24].try_into().unwrap());
+    skewed[16..24].copy_from_slice(&(hlen + 1).to_le_bytes());
+    assert!(load_bytes(skewed).is_err());
+}
+
+fn v1_with_header(header: &str) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_V1.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out
+}
+
+#[test]
+fn v1_header_overruns_are_rejected() {
+    // header length past EOF
+    let mut short = v1_with_header(r#"{"layers":[]}"#);
+    short[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(load_bytes(short).is_err());
+    // the old unchecked `off + len > payload.len()` bug: an offset near
+    // u64::MAX must fail via checked arithmetic, naming the layer
+    let overflow = v1_with_header(
+        r#"{"layers":[{"name":"x","shape":[4],"encoding":"raw","k":0,"d":0,
+            "codebook_offset":0,"codebook_len":0,
+            "bytes_offset":18446744073709551615,"bytes_len":16,
+            "lengths_offset":0,"lengths_len":0}]}"#,
+    );
+    let e = load_bytes(overflow).unwrap_err();
+    assert!(format!("{e:#}").contains("layer x"), "{e:#}");
+    // and a plain span overrun (inside u64 range, outside the payload)
+    let overrun = v1_with_header(
+        r#"{"layers":[{"name":"y","shape":[4],"encoding":"raw","k":0,"d":0,
+            "codebook_offset":0,"codebook_len":0,
+            "bytes_offset":1000,"bytes_len":16,
+            "lengths_offset":0,"lengths_len":0}]}"#,
+    );
+    let e = load_bytes(overrun).unwrap_err();
+    assert!(format!("{e:#}").contains("layer y"), "{e:#}");
+}
+
+// ---------------------------------------------------------------------------
+// The lazy-read proof: a counting reader records every (offset, len) the
+// BundleReader touches; decoding layer i must read nothing of any other
+// block's bytes.
+// ---------------------------------------------------------------------------
+
+struct CountingReader {
+    inner: Cursor<Vec<u8>>,
+    reads: Arc<Mutex<Vec<(u64, u64)>>>,
+}
+
+impl Read for CountingReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let pos = self.inner.position();
+        let n = self.inner.read(buf)?;
+        self.reads.lock().unwrap().push((pos, n as u64));
+        Ok(n)
+    }
+}
+
+impl Seek for CountingReader {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        self.inner.seek(pos)
+    }
+}
+
+/// `(block_start, header_len, payload_len)` per block, read straight from
+/// the raw bytes — independent of the reader under test.
+fn v2_block_spans(bytes: &[u8]) -> (u64, Vec<(u64, u64, u64)>) {
+    let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let blocks_base = 16 + n * 16;
+    let mut off = blocks_base;
+    let mut out = Vec::new();
+    for i in 0..n as usize {
+        let e = 16 + i * 16;
+        let hlen = u64::from_le_bytes(bytes[e..e + 8].try_into().unwrap());
+        let plen = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().unwrap());
+        out.push((off, hlen, plen));
+        off += hlen + plen;
+    }
+    (blocks_base, out)
+}
+
+fn counting(bytes: Vec<u8>) -> (CountingReader, Arc<Mutex<Vec<(u64, u64)>>>) {
+    let reads = Arc::new(Mutex::new(Vec::new()));
+    (CountingReader { inner: Cursor::new(bytes), reads: Arc::clone(&reads) }, reads)
+}
+
+/// Every recorded read lies inside one of `allowed` `(start, end)` ranges.
+fn assert_reads_within(reads: &[(u64, u64)], allowed: &[(u64, u64)], what: &str) {
+    for &(pos, len) in reads {
+        if len == 0 {
+            continue;
+        }
+        let end = pos + len;
+        assert!(
+            allowed.iter().any(|&(s, e)| pos >= s && end <= e),
+            "{what}: read {pos}..{end} outside allowed ranges {allowed:?}"
+        );
+    }
+}
+
+#[test]
+fn layer_read_touches_only_its_own_block() {
+    let bytes = demo_bytes_v2();
+    let (blocks_base, spans) = v2_block_spans(&bytes);
+    assert_eq!(spans.len(), 2);
+    let (b1_start, b1_hlen, b1_plen) = spans[1];
+
+    let (src, reads) = counting(bytes.clone());
+    let mut r = BundleReader::from_reader(src, "mem").unwrap();
+    let (name, t) = r.layer(1).unwrap();
+    assert_eq!(name, "b");
+    assert_eq!(t.data().len(), 4);
+    // allowed: the fixed header + block table, and block 1 itself
+    // (meta header then payload, contiguous)
+    assert_reads_within(
+        &reads.lock().unwrap(),
+        &[(0, blocks_base), (b1_start, b1_start + b1_hlen + b1_plen)],
+        "layer(1)",
+    );
+
+    // layer_by_name scans meta headers to find its target, so other
+    // blocks' header spans are fair game — their payloads are not.
+    let (src, reads) = counting(bytes);
+    let mut r = BundleReader::from_reader(src, "mem").unwrap();
+    let (_, t) = r.layer_by_name("b").unwrap();
+    assert_eq!(t.data().len(), 4);
+    let mut allowed = vec![(0, blocks_base), (b1_start, b1_start + b1_hlen + b1_plen)];
+    for &(start, hlen, _) in &spans {
+        allowed.push((start, start + hlen));
+    }
+    assert_reads_within(&reads.lock().unwrap(), &allowed, "layer_by_name(b)");
+}
+
+#[test]
+fn trailing_bytes_after_last_block_are_tolerated() {
+    // room for a future V3 footer: data past the last block must not
+    // break a V2 reader
+    let mut bytes = demo_bytes_v2();
+    bytes.extend_from_slice(b"future-footer");
+    let model = load_bytes(bytes).unwrap();
+    assert_eq!(model.layers.len(), 2);
+}
