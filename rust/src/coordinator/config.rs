@@ -7,6 +7,7 @@
 //! raised back to paper scale from a config file (DESIGN.md §3).
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -85,6 +86,10 @@ pub struct ExperimentConfig {
     /// tensor bytes (`deploy::cache::HydratedLru`; 0 disables caching so
     /// every bundle evaluation re-decodes)
     pub hydrate_cache_mb: usize,
+    /// how long (µs) the serve-path `Coalescer` holds a partial batch
+    /// open waiting for more single-sample requests before flushing a
+    /// partial forward pass; 0 flushes every request alone (fully serial)
+    pub coalesce_window_us: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -109,6 +114,7 @@ impl Default for ExperimentConfig {
             sweep_threads: 1,
             loader_window: 8,
             hydrate_cache_mb: 256,
+            coalesce_window_us: 200,
         }
     }
 }
@@ -195,6 +201,9 @@ impl ExperimentConfig {
         if let Some(v) = usize_of("hydrate_cache_mb") {
             self.hydrate_cache_mb = v;
         }
+        if let Some(v) = get("coalesce_window_us").and_then(toml::Value::as_i64) {
+            self.coalesce_window_us = v.max(0) as u64;
+        }
         if let Some(v) = get("budget_bytes").and_then(toml::Value::as_i64) {
             self.budget_bytes = v as u64;
         }
@@ -264,6 +273,11 @@ impl ExperimentConfig {
         self.hydrate_cache_mb.saturating_mul(1 << 20)
     }
 
+    /// `coalesce_window_us` as the `Duration` the serve path consumes.
+    pub fn coalesce_window(&self) -> Duration {
+        Duration::from_micros(self.coalesce_window_us)
+    }
+
     pub fn eval_quant_artifact(&self, k: usize, d: usize) -> String {
         format!("{}_eval_quant_k{k}d{d}", self.model_tag)
     }
@@ -317,6 +331,7 @@ sweep_threads = 4
 loader_window = 6
 anderson_depth = 2
 hydrate_cache_mb = 64
+coalesce_window_us = 500
 tau = 0.001
 grid = [[2, 1], [16, 4]]
 methods = ["{}"]
@@ -336,6 +351,8 @@ backend = "{}"
         assert_eq!(c.anderson_depth, 2);
         assert_eq!(c.hydrate_cache_mb, 64);
         assert_eq!(c.hydrate_cache_bytes(), 64 << 20);
+        assert_eq!(c.coalesce_window_us, 500);
+        assert_eq!(c.coalesce_window(), Duration::from_micros(500));
         assert_eq!(c.tau, TauSchedule::Constant(1e-3));
         assert_eq!(c.grid, vec![(2, 1), (16, 4)]);
         assert_eq!(c.methods, vec![Method::Idkm]);

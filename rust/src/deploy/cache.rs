@@ -73,10 +73,12 @@ impl HydratedLru {
         }
     }
 
-    /// The process-wide instance the infer path uses.
-    pub fn global() -> &'static HydratedLru {
-        static GLOBAL: OnceLock<HydratedLru> = OnceLock::new();
-        GLOBAL.get_or_init(|| HydratedLru::new(DEFAULT_CAPACITY_BYTES))
+    /// The process-wide instance the infer/serve paths use. Handed out as
+    /// an `Arc` so a `BundleSession` can hold either this or an isolated
+    /// caller-owned cache (tests, loadgen) through one field type.
+    pub fn global() -> Arc<HydratedLru> {
+        static GLOBAL: OnceLock<Arc<HydratedLru>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| Arc::new(HydratedLru::new(DEFAULT_CAPACITY_BYTES))))
     }
 
     /// Re-bound the cache, evicting LRU-first if it now overflows.

@@ -290,8 +290,16 @@ impl CompressedModel {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let metas: Vec<String> = self.layers.iter().map(block_meta_json).collect();
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_v2(&mut f)?;
+        Ok(())
+    }
+
+    /// Emit the V2 byte stream into any writer. [`Self::save_v2`] wraps a
+    /// file around this; the serve tests and `idkm loadgen` write into a
+    /// `Vec<u8>` to build in-memory bundles for `BundleReader::from_reader`.
+    pub fn write_v2(&self, f: &mut impl Write) -> Result<()> {
+        let metas: Vec<String> = self.layers.iter().map(block_meta_json).collect();
         f.write_all(MAGIC)?;
         f.write_all(&FORMAT_V2.to_le_bytes())?;
         f.write_all(&(self.layers.len() as u64).to_le_bytes())?;

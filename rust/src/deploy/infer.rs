@@ -12,16 +12,14 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::cache::HydratedLru;
-use super::format::{decode_layer, CompressedModel};
-use super::reader::{decode_layers_on, BundleReader};
+use super::format::CompressedModel;
+use super::session::BundleSession;
 use crate::coordinator::{Checkpoint, ExperimentConfig, Trainer};
 use crate::data::{self, Split};
-use crate::runtime::{Runtime, ValueRef};
+use crate::runtime::Runtime;
 use crate::tensor::metrics::Accuracy;
 use crate::tensor::Tensor;
 use crate::util::threadpool::Pool;
@@ -62,59 +60,21 @@ pub fn package(
 /// Load a bundle and evaluate it on the model's test split: the end-to-end
 /// "does the deployed artifact still classify" check.
 ///
-/// Layers resolve through the process-wide [`HydratedLru`] first; only
-/// cache misses touch the bundle, reading raw blocks sequentially and
-/// decoding them in parallel on a transient pool. A repeated evaluation of
-/// the same bundle (same content hash) therefore performs no decode work
-/// at all.
+/// Thin wrapper over [`BundleSession`]: open a session on the process-
+/// shared pool (no transient pool is ever spawned), then run `batches`
+/// full passes through [`BundleSession::forward`]. Layer resolution —
+/// cache consultation, sequential raw reads, pool-parallel decode —
+/// lives in the session, shared with the `deploy::serve` front end; a
+/// repeated evaluation of the same bundle (same content hash) performs
+/// no decode work at all.
 pub fn evaluate_bundle(
     runtime: &Runtime,
     cfg: &ExperimentConfig,
     bundle: impl AsRef<Path>,
     batches: usize,
 ) -> Result<f64> {
-    let mut reader = BundleReader::open(bundle.as_ref())?;
-    let cache = HydratedLru::global();
-    cache.set_capacity(cfg.hydrate_cache_bytes());
-
-    let exe = runtime.load(&cfg.eval_float_artifact())?;
-    let info = exe.info.clone();
-    let batch_size = info.batch.context("eval artifact missing batch")?;
-
-    let mut tensors: Vec<Option<Arc<Tensor>>> = info
-        .params
-        .iter()
-        .map(|spec| cache.get(reader.id(), &spec.name))
-        .collect();
-    let missing: Vec<usize> = (0..tensors.len()).filter(|&i| tensors[i].is_none()).collect();
-    if !missing.is_empty() {
-        let mut raws = Vec::with_capacity(missing.len());
-        for &i in &missing {
-            let name = info.params[i].name.as_str();
-            let li = reader
-                .find(name)?
-                .with_context(|| format!("bundle missing layer {name}"))?;
-            raws.push(reader.layer_raw(li)?);
-        }
-        let decoded: Vec<Tensor> = if raws.len() > 1 {
-            let threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-                .min(raws.len());
-            let pool = Pool::with_name(threads, "idkm-hydrate");
-            decode_layers_on(&raws, &pool)?
-        } else {
-            raws.iter().map(decode_layer).collect::<Result<_>>()?
-        };
-        for (&i, t) in missing.iter().zip(decoded) {
-            let t = Arc::new(t);
-            cache.insert(reader.id(), &info.params[i].name, Arc::clone(&t));
-            tensors[i] = Some(t);
-        }
-    }
-    // Every slot is filled: cache hits above, decode fills the rest.
-    let tensors: Vec<Arc<Tensor>> = tensors.into_iter().map(Option::unwrap).collect();
-    let params: Vec<&Tensor> = tensors.iter().map(|t| t.as_ref()).collect();
+    let session = BundleSession::open(runtime, cfg, bundle.as_ref(), Pool::shared())?;
+    let batch_size = session.batch_size();
 
     let ds = data::for_model(&cfg.model_tag, cfg.seed)?;
     let mut acc = Accuracy::default();
@@ -123,10 +83,7 @@ pub fn evaluate_bundle(
             .map(|i| b as u64 * batch_size as u64 + i)
             .collect();
         let batch = data::make_batch(ds.as_ref(), Split::Test, &idx);
-        let mut args: Vec<ValueRef> = params.iter().map(|t| ValueRef::F32(t)).collect();
-        args.push(ValueRef::F32(&batch.x));
-        args.push(ValueRef::I32(&batch.y));
-        let out = exe.run_borrowed(&args)?;
+        let out = session.forward(&batch.x, &batch.y)?;
         acc.add(out[0].scalar_i32()? as u64, batch_size as u64);
     }
     Ok(acc.value())

@@ -1,0 +1,389 @@
+//! Deterministic in-process traffic harness for `deploy::serve`.
+//!
+//! `idkm loadgen` builds a seeded in-memory sim bundle (real V2 bytes, a
+//! real `BundleReader`/`BundleSession`/`HydratedLru` resolve path, the
+//! deterministic `HashForward` pass), serves it through a [`Server`], and
+//! drives it from a seeded arrival schedule in two shapes:
+//!
+//! * **closed loop** — `clients` threads, each issuing its next request
+//!   the moment the previous one completes: measures the server's
+//!   saturated throughput and the coalescer's amortization under
+//!   think-time-free load.
+//! * **open loop** — arrivals drawn from a seeded Poisson process at
+//!   `rate` req/s, dispatched by `workers` threads; latency is measured
+//!   from the *scheduled* arrival (open-loop convention), so queueing
+//!   delay under bursts is visible instead of coordinated-omission-hidden.
+//!
+//! The report (p50/p95/p99/max latency, throughput, error count, server
+//! pass counters, coalesce ratio) is JSON next to
+//! `rust/BENCH_runtime_micro.json`. Wall-clock numbers are machine-
+//! relative; the **deterministic** part — pinned by a test and the CI
+//! smoke step — is the request schedule and `outputs_fnv`, an
+//! order-independent checksum over all response bytes that is identical
+//! for any thread interleaving of the same seed.
+
+use std::collections::BTreeMap;
+use std::io::Cursor;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::HydratedLru;
+use super::format::CompressedModel;
+use super::reader::BundleReader;
+use super::serve::{fnv64, infer_request, parse_response, Server, FNV_OFFSET};
+use super::session::{mix64, BundleSession, HashForward};
+use crate::quant::kmeans::lloyd;
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::threadpool::Pool;
+
+/// Bundle id [`sim_server`] serves under (what loadgen requests name).
+pub const SIM_BUNDLE: &str = "sim";
+
+/// Sim-bundle shape: big enough that a forward pass has real pool-fanned
+/// work to amortize, small enough for a sub-second CI smoke.
+const SIM_LAYERS: usize = 6;
+const SIM_ELEMS: usize = 4096;
+const SIM_K: usize = 16;
+
+/// Which traffic shapes to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Both,
+    Closed,
+    Open,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "both" => Ok(Mode::Both),
+            "closed" => Ok(Mode::Closed),
+            "open" => Ok(Mode::Open),
+            other => bail!("unknown loadgen mode {other:?} (both|closed|open)"),
+        }
+    }
+
+    fn runs_closed(self) -> bool {
+        matches!(self, Mode::Both | Mode::Closed)
+    }
+
+    fn runs_open(self) -> bool {
+        matches!(self, Mode::Both | Mode::Open)
+    }
+}
+
+/// Harness knobs (one struct so call sites stay readable).
+#[derive(Debug, Clone)]
+pub struct LoadgenOpts {
+    pub seed: u64,
+    pub requests: usize,
+    /// Closed-loop concurrent clients.
+    pub clients: usize,
+    /// Open-loop dispatcher threads.
+    pub workers: usize,
+    /// Open-loop mean arrival rate, requests per second.
+    pub rate: f64,
+    /// Sim executable batch size (the coalescer's flush threshold).
+    pub batch: usize,
+    pub coalesce_window: Duration,
+    pub mode: Mode,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            requests: 256,
+            clients: 8,
+            workers: 8,
+            rate: 2000.0,
+            batch: 8,
+            coalesce_window: Duration::from_micros(200),
+            mode: Mode::Both,
+        }
+    }
+}
+
+/// Build a seeded compressed model: `layers` clustered layers of `elems`
+/// scalars each, codebooks fit with plain Lloyd.
+pub fn sim_model(seed: u64, layers: usize, elems: usize, k: usize) -> Result<CompressedModel> {
+    let mut rng = Rng::new(seed);
+    let mut specs = Vec::new();
+    let mut codebooks = BTreeMap::new();
+    for i in 0..layers {
+        let name = format!("layer{i:02}");
+        let t = Tensor::from_fn(&[elems], |_| rng.normal_f32(0.0, 1.0));
+        let km = lloyd(t.data(), 1, k, 8, &mut rng);
+        codebooks.insert(name.clone(), (km.codebook, km.k, km.d));
+        specs.push((name, t, true));
+    }
+    CompressedModel::build(&specs, &codebooks)
+}
+
+/// A [`Server`] over one in-memory sim bundle (id [`SIM_BUNDLE`]) with its
+/// own isolated hydration cache, forwarding via the deterministic
+/// [`HashForward`]. The whole serve stack short of the executable.
+pub fn sim_server(pool: &Pool, seed: u64, batch: usize, window: Duration) -> Result<Server<'_>> {
+    let model = sim_model(seed, SIM_LAYERS, SIM_ELEMS, SIM_K)?;
+    let mut buf = Vec::new();
+    model.write_v2(&mut buf)?;
+    let names: Vec<String> = model.layers.iter().map(|l| l.name.clone()).collect();
+    let reader = BundleReader::from_reader(Cursor::new(buf), SIM_BUNDLE)?;
+    let cache = Arc::new(HydratedLru::new(64 << 20));
+    let session = BundleSession::from_reader(reader, names, batch, cache, pool);
+    let mut server = Server::new(window);
+    server.add_bundle(SIM_BUNDLE, Box::new(HashForward::new(session)));
+    Ok(server)
+}
+
+/// Run the harness and return the report (see module docs for layout).
+pub fn run(pool: &Pool, opts: &LoadgenOpts) -> Result<Json> {
+    let mut pairs = vec![
+        ("bench", Json::from("loadgen")),
+        (
+            "note",
+            Json::from(
+                "seeded in-process traffic over the sim bundle (HashForward). \
+                 Latency/throughput are machine-relative; outputs_fnv and the \
+                 request schedule are deterministic per seed.",
+            ),
+        ),
+        ("seed", Json::from(opts.seed as usize)),
+        ("requests", Json::from(opts.requests)),
+        ("batch", Json::from(opts.batch)),
+        ("coalesce_window_us", Json::from(opts.coalesce_window.as_micros() as usize)),
+        (
+            "regen",
+            Json::from("cargo run --release -- loadgen --out BENCH_loadgen.json"),
+        ),
+    ];
+    if opts.mode.runs_closed() {
+        pairs.push(("closed", closed_loop(pool, opts)?));
+    }
+    if opts.mode.runs_open() {
+        pairs.push(("open", open_loop(pool, opts)?));
+    }
+    Ok(obj(pairs))
+}
+
+/// Validate a report the way the CI smoke step needs: finite percentiles,
+/// zero errors, and at least one forward pass actually run per section.
+pub fn check_report(report: &Json) -> Result<()> {
+    let mut sections = 0;
+    for mode in ["closed", "open"] {
+        let Some(sec) = report.get(mode) else { continue };
+        sections += 1;
+        for key in ["p50_us", "p95_us", "p99_us"] {
+            let v = sec.f64_of(key).with_context(|| format!("{mode}: missing {key}"))?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("{mode}: {key} = {v} is not a finite non-negative latency");
+            }
+        }
+        if sec.usize_of("errors") != Some(0) {
+            bail!("{mode}: report carries request errors: {sec:?}");
+        }
+        if sec.usize_of("requests").unwrap_or(0) == 0 {
+            bail!("{mode}: no requests recorded");
+        }
+        if sec.usize_of("passes").unwrap_or(0) == 0 {
+            bail!("{mode}: no forward passes recorded");
+        }
+    }
+    if sections == 0 {
+        bail!("report has neither a closed nor an open section");
+    }
+    Ok(())
+}
+
+/// One completed request, as the aggregator sees it.
+struct Rec {
+    ns: u64,
+    /// FNV over the full response bytes (folds into `outputs_fnv`).
+    sum: u64,
+    ok: bool,
+}
+
+/// The deterministic per-request sample index.
+fn sample_for(seed: u64, j: u64) -> u64 {
+    mix64(seed, j) % 65_536
+}
+
+fn closed_loop(pool: &Pool, opts: &LoadgenOpts) -> Result<Json> {
+    let server = sim_server(pool, opts.seed, opts.batch, opts.coalesce_window)?;
+    let clients = opts.clients.max(1);
+    let recs = Mutex::new(Vec::with_capacity(opts.requests));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = &server;
+            let recs = &recs;
+            let (seed, requests) = (opts.seed, opts.requests);
+            scope.spawn(move || {
+                for j in (c..requests).step_by(clients) {
+                    let req = infer_request(SIM_BUNDLE, sample_for(seed, j as u64));
+                    let t = Instant::now();
+                    let resp = server.handle_bytes(&req);
+                    let ns = t.elapsed().as_nanos() as u64;
+                    let ok = matches!(parse_response(&resp), Ok((200, _)));
+                    recs.lock().unwrap().push(Rec {
+                        ns,
+                        sum: fnv64(FNV_OFFSET, &resp),
+                        ok,
+                    });
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    Ok(aggregate(recs.into_inner().unwrap(), wall, &server))
+}
+
+fn open_loop(pool: &Pool, opts: &LoadgenOpts) -> Result<Json> {
+    if !(opts.rate.is_finite() && opts.rate > 0.0) {
+        bail!("open-loop rate must be positive, got {}", opts.rate);
+    }
+    let server = sim_server(pool, opts.seed, opts.batch, opts.coalesce_window)?;
+    let workers = opts.workers.max(1);
+    // Seeded Poisson arrivals: cumulative exponential gaps. Precomputed so
+    // the schedule is a pure function of (seed, requests, rate).
+    let mut offsets = Vec::with_capacity(opts.requests);
+    let mut t = 0.0f64;
+    for j in 0..opts.requests {
+        let bits = mix64(opts.seed ^ 0x6f70_656e_5f6c_6f6f, j as u64) >> 11;
+        let u = (bits + 1) as f64 / (1u64 << 53) as f64; // (0, 1]
+        t += -u.ln() / opts.rate;
+        offsets.push(Duration::from_secs_f64(t));
+    }
+    let offsets = &offsets;
+    let recs = Mutex::new(Vec::with_capacity(opts.requests));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let server = &server;
+            let recs = &recs;
+            let (seed, requests) = (opts.seed, opts.requests);
+            scope.spawn(move || {
+                for j in (w..requests).step_by(workers) {
+                    let sched = offsets[j];
+                    let now = t0.elapsed();
+                    if now < sched {
+                        std::thread::sleep(sched - now);
+                    }
+                    let req = infer_request(SIM_BUNDLE, sample_for(seed, j as u64));
+                    let resp = server.handle_bytes(&req);
+                    // Open-loop latency: completion minus *scheduled*
+                    // arrival, so queueing behind a burst is charged to
+                    // the server, not silently absorbed by the client.
+                    let ns = t0.elapsed().saturating_sub(sched).as_nanos() as u64;
+                    let ok = matches!(parse_response(&resp), Ok((200, _)));
+                    recs.lock().unwrap().push(Rec {
+                        ns,
+                        sum: fnv64(FNV_OFFSET, &resp),
+                        ok,
+                    });
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    Ok(aggregate(recs.into_inner().unwrap(), wall, &server))
+}
+
+/// Percentiles + throughput + the order-independent output checksum +
+/// the server's own pass counters.
+fn aggregate(recs: Vec<Rec>, wall: Duration, server: &Server<'_>) -> Json {
+    let mut lat: Vec<u64> = recs.iter().map(|r| r.ns).collect();
+    lat.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        let rank = (p / 100.0 * lat.len() as f64).ceil() as usize;
+        lat[rank.saturating_sub(1).min(lat.len() - 1)] as f64 / 1000.0
+    };
+    let errors = recs.iter().filter(|r| !r.ok).count();
+    // Commutative fold (rotate-then-add) so the checksum is independent of
+    // completion order, which is the one thing threading may reorder.
+    let mut outputs = 0u64;
+    for r in &recs {
+        outputs = outputs.wrapping_add(r.sum.rotate_left((r.sum % 63) as u32));
+    }
+    let stats = server
+        .coalescer(SIM_BUNDLE)
+        .map(|c| c.stats())
+        .unwrap_or_default();
+    obj(vec![
+        ("requests", Json::from(recs.len())),
+        ("errors", Json::from(errors)),
+        ("p50_us", Json::from(pct(50.0))),
+        ("p95_us", Json::from(pct(95.0))),
+        ("p99_us", Json::from(pct(99.0))),
+        ("max_us", Json::from(lat.last().map_or(0.0, |&n| n as f64 / 1000.0))),
+        (
+            "throughput_rps",
+            Json::from(recs.len() as f64 / wall.as_secs_f64().max(1e-9)),
+        ),
+        ("outputs_fnv", Json::from(format!("{outputs:016x}").as_str())),
+        ("passes", Json::from(stats.passes as usize)),
+        ("full_flushes", Json::from(stats.full_flushes as usize)),
+        ("deadline_flushes", Json::from(stats.deadline_flushes as usize)),
+        ("coalesce_ratio", Json::from(stats.coalesce_ratio())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts(mode: Mode) -> LoadgenOpts {
+        LoadgenOpts {
+            requests: 48,
+            clients: 4,
+            workers: 4,
+            rate: 20_000.0,
+            batch: 4,
+            mode,
+            ..LoadgenOpts::default()
+        }
+    }
+
+    #[test]
+    fn report_passes_its_own_checks() {
+        let pool = Pool::new(2);
+        let report = run(&pool, &small_opts(Mode::Both)).unwrap();
+        check_report(&report).unwrap();
+        assert!(report.get("closed").is_some() && report.get("open").is_some());
+    }
+
+    #[test]
+    fn same_seed_same_outputs() {
+        let pool = Pool::new(3);
+        let a = run(&pool, &small_opts(Mode::Closed)).unwrap();
+        let b = run(&pool, &small_opts(Mode::Closed)).unwrap();
+        let fnv = |r: &Json| r.get("closed").unwrap().str_of("outputs_fnv").unwrap().to_string();
+        assert_eq!(fnv(&a), fnv(&b), "same seed must produce identical response bytes");
+        // and a different seed must not
+        let c = run(&pool, &LoadgenOpts { seed: 8, ..small_opts(Mode::Closed) }).unwrap();
+        assert_ne!(fnv(&a), fnv(&c));
+    }
+
+    #[test]
+    fn check_report_rejects_junk() {
+        assert!(check_report(&Json::Null).is_err());
+        let empty = obj(vec![("bench", Json::from("loadgen"))]);
+        assert!(check_report(&empty).is_err());
+        let bad = obj(vec![(
+            "closed",
+            obj(vec![
+                ("p50_us", Json::from(1.0)),
+                ("p95_us", Json::from(1.0)),
+                ("p99_us", Json::Num(f64::NAN)),
+            ]),
+        )]);
+        assert!(check_report(&bad).is_err());
+    }
+}

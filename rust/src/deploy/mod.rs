@@ -38,12 +38,65 @@
 //! Corrupt bundles — truncated, bit-flipped, hostile lengths — must
 //! surface as `Err`, never as panics or allocation aborts; the fuzz smoke
 //! test (`tests/bundle_fuzz.rs`) enforces this over whole-file byte flips.
+//!
+//! # Serving
+//!
+//! The request-serving layer sits on top of the reading stack, split in
+//! three:
+//!
+//! * [`session`] — [`BundleSession`]: one long-lived bundle = reader +
+//!   cache handle + memoized resolved `Arc<Tensor>` params (+ optionally
+//!   the eval executable). `resolve()` is the extracted layer-resolution
+//!   path both [`infer::evaluate_bundle`] and the server share;
+//!   constructors take `&Pool` — nothing in the serve path ever spawns
+//!   threads per request.
+//! * [`serve`] — the typed front end: `Router` (typed routes →
+//!   extractor-checked handlers), `Response` helpers, the framed wire
+//!   protocol, and the `Coalescer` that merges concurrent single-sample
+//!   requests into shared forward passes.
+//! * [`loadgen`] — the deterministic closed/open-loop traffic harness
+//!   behind `idkm loadgen`.
+//!
+//! ## Request lifecycle
+//!
+//! ```text
+//! frame: u32 LE len ‖ {route: ROUTE_INFER, body: {bundle_id, sample}}
+//!   └─ Router::dispatch       route lookup (unknown → 404)
+//!        └─ FromRequest       body extraction (malformed → 400)
+//!             └─ handler      bundle lookup (unknown → 404)
+//!                  └─ Coalescer::submit
+//!                       joins the open batch, or opens one with
+//!                       deadline = now + coalesce_window_us
+//!                       ├─ batch fills to the executable's batch size
+//!                       │    → the filling request flushes ("full")
+//!                       └─ deadline expires on a partial batch
+//!                            → first waiter past it flushes ("deadline")
+//!                       one BatchForward::forward pass, lock released:
+//!                         BundleSession::resolve (HydratedLru hits, else
+//!                         sequential raw block reads + pool decode)
+//!                         → executable pass over the whole batch
+//!                       every member wakes with its own slot's bytes
+//!        ←─ Response          {"status":200,"body":{"output":hex,…}}
+//! ```
+//!
+//! A failed pass (missing layer, decode error, even a panicking forward)
+//! fails every member of that batch with a clean 500 and leaves session,
+//! coalescer, and pool fully serviceable — no lock poisoning, no stuck
+//! waiters. P concurrent users therefore cost ~P/batch forward passes
+//! (`tests/serve_coalesce.rs` pins the pass counts and the byte-identical
+//! coalesced-vs-one-shot outputs; `benches/runtime_micro.rs` gates the
+//! pass-count ratio as `coalesced_over_serial`).
 
 pub mod cache;
 pub mod format;
 pub mod infer;
+pub mod loadgen;
 pub mod reader;
+pub mod serve;
+pub mod session;
 
 pub use cache::HydratedLru;
 pub use format::CompressedModel;
 pub use reader::BundleReader;
+pub use serve::{BatchForward, Coalescer, Response, Router, Server};
+pub use session::{BundleSession, ExeForward, HashForward};

@@ -1,0 +1,799 @@
+//! Typed request front end over long-lived bundle sessions: routes,
+//! extractors, the batching [`Coalescer`], and the framed wire protocol.
+//!
+//! ## Shape
+//!
+//! * [`Router`] — builder-style typed routing: each route pairs a
+//!   `&'static str` name with a handler `Fn(&S, T) -> impl IntoResponse`
+//!   where `T: FromRequest` is extracted from the request body (an
+//!   extraction failure becomes a 400 before the handler runs). Route-name
+//!   string literals live **only in this file** (the `ROUTE_*` consts; CI
+//!   greps for strays) so clients and servers can never drift.
+//! * [`Response`] — status + JSON body, with `ok`/`bad_request`/
+//!   `not_found`/`error` helpers. `to_bytes` renders the compact
+//!   `{"body":…,"status":…}` envelope; `BTreeMap`-backed JSON objects make
+//!   the byte output deterministic.
+//! * [`Coalescer`] — turns P concurrent single-sample `Infer` requests
+//!   into ~P/B shared forward passes (B = the executable's batch size).
+//!   There is **no dedicated batcher thread**: requester threads cooperate
+//!   leader/follower-style under one mutex. A request joins the open
+//!   generation (or opens one, stamping `deadline = now + window`); the
+//!   request that fills the batch — or the first one to observe its own
+//!   deadline expire — takes the batch, runs the forward pass **with the
+//!   lock released**, publishes per-slot outputs, and wakes the rest. A
+//!   `coalesce_window_us` of 0 therefore degenerates to one pass per
+//!   request with no special-casing: the deadline is already expired the
+//!   moment the batch opens.
+//! * Wire framing — u32 LE length prefix + JSON envelope
+//!   `{"route": …, "body": …}` per request, `{"status": …, "body": …}`
+//!   per response ([`read_framed`]/[`write_framed`]); `idkm serve` speaks
+//!   it over stdio and `idkm loadgen` drives [`Server::handle`] in-process.
+//!
+//! The forward pass itself is behind [`BatchForward`] so the coalescer is
+//! testable without compiled artifacts: `deploy::session` provides the
+//! executable-backed `ExeForward` and the deterministic artifact-free
+//! `HashForward`.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+// -- route + envelope names (the only file allowed to spell these) --------
+
+pub const ROUTE_INFER: &str = "v1/infer";
+pub const ROUTE_INFER_BATCH: &str = "v1/infer_batch";
+pub const ROUTE_HEALTH: &str = "v1/health";
+pub const ROUTE_STATS: &str = "v1/stats";
+
+const KEY_ROUTE: &str = "route";
+const KEY_BODY: &str = "body";
+const KEY_STATUS: &str = "status";
+
+/// Hard cap on a single frame; a corrupt length prefix must never size an
+/// allocation (same policy as the bundle decode path).
+pub const MAX_FRAME: usize = 64 << 20;
+
+// -- responses -------------------------------------------------------------
+
+/// A typed response: HTTP-flavored status + JSON body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub status: u16,
+    pub body: Json,
+}
+
+impl Response {
+    pub fn ok(body: Json) -> Self {
+        Self { status: 200, body }
+    }
+
+    pub fn bad_request(msg: &str) -> Self {
+        Self::with_error(400, msg)
+    }
+
+    pub fn not_found(msg: &str) -> Self {
+        Self::with_error(404, msg)
+    }
+
+    pub fn error(msg: &str) -> Self {
+        Self::with_error(500, msg)
+    }
+
+    fn with_error(status: u16, msg: &str) -> Self {
+        Self { status, body: obj(vec![("error", Json::from(msg))]) }
+    }
+
+    /// The compact response envelope. Deterministic: `Json::Obj` is a
+    /// `BTreeMap`, so key order never depends on construction order.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        obj(vec![
+            (KEY_STATUS, Json::from(self.status as usize)),
+            (KEY_BODY, self.body.clone()),
+        ])
+        .to_string_compact()
+        .into_bytes()
+    }
+}
+
+/// Anything a handler may return.
+pub trait IntoResponse {
+    fn into_response(self) -> Response;
+}
+
+impl IntoResponse for Response {
+    fn into_response(self) -> Response {
+        self
+    }
+}
+
+impl IntoResponse for Json {
+    fn into_response(self) -> Response {
+        Response::ok(self)
+    }
+}
+
+impl IntoResponse for Result<Json> {
+    fn into_response(self) -> Response {
+        match self {
+            Ok(body) => Response::ok(body),
+            Err(e) => Response::error(&format!("{e:#}")),
+        }
+    }
+}
+
+// -- request extraction ----------------------------------------------------
+
+/// Typed extraction from the request body; a failure is reported to the
+/// client as a 400 without invoking the handler.
+pub trait FromRequest: Sized {
+    fn from_request(body: &Json) -> Result<Self>;
+}
+
+/// `Infer { bundle_id, sample }` — one sample through the coalescer.
+pub struct InferReq {
+    pub bundle_id: String,
+    pub sample: u64,
+}
+
+impl FromRequest for InferReq {
+    fn from_request(body: &Json) -> Result<Self> {
+        let bundle_id = body.str_of("bundle_id").context("missing bundle_id")?.to_string();
+        let sample = body.i64_of("sample").context("missing sample")?;
+        if sample < 0 {
+            bail!("sample must be non-negative");
+        }
+        Ok(Self { bundle_id, sample: sample as u64 })
+    }
+}
+
+/// `InferBatch { bundle_id, samples }` — a caller-assembled batch; chunked
+/// over full passes directly, bypassing the coalescing queue.
+pub struct InferBatchReq {
+    pub bundle_id: String,
+    pub samples: Vec<u64>,
+}
+
+impl FromRequest for InferBatchReq {
+    fn from_request(body: &Json) -> Result<Self> {
+        let bundle_id = body.str_of("bundle_id").context("missing bundle_id")?.to_string();
+        let arr = body.get("samples").and_then(Json::as_arr).context("missing samples")?;
+        let samples = arr
+            .iter()
+            .map(|v| {
+                let n = v.as_i64().context("samples must be integers")?;
+                if n < 0 {
+                    bail!("samples must be non-negative");
+                }
+                Ok(n as u64)
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        if samples.is_empty() {
+            bail!("samples is empty");
+        }
+        Ok(Self { bundle_id, samples })
+    }
+}
+
+/// Extractor for body-less routes (`Health`, `Stats`).
+pub struct Empty;
+
+impl FromRequest for Empty {
+    fn from_request(_body: &Json) -> Result<Self> {
+        Ok(Empty)
+    }
+}
+
+// -- router ----------------------------------------------------------------
+
+type Handler<S> = Box<dyn Fn(&S, &Json) -> Response + Send + Sync>;
+
+/// Builder-style typed router over shared state `S`.
+pub struct Router<S> {
+    routes: Vec<(&'static str, Handler<S>)>,
+}
+
+impl<S> Default for Router<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> Router<S> {
+    pub fn new() -> Self {
+        Self { routes: Vec::new() }
+    }
+
+    /// Register `name -> handler`. The wrapper runs the [`FromRequest`]
+    /// extractor first and short-circuits extraction failures to a 400.
+    pub fn route<T, R, H>(mut self, name: &'static str, handler: H) -> Self
+    where
+        T: FromRequest,
+        R: IntoResponse,
+        H: Fn(&S, T) -> R + Send + Sync + 'static,
+    {
+        self.routes.push((
+            name,
+            Box::new(move |state, body| match T::from_request(body) {
+                Ok(req) => handler(state, req).into_response(),
+                Err(e) => Response::bad_request(&format!("{e:#}")),
+            }),
+        ));
+        self
+    }
+
+    /// Decode one request envelope and run its handler. Every malformed
+    /// input comes back as a status — dispatch itself never errors.
+    pub fn dispatch(&self, state: &S, raw: &[u8]) -> Response {
+        let text = match std::str::from_utf8(raw) {
+            Ok(t) => t,
+            Err(_) => return Response::bad_request("request is not utf-8"),
+        };
+        let env = match Json::parse(text) {
+            Ok(v) => v,
+            Err(e) => return Response::bad_request(&format!("bad request json: {e}")),
+        };
+        let Some(route) = env.str_of(KEY_ROUTE) else {
+            return Response::bad_request("request envelope missing route");
+        };
+        let null = Json::Null;
+        let body = env.get(KEY_BODY).unwrap_or(&null);
+        match self.routes.iter().find(|(name, _)| *name == route) {
+            Some((_, handler)) => handler(state, body),
+            None => Response::not_found(&format!("no such route: {route}")),
+        }
+    }
+}
+
+// -- the batch-forward abstraction -----------------------------------------
+
+/// One shared forward pass over a batch of sample indices.
+///
+/// **Per-sample independence contract:** the output for `samples[i]` must
+/// depend only on the resolved bundle and `samples[i]` itself — never on
+/// which other samples happened to share the pass. That is what makes
+/// coalescing transparent: coalesced, serial, and caller-batched execution
+/// of the same sample are byte-identical (pinned by
+/// `tests/serve_coalesce.rs`).
+pub trait BatchForward: Send + Sync {
+    /// Samples per full pass — the coalescer's flush threshold.
+    fn batch_size(&self) -> usize;
+
+    /// Run one pass; must return exactly `samples.len()` outputs, in order.
+    fn forward(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>>;
+}
+
+// -- coalescer -------------------------------------------------------------
+
+/// Counters the `Stats` route reports; all monotonic over a server's life.
+#[derive(Debug, Clone, Default)]
+pub struct CoalStats {
+    /// Single-sample requests accepted (batch-route samples included).
+    pub requests: u64,
+    /// Samples that went through a forward pass.
+    pub batched_samples: u64,
+    /// Forward passes actually run.
+    pub passes: u64,
+    /// Flushes triggered by a batch filling to capacity.
+    pub full_flushes: u64,
+    /// Flushes triggered by the coalesce window expiring.
+    pub deadline_flushes: u64,
+    /// Largest batch any single pass carried.
+    pub max_batch: usize,
+}
+
+impl CoalStats {
+    /// Mean samples per pass — the amortization factor the tentpole is
+    /// after (≈ batch size under saturating load, 1.0 fully serial).
+    pub fn coalesce_ratio(&self) -> f64 {
+        self.batched_samples as f64 / self.passes.max(1) as f64
+    }
+}
+
+struct OpenBatch {
+    gen: u64,
+    samples: Vec<u64>,
+    deadline: Instant,
+}
+
+struct DoneBatch {
+    /// Per-slot outputs, or one error string shared by every member.
+    outs: Result<Vec<Vec<u8>>, String>,
+    /// Members yet to pick up their slot; the entry is dropped at 0.
+    remaining: usize,
+}
+
+struct CoalState {
+    gen_counter: u64,
+    open: Option<OpenBatch>,
+    done: HashMap<u64, DoneBatch>,
+    stats: CoalStats,
+}
+
+/// Queues concurrent single-sample requests and flushes them as one shared
+/// forward pass when the batch fills or the window deadline expires. See
+/// the module docs for the leader/follower algorithm.
+pub struct Coalescer<'a> {
+    forward: Box<dyn BatchForward + 'a>,
+    window: Duration,
+    state: Mutex<CoalState>,
+    cv: Condvar,
+}
+
+impl<'a> Coalescer<'a> {
+    pub fn new(forward: Box<dyn BatchForward + 'a>, window: Duration) -> Self {
+        Self {
+            forward,
+            window,
+            state: Mutex::new(CoalState {
+                gen_counter: 0,
+                open: None,
+                done: HashMap::new(),
+                stats: CoalStats::default(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Submit one sample; blocks until the pass that carried it completes
+    /// and returns this sample's output. An error fails every member of
+    /// the pass but leaves the coalescer fully serviceable.
+    pub fn submit(&self, sample: u64) -> Result<Vec<u8>> {
+        let cap = self.forward.batch_size().max(1);
+        let mut st = self.state.lock().unwrap();
+        st.stats.requests += 1;
+        let (gen, slot) = if let Some(open) = st.open.as_mut() {
+            open.samples.push(sample);
+            (open.gen, open.samples.len() - 1)
+        } else {
+            st.gen_counter += 1;
+            let gen = st.gen_counter;
+            let deadline = Instant::now() + self.window;
+            st.open = Some(OpenBatch { gen, samples: vec![sample], deadline });
+            (gen, 0)
+        };
+        if st.open.as_ref().is_some_and(|o| o.samples.len() >= cap) {
+            let batch = st.open.take().unwrap();
+            st.stats.full_flushes += 1;
+            st = self.run_pass(st, batch);
+        }
+        loop {
+            if let Some(done) = st.done.get_mut(&gen) {
+                let out = match &done.outs {
+                    Ok(outs) => Ok(outs[slot].clone()),
+                    Err(e) => Err(anyhow!("{e}")),
+                };
+                done.remaining -= 1;
+                if done.remaining == 0 {
+                    st.done.remove(&gen);
+                }
+                return out;
+            }
+            match st.open.as_ref() {
+                Some(open) if open.gen == gen => {
+                    // Our batch is still open: wait for a fill, or become
+                    // the flusher when our own deadline has passed.
+                    let deadline = open.deadline;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        let batch = st.open.take().unwrap();
+                        st.stats.deadline_flushes += 1;
+                        st = self.run_pass(st, batch);
+                    } else {
+                        st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+                    }
+                }
+                // Our batch was taken by another member (its pass is in
+                // flight with the lock released); wait for its results.
+                _ => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// A caller-assembled batch: chunked over full passes directly, no
+    /// queueing. Used by the `InferBatch` route and the one-shot eval.
+    pub fn run_batch(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>> {
+        let cap = self.forward.batch_size().max(1);
+        let mut out = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(cap) {
+            let outs = self.forward.forward(chunk)?;
+            if outs.len() != chunk.len() {
+                bail!("forward returned {} outputs for {} samples", outs.len(), chunk.len());
+            }
+            let mut st = self.state.lock().unwrap();
+            st.stats.requests += chunk.len() as u64;
+            st.stats.passes += 1;
+            st.stats.batched_samples += chunk.len() as u64;
+            st.stats.max_batch = st.stats.max_batch.max(chunk.len());
+            drop(st);
+            out.extend(outs);
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> CoalStats {
+        self.state.lock().unwrap().stats.clone()
+    }
+
+    /// Flush `batch`: count it, run the forward pass with the lock
+    /// released, publish the outcome, and wake every waiter. A panicking
+    /// forward is caught and published as an error so members never hang
+    /// and the mutex is never poisoned.
+    fn run_pass<'g>(
+        &'g self,
+        mut st: MutexGuard<'g, CoalState>,
+        batch: OpenBatch,
+    ) -> MutexGuard<'g, CoalState> {
+        let n = batch.samples.len();
+        st.stats.passes += 1;
+        st.stats.batched_samples += n as u64;
+        st.stats.max_batch = st.stats.max_batch.max(n);
+        drop(st);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.forward.forward(&batch.samples)
+        }));
+        let outs = match result {
+            Ok(Ok(outs)) if outs.len() == n => Ok(outs),
+            Ok(Ok(outs)) => {
+                Err(format!("forward returned {} outputs for {n} samples", outs.len()))
+            }
+            Ok(Err(e)) => Err(format!("{e:#}")),
+            Err(_) => Err("forward pass panicked".to_string()),
+        };
+        let mut st = self.state.lock().unwrap();
+        st.done.insert(batch.gen, DoneBatch { outs, remaining: n });
+        self.cv.notify_all();
+        st
+    }
+}
+
+// -- server ----------------------------------------------------------------
+
+/// Shared handler state: one [`Coalescer`] (and thus one session) per
+/// served bundle id.
+pub struct ServerState<'a> {
+    bundles: Vec<(String, Coalescer<'a>)>,
+}
+
+impl<'a> ServerState<'a> {
+    fn coalescer(&self, id: &str) -> Option<&Coalescer<'a>> {
+        self.bundles.iter().find(|(name, _)| name == id).map(|(_, c)| c)
+    }
+}
+
+/// The in-process server: typed router over [`ServerState`]. Transports
+/// are callers' business — `serve_stream` speaks the framed protocol over
+/// any `Read`/`Write` pair, and `handle` serves in-process callers (the
+/// load generator, tests) with zero transport in between.
+pub struct Server<'a> {
+    window: Duration,
+    state: ServerState<'a>,
+    router: Router<ServerState<'a>>,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(window: Duration) -> Self {
+        let router = Router::new()
+            .route(ROUTE_INFER, handle_infer)
+            .route(ROUTE_INFER_BATCH, handle_infer_batch)
+            .route(ROUTE_HEALTH, handle_health)
+            .route(ROUTE_STATS, handle_stats);
+        Self { window, state: ServerState { bundles: Vec::new() }, router }
+    }
+
+    /// Serve `forward` under `id`, coalescing with this server's window.
+    pub fn add_bundle(&mut self, id: impl Into<String>, forward: Box<dyn BatchForward + 'a>) {
+        let coalescer = Coalescer::new(forward, self.window);
+        self.state.bundles.push((id.into(), coalescer));
+    }
+
+    /// One request in, one response out (in-process fast path).
+    pub fn handle(&self, raw: &[u8]) -> Response {
+        self.router.dispatch(&self.state, raw)
+    }
+
+    /// `handle`, already rendered to response-envelope bytes.
+    pub fn handle_bytes(&self, raw: &[u8]) -> Vec<u8> {
+        self.handle(raw).to_bytes()
+    }
+
+    pub fn coalescer(&self, id: &str) -> Option<&Coalescer<'a>> {
+        self.state.coalescer(id)
+    }
+
+    /// Framed request/response loop until clean EOF (`idkm serve` runs
+    /// this over stdio).
+    pub fn serve_stream(&self, r: &mut dyn Read, w: &mut dyn Write) -> Result<()> {
+        while let Some(frame) = read_framed(r)? {
+            let resp = self.handle(&frame);
+            write_framed(w, &resp.to_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+fn handle_infer(state: &ServerState<'_>, req: InferReq) -> Response {
+    let Some(coalescer) = state.coalescer(&req.bundle_id) else {
+        return Response::not_found(&format!("unknown bundle {}", req.bundle_id));
+    };
+    match coalescer.submit(req.sample) {
+        Ok(bytes) => Response::ok(obj(vec![
+            ("sample", Json::Num(req.sample as f64)),
+            ("output", Json::from(to_hex(&bytes).as_str())),
+        ])),
+        Err(e) => Response::error(&format!("{e:#}")),
+    }
+}
+
+fn handle_infer_batch(state: &ServerState<'_>, req: InferBatchReq) -> Response {
+    let Some(coalescer) = state.coalescer(&req.bundle_id) else {
+        return Response::not_found(&format!("unknown bundle {}", req.bundle_id));
+    };
+    match coalescer.run_batch(&req.samples) {
+        Ok(outs) => {
+            let hex: Vec<Json> =
+                outs.iter().map(|b| Json::from(to_hex(b).as_str())).collect();
+            Response::ok(obj(vec![("outputs", Json::Arr(hex))]))
+        }
+        Err(e) => Response::error(&format!("{e:#}")),
+    }
+}
+
+fn handle_health(state: &ServerState<'_>, _req: Empty) -> Response {
+    let ids: Vec<Json> =
+        state.bundles.iter().map(|(name, _)| Json::from(name.as_str())).collect();
+    Response::ok(obj(vec![("ok", Json::from(true)), ("bundles", Json::Arr(ids))]))
+}
+
+fn handle_stats(state: &ServerState<'_>, _req: Empty) -> Response {
+    let per_bundle: Vec<(&str, Json)> = state
+        .bundles
+        .iter()
+        .map(|(name, c)| {
+            let s = c.stats();
+            (
+                name.as_str(),
+                obj(vec![
+                    ("requests", Json::from(s.requests as usize)),
+                    ("batched_samples", Json::from(s.batched_samples as usize)),
+                    ("passes", Json::from(s.passes as usize)),
+                    ("full_flushes", Json::from(s.full_flushes as usize)),
+                    ("deadline_flushes", Json::from(s.deadline_flushes as usize)),
+                    ("max_batch", Json::from(s.max_batch)),
+                    ("coalesce_ratio", Json::from(s.coalesce_ratio())),
+                ]),
+            )
+        })
+        .collect();
+    Response::ok(obj(per_bundle.into_iter().collect()))
+}
+
+// -- wire helpers (client side included, so tests speak the same bytes) ----
+
+/// Render a request envelope for `route` with `body`.
+pub fn encode_request(route: &str, body: Json) -> Vec<u8> {
+    obj(vec![(KEY_ROUTE, Json::from(route)), (KEY_BODY, body)])
+        .to_string_compact()
+        .into_bytes()
+}
+
+pub fn infer_request(bundle: &str, sample: u64) -> Vec<u8> {
+    encode_request(
+        ROUTE_INFER,
+        obj(vec![("bundle_id", Json::from(bundle)), ("sample", Json::Num(sample as f64))]),
+    )
+}
+
+pub fn infer_batch_request(bundle: &str, samples: &[u64]) -> Vec<u8> {
+    let arr = samples.iter().map(|&s| Json::Num(s as f64)).collect();
+    encode_request(
+        ROUTE_INFER_BATCH,
+        obj(vec![("bundle_id", Json::from(bundle)), ("samples", Json::Arr(arr))]),
+    )
+}
+
+pub fn health_request() -> Vec<u8> {
+    encode_request(ROUTE_HEALTH, Json::Null)
+}
+
+pub fn stats_request() -> Vec<u8> {
+    encode_request(ROUTE_STATS, Json::Null)
+}
+
+/// Split a response envelope back into `(status, body)`.
+pub fn parse_response(raw: &[u8]) -> Result<(u16, Json)> {
+    let v = Json::parse(std::str::from_utf8(raw)?)?;
+    let status = v.i64_of(KEY_STATUS).context("response missing status")?;
+    let body = v.get(KEY_BODY).cloned().unwrap_or(Json::Null);
+    Ok((status as u16, body))
+}
+
+/// Read one length-prefixed frame; `None` on clean EOF before a frame.
+pub fn read_framed(r: &mut dyn Read) -> Result<Option<Vec<u8>>> {
+    let mut lenb = [0u8; 4];
+    match r.read_exact(&mut lenb) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("truncated frame")?;
+    Ok(Some(buf))
+}
+
+/// Write one length-prefixed frame.
+pub fn write_framed(w: &mut dyn Write, bytes: &[u8]) -> Result<()> {
+    let len = u32::try_from(bytes.len()).context("frame too large")?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// FNV-1a offset basis (the seed for [`fnv64`] chains).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a over `bytes`, continuing from `seed` (start at [`FNV_OFFSET`]).
+pub fn fnv64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Lowercase hex of `bytes` (response output encoding).
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo forward: output for sample `s` is `s` as LE bytes. Trivially
+    /// satisfies the per-sample independence contract.
+    struct Echo {
+        batch: usize,
+    }
+
+    impl BatchForward for Echo {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        fn forward(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>> {
+            Ok(samples.iter().map(|s| s.to_le_bytes().to_vec()).collect())
+        }
+    }
+
+    fn echo_server<'a>(batch: usize, window: Duration) -> Server<'a> {
+        let mut srv = Server::new(window);
+        srv.add_bundle("m", Box::new(Echo { batch }));
+        srv
+    }
+
+    #[test]
+    fn protocol_errors_are_statuses() {
+        let srv = echo_server(1, Duration::ZERO);
+        assert_eq!(srv.handle(b"\xff\xfe").status, 400); // not utf-8
+        assert_eq!(srv.handle(b"{nope").status, 400); // not json
+        assert_eq!(srv.handle(b"{\"x\":1}").status, 400); // no route
+        let unknown = encode_request("v1/definitely_not_a_route", Json::Null);
+        assert_eq!(srv.handle(&unknown).status, 404);
+        // extractor failure: infer without a body
+        let bad = encode_request(ROUTE_INFER, Json::Null);
+        assert_eq!(srv.handle(&bad).status, 400);
+        // unknown bundle
+        let resp = srv.handle(&infer_request("ghost", 1));
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn infer_roundtrips_through_the_envelope() {
+        let srv = echo_server(1, Duration::ZERO);
+        let sample: u64 = 7;
+        let bytes = srv.handle_bytes(&infer_request("m", sample));
+        let (status, body) = parse_response(&bytes).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.str_of("output"), Some(to_hex(&sample.to_le_bytes()).as_str()));
+    }
+
+    #[test]
+    fn zero_window_flushes_each_request_alone() {
+        let srv = echo_server(4, Duration::ZERO);
+        let c = srv.coalescer("m").unwrap();
+        for s in 0..3 {
+            assert_eq!(c.submit(s).unwrap(), s.to_le_bytes().to_vec());
+        }
+        let stats = c.stats();
+        assert_eq!(stats.passes, 3);
+        assert_eq!(stats.deadline_flushes, 3);
+        assert_eq!(stats.full_flushes, 0);
+        assert_eq!(stats.max_batch, 1);
+    }
+
+    #[test]
+    fn run_batch_chunks_to_full_passes() {
+        let srv = echo_server(2, Duration::ZERO);
+        let c = srv.coalescer("m").unwrap();
+        let outs = c.run_batch(&[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(outs.len(), 5);
+        let last: u64 = 5;
+        assert_eq!(outs[4], last.to_le_bytes().to_vec());
+        let stats = c.stats();
+        assert_eq!(stats.passes, 3); // 2 + 2 + 1
+        assert_eq!(stats.batched_samples, 5);
+        assert_eq!(stats.max_batch, 2);
+    }
+
+    #[test]
+    fn health_and_stats_report() {
+        let srv = echo_server(2, Duration::ZERO);
+        let (status, body) = parse_response(&srv.handle_bytes(&health_request())).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(body.get("bundles").and_then(Json::as_arr).unwrap().len(), 1);
+
+        srv.coalescer("m").unwrap().run_batch(&[1, 2]).unwrap();
+        let (status, body) = parse_response(&srv.handle_bytes(&stats_request())).unwrap();
+        assert_eq!(status, 200);
+        let m = body.get("m").unwrap();
+        assert_eq!(m.usize_of("passes"), Some(1));
+        assert_eq!(m.f64_of("coalesce_ratio"), Some(2.0));
+    }
+
+    #[test]
+    fn framing_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_framed(&mut buf, b"abc").unwrap();
+        write_framed(&mut buf, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_framed(&mut cur).unwrap(), Some(b"abc".to_vec()));
+        assert_eq!(read_framed(&mut cur).unwrap(), Some(Vec::new()));
+        assert_eq!(read_framed(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_frame_is_an_error_not_an_alloc() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_framed(&mut cur).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn forward_error_fails_request_but_not_coalescer() {
+        struct Flaky;
+        impl BatchForward for Flaky {
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn forward(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>> {
+                if samples[0] == 13 {
+                    bail!("unlucky sample");
+                }
+                Ok(samples.iter().map(|s| s.to_le_bytes().to_vec()).collect())
+            }
+        }
+        let mut srv = Server::new(Duration::ZERO);
+        srv.add_bundle("m", Box::new(Flaky));
+        assert_eq!(srv.handle(&infer_request("m", 13)).status, 500);
+        assert_eq!(srv.handle(&infer_request("m", 7)).status, 200);
+        let stats = srv.coalescer("m").unwrap().stats();
+        assert_eq!(stats.passes, 2);
+    }
+}

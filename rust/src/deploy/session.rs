@@ -1,0 +1,453 @@
+//! Long-lived inference session over one bundle: the layer-resolution
+//! half of the old `evaluate_bundle`, extracted so the serve path and the
+//! one-shot eval share it.
+//!
+//! A [`BundleSession`] owns the [`BundleReader`], a handle to the
+//! hydration cache, and (once resolved) the `Arc<Tensor>` parameters the
+//! executable consumes. Resolution is memoized: the first
+//! [`BundleSession::resolve`] consults the cache per layer, reads the
+//! missing raw blocks sequentially from the one seekable source, and fans
+//! the CPU-bound decode across the **caller-supplied** pool — the session
+//! never spawns threads of its own (the old per-call
+//! `Pool::with_name(...)` in `evaluate_bundle` is gone; callers pass
+//! [`Pool::shared`] or their own pool). Every later call clones an `Arc`.
+//!
+//! Two constructors:
+//! * [`BundleSession::open`] — the deployed shape: bundle on disk, eval
+//!   executable from the [`Runtime`], process-global cache.
+//! * [`BundleSession::from_reader`] — artifact-free: any seekable byte
+//!   source (e.g. an in-memory sim bundle), an explicit layer list and
+//!   batch size, and a caller-owned cache. This is what lets the serve
+//!   tests, the load generator, and the bench exercise the genuine
+//!   resolve/cache/pool path without compiled XLA artifacts.
+//!
+//! A resolution error (missing layer, corrupt block) fails that call and
+//! leaves the session reusable: nothing is memoized, no lock is poisoned,
+//! and a later call retries from the cache.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::HydratedLru;
+use super::format::decode_layer;
+use super::reader::{decode_layers_on, BundleReader};
+use super::serve::BatchForward;
+use crate::coordinator::ExperimentConfig;
+use crate::data::{self, Dataset, Split};
+use crate::runtime::{Executable, Runtime, Value, ValueRef};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::threadpool::Pool;
+
+/// One bundle's resolved serving state: reader + cache + memoized params
+/// (+ optionally the eval executable). Shareable across request threads.
+pub struct BundleSession<'p, R: Read + Seek + Send = BufReader<File>> {
+    reader: Mutex<BundleReader<R>>,
+    /// Snapshot of `reader.id()` so cache keys need no reader lock.
+    id: String,
+    cache: Arc<HydratedLru>,
+    pool: &'p Pool,
+    /// Layer names to resolve, in executable-argument order.
+    names: Vec<String>,
+    batch: usize,
+    exe: Option<Arc<Executable>>,
+    /// Memoized resolved parameters; `None` until the first successful
+    /// [`Self::resolve`] (errors leave it `None` so a later call retries).
+    resolved: Mutex<Option<Arc<Vec<Arc<Tensor>>>>>,
+}
+
+impl<'p> BundleSession<'p> {
+    /// Open the deployed shape: bundle file + eval executable + the
+    /// process-global hydration cache (re-bounded to the config's
+    /// capacity). Layer names and batch size come from the artifact.
+    pub fn open(
+        runtime: &Runtime,
+        cfg: &ExperimentConfig,
+        bundle: &Path,
+        pool: &'p Pool,
+    ) -> Result<Self> {
+        let reader = BundleReader::open(bundle)?;
+        let cache = HydratedLru::global();
+        cache.set_capacity(cfg.hydrate_cache_bytes());
+        let exe = runtime.load(&cfg.eval_float_artifact())?;
+        let batch = exe.info.batch.context("eval artifact missing batch")?;
+        let names = exe.info.params.iter().map(|s| s.name.clone()).collect();
+        Ok(Self::build(reader, names, batch, cache, pool, Some(exe)))
+    }
+}
+
+impl<'p, R: Read + Seek + Send> BundleSession<'p, R> {
+    /// Artifact-free session over any seekable source: the caller names
+    /// the layers to resolve and the batch size the forward abstraction
+    /// should coalesce to. No executable — [`Self::forward`] errors, but
+    /// [`Self::resolve`] (and hash-based forwards built on it) work.
+    pub fn from_reader(
+        reader: BundleReader<R>,
+        names: Vec<String>,
+        batch: usize,
+        cache: Arc<HydratedLru>,
+        pool: &'p Pool,
+    ) -> Self {
+        Self::build(reader, names, batch, cache, pool, None)
+    }
+
+    fn build(
+        reader: BundleReader<R>,
+        names: Vec<String>,
+        batch: usize,
+        cache: Arc<HydratedLru>,
+        pool: &'p Pool,
+        exe: Option<Arc<Executable>>,
+    ) -> Self {
+        let id = reader.id().to_string();
+        Self {
+            reader: Mutex::new(reader),
+            id,
+            cache,
+            pool,
+            names,
+            batch,
+            exe,
+            resolved: Mutex::new(None),
+        }
+    }
+
+    /// The bundle's content identity (the hydration-cache key prefix).
+    pub fn bundle_id(&self) -> &str {
+        &self.id
+    }
+
+    /// Layer names this session resolves, in argument order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Samples per forward pass (the coalescer's flush threshold).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// The pool resolution (and pool-aware forwards) fan work across.
+    pub fn pool(&self) -> &'p Pool {
+        self.pool
+    }
+
+    /// Whether a successful resolve has been memoized.
+    pub fn is_resolved(&self) -> bool {
+        self.resolved.lock().unwrap().is_some()
+    }
+
+    /// Resolve every named layer to a decoded tensor: cache hits first,
+    /// then misses read raw from the bundle (sequentially — one seekable
+    /// source) and decode pool-parallel. Memoized on success; concurrent
+    /// callers serialize on the first resolve and then share the `Arc`.
+    pub fn resolve(&self) -> Result<Arc<Vec<Arc<Tensor>>>> {
+        let mut memo = self.resolved.lock().unwrap();
+        if let Some(params) = &*memo {
+            return Ok(Arc::clone(params));
+        }
+        let mut reader = self.reader.lock().unwrap();
+        let mut tensors: Vec<Option<Arc<Tensor>>> =
+            self.names.iter().map(|n| self.cache.get(&self.id, n)).collect();
+        let missing: Vec<usize> =
+            (0..tensors.len()).filter(|&i| tensors[i].is_none()).collect();
+        if !missing.is_empty() {
+            let mut raws = Vec::with_capacity(missing.len());
+            for &i in &missing {
+                let name = self.names[i].as_str();
+                let li = reader
+                    .find(name)?
+                    .with_context(|| format!("bundle missing layer {name}"))?;
+                raws.push(reader.layer_raw(li)?);
+            }
+            // A single cold layer decodes inline; real fan-out goes to the
+            // caller-supplied pool (never a transient one — see module docs).
+            let decoded: Vec<Tensor> = if raws.len() > 1 {
+                decode_layers_on(&raws, self.pool)?
+            } else {
+                raws.iter().map(decode_layer).collect::<Result<_>>()?
+            };
+            for (&i, t) in missing.iter().zip(decoded) {
+                let t = Arc::new(t);
+                self.cache.insert(&self.id, &self.names[i], Arc::clone(&t));
+                tensors[i] = Some(t);
+            }
+        }
+        // Every slot is filled: cache hits above, decode fills the rest.
+        let params: Arc<Vec<Arc<Tensor>>> =
+            Arc::new(tensors.into_iter().map(Option::unwrap).collect());
+        *memo = Some(Arc::clone(&params));
+        Ok(params)
+    }
+
+    /// One executable pass over a prepared batch: resolved params + the
+    /// batch tensors, in manifest argument order.
+    pub fn forward(&self, x: &Tensor, y: &IntTensor) -> Result<Vec<Value>> {
+        let exe = self
+            .exe
+            .as_ref()
+            .context("session was opened without an executable (artifact-free)")?;
+        let params = self.resolve()?;
+        let mut args: Vec<ValueRef> =
+            params.iter().map(|t| ValueRef::F32(t.as_ref())).collect();
+        args.push(ValueRef::F32(x));
+        args.push(ValueRef::I32(y));
+        exe.run_borrowed(&args)
+    }
+}
+
+/// Executable-backed [`BatchForward`]: materialize the requested sample
+/// indices into one batch, run the session's executable, and slice the
+/// leading output into per-sample rows.
+///
+/// The per-sample contract requires a batch-major output (leading dim ==
+/// samples per pass). The currently compiled eval artifacts reduce to an
+/// aggregate correct-count scalar, so this forward reports a clean error
+/// until a per-sample (logits) eval artifact exists — see ROADMAP.
+pub struct ExeForward<'p, R: Read + Seek + Send = BufReader<File>> {
+    session: BundleSession<'p, R>,
+    ds: Box<dyn Dataset>,
+    split: Split,
+}
+
+impl<'p, R: Read + Seek + Send> ExeForward<'p, R> {
+    pub fn new(session: BundleSession<'p, R>, ds: Box<dyn Dataset>) -> Self {
+        Self { session, ds, split: Split::Test }
+    }
+
+    pub fn session(&self) -> &BundleSession<'p, R> {
+        &self.session
+    }
+}
+
+impl<R: Read + Seek + Send> BatchForward for ExeForward<'_, R> {
+    fn batch_size(&self) -> usize {
+        self.session.batch_size()
+    }
+
+    fn forward(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>> {
+        let want = self.session.batch_size();
+        if samples.len() != want {
+            bail!(
+                "eval artifact takes exactly {want} samples per pass, got {}",
+                samples.len()
+            );
+        }
+        let batch = data::make_batch(self.ds.as_ref(), self.split, samples);
+        let out = self.session.forward(&batch.x, &batch.y)?;
+        let first = out.first().context("executable returned no outputs")?;
+        per_sample_rows(first, samples.len())
+    }
+}
+
+/// Slice a batch-major output value into one LE byte blob per sample.
+fn per_sample_rows(v: &Value, n: usize) -> Result<Vec<Vec<u8>>> {
+    let (leading, rows): (usize, Vec<Vec<u8>>) = match v {
+        Value::F32(t) => {
+            let lead = t.shape().first().copied().unwrap_or(0);
+            if lead != n {
+                (lead, Vec::new())
+            } else {
+                let stride = t.len() / n.max(1);
+                (
+                    lead,
+                    t.data()
+                        .chunks(stride.max(1))
+                        .map(|row| row.iter().flat_map(|x| x.to_le_bytes()).collect())
+                        .collect(),
+                )
+            }
+        }
+        Value::I32(t) => {
+            let lead = t.shape().first().copied().unwrap_or(0);
+            if lead != n {
+                (lead, Vec::new())
+            } else {
+                let stride = t.data().len() / n.max(1);
+                (
+                    lead,
+                    t.data()
+                        .chunks(stride.max(1))
+                        .map(|row| row.iter().flat_map(|x| x.to_le_bytes()).collect())
+                        .collect(),
+                )
+            }
+        }
+    };
+    if rows.len() != n {
+        bail!(
+            "executable output is not per-sample decomposable (leading dim \
+             {leading}, batch {n}); serving needs a batch-major eval artifact"
+        );
+    }
+    Ok(rows)
+}
+
+/// Deterministic artifact-free [`BatchForward`] over a session: each pass
+/// fingerprints the **resolved parameters** (fanned over the session's
+/// pool, like a real forward's per-pass compute, with cost proportional to
+/// model bytes and independent of the batch), then derives one digest per
+/// sample from `(fingerprint, sample index)` alone.
+///
+/// Because a sample's output depends only on the resolved bundle and its
+/// own index — never on which other samples shared the pass — coalesced,
+/// serial, and one-shot batched execution are byte-identical, which is
+/// exactly the transparency the serve tests pin down. Used by the tests,
+/// `idkm loadgen`, and the serve bench; real deployments swap in
+/// [`ExeForward`].
+pub struct HashForward<'p, R: Read + Seek + Send = BufReader<File>> {
+    session: BundleSession<'p, R>,
+}
+
+impl<'p, R: Read + Seek + Send> HashForward<'p, R> {
+    pub fn new(session: BundleSession<'p, R>) -> Self {
+        Self { session }
+    }
+
+    pub fn session(&self) -> &BundleSession<'p, R> {
+        &self.session
+    }
+}
+
+impl<R: Read + Seek + Send> BatchForward for HashForward<'_, R> {
+    fn batch_size(&self) -> usize {
+        self.session.batch_size()
+    }
+
+    fn forward(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>> {
+        let params = self.session.resolve()?;
+        // Per-layer FNV over the f32 bit patterns, fanned like a layer-wise
+        // forward; the slot combine below is order-fixed, so thread count
+        // never changes the fingerprint.
+        let slots: Vec<Mutex<u64>> = params.iter().map(|_| Mutex::new(0)).collect();
+        self.session.pool().run_indexed(params.len(), &|i| {
+            let mut h = 0xcbf29ce484222325u64;
+            for x in params[i].data() {
+                for b in x.to_le_bytes() {
+                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+            *slots[i].lock().unwrap() = h;
+        });
+        let mut fp = 0xcbf29ce484222325u64;
+        for (i, s) in slots.iter().enumerate() {
+            fp = mix64(fp ^ i as u64, *s.lock().unwrap());
+        }
+        Ok(samples
+            .iter()
+            .map(|&ix| {
+                let h = mix64(fp, ix);
+                let mut out = Vec::with_capacity(16);
+                out.extend_from_slice(&h.to_le_bytes());
+                out.extend_from_slice(&ix.to_le_bytes());
+                out
+            })
+            .collect())
+    }
+}
+
+/// SplitMix64-style finalizer: a cheap, deterministic 64-bit mixer.
+pub fn mix64(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::format::CompressedModel;
+    use crate::quant::kmeans::lloyd;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::io::Cursor;
+
+    fn demo_bundle() -> (Vec<u8>, Vec<String>) {
+        let mut rng = Rng::new(9);
+        let mut layers = Vec::new();
+        let mut cbs = BTreeMap::new();
+        for i in 0..3 {
+            let name = format!("w{i}");
+            let t = Tensor::from_fn(&[64], |_| rng.normal_f32(0.0, 1.0));
+            let km = lloyd(t.data(), 1, 4, 10, &mut rng);
+            cbs.insert(name.clone(), (km.codebook, 4usize, 1usize));
+            layers.push((name, t, true));
+        }
+        let model = CompressedModel::build(&layers, &cbs).unwrap();
+        let mut buf = Vec::new();
+        model.write_v2(&mut buf).unwrap();
+        let names = model.layers.iter().map(|l| l.name.clone()).collect();
+        (buf, names)
+    }
+
+    fn session_over<'p>(
+        pool: &'p Pool,
+        bytes: Vec<u8>,
+        names: Vec<String>,
+    ) -> BundleSession<'p, Cursor<Vec<u8>>> {
+        let reader = BundleReader::from_reader(Cursor::new(bytes), "mem").unwrap();
+        BundleSession::from_reader(reader, names, 4, Arc::new(HydratedLru::new(1 << 20)), pool)
+    }
+
+    #[test]
+    fn resolve_memoizes_and_shares() {
+        let pool = Pool::new(2);
+        let (bytes, names) = demo_bundle();
+        let s = session_over(&pool, bytes, names.clone());
+        assert!(!s.is_resolved());
+        let a = s.resolve().unwrap();
+        assert!(s.is_resolved());
+        assert_eq!(a.len(), names.len());
+        let b = s.resolve().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second resolve re-decoded");
+    }
+
+    #[test]
+    fn missing_layer_fails_and_session_recovers() {
+        let pool = Pool::new(2);
+        let (bytes, mut names) = demo_bundle();
+        let good = names.clone();
+        names.push("ghost".to_string());
+        let s = session_over(&pool, bytes.clone(), names);
+        let err = s.resolve().unwrap_err().to_string();
+        assert!(err.contains("ghost"), "{err}");
+        assert!(!s.is_resolved());
+        // the same error again (not a poisoned lock), and a session over
+        // the real layer list still resolves
+        assert!(s.resolve().is_err());
+        let ok = session_over(&pool, bytes, good);
+        assert!(ok.resolve().is_ok());
+    }
+
+    #[test]
+    fn forward_without_executable_is_a_clean_error() {
+        let pool = Pool::new(1);
+        let (bytes, names) = demo_bundle();
+        let s = session_over(&pool, bytes, names);
+        let x = Tensor::new(&[1], vec![0.0]);
+        let y = IntTensor::new(&[1], vec![0]);
+        let err = s.forward(&x, &y).unwrap_err().to_string();
+        assert!(err.contains("without an executable"), "{err}");
+    }
+
+    #[test]
+    fn hash_forward_is_batch_composition_independent() {
+        let pool = Pool::new(3);
+        let (bytes, names) = demo_bundle();
+        let f = HashForward::new(session_over(&pool, bytes.clone(), names.clone()));
+        let together = f.forward(&[1, 2, 3, 4]).unwrap();
+        // same samples split across different passes (and a fresh session)
+        let g = HashForward::new(session_over(&pool, bytes, names));
+        let mut apart = g.forward(&[1, 2]).unwrap();
+        apart.extend(g.forward(&[3, 4]).unwrap());
+        assert_eq!(together, apart);
+        // distinct samples produce distinct outputs
+        assert_ne!(together[0], together[1]);
+    }
+}

@@ -7,6 +7,8 @@
 //!   sweep      run a full experiment grid (presets: table1 / table3 / quick)
 //!   memory     run the E4 cluster-grad memory probes
 //!   ptq        post-training-quantization baseline on the checkpoint
+//!   serve      batching inference server over a bundle (framed stdio)
+//!   loadgen    deterministic traffic harness + latency-percentile report
 //!   inspect    list manifest artifacts and their memory stats
 //!
 //! Every subcommand accepts `--artifacts DIR` (default `artifacts/`),
@@ -16,11 +18,15 @@ use anyhow::{Context, Result};
 
 use idkm::coordinator::{memory_probe, report, ExperimentConfig, Sweep, Trainer};
 use idkm::data;
+use idkm::deploy::loadgen::{self, LoadgenOpts, Mode};
+use idkm::deploy::serve::Server;
+use idkm::deploy::session::{BundleSession, ExeForward, HashForward};
 use idkm::quant::engine::{BackendKind, Method};
 use idkm::quant::ptq;
 use idkm::runtime::Runtime;
 use idkm::util::cli::Args;
 use idkm::util::log;
+use idkm::util::threadpool::Pool;
 
 fn main() {
     log::init_from_env();
@@ -40,6 +46,8 @@ fn main() {
         "ptq" => cmd_ptq(rest),
         "deploy" => cmd_deploy(rest),
         "infer" => cmd_infer(rest),
+        "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "inspect" => cmd_inspect(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -67,6 +75,10 @@ fn usage() -> String {
        ptq        post-training-quantization baseline: --k --d\n\
        deploy     package checkpoint into a compressed .idkm bundle\n\
        infer      evaluate a .idkm bundle on the test split\n\
+       serve      serve a bundle over the framed stdio protocol (--sim for\n\
+                  a seeded in-memory bundle; --coalesce-window-us batching)\n\
+       loadgen    deterministic closed/open-loop traffic report against an\n\
+                  in-process sim server (--mode both|closed|open --out FILE)\n\
        inspect    list artifacts\n\
      common options: --artifacts DIR --runs DIR --config FILE --preset NAME\n\
                      --model TAG --seed N --steps N --pretrain-steps N --budget-mb N\n\
@@ -101,6 +113,14 @@ fn shared(extra: Args) -> Args {
 
 /// Parse argv and materialize (args, config, runtime).
 fn setup(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig, Runtime)> {
+    let (args, cfg) = setup_cfg(rest, extra)?;
+    let runtime = Runtime::new(&cfg.artifacts_dir)?;
+    Ok((args, cfg, runtime))
+}
+
+/// [`setup`] without the runtime, for subcommands that must work with no
+/// compiled artifacts present (`loadgen`, `serve --sim`).
+fn setup_cfg(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig)> {
     let args = shared(extra).parse(rest).map_err(|u| anyhow::anyhow!("{u}"))?;
     let mut cfg = ExperimentConfig::preset(&args.get("preset").unwrap())?;
     let cfg_file = args.get("config").unwrap_or_default();
@@ -135,8 +155,7 @@ fn setup(rest: &[String], extra: Args) -> Result<(Args, ExperimentConfig, Runtim
     if let Some(a) = args.get_opt_parsed("anderson-depth").map_err(|e| anyhow::anyhow!(e))? {
         cfg.anderson_depth = a;
     }
-    let runtime = Runtime::new(&cfg.artifacts_dir)?;
-    Ok((args, cfg, runtime))
+    Ok((args, cfg))
 }
 
 fn cmd_pretrain(rest: &[String]) -> Result<()> {
@@ -299,6 +318,117 @@ fn cmd_infer(rest: &[String]) -> Result<()> {
     let batches: usize = args.get_parsed("batches").map_err(|e| anyhow::anyhow!(e))?;
     let acc = idkm::deploy::infer::evaluate_bundle(&runtime, &cfg, &bundle, batches)?;
     println!("bundle {bundle}: top-1 {acc:.4} over {batches} test batches");
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("bundle", "runs/model.idkm", "bundle path to serve")
+        .opt(
+            "batch",
+            "8",
+            "batch size for sim/hash forwards (the exe forward uses the artifact's)",
+        )
+        .opt("coalesce-window-us", "", "override the coalesce window (µs; 0 = serial)")
+        .opt(
+            "hydrate-cache-mb",
+            "",
+            "hydration LRU capacity in MiB of decoded tensors (0 disables)",
+        )
+        .flag("sim", "serve a seeded in-memory sim bundle instead of --bundle");
+    let (args, mut cfg) = setup_cfg(rest, extra)?;
+    if let Some(mb) = args.get_opt_parsed("hydrate-cache-mb").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.hydrate_cache_mb = mb;
+    }
+    if let Some(us) = args.get_opt_parsed("coalesce-window-us").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.coalesce_window_us = us;
+    }
+    let batch: usize = args.get_parsed("batch").map_err(|e| anyhow::anyhow!(e))?;
+    let pool = Pool::shared();
+    let window = cfg.coalesce_window();
+    let mut stdin = std::io::stdin().lock();
+    let mut stdout = std::io::stdout().lock();
+
+    if args.has("sim") {
+        let server = loadgen::sim_server(pool, cfg.seed, batch, window)?;
+        eprintln!(
+            "serving sim bundle {:?} (batch {batch}, window {window:?}) on stdio; EOF stops",
+            loadgen::SIM_BUNDLE
+        );
+        return server.serve_stream(&mut stdin, &mut stdout);
+    }
+
+    let bundle = args.get("bundle").unwrap();
+    let mut server = Server::new(window);
+    match Runtime::new(&cfg.artifacts_dir) {
+        Ok(runtime) => {
+            let session =
+                BundleSession::open(&runtime, &cfg, std::path::Path::new(&bundle), pool)?;
+            let ds = data::for_model(&cfg.model_tag, cfg.seed)?;
+            server.add_bundle(bundle.as_str(), Box::new(ExeForward::new(session, ds)));
+            eprintln!("serving {bundle} (exe forward, window {window:?}) on stdio; EOF stops");
+        }
+        Err(e) => {
+            // No compiled artifacts: still serve the real resolve/cache
+            // path with the deterministic hash forward (useful for
+            // protocol and coalescing work on machines without a toolchain
+            // for the AOT export).
+            eprintln!("no runtime ({e:#}); serving {bundle} with the hash forward instead");
+            let mut reader = idkm::deploy::BundleReader::open(&bundle)?;
+            let names: Vec<String> = (0..reader.num_layers())
+                .map(|i| reader.meta(i).map(|m| m.name.clone()))
+                .collect::<Result<_>>()?;
+            let cache = idkm::deploy::HydratedLru::global();
+            cache.set_capacity(cfg.hydrate_cache_bytes());
+            let session = BundleSession::from_reader(reader, names, batch, cache, pool);
+            server.add_bundle(bundle.as_str(), Box::new(HashForward::new(session)));
+        }
+    }
+    server.serve_stream(&mut stdin, &mut stdout)
+}
+
+fn cmd_loadgen(rest: &[String]) -> Result<()> {
+    let extra = Args::new()
+        .opt("mode", "both", "traffic shape: both | closed | open")
+        .opt("requests", "256", "requests per mode")
+        .opt("clients", "8", "closed-loop concurrent clients")
+        .opt("workers", "8", "open-loop dispatcher threads")
+        .opt("rate", "2000", "open-loop arrival rate, requests/sec")
+        .opt("batch", "8", "sim batch size (the coalescer's flush threshold)")
+        .opt("coalesce-window-us", "", "override the coalesce window (µs; 0 = serial)")
+        .opt("out", "", "report path (empty: print to stdout)");
+    let (args, mut cfg) = setup_cfg(rest, extra)?;
+    if let Some(us) = args.get_opt_parsed("coalesce-window-us").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.coalesce_window_us = us;
+    }
+    let opts = LoadgenOpts {
+        seed: cfg.seed,
+        requests: args.get_parsed("requests").map_err(|e| anyhow::anyhow!(e))?,
+        clients: args.get_parsed("clients").map_err(|e| anyhow::anyhow!(e))?,
+        workers: args.get_parsed("workers").map_err(|e| anyhow::anyhow!(e))?,
+        rate: args.get_parsed("rate").map_err(|e| anyhow::anyhow!(e))?,
+        batch: args.get_parsed("batch").map_err(|e| anyhow::anyhow!(e))?,
+        coalesce_window: cfg.coalesce_window(),
+        mode: Mode::parse(&args.get("mode").unwrap())?,
+    };
+    let report = loadgen::run(Pool::shared(), &opts)?;
+    // The smoke contract: a report that does not validate is a failed run,
+    // so CI can gate on the exit code alone.
+    loadgen::check_report(&report)?;
+    let text = report.to_string_pretty();
+    let out = args.get("out").unwrap_or_default();
+    if out.is_empty() {
+        println!("{text}");
+    } else {
+        let path = std::path::Path::new(&out);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, text + "\n")?;
+        println!("loadgen report written to {out}");
+    }
     Ok(())
 }
 

@@ -26,7 +26,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 /// A boxed one-shot job (the queue path; the hot kernel path is
@@ -251,6 +251,19 @@ impl Pool {
             })
             .collect();
         Self { shared, workers }
+    }
+
+    /// The process-shared pool, sized to the machine, created on first
+    /// use and alive for the process lifetime. This is what long-lived
+    /// paths (bundle hydrate in `deploy`, the serve front end) fan work
+    /// onto instead of spawning transient per-call pools; short-lived
+    /// owners that want isolation still build their own `Pool`.
+    pub fn shared() -> &'static Pool {
+        static SHARED: OnceLock<Pool> = OnceLock::new();
+        SHARED.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            Pool::with_name(n, "idkm-shared")
+        })
     }
 
     /// Toggle chunk→thread affinity for [`Self::run_indexed`] (on by

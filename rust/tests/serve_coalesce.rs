@@ -1,0 +1,261 @@
+//! Serving-path integration suite: the coalescer's transparency contract
+//! (coalesced == one-shot batched == serial, byte for byte), the pass
+//! accounting behind it (one forward per full window, counter-proven),
+//! deadline flushes on partial batches, clean failure isolation for
+//! missing layers, and the load generator's seeded determinism.
+//!
+//! Everything runs over in-memory sim bundles (`loadgen::sim_model` →
+//! `BundleSession::from_reader` → `HashForward`), so the genuine
+//! resolve/cache/pool path is exercised without compiled XLA artifacts.
+
+use std::io::Cursor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use idkm::deploy::cache::HydratedLru;
+use idkm::deploy::loadgen::{self, LoadgenOpts, Mode};
+use idkm::deploy::reader::BundleReader;
+use idkm::deploy::serve::{
+    infer_batch_request, infer_request, parse_response, BatchForward, Server,
+};
+use idkm::deploy::session::{BundleSession, HashForward};
+use idkm::util::json::Json;
+use idkm::util::threadpool::Pool;
+
+/// A session over a fresh in-memory sim bundle. Same seed → identical
+/// bundle bytes → identical `HashForward` outputs, across servers.
+/// `ghost` appends a layer name the bundle does not contain.
+fn sim_session<'p>(
+    pool: &'p Pool,
+    seed: u64,
+    batch: usize,
+    ghost: Option<&str>,
+) -> BundleSession<'p, Cursor<Vec<u8>>> {
+    let model = loadgen::sim_model(seed, 4, 512, 8).unwrap();
+    let mut buf = Vec::new();
+    model.write_v2(&mut buf).unwrap();
+    let mut names: Vec<String> = model.layers.iter().map(|l| l.name.clone()).collect();
+    if let Some(g) = ghost {
+        names.push(g.to_string());
+    }
+    let reader = BundleReader::from_reader(Cursor::new(buf), "sim-test").unwrap();
+    BundleSession::from_reader(reader, names, batch, Arc::new(HydratedLru::new(1 << 20)), pool)
+}
+
+/// A one-bundle server (id "m") over [`sim_session`].
+fn hash_server(pool: &Pool, seed: u64, batch: usize, window: Duration) -> Server<'_> {
+    let mut server = Server::new(window);
+    server.add_bundle("m", Box::new(HashForward::new(sim_session(pool, seed, batch, None))));
+    server
+}
+
+/// Run one `Infer` through the wire envelope; returns (status, output hex).
+fn infer_hex(server: &Server<'_>, bundle: &str, sample: u64) -> (u16, String) {
+    let bytes = server.handle_bytes(&infer_request(bundle, sample));
+    let (status, body) = parse_response(&bytes).unwrap();
+    (status, body.str_of("output").unwrap_or_default().to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Transparency: coalesced, caller-batched, and serial execution of the same
+// samples produce byte-identical outputs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coalesced_matches_one_shot_and_serial() {
+    let pool = Pool::new(4);
+    let samples: Vec<u64> = (0..8).collect();
+
+    // 8 concurrent single-sample requests, batch 4: two shared passes.
+    let server = hash_server(&pool, 7, 4, Duration::from_secs(5));
+    let got: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for &s in &samples {
+            let server = &server;
+            let got = &got;
+            scope.spawn(move || {
+                let (status, hex) = infer_hex(server, "m", s);
+                assert_eq!(status, 200, "sample {s} failed");
+                got.lock().unwrap().push((s, hex));
+            });
+        }
+    });
+    let mut coalesced = got.into_inner().unwrap();
+    coalesced.sort_by_key(|&(s, _)| s);
+    let stats = server.coalescer("m").unwrap().stats();
+    assert_eq!(stats.passes, 2, "8 requests at batch 4 must share 2 passes");
+    assert_eq!(stats.full_flushes, 2);
+    assert_eq!(stats.deadline_flushes, 0);
+    assert_eq!(stats.max_batch, 4);
+
+    // The same samples as one caller-assembled InferBatch on a fresh server.
+    let server = hash_server(&pool, 7, 4, Duration::from_secs(5));
+    let bytes = server.handle_bytes(&infer_batch_request("m", &samples));
+    let (status, body) = parse_response(&bytes).unwrap();
+    assert_eq!(status, 200);
+    let one_shot: Vec<String> = body
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+
+    // Strictly serial: window 0, one pass per request.
+    let server = hash_server(&pool, 7, 4, Duration::ZERO);
+    let serial: Vec<String> = samples.iter().map(|&s| infer_hex(&server, "m", s).1).collect();
+    assert_eq!(server.coalescer("m").unwrap().stats().passes, 8);
+
+    for (i, &s) in samples.iter().enumerate() {
+        assert_eq!(coalesced[i].0, s);
+        assert_eq!(coalesced[i].1, one_shot[i], "coalesced != one-shot for sample {s}");
+        assert_eq!(coalesced[i].1, serial[i], "coalesced != serial for sample {s}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass accounting: a full window runs exactly one forward, counter-proven.
+// ---------------------------------------------------------------------------
+
+/// Wraps a forward and counts how many passes actually reach it.
+struct CountingForward<F> {
+    inner: F,
+    calls: Arc<AtomicU64>,
+}
+
+impl<F: BatchForward> BatchForward for CountingForward<F> {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn forward(&self, samples: &[u64]) -> Result<Vec<Vec<u8>>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.forward(samples)
+    }
+}
+
+#[test]
+fn full_window_runs_exactly_one_pass() {
+    let pool = Pool::new(4);
+    let calls = Arc::new(AtomicU64::new(0));
+    let mut server = Server::new(Duration::from_secs(5));
+    server.add_bundle(
+        "m",
+        Box::new(CountingForward {
+            inner: HashForward::new(sim_session(&pool, 7, 8, None)),
+            calls: Arc::clone(&calls),
+        }),
+    );
+
+    std::thread::scope(|scope| {
+        for s in 0..8u64 {
+            let server = &server;
+            scope.spawn(move || {
+                let (status, _) = infer_hex(server, "m", s);
+                assert_eq!(status, 200);
+            });
+        }
+    });
+
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "8 requests at batch 8 must share one forward");
+    let stats = server.coalescer("m").unwrap().stats();
+    assert_eq!(stats.passes, 1);
+    assert_eq!(stats.full_flushes, 1);
+    assert_eq!(stats.deadline_flushes, 0);
+    assert_eq!(stats.max_batch, 8);
+    assert_eq!(stats.requests, 8);
+    assert_eq!(stats.batched_samples, 8);
+}
+
+#[test]
+fn deadline_flushes_a_partial_batch() {
+    let pool = Pool::new(4);
+    // Batch 8 but only 3 requests: nothing fills, the window must flush.
+    let server = hash_server(&pool, 7, 8, Duration::from_millis(300));
+    let got: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for s in 0..3u64 {
+            let server = &server;
+            let got = &got;
+            scope.spawn(move || {
+                let (status, hex) = infer_hex(server, "m", s);
+                assert_eq!(status, 200);
+                got.lock().unwrap().push((s, hex));
+            });
+        }
+    });
+    let mut outs = got.into_inner().unwrap();
+    outs.sort_by_key(|&(s, _)| s);
+    let stats = server.coalescer("m").unwrap().stats();
+    assert_eq!(stats.passes, 1, "partial batch must flush as one deadline pass");
+    assert_eq!(stats.deadline_flushes, 1);
+    assert_eq!(stats.full_flushes, 0);
+    assert_eq!(stats.max_batch, 3);
+
+    // Deadline-flushed outputs are still the per-sample outputs.
+    let server = hash_server(&pool, 7, 8, Duration::ZERO);
+    for (s, hex) in outs {
+        assert_eq!(hex, infer_hex(&server, "m", s).1, "sample {s} diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure isolation: a request for a bundle whose session names a missing
+// layer fails with a clean 500 and poisons nothing — not the session, not
+// the server, not the shared pool.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_layer_fails_cleanly_without_poisoning() {
+    let pool = Pool::new(4);
+    let mut server = Server::new(Duration::ZERO);
+    server.add_bundle(
+        "bad",
+        Box::new(HashForward::new(sim_session(&pool, 7, 4, Some("ghost")))),
+    );
+    server.add_bundle("good", Box::new(HashForward::new(sim_session(&pool, 7, 4, None))));
+
+    let bytes = server.handle_bytes(&infer_request("bad", 1));
+    let (status, body) = parse_response(&bytes).unwrap();
+    assert_eq!(status, 500);
+    let err = body.str_of("error").unwrap_or_default().to_string();
+    assert!(err.contains("ghost"), "error must name the missing layer: {err}");
+
+    // The same server keeps serving the good bundle over the same pool…
+    let (status, hex) = infer_hex(&server, "good", 1);
+    assert_eq!(status, 200);
+    assert!(!hex.is_empty());
+    // …the bad bundle fails the same way again (no lock poisoning)…
+    let (status, _) = infer_hex(&server, "bad", 2);
+    assert_eq!(status, 500);
+    // …and the good bundle still works after the second failure.
+    let (status, again) = infer_hex(&server, "good", 1);
+    assert_eq!(status, 200);
+    assert_eq!(again, hex, "good bundle's output changed after a failure");
+}
+
+// ---------------------------------------------------------------------------
+// Load generator: seeded runs are reproducible and self-checking.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loadgen_is_deterministic_and_self_checking() {
+    let pool = Pool::new(3);
+    let opts = LoadgenOpts {
+        requests: 32,
+        clients: 4,
+        workers: 4,
+        rate: 20_000.0,
+        batch: 4,
+        mode: Mode::Both,
+        ..LoadgenOpts::default()
+    };
+    let a = loadgen::run(&pool, &opts).unwrap();
+    loadgen::check_report(&a).unwrap();
+    let b = loadgen::run(&pool, &opts).unwrap();
+    let fnv = |r: &Json, sec: &str| r.get(sec).unwrap().str_of("outputs_fnv").unwrap().to_string();
+    assert_eq!(fnv(&a, "closed"), fnv(&b, "closed"), "closed loop is not seed-deterministic");
+    assert_eq!(fnv(&a, "open"), fnv(&b, "open"), "open loop is not seed-deterministic");
+}
