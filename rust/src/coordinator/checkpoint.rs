@@ -13,7 +13,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
-use crate::util::json::{obj, Json};
+use crate::util::json::{obj, Json, JsonError, OwnedEvent, PullParser, SliceSource, DEFAULT_MAX_DEPTH};
 
 const MAGIC: &[u8; 4] = b"ICKP";
 const VERSION: u32 = 1;
@@ -119,8 +119,12 @@ impl Checkpoint {
         let hlen = u64::from_le_bytes(u64buf) as usize;
         let mut hbytes = vec![0u8; hlen];
         f.read_exact(&mut hbytes)?;
-        let header = Json::parse(std::str::from_utf8(&hbytes)?)
-            .map_err(|e| anyhow::anyhow!("{path:?} header: {e}"))?;
+        // Stream the header with the depth-bounded pull parser: no DOM is
+        // built, so a corrupt header of deep nesting or thousands of junk
+        // members costs O(one tensor meta) memory and can never abort.
+        let metas = parse_header(&hbytes)
+            .map_err(|e| anyhow::anyhow!("{path:?} header: {e}"))?
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: header missing tensors[]"))?;
 
         // Read the full payload, then slice per tensor.
         let mut payload = Vec::new();
@@ -131,26 +135,14 @@ impl Checkpoint {
             .collect();
 
         let mut entries = Vec::new();
-        let metas = header
-            .get("tensors")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("{path:?}: header missing tensors[]"))?;
         for m in metas {
-            let name = m
-                .str_of("name")
-                .ok_or_else(|| anyhow::anyhow!("tensor missing name"))?
-                .to_string();
-            let shape: Vec<usize> = m
-                .get("shape")
-                .and_then(Json::as_arr)
-                .map(|s| s.iter().filter_map(Json::as_usize).collect())
-                .unwrap_or_default();
-            let off = m.usize_of("offset").unwrap_or(0);
-            let len = m.usize_of("len").unwrap_or(0);
-            if off + len > floats.len() {
-                bail!("{path:?}: tensor {name} extends past payload");
-            }
-            entries.push((name, Tensor::new(&shape, floats[off..off + len].to_vec())));
+            let name = m.name.ok_or_else(|| anyhow::anyhow!("tensor missing name"))?;
+            let end = m
+                .offset
+                .checked_add(m.len)
+                .filter(|&end| end <= floats.len())
+                .ok_or_else(|| anyhow::anyhow!("{path:?}: tensor {name} extends past payload"))?;
+            entries.push((name, Tensor::new(&m.shape, floats[m.offset..end].to_vec())));
         }
         Ok(Self { entries })
     }
@@ -161,6 +153,126 @@ impl Checkpoint {
         std::fs::write(&p, Json::Obj(meta.clone()).to_string_pretty())
             .with_context(|| format!("writing {p:?}"))?;
         Ok(())
+    }
+}
+
+/// One streamed `tensors[]` entry. Defaults mirror the old DOM lookups:
+/// missing/mistyped `offset`/`len` are 0, `shape` keeps only non-negative
+/// numbers, a missing/mistyped `name` is caught by the caller.
+#[derive(Default)]
+struct TensorMeta {
+    name: Option<String>,
+    shape: Vec<usize>,
+    offset: usize,
+    len: usize,
+}
+
+/// Stream-parse the checkpoint header. `Ok(None)` means the document is
+/// valid JSON but has no `tensors` array (the caller's "header missing
+/// tensors[]"); `Err` is a malformed document.
+fn parse_header(hbytes: &[u8]) -> Result<Option<Vec<TensorMeta>>, JsonError> {
+    let p = &mut PullParser::from_slice(hbytes, DEFAULT_MAX_DEPTH);
+    let eof = |p: &PullParser<SliceSource<'_>>| JsonError {
+        msg: "unexpected end of input".to_string(),
+        offset: p.offset(),
+    };
+    let mut tensors = None;
+    match p.next_owned()? {
+        Some(OwnedEvent::ObjStart) => loop {
+            match p.next_owned()? {
+                Some(OwnedEvent::ObjEnd) => break,
+                Some(OwnedEvent::Key(key)) if key == "tensors" => match p.next_owned()? {
+                    Some(OwnedEvent::ArrStart) => {
+                        let mut metas = Vec::new();
+                        loop {
+                            match p.next_owned()? {
+                                Some(OwnedEvent::ArrEnd) => break,
+                                Some(OwnedEvent::ObjStart) => metas.push(tensor_meta(p)?),
+                                Some(OwnedEvent::ArrStart) => {
+                                    p.skip_container()?;
+                                    metas.push(TensorMeta::default());
+                                }
+                                Some(_) => metas.push(TensorMeta::default()),
+                                None => return Err(eof(p)),
+                            }
+                        }
+                        tensors = Some(metas);
+                    }
+                    Some(OwnedEvent::ObjStart) | Some(OwnedEvent::ArrStart) => {
+                        p.skip_container()?;
+                        // duplicate-key last-wins, like the DOM's BTreeMap
+                        tensors = None;
+                    }
+                    Some(_) => tensors = None,
+                    None => return Err(eof(p)),
+                },
+                Some(OwnedEvent::Key(_)) => p.skip_value()?,
+                _ => return Err(eof(p)),
+            }
+        },
+        Some(OwnedEvent::ArrStart) => p.skip_container()?,
+        Some(_) => {}
+        None => return Err(eof(p)),
+    }
+    // Only whitespace may follow the header document.
+    p.next_owned()?;
+    Ok(tensors)
+}
+
+/// Collect one tensor-meta object (its `ObjStart` already consumed).
+fn tensor_meta(p: &mut PullParser<SliceSource<'_>>) -> Result<TensorMeta, JsonError> {
+    let eof = |p: &PullParser<SliceSource<'_>>| JsonError {
+        msg: "unexpected end of input".to_string(),
+        offset: p.offset(),
+    };
+    let mut m = TensorMeta::default();
+    loop {
+        match p.next_owned()? {
+            Some(OwnedEvent::ObjEnd) => return Ok(m),
+            Some(OwnedEvent::Key(key)) => {
+                let field = key.as_str().to_string();
+                match p.next_owned()? {
+                    Some(OwnedEvent::Str(s)) if field == "name" => m.name = Some(s),
+                    Some(OwnedEvent::Num(n)) if field == "offset" && n >= 0.0 => {
+                        m.offset = n as usize
+                    }
+                    Some(OwnedEvent::Num(n)) if field == "len" && n >= 0.0 => m.len = n as usize,
+                    Some(OwnedEvent::ArrStart) if field == "shape" => {
+                        m.shape.clear();
+                        loop {
+                            match p.next_owned()? {
+                                Some(OwnedEvent::ArrEnd) => break,
+                                Some(OwnedEvent::Num(n)) if n >= 0.0 => m.shape.push(n as usize),
+                                Some(OwnedEvent::ObjStart) | Some(OwnedEvent::ArrStart) => {
+                                    p.skip_container()?
+                                }
+                                Some(_) => {}
+                                None => return Err(eof(p)),
+                            }
+                        }
+                    }
+                    Some(OwnedEvent::ObjStart) | Some(OwnedEvent::ArrStart) => {
+                        p.skip_container()?;
+                        reset_field(&mut m, &field);
+                    }
+                    Some(_) => reset_field(&mut m, &field),
+                    None => return Err(eof(p)),
+                }
+            }
+            _ => return Err(eof(p)),
+        }
+    }
+}
+
+/// Duplicate keys are last-wins in the DOM; a later wrongly-typed value
+/// must therefore reset the field to its default.
+fn reset_field(m: &mut TensorMeta, field: &str) {
+    match field {
+        "name" => m.name = None,
+        "shape" => m.shape.clear(),
+        "offset" => m.offset = 0,
+        "len" => m.len = 0,
+        _ => {}
     }
 }
 
@@ -213,5 +325,42 @@ mod tests {
         Checkpoint::new().save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert!(back.is_empty());
+    }
+
+    fn write_with_header(path: &Path, header: &[u8]) {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header);
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn deep_or_corrupt_header_is_an_error_not_an_abort() {
+        let dir = std::env::temp_dir().join("idkm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hostile.ckpt");
+        // 100k levels of nesting: a recursive parser would overflow the
+        // stack (an abort), the pull parser returns a depth error.
+        let deep = format!(r#"{{"tensors": {}{}}}"#, "[".repeat(100_000), "]".repeat(100_000));
+        write_with_header(&path, deep.as_bytes());
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("depth"), "{err}");
+        // a valid document without tensors[] keeps its old error
+        write_with_header(&path, br#"{"other": 1}"#);
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("missing tensors"), "{err}");
+        // a tensor whose span overflows usize is an error, not a wrap
+        write_with_header(
+            &path,
+            format!(
+                r#"{{"tensors": [{{"name": "w", "shape": [1], "offset": {}, "len": 1}}]}}"#,
+                usize::MAX
+            )
+            .as_bytes(),
+        );
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("extends past payload"), "{err}");
     }
 }

@@ -40,8 +40,87 @@ use crate::coordinator::report;
 use crate::coordinator::trainer::{CellResult, Trainer};
 use crate::quant::engine::Method;
 use crate::runtime::Runtime;
-use crate::util::json::Json;
+use crate::util::json::{JsonError, OwnedEvent, PullParser, DEFAULT_MAX_DEPTH};
 use crate::util::threadpool::Pool;
+
+/// (k, d, method-string) with the legacy defaults for absent fields.
+type CellKey = (usize, usize, String);
+
+/// Stream over a cells-file array, handing `f` the raw text of each row
+/// (the row's exact byte span, validated and depth-bounded but never
+/// built into a DOM). A document whose root is not an array yields no
+/// rows — the old DOM path silently dropped such files too — but the
+/// whole document is still validated.
+fn for_each_cell(text: &str, mut f: impl FnMut(&str)) -> Result<(), JsonError> {
+    let mut p = PullParser::from_slice(text.as_bytes(), DEFAULT_MAX_DEPTH);
+    match p.next_owned()? {
+        Some(OwnedEvent::ArrStart) => {
+            while p.peek_non_ws()? != Some(b']') {
+                let (s, e) = p.value_span()?;
+                f(&text[s..e]);
+            }
+            // consume the ']'
+            p.next_owned()?;
+        }
+        Some(OwnedEvent::ObjStart) => p.skip_container()?,
+        Some(_) => {}
+        None => {
+            return Err(JsonError { msg: "empty cells file".to_string(), offset: 0 });
+        }
+    }
+    // Only whitespace may follow the document.
+    p.next_owned()?;
+    Ok(())
+}
+
+/// Extract one row's (k, d, method) fields from its raw text, with the
+/// same per-field tolerance the DOM accessors had: wrong-typed or
+/// negative values read as absent, duplicate keys are last-wins.
+fn cell_key_fields(row: &str) -> (Option<usize>, Option<usize>, Option<String>) {
+    fn reset(field: &str, k: &mut Option<usize>, d: &mut Option<usize>, m: &mut Option<String>) {
+        match field {
+            "k" => *k = None,
+            "d" => *d = None,
+            "method" => *m = None,
+            _ => {}
+        }
+    }
+    fn walk(
+        row: &str,
+        k: &mut Option<usize>,
+        d: &mut Option<usize>,
+        m: &mut Option<String>,
+    ) -> Result<(), JsonError> {
+        let mut p = PullParser::from_slice(row.as_bytes(), DEFAULT_MAX_DEPTH);
+        match p.next_owned()? {
+            Some(OwnedEvent::ObjStart) => {}
+            // non-object row: every field is absent
+            _ => return Ok(()),
+        }
+        loop {
+            match p.next_owned()? {
+                Some(OwnedEvent::ObjEnd) => return Ok(()),
+                Some(OwnedEvent::Key(field)) => match p.next_owned()? {
+                    Some(OwnedEvent::Num(n)) if field == "k" && n >= 0.0 => *k = Some(n as usize),
+                    Some(OwnedEvent::Num(n)) if field == "d" && n >= 0.0 => *d = Some(n as usize),
+                    Some(OwnedEvent::Str(s)) if field == "method" => *m = Some(s),
+                    Some(OwnedEvent::ObjStart) | Some(OwnedEvent::ArrStart) => {
+                        p.skip_container()?;
+                        reset(&field, k, d, m);
+                    }
+                    Some(_) => reset(&field, k, d, m),
+                    None => return Ok(()),
+                },
+                _ => return Ok(()),
+            }
+        }
+    }
+    let (mut k, mut d, mut m) = (None, None, None);
+    // Row bytes were validated by the enclosing pass; an error here means
+    // the fields stay absent, exactly like the DOM accessors on bad rows.
+    let _ = walk(row, &mut k, &mut d, &mut m);
+    (k, d, m)
+}
 
 /// Load the (k, d, method) tags already completed in a cells file (resume
 /// support). Tags whose method no longer parses are treated as not-done
@@ -50,48 +129,75 @@ pub fn load_done_tags(path: &Path) -> Vec<(usize, usize, Method)> {
     let Ok(text) = std::fs::read_to_string(path) else {
         return Vec::new();
     };
-    let Ok(json) = Json::parse(&text) else {
+    let mut tags = Vec::new();
+    let streamed = for_each_cell(&text, |row| {
+        let (k, d, m) = cell_key_fields(row);
+        if let (Some(k), Some(d), Some(m)) = (k, d, m) {
+            if let Ok(method) = m.parse::<Method>() {
+                tags.push((k, d, method));
+            }
+        }
+    });
+    // a malformed file reads as "nothing done", as before
+    if streamed.is_err() {
         return Vec::new();
-    };
-    json.as_arr()
-        .map(|arr| {
-            arr.iter()
-                .filter_map(|c| {
-                    Some((
-                        c.usize_of("k")?,
-                        c.usize_of("d")?,
-                        c.str_of("method")?.parse::<Method>().ok()?,
-                    ))
-                })
-                .collect()
-        })
-        .unwrap_or_default()
+    }
+    tags
 }
 
 /// Merge freshly computed cells into a cells file. The file keeps the
 /// union keyed by (k, d, method): rows already on disk that are not in
 /// `fresh` survive (a resumed sweep holds only the fresh cells in memory),
 /// fresh rows are appended in their given order.
+///
+/// The existing file is **streamed**, not parsed into a DOM: each
+/// surviving row's byte span is copied through verbatim, so merging into
+/// a file of thousands of cells costs one row of decoded state at a time
+/// instead of materializing the whole array. Rows are written one per
+/// line (compact JSON), which keeps the file grep/diff-friendly and makes
+/// the copied spans stable across merges; legacy multi-line pretty rows
+/// pass through verbatim until a fresh row with the same key replaces them.
 pub fn merge_cells_file(path: &Path, fresh: &[CellResult]) -> Result<()> {
     let fresh_json = report::cells_to_json(fresh);
-    let mut merged: Vec<Json> = Vec::new();
+    let fresh_rows: Vec<(CellKey, String)> = fresh_json
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|c| {
+            let key = (
+                c.usize_of("k").unwrap_or(0),
+                c.usize_of("d").unwrap_or(0),
+                c.str_of("method").unwrap_or("").to_string(),
+            );
+            (key, c.to_string_compact())
+        })
+        .collect();
+    let mut rows: Vec<String> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
-        if let Ok(Json::Arr(existing)) = Json::parse(&text) {
-            let key = |c: &Json| {
-                (
-                    c.usize_of("k").unwrap_or(0),
-                    c.usize_of("d").unwrap_or(0),
-                    c.str_of("method").unwrap_or("").to_string(),
-                )
-            };
-            let fresh_keys: Vec<_> =
-                fresh_json.as_arr().unwrap_or(&[]).iter().map(key).collect();
-            merged.extend(existing.into_iter().filter(|c| !fresh_keys.contains(&key(c))));
+        let mut kept = Vec::new();
+        let streamed = for_each_cell(&text, |row| {
+            let (k, d, m) = cell_key_fields(row);
+            let key = (k.unwrap_or(0), d.unwrap_or(0), m.unwrap_or_default());
+            if !fresh_rows.iter().any(|(fk, _)| *fk == key) {
+                kept.push(row.to_string());
+            }
+        });
+        // a malformed existing file contributes nothing, as before
+        if streamed.is_ok() {
+            rows = kept;
         }
     }
-    merged.extend(fresh_json.as_arr().unwrap_or(&[]).iter().cloned());
-    std::fs::write(path, Json::Arr(merged).to_string_pretty())
-        .with_context(|| format!("writing {path:?}"))?;
+    rows.extend(fresh_rows.into_iter().map(|(_, row)| row));
+    let mut out = String::from("[");
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(if i == 0 { "\n  " } else { ",\n  " });
+        out.push_str(row);
+    }
+    if !rows.is_empty() {
+        out.push('\n');
+    }
+    out.push(']');
+    std::fs::write(path, out).with_context(|| format!("writing {path:?}"))?;
     Ok(())
 }
 
@@ -499,5 +605,35 @@ mod tests {
             tags,
             vec![(2, 1, Method::Idkm), (4, 1, Method::Idkm)]
         );
+    }
+
+    #[test]
+    fn merge_accepts_legacy_pretty_files() {
+        use crate::util::json::Json;
+
+        // A file written by the old DOM merge: one pretty-printed array.
+        let legacy = report::cells_to_json(&[
+            synth_cell(2, 1, Method::Idkm),
+            synth_cell(4, 1, Method::Idkm),
+        ])
+        .to_string_pretty();
+        let path = tmp_cells_path("legacy");
+        std::fs::write(&path, &legacy).unwrap();
+        assert_eq!(load_done_tags(&path).len(), 2);
+
+        // Streaming merge keeps the legacy row it didn't touch and
+        // replaces the one it did; the result is still valid JSON.
+        merge_cells_file(&path, &[synth_cell(4, 1, Method::Idkm)]).unwrap();
+        let mut tags = load_done_tags(&path);
+        tags.sort();
+        assert_eq!(tags, vec![(2, 1, Method::Idkm), (4, 1, Method::Idkm)]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok(), "merged file is not valid JSON:\n{text}");
+
+        // A malformed existing file contributes nothing but doesn't fail
+        // the merge (same tolerance as the old DOM path).
+        std::fs::write(&path, "{not json").unwrap();
+        merge_cells_file(&path, &[synth_cell(8, 1, Method::Idkm)]).unwrap();
+        assert_eq!(load_done_tags(&path), vec![(8, 1, Method::Idkm)]);
     }
 }

@@ -386,4 +386,25 @@ mod tests {
         )]);
         assert!(check_report(&bad).is_err());
     }
+
+    #[test]
+    fn report_write_parse_roundtrips() {
+        let pool = Pool::new(2);
+        let report = run(&pool, &small_opts(Mode::Both)).unwrap();
+        // every report the crate writes must re-parse under our own
+        // strict reader, including any non-finite member (serialized as
+        // null by policy)
+        let text = report.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("closed").is_some(), report.get("closed").is_some());
+        assert_eq!(
+            back.get("closed").unwrap().f64_of("p50_us"),
+            report.get("closed").unwrap().f64_of("p50_us"),
+        );
+        // a NaN percentile (the empty-latency-set producer) writes as
+        // null and still re-parses
+        let nan_report = obj(vec![("p99_us", Json::Num(f64::NAN))]);
+        let back = Json::parse(&nan_report.to_string_pretty()).unwrap();
+        assert_eq!(back.get("p99_us"), Some(&Json::Null));
+    }
 }

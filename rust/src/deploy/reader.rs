@@ -29,7 +29,7 @@ use anyhow::{bail, Context, Result};
 
 use super::format::{self, decode_layer, Encoding, Layer, FORMAT_V1, FORMAT_V2, MAGIC};
 use crate::tensor::Tensor;
-use crate::util::json::Json;
+use crate::util::json::{ByteSource, JsonError, OwnedEvent, PullParser, DEFAULT_MAX_DEPTH};
 use crate::util::threadpool::Pool;
 
 /// Absolute byte span `(offset, len)` into the bundle file.
@@ -133,18 +133,12 @@ impl<R: Read + Seek> BundleReader<R> {
                 let mut hbytes = vec![0u8; hlen as usize];
                 src.read_exact(&mut hbytes)?;
                 hash = fnv(hash, &hbytes);
-                let header = Json::parse(
-                    std::str::from_utf8(&hbytes)
-                        .with_context(|| format!("{origin}: header is not UTF-8"))?,
-                )
-                .map_err(|e| anyhow::anyhow!("{origin}: {e}"))?;
+                let fields = parse_v1_header(&hbytes)
+                    .map_err(|e| anyhow::anyhow!("{origin}: {e}"))?;
                 let payload_len = len - payload_base;
-                let metas = header
-                    .get("layers")
-                    .and_then(Json::as_arr)
-                    .unwrap_or(&[])
-                    .iter()
-                    .map(|m| parse_v1_meta(origin, m, payload_base, payload_len).map(Some))
+                let metas = fields
+                    .into_iter()
+                    .map(|f| resolve_v1_meta(origin, f, payload_base, payload_len).map(Some))
                     .collect::<Result<Vec<_>>>()?;
                 (Vec::new(), metas)
             }
@@ -230,12 +224,9 @@ impl<R: Read + Seek> BundleReader<R> {
         if self.metas[i].is_none() {
             let block = self.blocks[i];
             let hbytes = self.read_span(block.header)?;
-            let m = Json::parse(
-                std::str::from_utf8(&hbytes)
-                    .with_context(|| format!("{}: block {i} meta is not UTF-8", self.origin))?,
-            )
-            .map_err(|e| anyhow::anyhow!("{}: block {i}: {e}", self.origin))?;
-            self.metas[i] = Some(parse_v2_meta(&self.origin, &m, block)?);
+            let fields = parse_block_meta(&hbytes)
+                .map_err(|e| anyhow::anyhow!("{}: block {i}: {e}", self.origin))?;
+            self.metas[i] = Some(resolve_v2_meta(&self.origin, fields, block)?);
         }
         Ok(self.metas[i].as_ref().unwrap())
     }
@@ -348,28 +339,209 @@ pub fn decode_layers_on(raws: &[Layer], pool: &Pool) -> Result<Vec<Tensor>> {
         .collect()
 }
 
+// -- streamed meta decode --------------------------------------------------
+//
+// Headers are decoded with the pull parser — no DOM is built for a block
+// or header, so a hostile deeply nested meta is a clean depth error and
+// the decode allocates O(one meta), not O(document).
+
+/// The raw fields one layer meta may carry, before span resolution.
+/// Defaults mirror what the old DOM accessors produced for a missing or
+/// wrongly-typed key (`unwrap_or(0)` / `unwrap_or("?")` / empty shape).
+#[derive(Default)]
+struct MetaFields {
+    name: Option<String>,
+    shape: Vec<usize>,
+    k: usize,
+    d: usize,
+    encoding: Option<String>,
+    codebook_offset: u64,
+    codebook_len: u64,
+    bytes_offset: u64,
+    bytes_len: u64,
+    lengths_offset: u64,
+    lengths_len: u64,
+}
+
+/// Scalar view of the value after a key: containers are consumed
+/// wholesale and report as `Other` (the DOM accessors returned `None`
+/// for them).
+enum ScalarVal {
+    Str(String),
+    Num(f64),
+    Other,
+}
+
+impl ScalarVal {
+    /// `Json::as_usize` semantics: non-negative numbers truncate, all
+    /// else is absent (the caller's default applies).
+    fn as_u64(&self) -> u64 {
+        match self {
+            ScalarVal::Num(n) if *n >= 0.0 => *n as u64,
+            _ => 0,
+        }
+    }
+
+    fn into_str(self) -> Option<String> {
+        match self {
+            ScalarVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn eof_err<S: ByteSource>(p: &PullParser<S>) -> JsonError {
+    JsonError { msg: "unexpected end of input".to_string(), offset: p.offset() }
+}
+
+fn next_scalar<S: ByteSource>(p: &mut PullParser<S>) -> Result<ScalarVal, JsonError> {
+    match p.next_owned()? {
+        Some(OwnedEvent::Str(s)) => Ok(ScalarVal::Str(s)),
+        Some(OwnedEvent::Num(n)) => Ok(ScalarVal::Num(n)),
+        Some(OwnedEvent::Bool(_)) | Some(OwnedEvent::Null) => Ok(ScalarVal::Other),
+        Some(OwnedEvent::ObjStart) | Some(OwnedEvent::ArrStart) => {
+            p.skip_container()?;
+            Ok(ScalarVal::Other)
+        }
+        _ => Err(eof_err(p)),
+    }
+}
+
+/// `shape` with `filter_map(as_usize)` semantics: negative and non-number
+/// elements drop out, nested containers are skipped, a non-array value is
+/// an empty shape.
+fn collect_shape<S: ByteSource>(p: &mut PullParser<S>) -> Result<Vec<usize>, JsonError> {
+    match p.next_owned()? {
+        Some(OwnedEvent::ArrStart) => {
+            let mut shape = Vec::new();
+            loop {
+                match p.next_owned()? {
+                    Some(OwnedEvent::ArrEnd) => return Ok(shape),
+                    Some(OwnedEvent::Num(n)) if n >= 0.0 => shape.push(n as usize),
+                    Some(OwnedEvent::Num(_))
+                    | Some(OwnedEvent::Str(_))
+                    | Some(OwnedEvent::Bool(_))
+                    | Some(OwnedEvent::Null) => {}
+                    Some(OwnedEvent::ObjStart) | Some(OwnedEvent::ArrStart) => {
+                        p.skip_container()?
+                    }
+                    _ => return Err(eof_err(p)),
+                }
+            }
+        }
+        Some(OwnedEvent::ObjStart) => {
+            p.skip_container()?;
+            Ok(Vec::new())
+        }
+        Some(_) => Ok(Vec::new()),
+        None => Err(eof_err(p)),
+    }
+}
+
+/// Collect one meta object's fields, starting from its already-read first
+/// event. A non-object element yields pure defaults (resolution then
+/// fails on the absent encoding, as the DOM path did). Duplicate keys are
+/// last-wins, matching `BTreeMap::insert`.
+fn collect_meta_fields<S: ByteSource>(
+    p: &mut PullParser<S>,
+    first: OwnedEvent,
+) -> Result<MetaFields, JsonError> {
+    let mut f = MetaFields::default();
+    match first {
+        OwnedEvent::ObjStart => {}
+        OwnedEvent::ArrStart => {
+            p.skip_container()?;
+            return Ok(f);
+        }
+        _ => return Ok(f),
+    }
+    loop {
+        match p.next_owned()? {
+            Some(OwnedEvent::ObjEnd) => return Ok(f),
+            Some(OwnedEvent::Key(key)) => match key.as_str() {
+                "name" => f.name = next_scalar(p)?.into_str(),
+                "encoding" => f.encoding = next_scalar(p)?.into_str(),
+                "shape" => f.shape = collect_shape(p)?,
+                "k" => f.k = next_scalar(p)?.as_u64() as usize,
+                "d" => f.d = next_scalar(p)?.as_u64() as usize,
+                "codebook_offset" => f.codebook_offset = next_scalar(p)?.as_u64(),
+                "codebook_len" => f.codebook_len = next_scalar(p)?.as_u64(),
+                "bytes_offset" => f.bytes_offset = next_scalar(p)?.as_u64(),
+                "bytes_len" => f.bytes_len = next_scalar(p)?.as_u64(),
+                "lengths_offset" => f.lengths_offset = next_scalar(p)?.as_u64(),
+                "lengths_len" => f.lengths_len = next_scalar(p)?.as_u64(),
+                _ => p.skip_value()?,
+            },
+            _ => return Err(eof_err(p)),
+        }
+    }
+}
+
+/// Stream the V1 monolithic header: the whole document is validated, but
+/// only `layers[]` element fields are kept. A root or `layers` value of
+/// the wrong shape is tolerated as zero layers, as the DOM lookups were.
+fn parse_v1_header(hbytes: &[u8]) -> Result<Vec<MetaFields>, JsonError> {
+    let mut p = PullParser::from_slice(hbytes, DEFAULT_MAX_DEPTH);
+    let mut layers = Vec::new();
+    match p.next_owned()? {
+        Some(OwnedEvent::ObjStart) => loop {
+            match p.next_owned()? {
+                Some(OwnedEvent::ObjEnd) => break,
+                Some(OwnedEvent::Key(key)) if key == "layers" => match p.next_owned()? {
+                    Some(OwnedEvent::ArrStart) => {
+                        layers.clear();
+                        loop {
+                            match p.next_owned()? {
+                                Some(OwnedEvent::ArrEnd) => break,
+                                Some(ev) => layers.push(collect_meta_fields(&mut p, ev)?),
+                                None => return Err(eof_err(&p)),
+                            }
+                        }
+                    }
+                    Some(OwnedEvent::ObjStart) => {
+                        p.skip_container()?;
+                        layers.clear();
+                    }
+                    Some(_) => layers.clear(),
+                    None => return Err(eof_err(&p)),
+                },
+                Some(OwnedEvent::Key(_)) => p.skip_value()?,
+                _ => return Err(eof_err(&p)),
+            }
+        },
+        Some(OwnedEvent::ArrStart) => p.skip_container()?,
+        Some(_) => {}
+        None => return Err(eof_err(&p)),
+    }
+    // Only whitespace may follow the header document.
+    p.next_owned()?;
+    Ok(layers)
+}
+
+/// Stream one V2 block meta document (root object expected; anything else
+/// yields defaults and fails at resolution, as the DOM path did).
+fn parse_block_meta(hbytes: &[u8]) -> Result<MetaFields, JsonError> {
+    let mut p = PullParser::from_slice(hbytes, DEFAULT_MAX_DEPTH);
+    let first = p.next_owned()?.ok_or_else(|| eof_err(&p))?;
+    let fields = collect_meta_fields(&mut p, first)?;
+    p.next_owned()?;
+    Ok(fields)
+}
+
 /// Resolve one V1 header entry to absolute spans. This is where the old
 /// unchecked `off + len > payload.len()` lived: all arithmetic is now
 /// checked and failures carry the layer name.
-fn parse_v1_meta(
+fn resolve_v1_meta(
     origin: &str,
-    m: &Json,
+    f: MetaFields,
     payload_base: u64,
     payload_len: u64,
 ) -> Result<LayerMeta> {
-    let name = m.str_of("name").unwrap_or("?").to_string();
-    let shape: Vec<usize> = m
-        .get("shape")
-        .and_then(Json::as_arr)
-        .map(|s| s.iter().filter_map(Json::as_usize).collect())
-        .unwrap_or_default();
-    let k = m.usize_of("k").unwrap_or(0);
-    let d = m.usize_of("d").unwrap_or(0);
-    let encoding = format::parse_encoding(m.str_of("encoding"), k, d)
+    let name = f.name.unwrap_or_else(|| "?".to_string());
+    let encoding = format::parse_encoding(f.encoding.as_deref(), f.k, f.d)
         .with_context(|| format!("{origin}: layer {name}"))?;
-    let span = |off_key: &str, len_key: &str, scale: u64| -> Result<Span> {
-        let off = m.usize_of(off_key).unwrap_or(0) as u64;
-        let bytes = (m.usize_of(len_key).unwrap_or(0) as u64)
+    let span = |off: u64, raw_len: u64, scale: u64, off_key: &str, len_key: &str| -> Result<Span> {
+        let bytes = raw_len
             .checked_mul(scale)
             .with_context(|| format!("{origin}: layer {name}: {len_key} overflows"))?;
         let end = off
@@ -385,31 +557,26 @@ fn parse_v1_meta(
         // so this cannot overflow.
         Ok((payload_base + off, bytes))
     };
-    let codebook = span("codebook_offset", "codebook_len", 4)?;
-    let bytes = span("bytes_offset", "bytes_len", 1)?;
-    let lengths = span("lengths_offset", "lengths_len", 1)?;
-    Ok(LayerMeta { name, shape, encoding, codebook, bytes, lengths })
+    let codebook =
+        span(f.codebook_offset, f.codebook_len, 4, "codebook_offset", "codebook_len")?;
+    let bytes = span(f.bytes_offset, f.bytes_len, 1, "bytes_offset", "bytes_len")?;
+    let lengths = span(f.lengths_offset, f.lengths_len, 1, "lengths_offset", "lengths_len")?;
+    Ok(LayerMeta { name, shape: f.shape, encoding, codebook, bytes, lengths })
 }
 
 /// Resolve one V2 block meta to absolute spans: payload sections are laid
 /// out back-to-back (codebook ‖ bytes ‖ lengths) from the block's payload
 /// offset, and their lengths must tile the table's payload length exactly.
-fn parse_v2_meta(origin: &str, m: &Json, block: Block) -> Result<LayerMeta> {
-    let name = m.str_of("name").unwrap_or("?").to_string();
-    let shape: Vec<usize> = m
-        .get("shape")
-        .and_then(Json::as_arr)
-        .map(|s| s.iter().filter_map(Json::as_usize).collect())
-        .unwrap_or_default();
-    let k = m.usize_of("k").unwrap_or(0);
-    let d = m.usize_of("d").unwrap_or(0);
-    let encoding = format::parse_encoding(m.str_of("encoding"), k, d)
+fn resolve_v2_meta(origin: &str, f: MetaFields, block: Block) -> Result<LayerMeta> {
+    let name = f.name.unwrap_or_else(|| "?".to_string());
+    let encoding = format::parse_encoding(f.encoding.as_deref(), f.k, f.d)
         .with_context(|| format!("{origin}: layer {name}"))?;
-    let cb_bytes = (m.usize_of("codebook_len").unwrap_or(0) as u64)
+    let cb_bytes = f
+        .codebook_len
         .checked_mul(4)
         .with_context(|| format!("{origin}: layer {name}: codebook_len overflows"))?;
-    let bytes_len = m.usize_of("bytes_len").unwrap_or(0) as u64;
-    let lens_len = m.usize_of("lengths_len").unwrap_or(0) as u64;
+    let bytes_len = f.bytes_len;
+    let lens_len = f.lengths_len;
     let total = cb_bytes
         .checked_add(bytes_len)
         .and_then(|t| t.checked_add(lens_len))
@@ -424,7 +591,7 @@ fn parse_v2_meta(origin: &str, m: &Json, block: Block) -> Result<LayerMeta> {
     let base = block.payload.0;
     Ok(LayerMeta {
         name,
-        shape,
+        shape: f.shape,
         encoding,
         // base + total <= EOF was proven when the table was parsed.
         codebook: (base, cb_bytes),

@@ -28,6 +28,13 @@
 //!   `{"route": …, "body": …}` per request, `{"status": …, "body": …}`
 //!   per response ([`read_framed`]/[`write_framed`]); `idkm serve` speaks
 //!   it over stdio and `idkm loadgen` drives [`Server::handle`] in-process.
+//! * Wire hardening — request envelopes are decoded by the streaming,
+//!   depth-bounded pull parser — never the default-bound DOM entry
+//!   point, and a CI grep guard keeps it that way. [`WIRE_MAX_DEPTH`] caps
+//!   nesting, so a hostile frame of up to [`MAX_FRAME`] bytes of
+//!   `[[[[…` is a clean 400 and the connection keeps serving — with a
+//!   recursive parser it would be a stack-overflow *abort*, which no
+//!   `catch_unwind` can contain.
 //!
 //! The forward pass itself is behind [`BatchForward`] so the coalescer is
 //! testable without compiled artifacts: `deploy::session` provides the
@@ -42,7 +49,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::util::json::{obj, Json};
+use crate::util::json::{obj, Json, JsonError, OwnedEvent, PullParser};
 
 // -- route + envelope names (the only file allowed to spell these) --------
 
@@ -58,6 +65,11 @@ const KEY_STATUS: &str = "status";
 /// Hard cap on a single frame; a corrupt length prefix must never size an
 /// allocation (same policy as the bundle decode path).
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// Nesting bound for anything parsed off the wire. Legitimate envelopes
+/// nest 3–4 levels; 64 leaves generous headroom while keeping a hostile
+/// `[[[[…` frame a cheap, clean 400.
+pub const WIRE_MAX_DEPTH: usize = 64;
 
 // -- responses -------------------------------------------------------------
 
@@ -228,26 +240,74 @@ impl<S> Router<S> {
     }
 
     /// Decode one request envelope and run its handler. Every malformed
-    /// input comes back as a status — dispatch itself never errors.
+    /// input comes back as a status — dispatch itself never errors, and
+    /// the depth-bounded streaming decode means it can never abort either.
     pub fn dispatch(&self, state: &S, raw: &[u8]) -> Response {
-        let text = match std::str::from_utf8(raw) {
-            Ok(t) => t,
-            Err(_) => return Response::bad_request("request is not utf-8"),
-        };
-        let env = match Json::parse(text) {
-            Ok(v) => v,
+        let (route, body_span) = match split_envelope(raw) {
+            Ok(parts) => parts,
             Err(e) => return Response::bad_request(&format!("bad request json: {e}")),
         };
-        let Some(route) = env.str_of(KEY_ROUTE) else {
+        let Some(route) = route else {
             return Response::bad_request("request envelope missing route");
         };
-        let null = Json::Null;
-        let body = env.get(KEY_BODY).unwrap_or(&null);
+        let body = match body_span {
+            Some((s, e)) => match Json::parse_bytes_bounded(&raw[s..e], WIRE_MAX_DEPTH) {
+                Ok(v) => v,
+                Err(e) => return Response::bad_request(&format!("bad request json: {e}")),
+            },
+            None => Json::Null,
+        };
         match self.routes.iter().find(|(name, _)| *name == route) {
-            Some((_, handler)) => handler(state, body),
+            Some((_, handler)) => handler(state, &body),
             None => Response::not_found(&format!("no such route: {route}")),
         }
     }
+}
+
+/// Stream over the envelope's top-level keys: extract `route` and the raw
+/// byte span of `body` without building a DOM for the whole frame. The
+/// body span is skip-validated under [`WIRE_MAX_DEPTH`] here, then parsed
+/// into a (small, bounded) DOM by the caller for the extractors.
+fn split_envelope(raw: &[u8]) -> Result<(Option<String>, Option<(usize, usize)>), JsonError> {
+    let mut p = PullParser::from_slice(raw, WIRE_MAX_DEPTH);
+    match p.next_owned()? {
+        Some(OwnedEvent::ObjStart) => {}
+        _ => {
+            return Err(JsonError {
+                msg: "request envelope must be a JSON object".to_string(),
+                offset: p.offset(),
+            })
+        }
+    }
+    let mut route = None;
+    let mut body = None;
+    loop {
+        match p.next_owned()? {
+            Some(OwnedEvent::ObjEnd) => break,
+            Some(OwnedEvent::Key(k)) if k == KEY_ROUTE => match p.next_owned()? {
+                Some(OwnedEvent::Str(s)) => route = Some(s),
+                _ => {
+                    return Err(JsonError {
+                        msg: "route must be a string".to_string(),
+                        offset: p.offset(),
+                    })
+                }
+            },
+            Some(OwnedEvent::Key(k)) if k == KEY_BODY => body = Some(p.value_span()?),
+            Some(OwnedEvent::Key(_)) => p.skip_value()?,
+            // After a member the parser only yields Key/ObjEnd; this arm
+            // is the defensive `None` (truncated input) case.
+            _ => {
+                return Err(JsonError {
+                    msg: "unexpected end of envelope".to_string(),
+                    offset: p.offset(),
+                })
+            }
+        }
+    }
+    // Only whitespace may follow the envelope object.
+    p.next_owned()?;
+    Ok((route, body))
 }
 
 // -- the batch-forward abstraction -----------------------------------------
@@ -605,9 +665,10 @@ pub fn stats_request() -> Vec<u8> {
     encode_request(ROUTE_STATS, Json::Null)
 }
 
-/// Split a response envelope back into `(status, body)`.
+/// Split a response envelope back into `(status, body)`. Response bytes
+/// also arrive off the wire, so the same depth bound applies.
 pub fn parse_response(raw: &[u8]) -> Result<(u16, Json)> {
-    let v = Json::parse(std::str::from_utf8(raw)?)?;
+    let v = Json::parse_bytes_bounded(raw, WIRE_MAX_DEPTH)?;
     let status = v.i64_of(KEY_STATUS).context("response missing status")?;
     let body = v.get(KEY_BODY).cloned().unwrap_or(Json::Null);
     Ok((status as u16, body))
@@ -689,9 +750,11 @@ mod tests {
     #[test]
     fn protocol_errors_are_statuses() {
         let srv = echo_server(1, Duration::ZERO);
-        assert_eq!(srv.handle(b"\xff\xfe").status, 400); // not utf-8
+        assert_eq!(srv.handle(b"\xff\xfe").status, 400); // not json (or utf-8)
         assert_eq!(srv.handle(b"{nope").status, 400); // not json
         assert_eq!(srv.handle(b"{\"x\":1}").status, 400); // no route
+        assert_eq!(srv.handle(b"[1,2]").status, 400); // envelope not an object
+        assert_eq!(srv.handle(b"{\"route\":7}").status, 400); // route not a string
         let unknown = encode_request("v1/definitely_not_a_route", Json::Null);
         assert_eq!(srv.handle(&unknown).status, 404);
         // extractor failure: infer without a body
@@ -700,6 +763,37 @@ mod tests {
         // unknown bundle
         let resp = srv.handle(&infer_request("ghost", 1));
         assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn deeply_nested_frame_is_a_clean_400() {
+        let srv = echo_server(1, Duration::ZERO);
+        // Frame bytes are assembled by hand: a `Json` value this deep
+        // would itself recurse in Drop. 100k levels is far past
+        // WIRE_MAX_DEPTH and far past any thread's stack if parsing
+        // were recursive.
+        let depth = 100_000;
+        let mut raw = format!(r#"{{"route":"{ROUTE_INFER}","body":"#).into_bytes();
+        raw.extend(vec![b'['; depth]);
+        raw.extend(vec![b']'; depth]);
+        raw.push(b'}');
+        let resp = srv.handle(&raw);
+        assert_eq!(resp.status, 400);
+        assert!(resp.body.str_of("error").unwrap().contains("depth"));
+        // the process survived and the same server still serves
+        assert_eq!(srv.handle(&infer_request("m", 1)).status, 200);
+    }
+
+    #[test]
+    fn envelope_ignores_unknown_keys_and_takes_any_key_order() {
+        let srv = echo_server(1, Duration::ZERO);
+        let raw = format!(
+            r#"{{"x_extra": {{"deep": [1, 2]}}, "body": {{"bundle_id": "m", "sample": 3}}, "route": "{ROUTE_INFER}"}}"#
+        );
+        let resp = srv.handle(raw.as_bytes());
+        assert_eq!(resp.status, 200);
+        let sample: u64 = 3;
+        assert_eq!(resp.body.str_of("output"), Some(to_hex(&sample.to_le_bytes()).as_str()));
     }
 
     #[test]

@@ -113,9 +113,11 @@ impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
+        let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        // parse_bytes inherits the pull parser's depth bound and strict
+        // validation; UTF-8 is checked where it matters (inside strings).
+        let root = Json::parse_bytes(&bytes).map_err(|e| anyhow!("{path:?}: {e}"))?;
 
         let mut artifacts = BTreeMap::new();
         for a in root

@@ -1,11 +1,60 @@
-//! Minimal JSON parser + writer (serde is not vendored in this image).
+//! JSON: a streaming, depth-bounded pull parser plus a DOM built on top
+//! of it (serde is not vendored in this image).
 //!
-//! Supports the full JSON grammar; numbers are kept as f64 with an i64
-//! fast-path accessor. Used for `artifacts/manifest.json`, run reports, and
-//! checkpoint metadata.
+//! ## Two APIs
+//!
+//! * **Pull** — [`PullParser`] yields [`Event`]s (`ObjStart`/`Key`/`Num`/
+//!   `Str`/`ArrStart`/…) one at a time from a byte slice
+//!   ([`PullParser::from_slice`]) or any [`std::io::Read`]
+//!   ([`PullParser::from_read`]). There is **no recursion anywhere**:
+//!   nesting is a counter checked against an explicit `max_depth`, with
+//!   container kinds kept in a fixed bitset, so a hostile
+//!   `[[[[…` document of any size is a clean [`JsonError`] — never a
+//!   stack overflow (which is an *abort*, not a panic, and escapes every
+//!   `catch_unwind`). String contents decode into a reused scratch
+//!   buffer; after warm-up the borrowed-event API performs zero
+//!   allocations per document. [`PullParser::next_owned`] is the
+//!   convenience form for call sites that want owned key/string values
+//!   and would have copied anyway.
+//! * **DOM** — [`Json::parse`] builds the familiar tree by driving the
+//!   pull parser with an explicit frame stack (again no recursion), so
+//!   every DOM call site inherits the depth bound and strict validation
+//!   for free. `parse` uses [`DEFAULT_MAX_DEPTH`]; wire-facing callers
+//!   pick a tighter bound via [`Json::parse_bytes_bounded`].
+//!
+//! ## Strictness
+//!
+//! The grammar is strict RFC 8259: no trailing commas, object keys are
+//! strings, numbers must be `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?…)`
+//! (`1.` and `01` are rejected — V2 block-header bytes stay canonical),
+//! raw control characters inside strings are rejected, `\u` escapes
+//! decode UTF-16 surrogate pairs to the real scalar and reject lone
+//! surrogates. Number overflow saturates to ±inf (and then serializes as
+//! `null`, see below).
+//!
+//! ## Writer policy
+//!
+//! `to_string_*` output is pure ASCII: non-ASCII scalars are written as
+//! `\uXXXX` (surrogate pairs beyond the BMP), so emitted bytes survive
+//! any transport and re-parse to the identical value. Non-finite numbers
+//! have no JSON spelling; they serialize as `null` so the writer can
+//! never produce bytes our own parser rejects.
+//!
+//! Used for `artifacts/manifest.json`, run reports, checkpoint headers,
+//! bundle block metas, sweep cell files, and the serve wire envelopes.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Default nesting bound for trusted, locally produced documents
+/// (manifests, checkpoints, reports). Wire-facing paths use a much
+/// tighter bound (see `deploy::serve`).
+pub const DEFAULT_MAX_DEPTH: usize = 512;
+
+/// Hard ceiling on any requested `max_depth`: the container-kind bitset
+/// is allocated up front from it, so an absurd request must not size an
+/// absurd allocation. 2^20 levels is far beyond any legitimate document.
+const MAX_DEPTH_CEILING: usize = 1 << 20;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,14 +83,27 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Strict parse with the [`DEFAULT_MAX_DEPTH`] nesting bound.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
-        p.ws();
-        let v = p.value()?;
-        p.ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing data"));
-        }
+        Self::parse_bytes_bounded(s.as_bytes(), DEFAULT_MAX_DEPTH)
+    }
+
+    /// [`Json::parse`] over raw bytes (UTF-8 is validated where it
+    /// matters: inside strings).
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+        Self::parse_bytes_bounded(b, DEFAULT_MAX_DEPTH)
+    }
+
+    /// Parse with an explicit nesting bound — the entry point for bytes
+    /// that arrive off the wire. A document nesting deeper than
+    /// `max_depth` containers is an error, never unbounded stack or work.
+    pub fn parse_bytes_bounded(b: &[u8], max_depth: usize) -> Result<Json, JsonError> {
+        let mut p = PullParser::from_slice(b, max_depth);
+        let v = build_dom(&mut p)?;
+        // The root value is complete; the only legal remainder is
+        // whitespace, which this call verifies (it errors on anything
+        // else and returns `None` at end of input).
+        p.next()?;
         Ok(v)
     }
 
@@ -144,7 +206,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // NaN/±inf have no JSON spelling; `null` keeps the
+                    // bytes parseable by our own strict reader.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{}", n));
@@ -227,202 +293,668 @@ fn write_escaped(out: &mut String, s: &str) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
+            c if c.is_ascii() => out.push(c),
+            c => {
+                // Non-ASCII escapes to \uXXXX so the output is pure
+                // ASCII; beyond the BMP that is the UTF-16 surrogate
+                // pair, which the parser decodes back to the scalar.
+                let cp = c as u32;
+                if cp <= 0xffff {
+                    out.push_str(&format!("\\u{cp:04x}"));
+                } else {
+                    let v = cp - 0x1_0000;
+                    let hi = 0xd800 + (v >> 10);
+                    let lo = 0xdc00 + (v & 0x3ff);
+                    out.push_str(&format!("\\u{hi:04x}\\u{lo:04x}"));
+                }
+            }
         }
     }
     out.push('"');
 }
 
-struct Parser<'a> {
+// -- pull parser -----------------------------------------------------------
+
+/// One structural event. `Key`/`Str` borrow the parser's scratch buffer
+/// and are invalidated by the next [`PullParser::next`] call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'p> {
+    ObjStart,
+    ObjEnd,
+    ArrStart,
+    ArrEnd,
+    Key(&'p str),
+    Str(&'p str),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// [`Event`] with owned strings — for call sites that interleave parser
+/// access with event handling (the borrowed form pins the parser) and
+/// would have copied the key/string anyway.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OwnedEvent {
+    ObjStart,
+    ObjEnd,
+    ArrStart,
+    ArrEnd,
+    Key(String),
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Byte supplier for the pull parser: single-byte lookahead plus a
+/// consumed-byte counter (the error offset).
+pub trait ByteSource {
+    /// The next unconsumed byte, or `None` at end of input.
+    fn peek(&mut self) -> Result<Option<u8>, JsonError>;
+    /// Consume the byte `peek` returned. Only call after a `Some` peek.
+    fn bump(&mut self);
+    /// Bytes consumed so far.
+    fn offset(&self) -> usize;
+}
+
+/// In-memory input: the fast path, and the only one that supports
+/// [`PullParser::value_span`].
+pub struct SliceSource<'a> {
     b: &'a [u8],
     i: usize,
 }
 
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError { msg: msg.to_string(), offset: self.i }
+impl ByteSource for SliceSource<'_> {
+    fn peek(&mut self) -> Result<Option<u8>, JsonError> {
+        Ok(self.b.get(self.i).copied())
     }
 
-    fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
-            self.i += 1;
-        }
+    fn bump(&mut self) {
+        self.i += 1;
     }
 
-    fn peek(&self) -> Option<u8> {
-        self.b.get(self.i).copied()
-    }
-
-    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected {:?}", c as char)))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        }
-    }
-
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
-            self.i += word.len();
-            Ok(v)
-        } else {
-            Err(self.err("bad literal"))
-        }
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("utf8"))?;
-        s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
-        let mut out = String::new();
-        loop {
-            match self.peek() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => {
-                    self.i += 1;
-                    return Ok(out);
-                }
-                Some(b'\\') => {
-                    self.i += 1;
-                    match self.peek() {
-                        Some(b'"') => out.push('"'),
-                        Some(b'\\') => out.push('\\'),
-                        Some(b'/') => out.push('/'),
-                        Some(b'b') => out.push('\u{8}'),
-                        Some(b'f') => out.push('\u{c}'),
-                        Some(b'n') => out.push('\n'),
-                        Some(b'r') => out.push('\r'),
-                        Some(b't') => out.push('\t'),
-                        Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("utf8"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad hex"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
-                        }
-                        _ => return Err(self.err("bad escape")),
-                    }
-                    self.i += 1;
-                }
-                Some(_) => {
-                    // copy a full utf8 scalar
-                    let s = &self.b[self.i..];
-                    let ch_len = utf8_len(s[0]);
-                    let chunk = std::str::from_utf8(&s[..ch_len.min(s.len())])
-                        .map_err(|_| self.err("utf8"))?;
-                    out.push_str(chunk);
-                    self.i += chunk.len();
-                }
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'[')?;
-        let mut out = Vec::new();
-        self.ws();
-        if self.peek() == Some(b']') {
-            self.i += 1;
-            return Ok(Json::Arr(out));
-        }
-        loop {
-            self.ws();
-            out.push(self.value()?);
-            self.ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.i += 1;
-                }
-                Some(b']') => {
-                    self.i += 1;
-                    return Ok(Json::Arr(out));
-                }
-                _ => return Err(self.err("expected , or ]")),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'{')?;
-        let mut out = BTreeMap::new();
-        self.ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
-            return Ok(Json::Obj(out));
-        }
-        loop {
-            self.ws();
-            let key = self.string()?;
-            self.ws();
-            self.eat(b':')?;
-            self.ws();
-            let val = self.value()?;
-            out.insert(key, val);
-            self.ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.i += 1;
-                }
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(out));
-                }
-                _ => return Err(self.err("expected , or }")),
-            }
-        }
+    fn offset(&self) -> usize {
+        self.i
     }
 }
 
-fn utf8_len(b: u8) -> usize {
-    match b {
-        0x00..=0x7f => 1,
-        0xc0..=0xdf => 2,
-        0xe0..=0xef => 3,
-        _ => 4,
+/// Streaming input over any reader. Reads one byte at a time — wrap a
+/// `BufReader` around raw files.
+pub struct ReadSource<R: std::io::Read> {
+    r: R,
+    peeked: Option<u8>,
+    have_peeked: bool,
+    offset: usize,
+}
+
+impl<R: std::io::Read> ByteSource for ReadSource<R> {
+    fn peek(&mut self) -> Result<Option<u8>, JsonError> {
+        if !self.have_peeked {
+            let mut b = [0u8; 1];
+            loop {
+                match self.r.read(&mut b) {
+                    Ok(0) => {
+                        self.peeked = None;
+                        break;
+                    }
+                    Ok(_) => {
+                        self.peeked = Some(b[0]);
+                        break;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        return Err(JsonError {
+                            msg: format!("read error: {e}"),
+                            offset: self.offset,
+                        })
+                    }
+                }
+            }
+            self.have_peeked = true;
+        }
+        Ok(self.peeked)
+    }
+
+    fn bump(&mut self) {
+        debug_assert!(self.have_peeked, "bump without a preceding peek");
+        self.have_peeked = false;
+        self.peeked = None;
+        self.offset += 1;
+    }
+
+    fn offset(&self) -> usize {
+        self.offset
+    }
+}
+
+/// Parser state between events. The invariant: `Value`-flavored states
+/// sit before a value, `Key` states before an object key, `CommaOrEnd`
+/// after a value inside a container, `Eof` after the root value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// A value is required (top level, after `,` in an array, after `:`).
+    Value,
+    /// A value or `]` (immediately after `[`).
+    ValueOrEnd,
+    /// A key is required (after `,` in an object).
+    Key,
+    /// A key or `}` (immediately after `{`).
+    KeyOrEnd,
+    /// `,` or the container's closing token.
+    CommaOrEnd,
+    /// Root value done; only whitespace may remain.
+    Eof,
+    /// End of input confirmed.
+    Finished,
+}
+
+/// Streaming pull parser: no recursion, explicit depth bound, reused
+/// scratch. See the module docs for the contract.
+pub struct PullParser<S: ByteSource> {
+    src: S,
+    /// Current container nesting (0 at top level).
+    depth: usize,
+    max_depth: usize,
+    /// Container kinds by depth: bit set = object, clear = array. Sized
+    /// once from `max_depth`, never grown.
+    kinds: Vec<u64>,
+    state: State,
+    /// Decoded string/number bytes; cleared per token, reused across the
+    /// document (zero steady-state allocation).
+    scratch: Vec<u8>,
+}
+
+impl<'a> PullParser<SliceSource<'a>> {
+    /// Parse from an in-memory slice.
+    pub fn from_slice(b: &'a [u8], max_depth: usize) -> Self {
+        Self::with_source(SliceSource { b, i: 0 }, max_depth)
+    }
+
+    /// The byte span `[start, end)` of the next value, which is skipped
+    /// (validated, depth-bounded) but not materialized. Must be called
+    /// where a value is legal — after a `Key` event, or at an array
+    /// position with a value pending; a pending `,` separator is
+    /// consumed first so the span starts at the value itself.
+    pub fn value_span(&mut self) -> Result<(usize, usize), JsonError> {
+        self.skip_ws()?;
+        if self.state == State::CommaOrEnd {
+            if self.src.peek()? == Some(b',') {
+                self.src.bump();
+                self.state = if self.top_is_obj() { State::Key } else { State::Value };
+                self.skip_ws()?;
+            } else {
+                return Err(self.err("expected ','"));
+            }
+        }
+        match self.state {
+            State::Value => {}
+            State::ValueOrEnd => {
+                if self.src.peek()? == Some(b']') {
+                    return Err(self.err("expected a value"));
+                }
+            }
+            _ => return Err(self.err("expected a value")),
+        }
+        let start = self.src.offset();
+        self.skip_value()?;
+        Ok((start, self.src.offset()))
+    }
+}
+
+impl<R: std::io::Read> PullParser<ReadSource<R>> {
+    /// Parse from any reader (wrap files in a `BufReader`).
+    pub fn from_read(r: R, max_depth: usize) -> Self {
+        Self::with_source(ReadSource { r, peeked: None, have_peeked: false, offset: 0 }, max_depth)
+    }
+}
+
+impl<S: ByteSource> PullParser<S> {
+    fn with_source(src: S, max_depth: usize) -> Self {
+        let max_depth = max_depth.min(MAX_DEPTH_CEILING);
+        Self {
+            src,
+            depth: 0,
+            max_depth,
+            kinds: vec![0u64; max_depth.div_ceil(64).max(1)],
+            state: State::Value,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Current container nesting depth (0 at top level).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Bytes consumed so far (error offsets point here).
+    pub fn offset(&self) -> usize {
+        self.src.offset()
+    }
+
+    /// The next significant (non-whitespace) byte, unconsumed. Lets a
+    /// caller distinguish "another element" from the container's end
+    /// before committing to [`Self::value_span`].
+    pub fn peek_non_ws(&mut self) -> Result<Option<u8>, JsonError> {
+        self.skip_ws()?;
+        self.src.peek()
+    }
+
+    /// The next event, or `None` at clean end of input. `Key`/`Str`
+    /// borrow the scratch buffer — copy them out before the next call
+    /// (or use [`Self::next_owned`]).
+    pub fn next(&mut self) -> Result<Option<Event<'_>>, JsonError> {
+        loop {
+            self.skip_ws()?;
+            match self.state {
+                State::Finished => return Ok(None),
+                State::Eof => {
+                    return match self.src.peek()? {
+                        None => {
+                            self.state = State::Finished;
+                            Ok(None)
+                        }
+                        Some(_) => Err(self.err("trailing data")),
+                    };
+                }
+                State::CommaOrEnd => match self.src.peek()? {
+                    Some(b',') => {
+                        self.src.bump();
+                        self.state = if self.top_is_obj() { State::Key } else { State::Value };
+                        continue;
+                    }
+                    Some(b'}') if self.top_is_obj() => {
+                        self.src.bump();
+                        self.pop();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    Some(b']') if !self.top_is_obj() => {
+                        self.src.bump();
+                        self.pop();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    _ => {
+                        let want =
+                            if self.top_is_obj() { "expected ',' or '}'" } else { "expected ',' or ']'" };
+                        return Err(self.err(want));
+                    }
+                },
+                State::Key | State::KeyOrEnd => {
+                    if self.state == State::KeyOrEnd && self.src.peek()? == Some(b'}') {
+                        self.src.bump();
+                        self.pop();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    if self.src.peek()? != Some(b'"') {
+                        return Err(self.err("expected object key"));
+                    }
+                    self.string()?;
+                    self.skip_ws()?;
+                    if self.src.peek()? != Some(b':') {
+                        return Err(self.err("expected ':'"));
+                    }
+                    self.src.bump();
+                    self.state = State::Value;
+                    let s = self.scratch_str()?;
+                    return Ok(Some(Event::Key(s)));
+                }
+                State::Value | State::ValueOrEnd => match self.src.peek()? {
+                    Some(b']') if self.state == State::ValueOrEnd => {
+                        self.src.bump();
+                        self.pop();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    Some(b'{') => {
+                        self.src.bump();
+                        self.push(true)?;
+                        self.state = State::KeyOrEnd;
+                        return Ok(Some(Event::ObjStart));
+                    }
+                    Some(b'[') => {
+                        self.src.bump();
+                        self.push(false)?;
+                        self.state = State::ValueOrEnd;
+                        return Ok(Some(Event::ArrStart));
+                    }
+                    Some(b'"') => {
+                        self.string()?;
+                        self.after_value();
+                        let s = self.scratch_str()?;
+                        return Ok(Some(Event::Str(s)));
+                    }
+                    Some(b't') => {
+                        self.lit(b"true")?;
+                        self.after_value();
+                        return Ok(Some(Event::Bool(true)));
+                    }
+                    Some(b'f') => {
+                        self.lit(b"false")?;
+                        self.after_value();
+                        return Ok(Some(Event::Bool(false)));
+                    }
+                    Some(b'n') => {
+                        self.lit(b"null")?;
+                        self.after_value();
+                        return Ok(Some(Event::Null));
+                    }
+                    Some(c) if c == b'-' || c.is_ascii_digit() => {
+                        let n = self.number()?;
+                        self.after_value();
+                        return Ok(Some(Event::Num(n)));
+                    }
+                    _ => return Err(self.err("unexpected character")),
+                },
+            }
+        }
+    }
+
+    /// [`Self::next`] with `Key`/`Str` copied out, so the parser stays
+    /// free to use between events.
+    pub fn next_owned(&mut self) -> Result<Option<OwnedEvent>, JsonError> {
+        Ok(self.next()?.map(|ev| match ev {
+            Event::ObjStart => OwnedEvent::ObjStart,
+            Event::ObjEnd => OwnedEvent::ObjEnd,
+            Event::ArrStart => OwnedEvent::ArrStart,
+            Event::ArrEnd => OwnedEvent::ArrEnd,
+            Event::Key(k) => OwnedEvent::Key(k.to_string()),
+            Event::Str(s) => OwnedEvent::Str(s.to_string()),
+            Event::Num(n) => OwnedEvent::Num(n),
+            Event::Bool(b) => OwnedEvent::Bool(b),
+            Event::Null => OwnedEvent::Null,
+        }))
+    }
+
+    /// Consume one whole value (scalar or container) at a value
+    /// position. Allocation-free; the depth bound still applies.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let d0 = self.depth;
+        if self.next()?.is_none() {
+            return Err(self.err("expected a value"));
+        }
+        // A scalar left depth at d0 (done); a container start raised it.
+        self.skip_until_depth(d0)
+    }
+
+    /// Consume the rest of the container whose `ObjStart`/`ArrStart`
+    /// event was just returned, through its matching end.
+    pub fn skip_container(&mut self) -> Result<(), JsonError> {
+        self.skip_until_depth(self.depth.saturating_sub(1))
+    }
+
+    fn skip_until_depth(&mut self, target: usize) -> Result<(), JsonError> {
+        while self.depth > target {
+            if self.next()?.is_none() {
+                return Err(self.err("unexpected end of input"));
+            }
+        }
+        Ok(())
+    }
+
+    // -- internals -------------------------------------------------------
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), offset: self.src.offset() }
+    }
+
+    fn after_value(&mut self) {
+        self.state = if self.depth == 0 { State::Eof } else { State::CommaOrEnd };
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<(), JsonError> {
+        if self.depth >= self.max_depth {
+            return Err(self.err(&format!("nesting depth exceeds {}", self.max_depth)));
+        }
+        let (word, bit) = (self.depth / 64, self.depth % 64);
+        if is_obj {
+            self.kinds[word] |= 1u64 << bit;
+        } else {
+            self.kinds[word] &= !(1u64 << bit);
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn pop(&mut self) {
+        debug_assert!(self.depth > 0);
+        self.depth -= 1;
+        self.after_value();
+    }
+
+    fn top_is_obj(&self) -> bool {
+        debug_assert!(self.depth > 0);
+        let d = self.depth - 1;
+        (self.kinds[d / 64] >> (d % 64)) & 1 == 1
+    }
+
+    fn skip_ws(&mut self) -> Result<(), JsonError> {
+        while matches!(self.src.peek()?, Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.src.bump();
+        }
+        Ok(())
+    }
+
+    fn scratch_str(&self) -> Result<&str, JsonError> {
+        std::str::from_utf8(&self.scratch).map_err(|_| self.err("invalid utf-8 in string"))
+    }
+
+    fn lit(&mut self, word: &[u8]) -> Result<(), JsonError> {
+        for &want in word {
+            if self.src.peek()? != Some(want) {
+                return Err(self.err("bad literal"));
+            }
+            self.src.bump();
+        }
+        Ok(())
+    }
+
+    /// Strict RFC 8259 number into `scratch`, then `f64::from_str`.
+    fn number(&mut self) -> Result<f64, JsonError> {
+        self.scratch.clear();
+        if self.src.peek()? == Some(b'-') {
+            self.scratch.push(b'-');
+            self.src.bump();
+        }
+        match self.src.peek()? {
+            Some(b'0') => {
+                self.scratch.push(b'0');
+                self.src.bump();
+                if matches!(self.src.peek()?, Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zeros are not allowed"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while let Some(c) = self.src.peek()? {
+                    if !c.is_ascii_digit() {
+                        break;
+                    }
+                    self.scratch.push(c);
+                    self.src.bump();
+                }
+            }
+            _ => return Err(self.err("expected digits")),
+        }
+        if self.src.peek()? == Some(b'.') {
+            self.scratch.push(b'.');
+            self.src.bump();
+            if !matches!(self.src.peek()?, Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected fraction digits"));
+            }
+            while let Some(c) = self.src.peek()? {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                self.scratch.push(c);
+                self.src.bump();
+            }
+        }
+        if matches!(self.src.peek()?, Some(b'e' | b'E')) {
+            self.scratch.push(b'e');
+            self.src.bump();
+            if let Some(c @ (b'+' | b'-')) = self.src.peek()? {
+                self.scratch.push(c);
+                self.src.bump();
+            }
+            if !matches!(self.src.peek()?, Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected exponent digits"));
+            }
+            while let Some(c) = self.src.peek()? {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                self.scratch.push(c);
+                self.src.bump();
+            }
+        }
+        // scratch is ASCII by construction.
+        let text = std::str::from_utf8(&self.scratch).expect("ascii number");
+        text.parse::<f64>().map_err(|_| self.err("bad number"))
+    }
+
+    /// Decode one string (opening quote pending) into `scratch`.
+    fn string(&mut self) -> Result<(), JsonError> {
+        if self.src.peek()? != Some(b'"') {
+            return Err(self.err("expected '\"'"));
+        }
+        self.src.bump();
+        self.scratch.clear();
+        loop {
+            match self.src.peek()? {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.src.bump();
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.src.bump();
+                    let esc = self.src.peek()?;
+                    match esc {
+                        Some(b'"') => self.push_byte(b'"'),
+                        Some(b'\\') => self.push_byte(b'\\'),
+                        Some(b'/') => self.push_byte(b'/'),
+                        Some(b'b') => self.push_byte(0x08),
+                        Some(b'f') => self.push_byte(0x0c),
+                        Some(b'n') => self.push_byte(b'\n'),
+                        Some(b'r') => self.push_byte(b'\r'),
+                        Some(b't') => self.push_byte(b'\t'),
+                        Some(b'u') => {
+                            self.src.bump();
+                            let cp = self.hex4()?;
+                            let c = self.unescape_unicode(cp)?;
+                            let mut buf = [0u8; 4];
+                            self.scratch.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                            continue;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.src.bump();
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("raw control character in string"));
+                }
+                Some(c) => {
+                    // Raw bytes are copied through; scratch_str validates
+                    // the assembled UTF-8 once per string.
+                    self.scratch.push(c);
+                    self.src.bump();
+                }
+            }
+        }
+    }
+
+    /// Resolve a `\uXXXX` code unit: pair high surrogates with the
+    /// mandatory following `\uXXXX` low half, reject lone halves.
+    fn unescape_unicode(&mut self, cp: u32) -> Result<char, JsonError> {
+        match cp {
+            0xd800..=0xdbff => {
+                if self.src.peek()? != Some(b'\\') {
+                    return Err(self.err("unpaired surrogate"));
+                }
+                self.src.bump();
+                if self.src.peek()? != Some(b'u') {
+                    return Err(self.err("unpaired surrogate"));
+                }
+                self.src.bump();
+                let lo = self.hex4()?;
+                if !(0xdc00..=0xdfff).contains(&lo) {
+                    return Err(self.err("unpaired surrogate"));
+                }
+                let scalar = 0x1_0000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
+                char::from_u32(scalar).ok_or_else(|| self.err("bad surrogate pair"))
+            }
+            0xdc00..=0xdfff => Err(self.err("unpaired surrogate")),
+            _ => char::from_u32(cp).ok_or_else(|| self.err("bad \\u escape")),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut cp = 0u32;
+        for _ in 0..4 {
+            let d = match self.src.peek()? {
+                Some(c @ b'0'..=b'9') => (c - b'0') as u32,
+                Some(c @ b'a'..=b'f') => (c - b'a' + 10) as u32,
+                Some(c @ b'A'..=b'F') => (c - b'A' + 10) as u32,
+                _ => return Err(self.err("bad \\u hex")),
+            };
+            self.src.bump();
+            cp = cp * 16 + d;
+        }
+        Ok(cp)
+    }
+
+    fn push_byte(&mut self, b: u8) {
+        self.scratch.push(b);
+    }
+}
+
+/// Build the DOM by driving the pull parser with an explicit frame
+/// stack — no recursion, so the depth bound is the only nesting limit.
+fn build_dom<S: ByteSource>(p: &mut PullParser<S>) -> Result<Json, JsonError> {
+    enum Frame {
+        Arr(Vec<Json>),
+        Obj(BTreeMap<String, Json>, String),
+    }
+    let mut stack: Vec<Frame> = Vec::new();
+    loop {
+        let Some(ev) = p.next_owned()? else {
+            return Err(JsonError { msg: "expected a value".into(), offset: p.offset() });
+        };
+        let completed: Option<Json> = match ev {
+            OwnedEvent::ObjStart => {
+                stack.push(Frame::Obj(BTreeMap::new(), String::new()));
+                None
+            }
+            OwnedEvent::ArrStart => {
+                stack.push(Frame::Arr(Vec::new()));
+                None
+            }
+            OwnedEvent::Key(k) => {
+                match stack.last_mut() {
+                    Some(Frame::Obj(_, pending)) => *pending = k,
+                    _ => unreachable!("parser yields keys only inside objects"),
+                }
+                None
+            }
+            OwnedEvent::ObjEnd => match stack.pop() {
+                Some(Frame::Obj(m, _)) => Some(Json::Obj(m)),
+                _ => unreachable!("parser matches container ends"),
+            },
+            OwnedEvent::ArrEnd => match stack.pop() {
+                Some(Frame::Arr(a)) => Some(Json::Arr(a)),
+                _ => unreachable!("parser matches container ends"),
+            },
+            OwnedEvent::Str(s) => Some(Json::Str(s)),
+            OwnedEvent::Num(n) => Some(Json::Num(n)),
+            OwnedEvent::Bool(b) => Some(Json::Bool(b)),
+            OwnedEvent::Null => Some(Json::Null),
+        };
+        if let Some(v) = completed {
+            match stack.last_mut() {
+                None => return Ok(v),
+                Some(Frame::Arr(a)) => a.push(v),
+                Some(Frame::Obj(m, pending)) => {
+                    m.insert(std::mem::take(pending), v);
+                }
+            }
+        }
     }
 }
 
@@ -459,8 +991,13 @@ mod tests {
 
     #[test]
     fn unicode_escape() {
-        let v = Json::parse(r#""éA""#).unwrap();
+        let v = Json::parse(r#""\u00e9A""#).unwrap();
         assert_eq!(v.as_str(), Some("éA"));
+        // non-ASCII serializes as \u and parses back identical
+        assert_eq!(v.to_string_compact(), r#""\u00e9A""#);
+        assert_eq!(Json::parse(&v.to_string_compact()).unwrap(), v);
+        // raw UTF-8 input decodes to the same value
+        assert_eq!(Json::parse("\"éA\"").unwrap(), v);
     }
 
     #[test]
@@ -468,6 +1005,8 @@ mod tests {
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse(r#"{"a":1,}"#).is_err());
+        assert!(Json::parse("").is_err());
     }
 
     #[test]
@@ -477,5 +1016,157 @@ mod tests {
         assert_eq!(v.str_of("s"), Some("x"));
         assert_eq!(v.get("b").unwrap().as_bool(), Some(false));
         assert_eq!(v.usize_of("missing"), None);
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_and_roundtrip() {
+        // 😀 is U+1F600: \ud83d\ude00 in UTF-16.
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+        // the writer emits the pair back, byte for byte
+        assert_eq!(v.to_string_compact(), r#""\ud83d\ude00""#);
+        assert_eq!(Json::parse(&v.to_string_compact()).unwrap(), v);
+        // raw UTF-8 input also round-trips through the escaped form
+        let raw = Json::parse("\"😀\"").unwrap();
+        assert_eq!(raw, v);
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected() {
+        assert!(Json::parse(r#""\ud83d""#).is_err()); // lone high
+        assert!(Json::parse(r#""\ude00""#).is_err()); // lone low
+        assert!(Json::parse(r#""\ud83dx""#).is_err()); // high then junk
+        assert!(Json::parse(r#""\ud83dA""#).is_err()); // high then non-low
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string_compact(), "null");
+        // overflow saturates to inf at parse time, then writes as null
+        let v = Json::parse("1e999").unwrap();
+        assert_eq!(v, Json::Num(f64::INFINITY));
+        assert_eq!(v.to_string_compact(), "null");
+        // a whole document with a non-finite member still re-parses
+        let doc = obj(vec![("p99", Json::Num(f64::NAN))]);
+        let back = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(back.get("p99"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn strict_number_grammar() {
+        for bad in ["1.", "01", "-01", ".5", "+1", "-", "1e", "1e+", "1.e3", "0x1", "00"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        for (good, want) in [
+            ("0", 0.0),
+            ("-0.5", -0.5),
+            ("10", 10.0),
+            ("1e-06", 1e-6),
+            ("1.175965050277046e-06", 1.175965050277046e-6),
+            ("0.0", 0.0),
+            ("9e2", 900.0),
+        ] {
+            assert_eq!(Json::parse(good).unwrap(), Json::Num(want), "{good:?}");
+        }
+    }
+
+    #[test]
+    fn raw_control_chars_are_rejected() {
+        assert!(Json::parse("\"a\nb\"").is_err());
+        assert!(Json::parse("\"a\u{1}b\"").is_err());
+        // escaped forms are fine
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn depth_bound_is_enforced_without_recursion() {
+        let deep = |n: usize| format!("{}{}", "[".repeat(n), "]".repeat(n));
+        // at the bound: fine
+        assert!(Json::parse_bytes_bounded(deep(64).as_bytes(), 64).is_ok());
+        // one past: clean error naming the policy
+        let err = Json::parse_bytes_bounded(deep(65).as_bytes(), 64).unwrap_err();
+        assert!(err.msg.contains("depth"), "{err}");
+        // default bound rejects a 600-deep document
+        assert!(Json::parse(&deep(600)).is_err());
+        // far past any stack: still a clean error, not an abort
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+    }
+
+    #[test]
+    fn pull_events_in_order() {
+        let doc = br#"{"a": [1, "x"], "b": true}"#;
+        let mut p = PullParser::from_slice(doc, 16);
+        let mut got = Vec::new();
+        while let Some(ev) = p.next_owned().unwrap() {
+            got.push(ev);
+        }
+        assert_eq!(
+            got,
+            vec![
+                OwnedEvent::ObjStart,
+                OwnedEvent::Key("a".into()),
+                OwnedEvent::ArrStart,
+                OwnedEvent::Num(1.0),
+                OwnedEvent::Str("x".into()),
+                OwnedEvent::ArrEnd,
+                OwnedEvent::Key("b".into()),
+                OwnedEvent::Bool(true),
+                OwnedEvent::ObjEnd,
+            ]
+        );
+        // a finished parser keeps returning None
+        assert!(p.next_owned().unwrap().is_none());
+    }
+
+    #[test]
+    fn read_source_matches_slice_source() {
+        let doc = br#"{"k": [1, 2.5, "sé", null], "m": {"x": -3e2}}"#;
+        let from_slice = Json::parse_bytes(doc).unwrap();
+        let mut p = PullParser::from_read(std::io::Cursor::new(doc.to_vec()), DEFAULT_MAX_DEPTH);
+        let from_read = build_dom(&mut p).unwrap();
+        p.next().unwrap();
+        assert_eq!(from_slice, from_read);
+    }
+
+    #[test]
+    fn value_span_and_skip_value() {
+        let doc = br#"{"a": {"deep": [1,2]}, "b": 7, "c": "s"}"#;
+        let mut p = PullParser::from_slice(doc, 16);
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::ObjStart)));
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::Key(k)) if k == "a"));
+        let (s, e) = p.value_span().unwrap();
+        assert_eq!(&doc[s..e], br#"{"deep": [1,2]}"#);
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::Key(k)) if k == "b"));
+        p.skip_value().unwrap();
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::Key(k)) if k == "c"));
+        let (s, e) = p.value_span().unwrap();
+        assert_eq!(&doc[s..e], br#""s""#);
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::ObjEnd)));
+        assert!(p.next_owned().unwrap().is_none());
+    }
+
+    #[test]
+    fn value_span_iterates_array_elements() {
+        let doc = br#"[ {"k":1} , 2 , [3] ]"#;
+        let mut p = PullParser::from_slice(doc, 16);
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::ArrStart)));
+        let mut spans = Vec::new();
+        while p.peek_non_ws().unwrap() != Some(b']') {
+            let (s, e) = p.value_span().unwrap();
+            spans.push(std::str::from_utf8(&doc[s..e]).unwrap().to_string());
+        }
+        assert_eq!(spans, vec![r#"{"k":1}"#, "2", "[3]"]);
+        assert!(matches!(p.next_owned().unwrap(), Some(OwnedEvent::ArrEnd)));
+        assert!(p.next_owned().unwrap().is_none());
+    }
+
+    #[test]
+    fn writer_is_ascii_only() {
+        let v = Json::Str("héllo 😀\u{7f}".into());
+        let s = v.to_string_compact();
+        assert!(s.is_ascii(), "{s:?}");
+        assert_eq!(Json::parse(&s).unwrap(), v);
     }
 }

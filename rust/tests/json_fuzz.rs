@@ -1,0 +1,94 @@
+//! Deterministic fuzz smoke for the wire-protocol JSON path.
+//!
+//! The contract under test: **no byte sequence may panic (or abort) the
+//! parser or the server dispatch path**. Malformed input must come back as
+//! `Err` / a 4xx-5xx `Response`, never as a crash. This pins the original
+//! bug — a deeply nested frame used to recurse the DOM parser straight
+//! into a stack overflow abort that `catch_unwind` cannot contain.
+//!
+//! Everything here is seedless and exhaustive over small input spaces
+//! (every byte flipped under three masks, every truncation point), so a
+//! failure reproduces from the test name alone.
+
+use std::time::Duration;
+
+use idkm::deploy::serve::{infer_request, Server, WIRE_MAX_DEPTH};
+use idkm::util::json::Json;
+
+fn canonical_envelope() -> Vec<u8> {
+    infer_request("sim", 42)
+}
+
+/// A server with no bundles: route handlers reject, but the envelope
+/// decode path — the code under test — runs in full.
+fn bare_server() -> Server<'static> {
+    Server::new(Duration::ZERO)
+}
+
+#[test]
+fn byte_flips_never_panic() {
+    let canonical = canonical_envelope();
+    let server = bare_server();
+    for i in 0..canonical.len() {
+        for mask in [0x01u8, 0x80, 0xff] {
+            let mut mutated = canonical.clone();
+            mutated[i] ^= mask;
+            // Either outcome (Ok or Err) is acceptable; returning is the test.
+            let _ = Json::parse_bytes_bounded(&mutated, WIRE_MAX_DEPTH);
+            let resp = server.handle(&mutated);
+            assert!(
+                matches!(resp.status, 200 | 400 | 404 | 500),
+                "flip at {i} mask {mask:#04x}: unexpected status {}",
+                resp.status
+            );
+        }
+    }
+}
+
+#[test]
+fn truncations_always_error_and_never_panic() {
+    let canonical = canonical_envelope();
+    let server = bare_server();
+    for len in 0..canonical.len() {
+        let prefix = &canonical[..len];
+        assert!(
+            Json::parse_bytes_bounded(prefix, WIRE_MAX_DEPTH).is_err(),
+            "truncation at {len} parsed as complete JSON"
+        );
+        let resp = server.handle(prefix);
+        assert_eq!(resp.status, 400, "truncation at {len}: status {}", resp.status);
+    }
+}
+
+#[test]
+fn unbalanced_bracket_bomb_is_an_error_not_an_abort() {
+    // The regression this PR exists for: one million open brackets used to
+    // abort the process. Now it is a plain depth error from both the DOM
+    // entry point and the bounded wire path.
+    let bomb = vec![b'['; 1_000_000];
+    let text = std::str::from_utf8(&bomb).unwrap();
+    let err = Json::parse(text).unwrap_err();
+    assert!(err.to_string().contains("depth"), "got: {err}");
+    let err = Json::parse_bytes_bounded(&bomb, WIRE_MAX_DEPTH).unwrap_err();
+    assert!(err.to_string().contains("depth"), "got: {err}");
+    let resp = bare_server().handle(&bomb);
+    assert_eq!(resp.status, 400);
+}
+
+#[test]
+fn balanced_deep_document_is_a_clean_error() {
+    // Balanced (syntactically valid) nesting far past the bound: same
+    // clean depth error, no DOM is ever materialized.
+    let text = format!("{}{}", "[".repeat(100_000), "]".repeat(100_000));
+    let err = Json::parse(&text).unwrap_err();
+    assert!(err.to_string().contains("depth"), "got: {err}");
+}
+
+#[test]
+fn depth_bound_is_exact_at_the_wire_limit() {
+    let at = format!("{}1{}", "[".repeat(WIRE_MAX_DEPTH), "]".repeat(WIRE_MAX_DEPTH));
+    let over = format!("{}1{}", "[".repeat(WIRE_MAX_DEPTH + 1), "]".repeat(WIRE_MAX_DEPTH + 1));
+    assert!(Json::parse_bytes_bounded(at.as_bytes(), WIRE_MAX_DEPTH).is_ok());
+    let err = Json::parse_bytes_bounded(over.as_bytes(), WIRE_MAX_DEPTH).unwrap_err();
+    assert!(err.to_string().contains("depth"), "got: {err}");
+}

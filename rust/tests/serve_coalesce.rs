@@ -18,7 +18,8 @@ use idkm::deploy::cache::HydratedLru;
 use idkm::deploy::loadgen::{self, LoadgenOpts, Mode};
 use idkm::deploy::reader::BundleReader;
 use idkm::deploy::serve::{
-    infer_batch_request, infer_request, parse_response, BatchForward, Server,
+    infer_batch_request, infer_request, parse_response, read_framed, write_framed, BatchForward,
+    Server, ROUTE_INFER,
 };
 use idkm::deploy::session::{BundleSession, HashForward};
 use idkm::util::json::Json;
@@ -258,4 +259,46 @@ fn loadgen_is_deterministic_and_self_checking() {
     let fnv = |r: &Json, sec: &str| r.get(sec).unwrap().str_of("outputs_fnv").unwrap().to_string();
     assert_eq!(fnv(&a, "closed"), fnv(&b, "closed"), "closed loop is not seed-deterministic");
     assert_eq!(fnv(&a, "open"), fnv(&b, "open"), "open loop is not seed-deterministic");
+}
+
+// ---------------------------------------------------------------------------
+// Wire hardening: a hostile deeply nested frame is a clean 400 — twice in a
+// row — and the same stream then serves a healthy request. With a recursive
+// envelope parser this test would abort the process (stack overflow), which
+// is exactly the bug class the pull parser closes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deep_frame_is_a_clean_400_and_the_stream_keeps_serving() {
+    let pool = Pool::new(2);
+    let server = hash_server(&pool, 7, 1, Duration::ZERO);
+
+    // Frame bytes are assembled by hand: a `Json` DOM this deep would
+    // overflow the stack in Drop alone. 200 KiB of brackets sits far
+    // below MAX_FRAME, so framing accepts it — the parser must refuse.
+    let depth = 100_000;
+    let mut deep = format!(r#"{{"route":"{ROUTE_INFER}","body":"#).into_bytes();
+    deep.extend(vec![b'['; depth]);
+    deep.extend(vec![b']'; depth]);
+    deep.push(b'}');
+
+    let mut input = Vec::new();
+    write_framed(&mut input, &deep).unwrap();
+    write_framed(&mut input, &deep).unwrap();
+    write_framed(&mut input, &infer_request("m", 3)).unwrap();
+
+    let mut out: Vec<u8> = Vec::new();
+    server.serve_stream(&mut Cursor::new(input), &mut out).unwrap();
+
+    let mut cur = Cursor::new(out);
+    let mut statuses = Vec::new();
+    let mut errors = Vec::new();
+    while let Some(frame) = read_framed(&mut cur).unwrap() {
+        let (status, body) = parse_response(&frame).unwrap();
+        statuses.push(status);
+        errors.push(body.str_of("error").unwrap_or_default().to_string());
+    }
+    assert_eq!(statuses, vec![400, 400, 200], "errors: {errors:?}");
+    assert!(errors[0].contains("depth"), "{}", errors[0]);
+    assert!(errors[1].contains("depth"), "{}", errors[1]);
 }
