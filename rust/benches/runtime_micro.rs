@@ -2,7 +2,9 @@
 //!
 //! * clustering-engine E-step kernel matrix on the m=65536, k=16, d=4
 //!   acceptance workload: scalar reference vs scalar fused vs SIMD fused
-//!   (single-threaded), plus the thread-pooled Blocked variants
+//!   (single-threaded), plus the thread-pooled Blocked variants, plus the
+//!   drift-bounded pruned E-step (warm steady state vs the fused kernel,
+//!   and the blended end-to-end Lloyd ratio)
 //! * soft-EM sweep (the IDKM Picard step) on the same workload: scalar
 //!   reference vs the fused SIMD soft kernel, single-threaded and pooled
 //! * M-step reduction: runtime-d scalar loop vs the f64 const-d lanes
@@ -156,6 +158,66 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>,
         std::hint::black_box(&cb_m);
     });
 
+    // Drift-bounded pruned E-step. Lloyd-converge the codebook first (the
+    // pruner's win is the late-iteration steady state where winners stop
+    // changing), then time warm pruned passes against the same fused SIMD
+    // kernel they fall back to — kernel vs kernel, both single-threaded, so
+    // the ratio is core-count independent and gateable. A dedicated scratch
+    // keeps the bound state away from the plain kernels' measurements.
+    let mut ws_p = EngineScratch::new();
+    let mut cb_conv = codebook.clone();
+    let mut prev = vec![u32::MAX; m];
+    let mut out_p = vec![0u32; m];
+    ws_p.begin_bounds(m, k, d);
+    for _ in 0..8 {
+        simd_1t.assign_pruned(&w, d, &cb_conv, &prev, &mut out_p, &mut ws_p);
+        prev.copy_from_slice(&out_p);
+        simd_1t.update(&w, d, &mut cb_conv, &prev, &mut ws_p);
+    }
+    // One more pass consumes the last M-step's pending drift; the timed
+    // passes below then run the zero-drift steady state a converged
+    // assignment loop sits in.
+    simd_1t.assign_pruned(&w, d, &cb_conv, &prev, &mut out_p, &mut ws_p);
+    prev.copy_from_slice(&out_p);
+    let t_pruned = time_median("estep pruned simd (1 thread, warm)", iters, || {
+        simd_1t.assign_pruned(&w, d, &cb_conv, &prev, &mut out_p, &mut ws_p);
+        std::hint::black_box(&out_p);
+    });
+    let pstats = ws_p.prune_stats();
+    let ptotal = (pstats.skipped + pstats.rescanned).max(1);
+    println!(
+        "{:<44} {:>9.1}% rows skipped ({} of {} row-passes)",
+        "pruned E-step engagement",
+        pstats.skipped as f64 / ptotal as f64 * 100.0,
+        pstats.skipped,
+        ptotal
+    );
+
+    // End-to-end Lloyd, seed to iteration 10: plain assigns vs the pruned
+    // loop the engine now runs (early iterations mostly rescan, late ones
+    // mostly skip, so this ratio is the blended real-workload win — it
+    // varies with how fast the case converges and is recorded ungated).
+    let mut cb_run = vec![0.0f32; codebook.len()];
+    let t_lloyd_plain = time_median("lloyd plain simd (10 it, 1 thread)", 5, || {
+        cb_run.copy_from_slice(&codebook);
+        for _ in 0..10 {
+            simd_1t.assign(&w, d, &cb_run, &mut out_p, &mut ws);
+            simd_1t.update(&w, d, &mut cb_run, &out_p, &mut ws);
+        }
+        std::hint::black_box(&cb_run);
+    });
+    let t_lloyd_pruned = time_median("lloyd pruned simd (10 it, 1 thread)", 5, || {
+        cb_run.copy_from_slice(&codebook);
+        prev.fill(u32::MAX);
+        ws_p.begin_bounds(m, k, d);
+        for _ in 0..10 {
+            simd_1t.assign_pruned(&w, d, &cb_run, &prev, &mut out_p, &mut ws_p);
+            prev.copy_from_slice(&out_p);
+            simd_1t.update(&w, d, &mut cb_run, &prev, &mut ws_p);
+        }
+        std::hint::black_box(&cb_run);
+    });
+
     // soft-EM sweep (the IDKM Picard step): scalar reference vs the fused
     // SIMD kernel, single-threaded to isolate the kernel, plus the pool.
     // In-place sweeps into a reused next-codebook buffer, like the solver.
@@ -220,6 +282,13 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>,
         ("soft_simd_over_soft_scalar", t_soft_scalar / t_soft_simd),
         ("soft_blocked_simd_over_scalar", t_soft_scalar / t_soft_pool),
         ("mstep_simd_over_scalar", t_mstep_scalar / t_mstep_simd),
+        // warm steady-state pruned pass vs the SIMD fused kernel it falls
+        // back to (both 1 thread; gated)
+        ("estep_pruned_over_fused", t_simd / t_pruned),
+        // blended 10-iteration Lloyd, seed to finish (ungated: the mix of
+        // rescan-heavy early and skip-heavy late iterations is workload-
+        // dependent)
+        ("lloyd_pruned_over_plain", t_lloyd_plain / t_lloyd_pruned),
     ];
     for (name, s) in &speedup {
         println!("engine speedup {name:<30} {s:>6.2}x");
@@ -236,6 +305,10 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>,
         "f64-lane M-step over scalar M-step: {:.2}x (target >= 1.5x)",
         t_mstep_scalar / t_mstep_simd
     );
+    println!(
+        "pruned E-step over simd fused E-step (warm): {:.2}x (target >= 2.4x)",
+        t_simd / t_pruned
+    );
 
     let median_ns = vec![
         ("estep_scalar_ref", t_scalar * 1e9),
@@ -243,6 +316,9 @@ fn engine_kernel_bench() -> (Vec<(&'static str, f64)>, Vec<(&'static str, f64)>,
         ("estep_simd_1t", t_simd * 1e9),
         ("estep_blocked", t_blocked * 1e9),
         ("estep_blocked_simd", t_blocked_simd * 1e9),
+        ("estep_pruned_1t", t_pruned * 1e9),
+        ("lloyd_plain_10it_1t", t_lloyd_plain * 1e9),
+        ("lloyd_pruned_10it_1t", t_lloyd_pruned * 1e9),
         ("mstep_scalar_1t", t_mstep_scalar * 1e9),
         ("mstep_simd_1t", t_mstep_simd * 1e9),
         ("soft_scalar_ref", t_soft_scalar * 1e9),
@@ -555,6 +631,26 @@ fn check_regression(current: &Json, baseline_path: &str) -> anyhow::Result<()> {
         .get("gated")
         .and_then(Json::as_arr)
         .context("baseline has no gated list")?;
+    // A gate only engages through the BASELINE's `gated` list — so every
+    // ratio the CURRENT run declares gated must already be present there
+    // (and have a committed value). Without this cross-check a newly added
+    // gate would silently never fire until someone remembered to regen the
+    // baseline; now the stale baseline is a loud failure naming the key.
+    let base_names: Vec<&str> = gated.iter().filter_map(Json::as_str).collect();
+    if let Some(cur_gated) = current.get("gated").and_then(Json::as_arr) {
+        for g in cur_gated {
+            let name = g.as_str().context("gated entries must be speedup names")?;
+            let committed = base.get("speedup").and_then(|s| s.f64_of(name)).is_some();
+            if !base_names.contains(&name) || !committed {
+                anyhow::bail!(
+                    "gated ratio {name:?} is missing from the committed baseline \
+                     {baseline_path} (gated list and/or speedup value): regenerate \
+                     the baseline (its `regen` field holds the command) and commit \
+                     it so this gate can engage"
+                );
+            }
+        }
+    }
     let mut offenders: Vec<String> = Vec::new();
     for g in gated {
         let name = g.as_str().context("gated entries must be speedup names")?;
@@ -671,7 +767,10 @@ fn main() -> anyhow::Result<()> {
                  core-count-independent ratios are gated: the single-threaded \
                  kernel ratios (simd_over_fused for the hard E-step, \
                  soft_simd_over_soft_scalar for the soft-EM sweep, \
-                 mstep_simd_over_scalar for the M-step reduction), whose \
+                 mstep_simd_over_scalar for the M-step reduction, and \
+                 estep_pruned_over_fused — the warm steady-state \
+                 drift-bounded pruned E-step vs the SIMD fused kernel it \
+                 falls back to, kernel vs kernel on one thread), whose \
                  floors equal the kernels' acceptance targets, and \
                  picard_anderson_over_plain — the deterministic \
                  sweeps-to-converge ratio of the Anderson-mixed vs plain \
@@ -695,7 +794,11 @@ fn main() -> anyhow::Result<()> {
                  hydrate_pool_over_hydrate_1t), the end-to-end soft_solve \
                  medians, the Anderson wall-clock speedup, and \
                  serve_coalesced_walltime_speedup depend on the runner \
-                 and are recorded ungated. steady_state_allocs is the \
+                 and are recorded ungated, as is lloyd_pruned_over_plain \
+                 (the blended seed-to-iteration-10 Lloyd ratio: how much \
+                 of it is rescan-heavy early iterations vs skip-heavy \
+                 late ones is workload-dependent). steady_state_allocs \
+                 is the \
                  heap-allocation count of one warm sweep set (0 is the \
                  contract; the hard assert lives in \
                  tests/alloc_steady_state.rs). Refresh with the `regen` \
@@ -740,6 +843,7 @@ fn main() -> anyhow::Result<()> {
                 Json::from("simd_over_fused"),
                 Json::from("soft_simd_over_soft_scalar"),
                 Json::from("mstep_simd_over_scalar"),
+                Json::from("estep_pruned_over_fused"),
                 Json::from("picard_anderson_over_plain"),
                 Json::from("lazy_first_layer_over_eager_load"),
                 Json::from("hydrate_lru_hit_over_miss"),

@@ -42,6 +42,19 @@
 //! layers cannot leak state between calls (the dirty-scratch proptest in
 //! `tests/backend_parity.rs` pins this).
 //!
+//! One deliberate, self-policing exception: the pruned E-step's
+//! [`BoundState`] (per-row f64 distance bounds + per-codeword M-step drift)
+//! is *validated* state rather than capacity. It is keyed to the (m, k, d)
+//! shape it was built for and resets itself to all-cold whenever an entry
+//! point sees a different shape, so scratch reuse across shapes, methods,
+//! or backends still cannot change any output bit — stale bounds can only
+//! cost skipped-row opportunities, never correctness (the interleaved-shape
+//! proptest in `tests/backend_parity.rs` pins this). Within one shape, the
+//! bounds are sound only along a codebook trajectory mutated exclusively
+//! through this scratch's `update` since the last reset — exactly the
+//! discipline the engine's `lloyd_with`/`soft_with` wiring maintains by
+//! calling [`EngineScratch::begin_bounds`] once per clustering call.
+//!
 //! All kernels are stateless with respect to the data: (w, d, codebook,
 //! assignments) go in, updated state comes out, so backends are trivially
 //! interchangeable and property-testable against each other.
@@ -49,8 +62,8 @@
 // Per-block cost is exactly `quant::cost_with_assignments` — both backends
 // call it directly so the oracle relationship can never diverge.
 use super::simd::{
-    assign_block_fused_simd, exp_f32, mstep_block_simd, soft_block_simd, CodebookTiles,
-    SoftBlockAccum,
+    assign_block_fused_simd, assign_block_pruned_scalar, assign_block_pruned_simd, exp_f32,
+    mstep_block_simd, soft_block_simd, BoundSlices, CodebookTiles, PruneStats, SoftBlockAccum,
 };
 use super::solver::AndersonScratch;
 use super::BackendKind;
@@ -61,6 +74,98 @@ use crate::util::threadpool::Pool;
 /// Empty-cluster guard shared by the soft M-step (matches the L1 kernels'
 /// DEN_EPS).
 const DEN_EPS: f64 = 1e-8;
+
+/// Outward widening applied to each recorded codeword drift. The drift is
+/// measured in f64 from the exact difference of two f32 values, so its
+/// only error is the ~d·ε₆₄ summation/sqrt rounding — 1e-9 covers that by
+/// seven orders of magnitude while staying invisible against the f32-scale
+/// quantities the bounds compare.
+const DRIFT_OUTWARD: f64 = 1.0 + 1e-9;
+
+/// Persistent state of the drift-bounded pruned E-step, owned by
+/// [`EngineScratch`]: per-row bounds (Hamerly-style upper bound to the
+/// assigned codeword, global lower bound to the runner-up — both as f64
+/// *distances*, not squared), the per-codeword drift recorded by the last
+/// M-step, and the effectiveness counters.
+///
+/// The state is keyed to the (m, k, d) shape it was built for.
+/// [`Self::ensure`] resets it to all-cold on any mismatch, so shape changes
+/// (interleaved solves, a `CodebookTiles::refill` against a reshaped
+/// codebook, PTQ layer changes) can never consume stale bounds — see the
+/// module docs for the trajectory contract within one shape.
+pub struct BoundState {
+    /// Per-row upper bound on the true distance to the assigned codeword;
+    /// `+∞` marks a cold row (never skipped).
+    upper: Vec<f64>,
+    /// Per-row lower bound on the true distance to every other codeword.
+    lower: Vec<f64>,
+    /// Per-codeword `‖c_new − c_old‖` from the last M-step, outward-rounded.
+    drift: Vec<f64>,
+    /// `max_j drift[j]`.
+    drift_max: f64,
+    /// Whether a recorded drift still has to relax the bounds once before
+    /// the next pruned E-step may trust them.
+    pending: bool,
+    m: usize,
+    k: usize,
+    d: usize,
+    stats: PruneStats,
+}
+
+impl BoundState {
+    fn new() -> Self {
+        BoundState {
+            upper: Vec::new(),
+            lower: Vec::new(),
+            drift: Vec::new(),
+            drift_max: 0.0,
+            pending: false,
+            m: 0,
+            k: 0,
+            d: 0,
+            stats: PruneStats::default(),
+        }
+    }
+
+    /// Reset for a clustering call over `m` rows and a (k, d) codebook:
+    /// every row cold, no pending drift, zeroed counters. Allocation-free
+    /// once the buffers have grown to the largest shape seen.
+    fn begin(&mut self, m: usize, k: usize, d: usize) {
+        self.upper.clear();
+        self.upper.resize(m, f64::INFINITY);
+        self.lower.clear();
+        self.lower.resize(m, 0.0);
+        self.drift.clear();
+        self.drift.resize(k, 0.0);
+        self.drift_max = 0.0;
+        self.pending = false;
+        self.m = m;
+        self.k = k;
+        self.d = d;
+        self.stats = PruneStats::default();
+    }
+
+    /// Shape guard at every pruned entry point: a mismatch means the state
+    /// describes some other problem, so restart cold (defense in depth —
+    /// the engine already calls [`Self::begin`] per clustering call).
+    fn ensure(&mut self, m: usize, k: usize, d: usize) {
+        if self.m != m || self.k != k || self.d != d {
+            self.begin(m, k, d);
+        }
+    }
+
+    /// Whether drift recording for a (k, d) M-step applies to this state.
+    fn tracks(&self, k: usize, d: usize) -> bool {
+        self.k == k && self.d == d && self.upper.len() == self.m
+    }
+
+    /// Mark the state unusable; the next [`Self::ensure`] restarts cold.
+    /// Called by entry points that hand assignments to a non-maintaining
+    /// kernel, and on non-finite drift.
+    fn invalidate(&mut self) {
+        self.m = usize::MAX;
+    }
+}
 
 /// Reusable kernel workspace: every buffer a clustering call needs beyond
 /// its inputs and outputs, owned in one place so the steady state is
@@ -89,6 +194,12 @@ pub struct EngineScratch {
     /// LS buffers); detached for the duration of a solve because the step
     /// closure borrows the rest of the scratch.
     anderson: AndersonScratch,
+    /// Pruned-E-step bound state (the one validated-state exception to
+    /// "capacity, never results" — module docs).
+    bounds: BoundState,
+    /// Per-chunk prune counters for the pooled pruned E-step, folded into
+    /// `bounds.stats` after every fan-out.
+    prune_part: Vec<PruneStats>,
 }
 
 impl EngineScratch {
@@ -104,7 +215,24 @@ impl EngineScratch {
             tiles: CodebookTiles::empty(),
             cnorm: Vec::new(),
             anderson: AndersonScratch::new(),
+            bounds: BoundState::new(),
+            prune_part: Vec::new(),
         }
+    }
+
+    /// Reset the pruned-E-step bound state for a clustering call over `m`
+    /// rows and a (k, d) codebook: every row cold, no pending drift,
+    /// zeroed [`PruneStats`]. The engine entry points call this once per
+    /// clustering call; a [`Clusterer::assign_pruned`] without it still
+    /// self-heals through the shape guard, at worst starting cold.
+    pub fn begin_bounds(&mut self, m: usize, k: usize, d: usize) {
+        self.bounds.begin(m, k, d);
+    }
+
+    /// Counters accumulated by the pruned E-step since the last
+    /// [`Self::begin_bounds`].
+    pub fn prune_stats(&self) -> PruneStats {
+        self.bounds.stats
     }
 
     /// Detach the Anderson history for a fixed-point solve: the solver
@@ -121,11 +249,13 @@ impl EngineScratch {
     }
 
     /// Size the M-step total buffers for (k, d); contents are overwritten
-    /// by the reduction, so no zeroing happens here.
-    fn mstep_totals(&mut self, k: usize, d: usize) -> (&mut [f64], &mut [u64]) {
+    /// by the reduction, so no zeroing happens here. Also hands out the
+    /// bound state so the apply step can record per-codeword drift (the
+    /// split borrow the M-step call sites need).
+    fn mstep_totals(&mut self, k: usize, d: usize) -> (&mut [f64], &mut [u64], &mut BoundState) {
         self.sums.resize(k * d, 0.0);
         self.counts.resize(k, 0);
-        (&mut self.sums, &mut self.counts)
+        (&mut self.sums, &mut self.counts, &mut self.bounds)
     }
 
     /// Size and reset `1 + n_chunks` soft accumulators plus the per-chunk
@@ -195,7 +325,10 @@ pub trait Clusterer: Send + Sync {
     );
 
     /// Hard M-step: move each codeword to the mean of its assigned rows;
-    /// empty clusters keep their previous center.
+    /// empty clusters keep their previous center. Also records per-codeword
+    /// drift into the workspace's bound state when its shape matches, so a
+    /// following [`Self::assign_pruned`] can relax its bounds instead of
+    /// restarting cold.
     fn update(
         &self,
         w: &[f32],
@@ -204,6 +337,30 @@ pub trait Clusterer: Send + Sync {
         assign: &[u32],
         ws: &mut EngineScratch,
     );
+
+    /// Drift-bounded pruned hard E-step: output is **bit-for-bit identical**
+    /// to [`Self::assign`] on every input, but rows whose persistent bounds
+    /// in `ws` prove the previously assigned codeword still wins skip the
+    /// k-way scan. `prev` is the assignment the bounds were last refreshed
+    /// against (an empty slice means "none": every row scans). Backends
+    /// without a pruning-sound kernel fall back to [`Self::assign`]
+    /// wholesale and mark the bound state inert, which is trivially
+    /// bit-identical. Callers start a bound lifecycle with
+    /// [`EngineScratch::begin_bounds`]; the shape guard inside the state
+    /// restarts cold on any (m, k, d) mismatch.
+    fn assign_pruned(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        prev: &[u32],
+        out: &mut [u32],
+        ws: &mut EngineScratch,
+    ) {
+        let _ = prev;
+        ws.bounds.invalidate();
+        self.assign(w, d, codebook, out, ws);
+    }
 
     /// One soft-k-means sweep (paper algorithm 1) at temperature `tau`:
     /// writes the attention-weighted new codebook into `next`
@@ -301,6 +458,59 @@ fn apply_mstep(codebook: &mut [f32], d: usize, sums: &[f64], counts: &[u64]) {
     }
 }
 
+/// [`apply_mstep`] plus per-codeword drift recording: the codebook writes
+/// are the same expression in the same order (bit-identical result), with
+/// each codeword's movement `‖c_new − c_old‖` measured in f64 *before* the
+/// overwrite — exact per component, since the difference of two f32 values
+/// is exact in f64 — then rounded outward by [`DRIFT_OUTWARD`]. When the
+/// bound state is already pending (two M-steps with no E-step between),
+/// drifts accumulate, which bounds the total movement by the triangle
+/// inequality. A non-finite drift (a codeword teleporting through
+/// overflow/NaN) invalidates the bounds outright instead of recording a
+/// relaxation that no longer bounds anything; a shape mismatch records
+/// nothing at all.
+fn apply_mstep_drift(
+    codebook: &mut [f32],
+    d: usize,
+    sums: &[f64],
+    counts: &[u64],
+    bounds: &mut BoundState,
+) {
+    let k = counts.len();
+    if !bounds.tracks(k, d) {
+        apply_mstep(codebook, d, sums, counts);
+        return;
+    }
+    let accumulate = bounds.pending;
+    let mut dmax = 0.0f64;
+    let mut finite = true;
+    for (j, &n) in counts.iter().enumerate() {
+        let mut sq = 0.0f64;
+        if n > 0 {
+            for c in 0..d {
+                let new = (sums[j * d + c] / n as f64) as f32;
+                let diff = new as f64 - codebook[j * d + c] as f64;
+                sq += diff * diff;
+                codebook[j * d + c] = new;
+            }
+        }
+        // empty cluster: keep previous center — zero drift
+        let mut dj = sq.sqrt() * DRIFT_OUTWARD;
+        if accumulate {
+            dj += bounds.drift[j];
+        }
+        finite &= dj.is_finite();
+        bounds.drift[j] = dj;
+        dmax = dmax.max(dj);
+    }
+    if finite {
+        bounds.drift_max = dmax;
+        bounds.pending = true;
+    } else {
+        bounds.invalidate();
+    }
+}
+
 /// Scalar-reference soft-EM sweep for a row block: attention-weighted
 /// partials ([`SoftBlockAccum`]) from the max-subtracted softmax over
 /// `-‖w − c_j‖ / tau`, with f64 sums. `attn` is caller-provided logit
@@ -387,9 +597,40 @@ impl Clusterer for ScalarRef {
         ws: &mut EngineScratch,
     ) {
         let k = codebook.len() / d;
-        let (sums, counts) = ws.mstep_totals(k, d);
+        let (sums, counts, bounds) = ws.mstep_totals(k, d);
         mstep_block(w, d, k, assign, sums, counts);
-        apply_mstep(codebook, d, sums, counts);
+        apply_mstep_drift(codebook, d, sums, counts, bounds);
+    }
+
+    fn assign_pruned(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        prev: &[u32],
+        out: &mut [u32],
+        ws: &mut EngineScratch,
+    ) {
+        let k = codebook.len() / d;
+        let bounds = &mut ws.bounds;
+        bounds.ensure(out.len(), k, d);
+        let apply_drift = bounds.pending;
+        assign_block_pruned_scalar(
+            w,
+            d,
+            codebook,
+            BoundSlices {
+                prev,
+                upper: bounds.upper.as_mut_slice(),
+                lower: bounds.lower.as_mut_slice(),
+                drift: bounds.drift.as_slice(),
+                drift_max: bounds.drift_max,
+                apply_drift,
+                stats: &mut bounds.stats,
+            },
+            out,
+        );
+        bounds.pending = false;
     }
 
     fn soft_update_into(
@@ -556,6 +797,105 @@ impl Clusterer for Blocked {
         });
     }
 
+    fn assign_pruned(
+        &self,
+        w: &[f32],
+        d: usize,
+        codebook: &[f32],
+        prev: &[u32],
+        out: &mut [u32],
+        ws: &mut EngineScratch,
+    ) {
+        if !self.simd {
+            // The expanded `|c|² − 2·w·c` kernel suffers catastrophic
+            // cancellation near ties, so the relative-slack soundness
+            // argument does not cover it: fall back to the plain scan
+            // (trivially bit-identical) and keep the bound state inert.
+            ws.bounds.invalidate();
+            self.assign(w, d, codebook, out, ws);
+            return;
+        }
+        let m = out.len();
+        let k = codebook.len() / d;
+        let grain = self.grain(m);
+        let EngineScratch { tiles, bounds, prune_part, .. } = ws;
+        bounds.ensure(m, k, d);
+        tiles.refill(codebook, d);
+        let tiles = &*tiles;
+        let apply_drift = bounds.pending;
+        let drift_max = bounds.drift_max;
+        if m <= grain {
+            assign_block_pruned_simd(
+                w,
+                d,
+                codebook,
+                tiles,
+                BoundSlices {
+                    prev,
+                    upper: bounds.upper.as_mut_slice(),
+                    lower: bounds.lower.as_mut_slice(),
+                    drift: bounds.drift.as_slice(),
+                    drift_max,
+                    apply_drift,
+                    stats: &mut bounds.stats,
+                },
+                out,
+            );
+            bounds.pending = false;
+            return;
+        }
+        let n_chunks = m.div_ceil(grain);
+        prune_part.clear();
+        prune_part.resize(n_chunks, PruneStats::default());
+        {
+            // Chunk ci owns rows [ci·grain, ci·grain + len) of out/upper/
+            // lower and stats slot ci; drift and tiles are shared read-only.
+            // The pool's chunk→worker affinity keeps a chunk's bound slice
+            // on the worker whose cache already holds it across iterations.
+            let drift: &[f64] = &bounds.drift;
+            let prev_ok = prev.len() == m;
+            let out_ptr = DisjointMut::new(out);
+            let up_ptr = DisjointMut::new(bounds.upper.as_mut_slice());
+            let lo_ptr = DisjointMut::new(bounds.lower.as_mut_slice());
+            let st_ptr = DisjointMut::new(prune_part.as_mut_slice());
+            self.pool.run_indexed(n_chunks, &|ci| {
+                let start = ci * grain;
+                let len = grain.min(m - start);
+                // SAFETY: chunk ci owns rows [start, start + len) and
+                // stats slot ci alone.
+                let (oc, uc, lc, sc) = unsafe {
+                    (
+                        out_ptr.slice(start, len),
+                        up_ptr.slice(start, len),
+                        lo_ptr.slice(start, len),
+                        &mut st_ptr.slice(ci, 1)[0],
+                    )
+                };
+                let pc = if prev_ok { &prev[start..start + len] } else { &[][..] };
+                assign_block_pruned_simd(
+                    &w[start * d..(start + len) * d],
+                    d,
+                    codebook,
+                    tiles,
+                    BoundSlices {
+                        prev: pc,
+                        upper: uc,
+                        lower: lc,
+                        drift,
+                        drift_max,
+                        apply_drift,
+                        stats: sc,
+                    },
+                    oc,
+                );
+            });
+        }
+        for p in prune_part.iter().take(n_chunks) {
+            bounds.stats.merge(p);
+        }
+        bounds.pending = false;
+    }
+
     fn update(
         &self,
         w: &[f32],
@@ -569,13 +909,13 @@ impl Clusterer for Blocked {
         let grain = self.grain(m);
         if m <= grain {
             let simd = self.simd;
-            let (sums, counts) = ws.mstep_totals(k, d);
+            let (sums, counts, bounds) = ws.mstep_totals(k, d);
             if simd {
                 mstep_block_simd(w, d, k, assign, sums, counts);
             } else {
                 mstep_block(w, d, k, assign, sums, counts);
             }
-            apply_mstep(codebook, d, sums, counts);
+            apply_mstep_drift(codebook, d, sums, counts, bounds);
             return;
         }
         let n_chunks = m.div_ceil(grain);
@@ -614,7 +954,8 @@ impl Clusterer for Blocked {
                 *c += p;
             }
         }
-        apply_mstep(codebook, d, &ws.sums, &ws.counts);
+        let EngineScratch { sums, counts, bounds, .. } = ws;
+        apply_mstep_drift(codebook, d, sums, counts, bounds);
     }
 
     fn soft_update_into(
@@ -899,5 +1240,141 @@ mod tests {
         ScalarRef.update(&w, 1, &mut codebook, &assign, &mut EngineScratch::new());
         assert!((codebook[0] - 0.0125).abs() < 1e-6);
         assert_eq!(codebook[1], 9.0);
+    }
+
+    /// Drive `iters` rounds of pruned-assign + update against a plain
+    /// assign + update reference on a second identical codebook; returns
+    /// the final prune stats. Panics on any assignment or codebook bit
+    /// mismatch.
+    fn pruned_lloyd_parity(
+        backend: &dyn Clusterer,
+        m: usize,
+        d: usize,
+        k: usize,
+        iters: usize,
+    ) -> PruneStats {
+        let w = random_w(m, d, (m * 3 + d * 5 + k) as u64);
+        let mut cb_p = ScalarRef.seed(&w, d, k, &mut Rng::new(17));
+        let mut cb_r = cb_p.clone();
+        let k = cb_p.len() / d;
+        let mut ws_p = EngineScratch::new();
+        let mut ws_r = EngineScratch::new();
+        ws_p.begin_bounds(m, k, d);
+        let mut prev = vec![u32::MAX; m];
+        let mut got = vec![0u32; m];
+        let mut want = vec![0u32; m];
+        for it in 0..iters {
+            backend.assign_pruned(&w, d, &cb_p, &prev, &mut got, &mut ws_p);
+            backend.assign(&w, d, &cb_r, &mut want, &mut ws_r);
+            assert_eq!(got, want, "iter {it}");
+            std::mem::swap(&mut prev, &mut got);
+            backend.update(&w, d, &mut cb_p, &prev, &mut ws_p);
+            backend.update(&w, d, &mut cb_r, &want, &mut ws_r);
+            for (i, (a, b)) in cb_p.iter().zip(&cb_r).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "iter {it} codebook[{i}]");
+            }
+        }
+        ws_p.prune_stats()
+    }
+
+    #[test]
+    fn pruned_assign_is_bit_identical_and_engages_scalar_ref() {
+        let stats = pruned_lloyd_parity(&ScalarRef, 600, 2, 8, 8);
+        assert!(stats.skipped > 0, "pruning never engaged: {stats:?}");
+        assert_eq!(stats.skipped + stats.rescanned, 600 * 8);
+    }
+
+    #[test]
+    fn pruned_assign_is_bit_identical_and_engages_blocked_simd() {
+        // single-block and pooled multi-chunk paths
+        let single = Blocked::with_kernel(1, usize::MAX, true);
+        let stats = pruned_lloyd_parity(&single, 700, 4, 16, 8);
+        assert!(stats.skipped > 0, "single-block pruning never engaged: {stats:?}");
+        let pooled = Blocked::with_kernel(3, 64, true);
+        let stats = pruned_lloyd_parity(&pooled, 2048, 2, 16, 8);
+        assert!(stats.skipped > 0, "pooled pruning never engaged: {stats:?}");
+        assert_eq!(stats.skipped + stats.rescanned, 2048 * 8);
+    }
+
+    #[test]
+    fn pruned_assign_on_expanded_kernel_falls_back_to_plain() {
+        // Blocked without SIMD has no pruning-sound kernel: assign_pruned
+        // must equal assign exactly and record nothing.
+        let blocked = Blocked::with_params(2, 64);
+        let w = random_w(1024, 2, 5);
+        let cb = ScalarRef.seed(&w, 2, 8, &mut Rng::new(2));
+        let mut ws = EngineScratch::new();
+        ws.begin_bounds(1024, 8, 2);
+        let prev = vec![u32::MAX; 1024];
+        let mut got = vec![0u32; 1024];
+        let mut want = vec![0u32; 1024];
+        blocked.assign_pruned(&w, 2, &cb, &prev, &mut got, &mut ws);
+        blocked.assign(&w, 2, &cb, &mut want, &mut EngineScratch::new());
+        assert_eq!(got, want);
+        assert_eq!(ws.prune_stats(), PruneStats::default());
+    }
+
+    #[test]
+    fn bound_state_shape_change_restarts_cold() {
+        // Warm bounds for one (m, k, d), then an assign_pruned for a
+        // different shape through the SAME scratch: the shape guard must
+        // restart cold (every row rescans; nothing stale is consumed), and
+        // the output must equal the plain kernel's bit-for-bit.
+        let wide = Blocked::with_kernel(1, usize::MAX, true);
+        let mut ws = EngineScratch::new();
+
+        let w_a = random_w(300, 4, 11);
+        let cb_a = ScalarRef.seed(&w_a, 4, 16, &mut Rng::new(1));
+        ws.begin_bounds(300, 16, 4);
+        let mut out_a = vec![0u32; 300];
+        wide.assign_pruned(&w_a, 4, &cb_a, &[], &mut out_a, &mut ws);
+        let prev_a = out_a.clone();
+        wide.assign_pruned(&w_a, 4, &cb_a, &prev_a, &mut out_a, &mut ws);
+        assert!(ws.prune_stats().skipped > 0, "warm-up failed to warm");
+
+        // Different (k, d) — CodebookTiles::refill sees a reshaped
+        // codebook; bounds must not survive the transition.
+        let w_b = random_w(300, 2, 12);
+        let cb_b = ScalarRef.seed(&w_b, 2, 7, &mut Rng::new(3));
+        let mut out_b = vec![0u32; 300];
+        // deliberately NO begin_bounds: the ensure() guard must catch it
+        wide.assign_pruned(&w_b, 2, &cb_b, &prev_a, &mut out_b, &mut ws);
+        let mut want_b = vec![0u32; 300];
+        wide.assign(&w_b, 2, &cb_b, &mut want_b, &mut EngineScratch::new());
+        assert_eq!(out_b, want_b);
+    }
+
+    #[test]
+    fn non_finite_drift_invalidates_instead_of_relaxing() {
+        // A codeword teleporting to infinity must not record a drift the
+        // bounds could "relax" by — the state goes cold and the next pruned
+        // pass rescans every row (still bit-exact).
+        let d = 1;
+        let w = vec![0.0f32, 1.0, 2.0, 3.0];
+        let mut cb = vec![0.5f32, f32::MAX];
+        let mut ws = EngineScratch::new();
+        ws.begin_bounds(4, 2, 1);
+        let mut out = vec![0u32; 4];
+        ScalarRef.assign_pruned(&w, d, &cb, &[], &mut out, &mut ws);
+        // force an overflowing mean: assign everything to codeword 1 with
+        // data at f32::MAX so the f64 mean round-trips to +inf drift-wise
+        let huge = vec![f32::MAX; 4];
+        let all_one = vec![1u32; 4];
+        cb[1] = -f32::MAX;
+        ScalarRef.update(&huge, d, &mut cb, &all_one, &mut ws);
+        // drift for codeword 1 is |MAX − (−MAX)| ≈ 6.8e38 — finite in f64,
+        // so craft a genuinely non-finite one via a NaN center instead
+        cb[1] = f32::NAN;
+        ScalarRef.update(&huge, d, &mut cb, &all_one, &mut ws);
+        let prev = out.clone();
+        ScalarRef.assign_pruned(&w, d, &cb, &prev, &mut out, &mut ws);
+        // the invalidation restarted the state cold: every row rescanned,
+        // none skipped, and output matches plain
+        let stats = ws.prune_stats();
+        assert_eq!(stats.skipped, 0);
+        assert_eq!(stats.rescanned, 4);
+        let mut want = vec![0u32; 4];
+        ScalarRef.assign(&w, d, &cb, &mut want, &mut EngineScratch::new());
+        assert_eq!(out, want);
     }
 }

@@ -76,6 +76,47 @@
 //! [`Pool::run_indexed`](crate::util::threadpool::Pool::run_indexed)
 //! instead of boxing per-chunk closures.
 //!
+//! # Pruned E-step bound maintenance (bit-exact by construction)
+//!
+//! Hard-assignment passes route through [`Clusterer::assign_pruned`], a
+//! drift-bounded Hamerly-style E-step. The workspace carries a `BoundState`:
+//! per row, an f64 **upper** bound on the distance to the currently-assigned
+//! codeword and an f64 **lower** bound on the distance to the runner-up,
+//! both maintained with *outward* rounding slack (a few ulps, scaled with d
+//! — see `prune_slack` in [`simd`]). A row is skipped only when
+//! `upper² · (1+S) < lower² · (1−S)`, which proves the fused kernel's own
+//! computed-f32 distance to the assigned codeword is *strictly* smaller
+//! than its computed distance to every other codeword — so the kernel's
+//! strict-`<`, tie-to-lowest-index scan would reproduce the previous winner
+//! bit-for-bit. Every row the bounds cannot decide falls through to
+//! [`simd::assign_block_fused_simd`] (or the scalar reference) **verbatim**.
+//! Bit-exactness is therefore by construction, not by luck: the pruned path
+//! never computes a different answer, it only skips work whose answer is
+//! already proven.
+//!
+//! The invariant that keeps the bounds sound across iterations is
+//! **drift relaxation**: each M-step measures, in f64, how far every
+//! codeword moved (`‖c_new − c_old‖`, rounded outward) and the next pruned
+//! pass relaxes each row's bounds by it — `upper += drift[assigned]`,
+//! `lower −= max_drift` — before testing. By the triangle inequality the
+//! relaxed bounds still bracket the true distances, so a skip is still a
+//! proof. Any non-finite drift (codewords teleporting through NaN/∞)
+//! invalidates the state outright, and a shape change — the same
+//! `(k, d)` guard `CodebookTiles::refill` keys on — restarts it cold, so
+//! stale bounds can never leak between interleaved solves (pinned by the
+//! interleaved-shape proptest in `tests/backend_parity.rs`).
+//!
+//! Pruning engages where the work is: late Lloyd iterations (most rows'
+//! winners stop changing while the codebook drift shrinks), the
+//! final-assignment refresh after `max_iter` exits, and warm restarts —
+//! the post-solve assignment in the IDKM path seeds bounds from the
+//! solver's final iterate, so a subsequent hard pass over the same shape
+//! starts warm. Effectiveness is observable, not assumed:
+//! [`ClusterOutcome::prune`] reports rows skipped / rescanned / bound
+//! refreshes ([`PruneStats`]), and the Lloyd parity tests assert
+//! `skipped > 0` on convergent runs so exactness can never silently come
+//! from a pruner that never engages.
+//!
 //! ```no_run
 //! use idkm::quant::engine::{ClusterSpec, Engine, EngineScratch, Method};
 //! use idkm::util::rng::Rng;
@@ -101,6 +142,7 @@ mod solver;
 
 pub use backend::{Blocked, Clusterer, EngineScratch, ScalarRef};
 pub use method::{Method, ParseEnumError};
+pub use simd::PruneStats;
 pub use solver::{first_residual_divergence, AndersonScratch, FixedPointSolver, FixedPointTrace};
 
 use crate::util::rng::Rng;
@@ -229,6 +271,10 @@ pub struct ClusterOutcome {
     /// Per-iteration ‖ΔC‖₂ (fixed-point paths; empty for hard EM).
     pub residuals: Vec<f64>,
     pub converged: bool,
+    /// Pruned E-step effectiveness over every hard-assignment pass of this
+    /// call (rows skipped / rescanned / bound refreshes) — all zeros when
+    /// the backend has no pruning-sound kernel (expanded-form `Blocked`).
+    pub prune: PruneStats,
 }
 
 /// Backend-selected clustering engine.
@@ -340,27 +386,35 @@ impl Engine {
         let m = w.len() / d;
         let mut codebook = self.backend.seed(w, d, k, rng);
         let k = codebook.len() / d; // seed clamps k > m
+        // Fresh bounds for this trajectory; `assign` starts at the all-
+        // `u32::MAX` sentinel, which assign_pruned treats as "cold" (the
+        // first pass rescans every row and seeds the bounds).
+        ws.begin_bounds(m, k, d);
         let mut assign = vec![u32::MAX; m];
         let mut next = vec![0u32; m];
         let mut iterations = 0;
         let mut at_fixpoint = false;
         for it in 0..max_iter {
             iterations = it + 1;
-            self.backend.assign(w, d, &codebook, &mut next, ws);
+            self.backend.assign_pruned(w, d, &codebook, &assign, &mut next, ws);
             let changed = next != assign;
             std::mem::swap(&mut assign, &mut next);
             if !changed && it > 0 {
                 at_fixpoint = true;
                 break;
             }
+            // update() also records per-codeword drift into the bound state,
+            // which the next assign_pruned consumes as relaxation.
             self.backend.update(w, d, &mut codebook, &assign, ws);
         }
         // When the loop exits via max_iter the final M-step moved the
-        // codebook, so assignments are stale: refresh once. At a fixpoint
-        // they are already consistent — the rescan `cluster_cost` used to do
-        // unconditionally is skipped.
+        // codebook, so assignments are stale: refresh once (the bounds are
+        // warm, so near a fixed point this refresh prunes most rows). At a
+        // fixpoint they are already consistent — the rescan `cluster_cost`
+        // used to do unconditionally is skipped.
         if !at_fixpoint {
-            self.backend.assign(w, d, &codebook, &mut assign, ws);
+            self.backend.assign_pruned(w, d, &codebook, &assign, &mut next, ws);
+            std::mem::swap(&mut assign, &mut next);
         }
         let cost = self.backend.cost(w, d, &codebook, &assign, ws);
         ClusterOutcome {
@@ -372,6 +426,7 @@ impl Engine {
             cost,
             residuals: Vec::new(),
             converged: at_fixpoint,
+            prune: ws.prune_stats(),
         }
     }
 
@@ -419,7 +474,11 @@ impl Engine {
         });
         ws.restore_anderson(aa);
         let mut assign = vec![0u32; m];
-        self.backend.assign(w, d, &codebook, &mut assign, ws);
+        // Cold pruned pass: bit-identical to plain assign (every row
+        // rescans), and it seeds the bounds from the solver's final iterate
+        // so a subsequent hard pass over the same shape starts warm.
+        ws.begin_bounds(m, k, d);
+        self.backend.assign_pruned(w, d, &codebook, &[], &mut assign, ws);
         let cost = self.backend.cost(w, d, &codebook, &assign, ws);
         ClusterOutcome {
             codebook,
@@ -430,6 +489,7 @@ impl Engine {
             cost,
             residuals: trace.residuals,
             converged: trace.converged,
+            prune: ws.prune_stats(),
         }
     }
 
@@ -444,7 +504,10 @@ impl Engine {
         let params = crate::quant::uniform::UniformParams::fit(w, k.max(2));
         let codebook = params.codebook();
         let mut assign = vec![0u32; w.len()];
-        self.backend.assign(w, 1, &codebook, &mut assign, ws);
+        // Single cold pruned pass (bit-identical to plain assign); keeps
+        // the bound-state lifecycle uniform across every entry point.
+        ws.begin_bounds(w.len(), params.levels, 1);
+        self.backend.assign_pruned(w, 1, &codebook, &[], &mut assign, ws);
         let cost = self.backend.cost(w, 1, &codebook, &assign, ws);
         ClusterOutcome {
             codebook,
@@ -455,6 +518,7 @@ impl Engine {
             cost,
             residuals: Vec::new(),
             converged: true,
+            prune: ws.prune_stats(),
         }
     }
 }
@@ -582,6 +646,16 @@ mod tests {
         assert_eq!(reference.codebook, wide.codebook);
         assert_eq!(reference.iterations, wide.iterations);
         assert_eq!(reference.cost, wide.cost);
+        // Non-vacuity: the trajectories above are identical *and* the
+        // pruned E-step actually skipped rows on this convergent run —
+        // exactness must not come from a pruner that never engages.
+        assert!(reference.prune.skipped > 0, "scalar pruning never engaged: {:?}", reference.prune);
+        assert!(wide.prune.skipped > 0, "simd pruning never engaged: {:?}", wide.prune);
+        assert_eq!(
+            reference.prune.skipped + reference.prune.rescanned,
+            wide.prune.skipped + wide.prune.rescanned,
+            "both backends scanned the same number of row-passes"
+        );
     }
 
     #[test]

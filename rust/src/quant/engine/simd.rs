@@ -27,6 +27,15 @@
 //! The speedup comes purely from the 8-wide lanes. Codewords beyond the
 //! last full lane chunk (`k % LANES` of them) take a scalar tail.
 //!
+//! [`assign_block_pruned_simd`] is the drift-bounded pruned variant of the
+//! same kernel: rows whose persistent f64 bounds (maintained with outward
+//! rounding slack — [`prune_slack`], whose constant has exactly one
+//! definition site in this file, grep-guarded in CI) prove the previous
+//! winner still wins are skipped; everything else falls through to the
+//! exact arithmetic above, so the output is bit-identical on every input.
+//! `assign_block_pruned_impl` carries the soundness argument; the
+//! `quant::engine` module docs carry the engine-level bound lifecycle.
+//!
 //! # Soft-EM sweep numerics (why the operation order matters)
 //!
 //! [`soft_block_simd`] reproduces the scalar reference sweep bit-for-bit
@@ -439,6 +448,282 @@ fn mstep_block_d<const D: usize>(w: &[f32], assign: &[u32], sums: &mut [f64], co
     }
 }
 
+// ---------------------------------------------------------------------------
+// Drift-bounded pruned E-step (Hamerly-style bounds, bit-exact fall-through)
+// ---------------------------------------------------------------------------
+
+/// Observability counters for the pruned hard E-step. Exposed through
+/// `ClusterOutcome` so pruning effectiveness is measured, never assumed —
+/// the exactness tests also assert `skipped > 0` on convergent runs, so
+/// bit-exactness can't silently come from never pruning.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Rows whose stored bounds proved the assigned codeword still wins:
+    /// the k-way scan was skipped and the previous assignment copied
+    /// through.
+    pub skipped: u64,
+    /// Rows that ran the full distance scan (cold rows plus rows whose
+    /// bounds could not decide).
+    pub rescanned: u64,
+    /// Rescans of rows that held valid (finite) bounds — warm rows whose
+    /// drift-relaxed bounds failed to prune and were refreshed from the
+    /// scan. `rescanned - refreshes` is the cold-start share.
+    pub refreshes: u64,
+}
+
+impl PruneStats {
+    /// Fold another counter set into this one. The counters are plain sums,
+    /// so pool chunks may fold in any order.
+    pub fn merge(&mut self, other: &PruneStats) {
+        self.skipped += other.skipped;
+        self.rescanned += other.rescanned;
+        self.refreshes += other.refreshes;
+    }
+}
+
+/// The one ulp unit behind [`prune_slack`] — the single definition site of
+/// the prune-bound rounding slack (a CI grep guard rejects any second
+/// `PRUNE_SLACK*` spelling outside this file, so the soundness argument
+/// below can never quietly fork).
+const PRUNE_SLACK_UNIT: f64 = f32::EPSILON as f64;
+
+/// Outward relative rounding slack `S(d)` for the pruned E-step's bounds.
+///
+/// The exact-f32 kernels compute each squared distance as `d` rounded
+/// subtract-square-accumulate steps, so the computed value `D_c` sits
+/// within a relative `(d + 2)·ε₃₂` forward-error band of the real value
+/// `D_t`. `S(d) = (2d + 8)·ε₃₂` is at least twice that band — the factor-2
+/// headroom also absorbs every f64 rounding the bound maintenance itself
+/// performs (sqrt/divide/multiply at ~ε₆₄ ≈ 1e-16, nine orders below the
+/// band), so `D_c ∈ [D_t·(1 − S), D_t·(1 + S)]` holds for the *computed*
+/// comparisons the skip test reasons about.
+pub fn prune_slack(d: usize) -> f64 {
+    (2 * d + 8) as f64 * PRUNE_SLACK_UNIT
+}
+
+/// Per-row-block view of the persistent bound state the pruned E-step
+/// maintains: the previous assignment, the f64 distance bounds for exactly
+/// this block's rows, and the shared (read-only) per-codeword drift from
+/// the last M-step. The `Blocked` backend carves one of these per pool
+/// chunk out of `EngineScratch` via its disjoint-slice projection.
+pub struct BoundSlices<'a> {
+    /// Previous assignment for these rows. An empty (or wrong-length)
+    /// slice means "no previous assignment": every row is treated as cold.
+    pub prev: &'a [u32],
+    /// Per-row upper bound on the true distance to the assigned codeword
+    /// (`+∞` = cold row, never skipped).
+    pub upper: &'a mut [f64],
+    /// Per-row lower bound on the true distance to every *other* codeword
+    /// (the Hamerly global runner-up bound).
+    pub lower: &'a mut [f64],
+    /// Per-codeword center movement `‖c_new − c_old‖` from the last
+    /// M-step, outward-rounded (len k).
+    pub drift: &'a [f64],
+    /// `max_j drift[j]`.
+    pub drift_max: f64,
+    /// Whether a recorded drift is pending and must relax the bounds once
+    /// before testing them (false right after a refresh/begin).
+    pub apply_drift: bool,
+    pub stats: &'a mut PruneStats,
+}
+
+/// Shared outer loop of the pruned E-step; `rescan` is the backend's exact
+/// per-row kernel arithmetic extended to also report the runner-up computed
+/// distance (`(winner, best_d2, second_d2)`).
+///
+/// # Why a skip is bit-exact
+///
+/// With `S = prune_slack(d)`, a rescan of row `i` refreshes
+/// `upper = sqrt(best_d2 / (1 − S))` and
+/// `lower = sqrt(min(second_d2, f32::MAX) / (1 + S))`, which bound the
+/// *true* distances: `dist(i, assigned) ≤ upper` and
+/// `dist(i, j) ≥ lower` for every `j ≠ assigned`. An M-step moving
+/// codeword `j` by at most `drift[j]` relaxes these by the triangle
+/// inequality to `upper + drift[assigned]` and `lower − drift_max`. The
+/// skip test `u²·(1 + S) < l²·(1 − S)` then implies, for the *computed*
+/// f32 distances the kernel would produce,
+/// `D_c(assigned) ≤ D_t(assigned)·(1 + S) ≤ u²·(1 + S) <
+///  l²·(1 − S) ≤ D_t(j)·(1 − S) ≤ D_c(j)` —
+/// the assigned codeword's computed distance is *strictly* smallest, so
+/// the strict-`<`/tie-to-lowest scan of the exact kernel must output the
+/// previous assignment. Any row the test cannot decide falls through to
+/// `rescan`, whose winner logic is the kernel's verbatim; NaN bounds fail
+/// the comparison and rescan. Rescans whose winner never beat the
+/// `f32::MAX` scan sentinel (all-overflow/NaN rows) leave the row cold
+/// instead of recording bounds that don't describe the returned index, and
+/// `second_d2` is clamped to `f32::MAX` so an overflowed (infinite)
+/// runner-up distance — whose true value is merely "≥ ~f32::MAX" — can
+/// never masquerade as an unbeatable lower bound.
+fn assign_block_pruned_impl(
+    w: &[f32],
+    d: usize,
+    k: usize,
+    bounds: BoundSlices<'_>,
+    out: &mut [u32],
+    rescan: impl Fn(&[f32]) -> (u32, f32, f32),
+) {
+    let BoundSlices { prev, upper, lower, drift, drift_max, apply_drift, stats } = bounds;
+    debug_assert_eq!(upper.len(), out.len());
+    debug_assert_eq!(lower.len(), out.len());
+    debug_assert_eq!(drift.len(), k);
+    let s = prune_slack(d);
+    let one_minus = 1.0 - s;
+    let one_plus = 1.0 + s;
+    let prev_ok = prev.len() == out.len();
+    for (i, (sub, o)) in w.chunks_exact(d).zip(out.iter_mut()).enumerate() {
+        let p = if prev_ok { prev[i] as usize } else { usize::MAX };
+        let mut u = upper[i];
+        let mut l = lower[i];
+        let warm = u.is_finite() && p < k;
+        if warm && apply_drift {
+            u += drift[p];
+            l = (l - drift_max).max(0.0);
+        }
+        if warm && u * u * one_plus < l * l * one_minus {
+            upper[i] = u;
+            lower[i] = l;
+            *o = p as u32;
+            stats.skipped += 1;
+            continue;
+        }
+        let (best, best_d2, second_d2) = rescan(sub);
+        *o = best;
+        if best_d2 < f32::MAX {
+            upper[i] = (best_d2 as f64 / one_minus).sqrt();
+            lower[i] = (second_d2.min(f32::MAX) as f64 / one_plus).sqrt();
+        } else {
+            upper[i] = f64::INFINITY;
+            lower[i] = 0.0;
+        }
+        stats.rescanned += 1;
+        if warm {
+            stats.refreshes += 1;
+        }
+    }
+}
+
+/// One row of [`assign_block_fused_simd`]'s arithmetic, additionally
+/// tracking the runner-up computed distance. The winner-selecting
+/// comparisons (per-lane strict `<`, the tie-to-lowest horizontal reduce,
+/// the strict-`<` scalar tail) are that kernel's verbatim — the runner-up
+/// tracking only *reads* candidates, so the returned index is the fused
+/// kernel's bit-for-bit. The `f32::MAX` scan sentinel can leak into
+/// `second_d2` when fewer than two candidates beat it; that only
+/// *under*states the runner-up (MAX < +∞), which makes the resulting lower
+/// bound conservative, never unsound.
+fn fused_simd_track2(
+    sub: &[f32],
+    d: usize,
+    codebook: &[f32],
+    tiles: &CodebookTiles,
+    k: usize,
+) -> (u32, f32, f32) {
+    let mut lane_best = [f32::MAX; LANES];
+    let mut lane_second = [f32::INFINITY; LANES];
+    let mut lane_idx = [0u32; LANES];
+    for (chunk, tile) in tiles.tiles.chunks_exact(d).enumerate() {
+        let mut acc = [0.0f32; LANES];
+        for (&x, c) in sub.iter().zip(tile.iter()) {
+            accum_sq_diff(&mut acc, x, c);
+        }
+        let j0 = (chunk * LANES) as u32;
+        for l in 0..LANES {
+            if acc[l] < lane_best[l] {
+                lane_second[l] = lane_second[l].min(lane_best[l]);
+                lane_best[l] = acc[l];
+                lane_idx[l] = j0 + l as u32;
+            } else {
+                lane_second[l] = lane_second[l].min(acc[l]);
+            }
+        }
+    }
+    let mut best = 0u32;
+    let mut best_d = f32::MAX;
+    let mut best_lane = 0usize;
+    for l in 0..LANES {
+        if lane_best[l] < best_d || (lane_best[l] == best_d && lane_idx[l] < best) {
+            best_d = lane_best[l];
+            best = lane_idx[l];
+            best_lane = l;
+        }
+    }
+    // The winning lane contributes its own runner-up; every other lane's
+    // minimum is a distinct-codeword candidate (displaced former bests were
+    // folded into `second` at displacement time, per lane and in the tail).
+    let mut second = f32::INFINITY;
+    for l in 0..LANES {
+        second = second.min(if l == best_lane { lane_second[l] } else { lane_best[l] });
+    }
+    for j in tiles.k_main..k {
+        let dd = dist2(sub, &codebook[j * d..(j + 1) * d]);
+        if dd < best_d {
+            second = second.min(best_d);
+            best_d = dd;
+            best = j as u32;
+        } else {
+            second = second.min(dd);
+        }
+    }
+    (best, best_d, second)
+}
+
+/// One row of the scalar reference's [`nearest`](crate::quant::nearest)
+/// arithmetic (ascending-j `dist2`, strict `<`), additionally tracking the
+/// runner-up computed distance — same read-only-tracking argument as
+/// [`fused_simd_track2`].
+fn nearest_track2(codebook: &[f32], d: usize, sub: &[f32]) -> (u32, f32, f32) {
+    let k = codebook.len() / d;
+    let mut best = 0u32;
+    let mut best_d = f32::MAX;
+    let mut second = f32::INFINITY;
+    for j in 0..k {
+        let dd = dist2(sub, &codebook[j * d..(j + 1) * d]);
+        if dd < best_d {
+            second = second.min(best_d);
+            best_d = dd;
+            best = j as u32;
+        } else {
+            second = second.min(dd);
+        }
+    }
+    (best, best_d, second)
+}
+
+/// Drift-bounded pruned variant of [`assign_block_fused_simd`]: rows whose
+/// bounds prove the previous winner still wins are skipped; everything else
+/// falls through to the fused kernel's exact arithmetic. Output is
+/// bit-for-bit identical to [`assign_block_fused_simd`] on every input (see
+/// `assign_block_pruned_impl` for the proof sketch).
+pub fn assign_block_pruned_simd(
+    w: &[f32],
+    d: usize,
+    codebook: &[f32],
+    tiles: &CodebookTiles,
+    bounds: BoundSlices<'_>,
+    out: &mut [u32],
+) {
+    debug_assert_eq!(tiles.d, d);
+    let k = codebook.len() / d;
+    debug_assert_eq!(tiles.k_main, k - k % LANES);
+    assign_block_pruned_impl(w, d, k, bounds, out, |sub| {
+        fused_simd_track2(sub, d, codebook, tiles, k)
+    });
+}
+
+/// Drift-bounded pruned variant of the scalar reference E-step — identical
+/// skip logic over [`nearest_track2`], bit-for-bit equal to
+/// [`nearest`](crate::quant::nearest) per row.
+pub fn assign_block_pruned_scalar(
+    w: &[f32],
+    d: usize,
+    codebook: &[f32],
+    bounds: BoundSlices<'_>,
+    out: &mut [u32],
+) {
+    let k = codebook.len() / d;
+    assign_block_pruned_impl(w, d, k, bounds, out, |sub| nearest_track2(codebook, d, sub));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -656,5 +941,255 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "m={m} d={d} k={k} sum[{i}]");
             }
         }
+    }
+
+    /// Cold bound buffers for m rows: +∞ upper = never skip.
+    fn cold_bounds(m: usize) -> (Vec<f64>, Vec<f64>) {
+        (vec![f64::INFINITY; m], vec![0.0f64; m])
+    }
+
+    #[test]
+    fn pruned_cold_pass_matches_fused_and_scalar_exactly() {
+        for &(m, d, k) in
+            &[(1usize, 1usize, 1usize), (7, 1, 2), (33, 2, 7), (65, 3, 9), (300, 4, 31)]
+        {
+            let mut rng = Rng::new((m * 977 + d * 11 + k) as u64);
+            let w: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let cb: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let tiles = CodebookTiles::new(&cb, d);
+            let (mut up, mut lo) = cold_bounds(m);
+            let drift = vec![0.0f64; k];
+            let mut stats = PruneStats::default();
+            let mut got = vec![0u32; m];
+            assign_block_pruned_simd(
+                &w,
+                d,
+                &cb,
+                &tiles,
+                BoundSlices {
+                    prev: &[],
+                    upper: &mut up,
+                    lower: &mut lo,
+                    drift: &drift,
+                    drift_max: 0.0,
+                    apply_drift: false,
+                    stats: &mut stats,
+                },
+                &mut got,
+            );
+            assert_eq!(got, simd_assign(&w, d, &cb), "simd m={m} d={d} k={k}");
+            assert_eq!(stats.skipped, 0);
+            assert_eq!(stats.rescanned, m as u64);
+            assert_eq!(stats.refreshes, 0);
+            // every refreshed bound is usable: finite upper, lower ≥ 0
+            assert!(up.iter().all(|x| x.is_finite()), "m={m} d={d} k={k}");
+            assert!(lo.iter().all(|&x| x >= 0.0));
+
+            let (mut up_s, mut lo_s) = cold_bounds(m);
+            let mut stats_s = PruneStats::default();
+            let mut got_s = vec![0u32; m];
+            assign_block_pruned_scalar(
+                &w,
+                d,
+                &cb,
+                BoundSlices {
+                    prev: &[],
+                    upper: &mut up_s,
+                    lower: &mut lo_s,
+                    drift: &drift,
+                    drift_max: 0.0,
+                    apply_drift: false,
+                    stats: &mut stats_s,
+                },
+                &mut got_s,
+            );
+            assert_eq!(got_s, scalar_assign(&w, d, &cb), "scalar m={m} d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn pruned_warm_pass_skips_and_stays_bit_exact_under_drift() {
+        // Well-separated blobs: after seeding bounds, a tiny codebook drift
+        // must let most rows skip — and the output must still equal the
+        // fused kernel on the moved codebook bit-for-bit.
+        let (m, d, k) = (512usize, 2usize, 10usize);
+        let mut rng = Rng::new(4242);
+        let mut w = Vec::with_capacity(m * d);
+        for i in 0..m {
+            let c = (i % k) as f32 * 10.0;
+            for _ in 0..d {
+                w.push(c + rng.normal_f32(0.0, 0.05));
+            }
+        }
+        let mut cb = Vec::with_capacity(k * d);
+        for j in 0..k {
+            for _ in 0..d {
+                cb.push(j as f32 * 10.0);
+            }
+        }
+        let tiles = CodebookTiles::new(&cb, d);
+        let (mut up, mut lo) = cold_bounds(m);
+        let mut drift = vec![0.0f64; k];
+        let mut stats = PruneStats::default();
+        let mut prev = vec![0u32; m];
+        assign_block_pruned_simd(
+            &w,
+            d,
+            &cb,
+            &tiles,
+            BoundSlices {
+                prev: &[],
+                upper: &mut up,
+                lower: &mut lo,
+                drift: &drift,
+                drift_max: 0.0,
+                apply_drift: false,
+                stats: &mut stats,
+            },
+            &mut prev,
+        );
+        // move every codeword a little; record outward-rounded exact drift
+        let mut drift_max = 0.0f64;
+        for (j, dj) in drift.iter_mut().enumerate() {
+            let mut sq = 0.0f64;
+            for c in 0..d {
+                let old = cb[j * d + c];
+                let new = old + 0.01 * (j as f32 + 1.0);
+                let diff = new as f64 - old as f64;
+                sq += diff * diff;
+                cb[j * d + c] = new;
+            }
+            *dj = sq.sqrt() * (1.0 + 1e-9);
+            drift_max = drift_max.max(*dj);
+        }
+        let tiles = CodebookTiles::new(&cb, d);
+        let mut got = vec![0u32; m];
+        stats = PruneStats::default();
+        assign_block_pruned_simd(
+            &w,
+            d,
+            &cb,
+            &tiles,
+            BoundSlices {
+                prev: &prev,
+                upper: &mut up,
+                lower: &mut lo,
+                drift: &drift,
+                drift_max,
+                apply_drift: true,
+                stats: &mut stats,
+            },
+            &mut got,
+        );
+        assert_eq!(got, simd_assign(&w, d, &cb));
+        assert!(stats.skipped > 0, "pruning never engaged: {stats:?}");
+        assert_eq!(stats.skipped + stats.rescanned, m as u64);
+    }
+
+    #[test]
+    fn pruned_never_skips_on_duplicate_codeword_ties() {
+        // Duplicate codewords make the runner-up equal the winner, so the
+        // strict skip inequality can never hold — every row must rescan,
+        // and rescanning reproduces the kernel's tie-to-lowest choice.
+        let d = 2;
+        let mut cb = Vec::new();
+        for _ in 0..10 {
+            cb.extend_from_slice(&[0.5f32, -0.5]);
+        }
+        let w = [0.5f32, -0.5, 3.0, 3.0, 0.5, -0.5];
+        let tiles = CodebookTiles::new(&cb, d);
+        let (mut up, mut lo) = cold_bounds(3);
+        let drift = vec![0.0f64; 10];
+        let mut stats = PruneStats::default();
+        let mut out = vec![9u32; 3];
+        for pass in 0..3 {
+            let prev: Vec<u32> = out.clone();
+            assign_block_pruned_simd(
+                &w,
+                d,
+                &cb,
+                &tiles,
+                BoundSlices {
+                    prev: if pass == 0 { &[] } else { &prev },
+                    upper: &mut up,
+                    lower: &mut lo,
+                    drift: &drift,
+                    drift_max: 0.0,
+                    apply_drift: pass > 0,
+                    stats: &mut stats,
+                },
+                &mut out,
+            );
+            assert_eq!(out, vec![0, 0, 0], "pass {pass}");
+        }
+        assert_eq!(stats.skipped, 0, "tied codewords must never be pruned");
+        assert_eq!(stats.rescanned, 9);
+        assert_eq!(stats.refreshes, 6, "warm rescans on passes 1 and 2");
+    }
+
+    #[test]
+    fn pruned_k1_skips_after_seeding() {
+        // k = 1: the runner-up is the +∞ sentinel clamped to f32::MAX, so
+        // once seeded every row skips (there is nothing else to win).
+        let w = [1.0f32, -2.0, 0.25];
+        let cb = [0.5f32];
+        let tiles = CodebookTiles::new(&cb, 1);
+        let (mut up, mut lo) = cold_bounds(3);
+        let drift = vec![0.0f64; 1];
+        let mut stats = PruneStats::default();
+        let mut out = vec![7u32; 3];
+        assign_block_pruned_simd(
+            &w,
+            1,
+            &cb,
+            &tiles,
+            BoundSlices {
+                prev: &[],
+                upper: &mut up,
+                lower: &mut lo,
+                drift: &drift,
+                drift_max: 0.0,
+                apply_drift: false,
+                stats: &mut stats,
+            },
+            &mut out,
+        );
+        assert_eq!(out, vec![0, 0, 0]);
+        let prev = out.clone();
+        assign_block_pruned_simd(
+            &w,
+            1,
+            &cb,
+            &tiles,
+            BoundSlices {
+                prev: &prev,
+                upper: &mut up,
+                lower: &mut lo,
+                drift: &drift,
+                drift_max: 0.0,
+                apply_drift: false,
+                stats: &mut stats,
+            },
+            &mut out,
+        );
+        assert_eq!(out, vec![0, 0, 0]);
+        assert_eq!(stats.skipped, 3);
+    }
+
+    #[test]
+    fn prune_slack_is_outward_and_scales_with_d() {
+        assert!(prune_slack(1) > 0.0);
+        assert!(prune_slack(4) > prune_slack(1));
+        // comfortably more than the (d + 2)·ε forward-error band
+        for d in 1..=64 {
+            assert!(prune_slack(d) >= 2.0 * (d + 2) as f64 * f32::EPSILON as f64);
+        }
+    }
+
+    #[test]
+    fn prune_stats_merge_is_elementwise_sum() {
+        let mut a = PruneStats { skipped: 1, rescanned: 2, refreshes: 3 };
+        a.merge(&PruneStats { skipped: 10, rescanned: 20, refreshes: 30 });
+        assert_eq!(a, PruneStats { skipped: 11, rescanned: 22, refreshes: 33 });
     }
 }

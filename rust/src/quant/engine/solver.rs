@@ -82,6 +82,17 @@
 //! solve-local counters, so a dirty scratch cannot leak history between
 //! solves, and a warm re-solve performs no heap allocation beyond the
 //! solver's fixed prologue (ping-pong buffer + trace).
+//!
+//! ## Downstream: the post-solve hard assignment
+//!
+//! The solver returns only the converged codebook C*; the engine's
+//! IDKM/JFB path then runs one hard assignment against it. That pass goes
+//! through the drift-bounded pruned E-step (`Clusterer::assign_pruned`,
+//! cold — bit-identical to a plain scan), which **seeds** the workspace's
+//! distance bounds from the solver's final iterate: a subsequent hard pass
+//! over the same shape and codebook lineage (warm restarts, repeated
+//! assignment sweeps) starts with usable bounds instead of a full rescan.
+//! See the bound-maintenance section in the [`engine`](super) module docs.
 
 /// Cap on the residual-trace pre-reservation: callers legitimately pass
 /// `max_iter = usize::MAX` ("run to tolerance"), and reserving that would

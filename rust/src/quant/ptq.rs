@@ -45,7 +45,11 @@ pub fn quantize_model(
     let spec =
         ClusterSpec::new(Method::Ptq, k, d).with_max_iter(max_iter).with_anderson(anderson);
     // One workspace across all layers: per-layer kernel buffers are
-    // allocated once for the whole model, not once per layer.
+    // allocated once for the whole model, not once per layer. The pruned
+    // E-step's bound state rides the same workspace — each `cluster_with`
+    // re-seeds it for the layer's own (m, k, d) trajectory (`begin_bounds`
+    // at entry), so sharing one scratch across layers of different shapes
+    // can never leak stale distance bounds between them.
     let mut ws = EngineScratch::new();
     let mut detailed = Vec::new();
     let mut out_tensors = Vec::with_capacity(layers.len());

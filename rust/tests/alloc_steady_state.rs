@@ -4,7 +4,9 @@
 //! M-step + cost) performs **zero heap allocations** — on the straight-line
 //! scalar backend and on the pooled SIMD backend, whose fan-out dispatches
 //! through `Pool::run_indexed` (one stack-resident region, no boxed
-//! closures).
+//! closures). The same bar applies to the drift-bounded pruned E-step: its
+//! per-row bounds, per-codeword drift, and pooled per-chunk stats all live
+//! in the scratch, so a warm pruned Lloyd iteration allocates nothing.
 //!
 //! The counting allocator is global to this binary and counts every thread,
 //! so worker-side allocations (the old boxed-job dispatch, partial-sum
@@ -61,6 +63,36 @@ fn steady_state_sweeps_do_not_allocate() {
         }
         let delta = allocations() - before;
         assert_eq!(delta, 0, "{name}: {delta} heap allocations across 10 warm sweep sets");
+    }
+
+    // Pruned E-step steady state: once a warm-up round has grown the
+    // bound-state vectors (per-row upper/lower bounds, per-codeword drift,
+    // the pooled per-chunk stats), a warm Lloyd-style iteration — pruned
+    // E-step + drift-recording M-step — performs zero heap allocations on
+    // both backends. Everything the pruner maintains lives in the scratch.
+    let mut prev = vec![u32::MAX; m];
+    for (name, backend) in
+        [("scalar-ref", &scalar as &dyn Clusterer), ("pooled-wide", &wide as &dyn Clusterer)]
+    {
+        ws.begin_bounds(m, k, d);
+        prev.fill(u32::MAX);
+        let pruned_iter =
+            |ws: &mut EngineScratch, prev: &mut [u32], assign: &mut [u32], cb: &mut [f32]| {
+                backend.assign_pruned(&w, d, cb, prev, assign, ws);
+                prev.copy_from_slice(assign);
+                backend.update(&w, d, cb, assign, ws);
+            };
+        // Warm up (cold pass seeds the bounds; second pass runs warm).
+        pruned_iter(&mut ws, &mut prev, &mut assign, &mut cb);
+        pruned_iter(&mut ws, &mut prev, &mut assign, &mut cb);
+        let before = allocations();
+        for _ in 0..10 {
+            pruned_iter(&mut ws, &mut prev, &mut assign, &mut cb);
+        }
+        let delta = allocations() - before;
+        assert_eq!(delta, 0, "{name}: {delta} heap allocations across 10 warm pruned iterations");
+        let stats = ws.prune_stats();
+        assert!(stats.skipped > 0, "{name}: pruning never engaged on a convergent run: {stats:?}");
     }
 
     // The full Picard solve allocates only in its prologue (the ping-pong

@@ -263,6 +263,96 @@ fn pool_affinity_toggle_is_bit_invisible() {
 }
 
 #[test]
+fn pruned_estep_is_bit_identical_under_adversarial_drift() {
+    // The pruned E-step's whole contract is "bit-identical to the plain
+    // kernel, by construction" — so attack the construction. Between pruned
+    // passes the M-step runs with RANDOM assignments, teleporting codewords
+    // to the means of arbitrary row subsets (ClusterCase supplies duplicate
+    // rows, constant data, and k > m clamping; empty clusters freeze their
+    // center). Drift relaxation must keep every skip sound: after every
+    // teleport, pruned output == plain output, index for index, on every
+    // backend. The scratch is shared dirty across all cases, so shape
+    // interleaving rides along for free.
+    let gen = ClusterCase { max_rows: 96 };
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        let ws_cell = RefCell::new(EngineScratch::new());
+        let plain_cell = RefCell::new(EngineScratch::new());
+        check(&format!("pruned_adversarial_{kind}"), 30, &gen, |case| {
+            let d = case.d;
+            let m = case.rows();
+            let mut ws = ws_cell.borrow_mut();
+            let mut plain_ws = plain_cell.borrow_mut();
+            let mut cb = engine.backend().seed(&case.w, d, case.k, &mut Rng::new(13));
+            let k = cb.len() / d;
+            ws.begin_bounds(m, k, d);
+            let mut rng = Rng::new((m * 31 + k * 7 + d) as u64);
+            let mut prev = vec![u32::MAX; m];
+            let mut got = vec![0u32; m];
+            let mut want = vec![0u32; m];
+            for _ in 0..6 {
+                engine.backend().assign_pruned(&case.w, d, &cb, &prev, &mut got, &mut ws);
+                engine.backend().assign(&case.w, d, &cb, &mut want, &mut plain_ws);
+                if got != want {
+                    return false;
+                }
+                std::mem::swap(&mut prev, &mut got);
+                // adversarial M-step: teleport codewords via random
+                // assignments (recorded as drift through the same update()
+                // the real trajectory uses)
+                let adv: Vec<u32> = (0..m).map(|_| rng.below(k) as u32).collect();
+                engine.backend().update(&case.w, d, &mut cb, &adv, &mut ws);
+            }
+            true
+        });
+    }
+}
+
+#[test]
+fn interleaved_shapes_do_not_leak_bound_state() {
+    // Mirror of the Anderson scratch-leakage proptest, for `BoundState`:
+    // a warm pruned Lloyd trajectory must be bit-identical whether its
+    // scratch is fresh, dirty from previous cases, or interrupted by a
+    // differently-shaped trajectory mid-stream — the (k, d) shape guard
+    // (the same shape `CodebookTiles::refill` keys on) must restart the
+    // bounds cold, never consume a stale one.
+    let gen = ClusterCase { max_rows: 64 };
+    // fixed differently-shaped poison workload (d = 3, k = 5)
+    let junk: Vec<f32> = (0..35 * 3).map(|i| ((i * 37) % 101) as f32 * 19.5 - 900.0).collect();
+    for kind in BackendKind::ALL {
+        let engine = Engine::new(kind);
+        let shared = RefCell::new(EngineScratch::new());
+        check(&format!("bound_state_interleave_{kind}"), 25, &gen, |case| {
+            let mut ws = shared.borrow_mut();
+            let fresh = engine.lloyd_with(
+                &case.w,
+                case.d,
+                case.k,
+                8,
+                &mut Rng::new(5),
+                &mut EngineScratch::new(),
+            );
+            let dirty = engine.lloyd_with(&case.w, case.d, case.k, 8, &mut Rng::new(5), &mut ws);
+            // interleave a different (k, d) trajectory on the SAME scratch,
+            // leaving its warm bounds behind ...
+            let _ = engine.lloyd_with(&junk, 3, 5, 6, &mut Rng::new(9), &mut ws);
+            // ... then re-run the case: still bit-identical
+            let again = engine.lloyd_with(&case.w, case.d, case.k, 8, &mut Rng::new(5), &mut ws);
+            for run in [&dirty, &again] {
+                if run.assignments != fresh.assignments
+                    || bits(&run.codebook) != bits(&fresh.codebook)
+                    || run.iterations != fresh.iterations
+                    || run.cost.to_bits() != fresh.cost.to_bits()
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}
+
+#[test]
 fn k_above_m_clamped_seed_is_exact_on_every_backend() {
     // Three well-separated rows, k = 8: the seed clamps to 3 distinct
     // centers; hard and soft sweeps agree exactly everywhere (no ties).
