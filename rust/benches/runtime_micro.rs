@@ -905,6 +905,8 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(lit);
         });
         time_it("literal staging 1M f32 (single copy, new)", 50, || {
+            // SAFETY: reinterprets the tensor's `&[f32]` (exactly n floats)
+            // as `n * 4` bytes for the borrow's duration; f32 has no padding.
             let bytes = unsafe {
                 std::slice::from_raw_parts(t.data().as_ptr() as *const u8, n * 4)
             };

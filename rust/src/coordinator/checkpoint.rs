@@ -6,6 +6,11 @@
 //! Used for pretrained weights, QAT state (params + codebooks), and sweep
 //! resume points.
 
+// Checkpoint bytes come off disk and may be corrupt or hostile: no
+// panics on input. `xtask lint` enforces this today; clippy re-checks
+// it on a real toolchain.
+#![warn(clippy::unwrap_used)]
+
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
@@ -79,7 +84,9 @@ impl Checkpoint {
                 ("offset", Json::from(offset as usize)),
                 ("len", Json::from(len as usize)),
             ]));
-            offset += len;
+            offset = offset
+                .checked_add(len)
+                .with_context(|| format!("checkpoint payload overflows at tensor {name}"))?;
         }
         let header = obj(vec![("tensors", Json::Arr(metas))]).to_string_pretty();
         let mut f = std::io::BufWriter::new(
@@ -131,6 +138,7 @@ impl Checkpoint {
         f.read_to_end(&mut payload)?;
         let floats: Vec<f32> = payload
             .chunks_exact(4)
+            // lint:allow(untrusted-index) chunks_exact(4) guarantees b.len() == 4
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
 
@@ -278,6 +286,8 @@ fn reset_field(m: &mut TensorMeta, field: &str) {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]

@@ -20,6 +20,11 @@
 //! allocation is sized from it, so corrupt tables and headers produce
 //! errors, never panics or aborts.
 
+// Wire-facing module: a panic on bundle bytes is a denial-of-service
+// bug. `xtask lint` enforces this today; clippy re-checks it on a real
+// toolchain.
+#![warn(clippy::unwrap_used)]
+
 use std::fs::File;
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::path::Path;
@@ -228,7 +233,9 @@ impl<R: Read + Seek> BundleReader<R> {
                 .map_err(|e| anyhow::anyhow!("{}: block {i}: {e}", self.origin))?;
             self.metas[i] = Some(resolve_v2_meta(&self.origin, fields, block)?);
         }
-        Ok(self.metas[i].as_ref().unwrap())
+        self.metas[i]
+            .as_ref()
+            .with_context(|| format!("{}: block {i}: meta not resolved", self.origin))
     }
 
     /// Index of the layer named `name`, scanning meta headers only (no
@@ -259,6 +266,7 @@ impl<R: Read + Seek> BundleReader<R> {
             .with_context(|| format!("layer {name}: code lengths"))?;
         let codebook = cb_bytes
             .chunks_exact(4)
+            // lint:allow(untrusted-index) chunks_exact(4) guarantees b.len() == 4
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
         Ok(Layer { name, shape, encoding, codebook, bytes, code_lengths })
@@ -322,6 +330,9 @@ impl<R: Read + Seek> BundleReader<R> {
 
 /// Pool-parallel decode of already-read raw layers (shared by
 /// [`BundleReader::hydrate_all_on`] and the infer-path cache fill).
+// The one unwrap below fires only on a pool-invariant violation (a bug),
+// never on wire bytes; it carries a lint:allow with the argument.
+#[allow(clippy::unwrap_used)]
 pub fn decode_layers_on(raws: &[Layer], pool: &Pool) -> Result<Vec<Tensor>> {
     let slots: Vec<Mutex<Option<Result<Tensor>>>> =
         raws.iter().map(|_| Mutex::new(None)).collect();
@@ -333,6 +344,8 @@ pub fn decode_layers_on(raws: &[Layer], pool: &Pool) -> Result<Vec<Tensor>> {
         .map(|(l, slot)| {
             slot.into_inner()
                 .unwrap()
+                // lint:allow(untrusted-unwrap) pool invariant, not wire data:
+                // run_indexed fills every slot before returning
                 .expect("decode slot filled by run_indexed")
                 .with_context(|| format!("decoding layer {}", l.name))
         })
@@ -554,8 +567,11 @@ fn resolve_v1_meta(
             );
         }
         // off <= payload_len and payload_base + payload_len == file len,
-        // so this cannot overflow.
-        Ok((payload_base + off, bytes))
+        // so this cannot overflow — but keep it checked anyway.
+        let abs = payload_base
+            .checked_add(off)
+            .with_context(|| format!("{origin}: layer {name}: {off_key} overflows"))?;
+        Ok((abs, bytes))
     };
     let codebook =
         span(f.codebook_offset, f.codebook_len, 4, "codebook_offset", "codebook_len")?;
@@ -589,13 +605,20 @@ fn resolve_v2_meta(origin: &str, f: MetaFields, block: Block) -> Result<LayerMet
         );
     }
     let base = block.payload.0;
+    // base + total <= EOF was proven when the table was parsed — but keep
+    // the section starts checked anyway.
+    let bytes_start = base
+        .checked_add(cb_bytes)
+        .with_context(|| format!("{origin}: layer {name}: payload span overflows"))?;
+    let lens_start = bytes_start
+        .checked_add(bytes_len)
+        .with_context(|| format!("{origin}: layer {name}: payload span overflows"))?;
     Ok(LayerMeta {
         name,
         shape: f.shape,
         encoding,
-        // base + total <= EOF was proven when the table was parsed.
         codebook: (base, cb_bytes),
-        bytes: (base + cb_bytes, bytes_len),
-        lengths: (base + cb_bytes + bytes_len, lens_len),
+        bytes: (bytes_start, bytes_len),
+        lengths: (lens_start, lens_len),
     })
 }

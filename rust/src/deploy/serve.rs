@@ -41,6 +41,11 @@
 //! executable-backed `ExeForward` and the deterministic artifact-free
 //! `HashForward`.
 
+// Wire-facing module: a panic on untrusted input is a denial-of-service
+// bug. `xtask lint` enforces this today; clippy re-checks it on a real
+// toolchain. The allows below mark the audited poison/guarded unwraps.
+#![warn(clippy::unwrap_used)]
+
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::io::{Read, Write};
@@ -385,6 +390,10 @@ pub struct Coalescer<'a> {
     cv: Condvar,
 }
 
+// Every unwrap in this impl is either a mutex-poison unwrap (poisoning
+// already means a panic elsewhere) or guarded by a same-expression
+// is_some_and/match — each carries a lint:allow with its argument.
+#[allow(clippy::unwrap_used)]
 impl<'a> Coalescer<'a> {
     pub fn new(forward: Box<dyn BatchForward + 'a>, window: Duration) -> Self {
         Self {
@@ -418,6 +427,7 @@ impl<'a> Coalescer<'a> {
             (gen, 0)
         };
         if st.open.as_ref().is_some_and(|o| o.samples.len() >= cap) {
+            // lint:allow(untrusted-unwrap) guarded by is_some_and on the line above
             let batch = st.open.take().unwrap();
             st.stats.full_flushes += 1;
             st = self.run_pass(st, batch);
@@ -441,6 +451,7 @@ impl<'a> Coalescer<'a> {
                     let deadline = open.deadline;
                     let now = Instant::now();
                     if now >= deadline {
+                        // lint:allow(untrusted-unwrap) `open` was just matched Some
                         let batch = st.open.take().unwrap();
                         st.stats.deadline_flushes += 1;
                         st = self.run_pass(st, batch);
@@ -723,6 +734,8 @@ pub fn to_hex(bytes: &[u8]) -> String {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     /// Echo forward: output for sample `s` is `s` as LE bytes. Trivially

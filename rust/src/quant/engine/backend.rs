@@ -61,6 +61,11 @@
 
 // Per-block cost is exactly `quant::cost_with_assignments` — both backends
 // call it directly so the oracle relationship can never diverge.
+// Allowlisted unsafe module: every `unsafe` block below carries a
+// `// SAFETY:` argument. `xtask lint` enforces this today; clippy
+// re-checks it on a real toolchain.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 use super::simd::{
     assign_block_fused_simd, assign_block_pruned_scalar, assign_block_pruned_simd, exp_f32,
     mstep_block_simd, soft_block_simd, BoundSlices, CodebookTiles, PruneStats, SoftBlockAccum,
@@ -285,7 +290,11 @@ impl Default for EngineScratch {
 /// backing storage alive.
 struct DisjointMut<T>(*mut T, usize);
 
+// SAFETY: the wrapped pointer came from a `&mut [T]` whose owner blocks in
+// `run_indexed` until every task finishes, and `T: Send` bounds the payload.
 unsafe impl<T: Send> Send for DisjointMut<T> {}
+// SAFETY: concurrent `slice` callers carve disjoint ranges (the documented
+// contract enforced by the chunk partition), so shared access never aliases.
 unsafe impl<T: Send> Sync for DisjointMut<T> {}
 
 impl<T> DisjointMut<T> {
@@ -1002,8 +1011,9 @@ impl Clusterer for Blocked {
                 let start = ci * grain;
                 let len = grain.min(m - start);
                 let wc = &w[start * d..(start + len) * d];
-                // SAFETY: chunk ci owns accumulator slot ci and row ci alone.
+                // SAFETY: chunk ci owns accumulator slot ci alone.
                 let acc = unsafe { &mut accs.slice(ci, 1)[0] };
+                // SAFETY: chunk ci owns scratch row ci alone.
                 let row = unsafe { rows.slice(ci * k, k) };
                 if simd {
                     soft_block_simd(wc, d, codebook, tiles, tau, row, acc);

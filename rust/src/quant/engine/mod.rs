@@ -117,6 +117,36 @@
 //! `skipped > 0` on convergent runs so exactness can never silently come
 //! from a pruner that never engages.
 //!
+//! # Unsafe inventory
+//!
+//! `xtask lint` confines `unsafe` to an explicit file allowlist and
+//! requires a `// SAFETY:` argument at every site; this section is the
+//! map of what that allowlist actually contains and why each entry is
+//! sound. If a new module needs `unsafe`, it must argue its way onto the
+//! lint's allowlist *and* into this inventory.
+//!
+//! * **`quant/engine/backend.rs`** — `DisjointMut<T>`: an `UnsafeCell`
+//!   wrapper with `unsafe impl Send/Sync` that lets the M-step and
+//!   soft-EM folds write per-chunk accumulator slots and scratch rows
+//!   from pool workers without a mutex. Soundness: chunk `ci` touches
+//!   slot/row `ci` alone — the index sets are disjoint by construction,
+//!   and the pool's `run_indexed` joins all workers before any read.
+//! * **`util/threadpool.rs`** — the type-erased trampoline behind
+//!   [`Pool::run_indexed`](crate::util::threadpool::Pool::run_indexed):
+//!   a `*const ()` + `unsafe fn` pair stands in for a boxed closure so
+//!   steady-state dispatch performs zero allocations. Soundness: the
+//!   pointee is a stack-resident `Region` that outlives every worker
+//!   (the caller blocks until the region's completion latch), and all
+//!   mutation is serialized through the pool mutex.
+//! * **`util/alloc_count.rs`** — the four `GlobalAlloc` methods forward
+//!   verbatim to `System`; the `unsafe fn` contract is the caller's
+//!   layout contract, unchanged.
+//! * **`runtime/mod.rs`** — `from_raw_parts` reinterprets `&[f32]` /
+//!   `&[i32]` as `&[u8]` to hand tensors to PJRT without copying
+//!   (`len * 4`, no padding, alignment 4 → 1).
+//! * **`benches/runtime_micro.rs`** — the single-copy staging variant of
+//!   the same byte reinterpretation, measured against the safe path.
+//!
 //! ```no_run
 //! use idkm::quant::engine::{ClusterSpec, Engine, EngineScratch, Method};
 //! use idkm::util::rng::Rng;

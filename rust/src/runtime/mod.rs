@@ -7,6 +7,11 @@
 //! seconds) and shape-checked against the manifest before every call in
 //! debug builds, once at load in release.
 
+// Allowlisted unsafe module: every `unsafe` block below carries a
+// `// SAFETY:` argument. `xtask lint` enforces this today; clippy
+// re-checks it on a real toolchain.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod manifest;
 
 use std::collections::HashMap;
@@ -91,6 +96,9 @@ impl Value {
 /// Single-copy host->literal staging (perf: `Literal::vec1(..).reshape(..)`
 /// copies twice; `create_from_shape_and_untyped_data` copies once — §Perf L3).
 fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // SAFETY: reinterprets the tensor's `&[f32]` as bytes for the borrow's
+    // duration — same allocation, `len * 4` bytes, f32 has no padding or
+    // invalid bit patterns.
     let bytes = unsafe {
         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
     };
@@ -102,6 +110,9 @@ fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
 }
 
 fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
+    // SAFETY: reinterprets the tensor's `&[i32]` as bytes for the borrow's
+    // duration — same allocation, `len * 4` bytes, i32 has no padding or
+    // invalid bit patterns.
     let bytes = unsafe {
         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
     };

@@ -15,6 +15,11 @@
 //! in its JSON report. The counter only moves in binaries that register the
 //! allocator, so the library itself pays nothing.
 
+// Allowlisted unsafe module: every `unsafe` block below carries a
+// `// SAFETY:` argument. `xtask lint` enforces this today; clippy
+// re-checks it on a real toolchain.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -34,21 +39,29 @@ pub struct CountingAllocator;
 // SAFETY: defers entirely to `System`; the counter bump has no effect on
 // allocation semantics.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds `GlobalAlloc`'s layout contract; forwarded to
+    // `System` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: caller upholds `GlobalAlloc`'s layout contract; forwarded to
+    // `System` unchanged.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller passes a pointer previously returned by this allocator
+    // with its original layout; forwarded to `System` unchanged.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller passes a pointer previously returned by this allocator
+    // with its original layout; forwarded to `System` unchanged.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -43,6 +43,11 @@
 //! Used for `artifacts/manifest.json`, run reports, checkpoint headers,
 //! bundle block metas, sweep cell files, and the serve wire envelopes.
 
+// Every caller may hand this parser hostile bytes: no panics on input.
+// `xtask lint` enforces this today; clippy re-checks it on a real
+// toolchain.
+#![warn(clippy::unwrap_used)]
+
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -398,7 +403,7 @@ impl<R: std::io::Read> ByteSource for ReadSource<R> {
                         break;
                     }
                     Ok(_) => {
-                        self.peeked = Some(b[0]);
+                        self.peeked = b.first().copied();
                         break;
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
@@ -804,8 +809,9 @@ impl<S: ByteSource> PullParser<S> {
                 self.src.bump();
             }
         }
-        // scratch is ASCII by construction.
-        let text = std::str::from_utf8(&self.scratch).expect("ascii number");
+        // scratch is ASCII by construction, but fail soft regardless.
+        let text = std::str::from_utf8(&self.scratch)
+            .map_err(|_| self.err("non-ascii number"))?;
         text.parse::<f64>().map_err(|_| self.err("bad number"))
     }
 
@@ -926,20 +932,38 @@ fn build_dom<S: ByteSource>(p: &mut PullParser<S>) -> Result<Json, JsonError> {
                 stack.push(Frame::Arr(Vec::new()));
                 None
             }
+            // The parser guarantees keys arrive only inside objects and
+            // container ends match their starts; fail soft anyway rather
+            // than aborting on a logic bug.
             OwnedEvent::Key(k) => {
                 match stack.last_mut() {
                     Some(Frame::Obj(_, pending)) => *pending = k,
-                    _ => unreachable!("parser yields keys only inside objects"),
+                    _ => {
+                        return Err(JsonError {
+                            msg: "key outside object".into(),
+                            offset: p.offset(),
+                        })
+                    }
                 }
                 None
             }
             OwnedEvent::ObjEnd => match stack.pop() {
                 Some(Frame::Obj(m, _)) => Some(Json::Obj(m)),
-                _ => unreachable!("parser matches container ends"),
+                _ => {
+                    return Err(JsonError {
+                        msg: "mismatched '}'".into(),
+                        offset: p.offset(),
+                    })
+                }
             },
             OwnedEvent::ArrEnd => match stack.pop() {
                 Some(Frame::Arr(a)) => Some(Json::Arr(a)),
-                _ => unreachable!("parser matches container ends"),
+                _ => {
+                    return Err(JsonError {
+                        msg: "mismatched ']'".into(),
+                        offset: p.offset(),
+                    })
+                }
             },
             OwnedEvent::Str(s) => Some(Json::Str(s)),
             OwnedEvent::Num(n) => Some(Json::Num(n)),
@@ -960,6 +984,8 @@ fn build_dom<S: ByteSource>(p: &mut PullParser<S>) -> Result<Json, JsonError> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
 
     #[test]

@@ -24,6 +24,11 @@
 //! retired with the sequential data `Loader`: `SharedBatches` coordinates
 //! its consumers with a plain mutex/condvar cache instead.)
 
+// Allowlisted unsafe module: every `unsafe` block below carries a
+// `// SAFETY:` argument. `xtask lint` enforces this today; clippy
+// re-checks it on a real toolchain.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -129,6 +134,10 @@ unsafe fn claim_task(rp: RegionPtr, st: &mut PoolState, slot: usize, affinity: b
 #[derive(Clone, Copy, PartialEq)]
 struct RegionPtr(*mut Region);
 
+// SAFETY: the pointee `Region` outlives every worker that can observe this
+// pointer — `run_indexed` blocks until the region detaches — and all field
+// access is serialized by the pool mutex (or is the `call`/`data` pair,
+// which is immutable after construction).
 unsafe impl Send for RegionPtr {}
 
 struct PoolState {
@@ -169,18 +178,27 @@ fn worker_loop(shared: &PoolShared, slot: usize) {
             .find(|rp| unsafe { (*rp.0).claimed < (*rp.0).n });
         if let Some(rp) = open {
             let affinity = shared.affinity.load(Ordering::Relaxed);
+            // SAFETY: the region pointer is live (it is still in the list,
+            // which we hold the lock for) and `claimed < n` was just
+            // checked under this same lock, so `claim_task` yields an index.
             let (call, data, i) = unsafe {
-                // `claimed < n` was just checked under this same lock.
                 let i = claim_task(rp, &mut st, slot, affinity).unwrap();
                 let r = &*rp.0;
                 (r.call, r.data, i)
             };
             drop(st);
+            // SAFETY: `call`/`data` came from a live region whose owner
+            // blocks in `run_indexed` until `running` drops to zero, so the
+            // closure data outlives this invocation; `i < n` is unique to
+            // this worker by `claim_task`'s fetch-increment under the lock.
             let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
                 call(data, i)
             }))
             .is_ok();
             st = shared.state.lock().unwrap();
+            // SAFETY: region stays live until we decrement `running` below
+            // (the owner waits for running == 0); mutation is under the
+            // re-acquired pool mutex.
             unsafe {
                 let r = &mut *rp.0;
                 r.running -= 1;
@@ -328,7 +346,8 @@ impl Pool {
             }
             return;
         }
-        // Type-erased trampoline; `data` is `&F`, valid for this frame.
+        // SAFETY: type-erased trampoline; callers pass `data` constructed
+        // from `&F` below, valid for this whole frame.
         unsafe fn trampoline<F: Fn(usize)>(data: *const (), i: usize) {
             (*(data as *const F))(i);
         }
@@ -362,12 +381,16 @@ impl Pool {
         let affinity = shared.affinity.load(Ordering::Relaxed);
         let mut st = shared.state.lock().unwrap();
         loop {
+            // SAFETY: `rp` points at `region` in this live frame; accessed
+            // with the pool mutex held (see the umbrella argument above).
             let Some(i) = (unsafe { claim_task(rp, &mut st, caller_slot, affinity) }) else {
                 break;
             };
             drop(st);
             let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_ok();
             st = shared.state.lock().unwrap();
+            // SAFETY: same region-in-this-frame argument; mutation is under
+            // the re-acquired pool mutex.
             unsafe {
                 let r = &mut *rp.0;
                 r.running -= 1;
@@ -377,6 +400,8 @@ impl Pool {
             }
         }
         // Wait for workers still running claimed tasks.
+        // SAFETY: region lives in this frame; `running` is read under the
+        // pool mutex, re-checked after each condvar wake.
         unsafe {
             while (*rp.0).running > 0 {
                 st = shared.done.wait(st).unwrap();
@@ -385,6 +410,8 @@ impl Pool {
         // Whoever finished last may not have detached the region (the
         // caller finishing its own final task does not) — ensure it.
         st.regions.retain(|q| *q != rp);
+        // SAFETY: no worker can still hold `rp` (running == 0 and the
+        // region was just detached under the lock we still hold).
         let panicked = unsafe { (*rp.0).panicked };
         drop(st);
         if panicked {
@@ -498,6 +525,7 @@ mod tests {
         // the engine's usage pattern: tasks carve disjoint ranges out of a
         // caller-stack buffer through a shared raw pointer
         struct Ptr(*mut u64);
+        // SAFETY: shared only within this test; tasks write disjoint ranges.
         unsafe impl Sync for Ptr {}
         let pool = Pool::new(3);
         let mut out = vec![0u64; 1000];

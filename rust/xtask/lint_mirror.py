@@ -1,0 +1,978 @@
+#!/usr/bin/env python3
+"""Reference mirror of `cargo run -p xtask -- lint`.
+
+This is a line-for-line port of the Rust linter in `src/` so the invariant
+pass stays runnable in environments without a Rust toolchain (the paper
+containers, quick pre-commit checks, editors). The Rust implementation is
+authoritative; this mirror must agree with it on every file in the tree —
+`tests/lint_fixtures.rs` pins the Rust side, and running this script with
+exit code 0 on a tree the Rust side rejects (or vice versa) is a bug.
+
+Usage:
+    python3 rust/xtask/lint_mirror.py [--json] [--root REPO_ROOT]
+
+Exit codes: 0 clean, 1 findings, 2 usage/io error.
+"""
+
+import json as _json
+import os
+import re
+import sys
+
+# --------------------------------------------------------------------------
+# Lexer: Rust tokens + per-line comment records. Mirrors src/lexer.rs.
+# --------------------------------------------------------------------------
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+
+# Longest-match first.
+MULTI_OPS = [
+    "<<=", ">>=", "..=", "...",
+    "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&", "||",
+    "<<", ">>", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+]
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line", "col")
+
+    def __init__(self, kind, text, line, col):
+        self.kind = kind  # ident int float str bytestr char lifetime op
+        self.text = text  # for str/bytestr: inner content, escapes raw
+        self.line = line
+        self.col = col
+
+    def __repr__(self):
+        return f"{self.kind}:{self.text!r}@{self.line}:{self.col}"
+
+
+class LexError(Exception):
+    pass
+
+
+def lex(src):
+    """Returns (tokens, line_comments, line_has_code).
+
+    line_comments: {line: concatenated comment text for comments that
+    *start* on that line (block comments contribute their full text to
+    their starting line)}.
+    line_has_code: set of lines carrying at least one non-comment token.
+    """
+    toks = []
+    comments = {}
+    has_code = set()
+    i, n = 0, len(src)
+    line, col = 1, 1
+
+    def bump(k=1):
+        nonlocal i, line, col
+        for _ in range(k):
+            if i < n and src[i] == "\n":
+                line += 1
+                col = 1
+            else:
+                col += 1
+            i += 1
+
+    def add_comment(l, text):
+        comments[l] = comments.get(l, "") + text
+
+    while i < n:
+        c = src[i]
+        if c in " \t\r\n":
+            bump()
+            continue
+        tl, tc = line, col
+        # comments
+        if c == "/" and i + 1 < n:
+            if src[i + 1] == "/":
+                j = src.find("\n", i)
+                j = n if j == -1 else j
+                add_comment(tl, src[i:j])
+                bump(j - i)
+                continue
+            if src[i + 1] == "*":
+                depth, j = 1, i + 2
+                while j < n and depth:
+                    if src.startswith("/*", j):
+                        depth += 1
+                        j += 2
+                    elif src.startswith("*/", j):
+                        depth -= 1
+                        j += 2
+                    else:
+                        j += 1
+                if depth:
+                    raise LexError(f"{tl}:{tc}: unterminated block comment")
+                add_comment(tl, src[i:j])
+                bump(j - i)
+                continue
+        # raw strings r"..." / r#"..."# / br#"..."#
+        m = re.match(r'(b?r)(#*)"', src[i:])
+        if m and c in "br":
+            hashes = m.group(2)
+            start = i + len(m.group(0))
+            close = '"' + hashes
+            j = src.find(close, start)
+            if j == -1:
+                raise LexError(f"{tl}:{tc}: unterminated raw string")
+            kind = "bytestr" if m.group(1).startswith("b") else "str"
+            toks.append(Tok(kind, src[start:j], tl, tc))
+            has_code.add(tl)
+            bump(j + len(close) - i)
+            continue
+        # byte string b"..."
+        if c == "b" and i + 1 < n and src[i + 1] == '"':
+            j = _scan_quoted(src, i + 1, tl, tc)
+            toks.append(Tok("bytestr", src[i + 2 : j], tl, tc))
+            has_code.add(tl)
+            bump(j + 1 - i)
+            continue
+        # byte char b'x'
+        if c == "b" and i + 1 < n and src[i + 1] == "'":
+            j = _scan_char(src, i + 1)
+            toks.append(Tok("char", src[i + 2 : j], tl, tc))
+            has_code.add(tl)
+            bump(j + 1 - i)
+            continue
+        # string
+        if c == '"':
+            j = _scan_quoted(src, i, tl, tc)
+            toks.append(Tok("str", src[i + 1 : j], tl, tc))
+            has_code.add(tl)
+            bump(j + 1 - i)
+            continue
+        # char literal vs lifetime
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                j = _scan_char(src, i)
+                toks.append(Tok("char", src[i + 1 : j], tl, tc))
+                has_code.add(tl)
+                bump(j + 1 - i)
+                continue
+            if (
+                i + 2 < n
+                and src[i + 1] in IDENT_START
+                and src[i + 2] != "'"
+            ) or (i + 1 < n and src[i + 1] == "_"):
+                j = i + 1
+                while j < n and src[j] in IDENT_CONT:
+                    j += 1
+                toks.append(Tok("lifetime", src[i:j], tl, tc))
+                has_code.add(tl)
+                bump(j - i)
+                continue
+            j = _scan_char(src, i)
+            toks.append(Tok("char", src[i + 1 : j], tl, tc))
+            has_code.add(tl)
+            bump(j + 1 - i)
+            continue
+        # numbers
+        if c.isdigit():
+            j = i
+            if src.startswith("0x", i) or src.startswith("0X", i):
+                j = i + 2
+                while j < n and (src[j] in "0123456789abcdefABCDEF_"):
+                    j += 1
+            elif src.startswith("0b", i) or src.startswith("0o", i):
+                j = i + 2
+                while j < n and src[j] in "01234567_":
+                    j += 1
+            else:
+                while j < n and (src[j].isdigit() or src[j] == "_"):
+                    j += 1
+            kind = "int"
+            if j < n and src[j] == "." and j + 1 < n and src[j + 1].isdigit():
+                kind = "float"
+                j += 1
+                while j < n and (src[j].isdigit() or src[j] == "_"):
+                    j += 1
+            if j < n and src[j] in "eE" and not src.startswith("0x", i):
+                k = j + 1
+                if k < n and src[k] in "+-":
+                    k += 1
+                if k < n and src[k].isdigit():
+                    kind = "float"
+                    j = k
+                    while j < n and src[j].isdigit():
+                        j += 1
+            # suffix (u32, f64, usize, ...)
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Tok(kind, src[i:j], tl, tc))
+            has_code.add(tl)
+            bump(j - i)
+            continue
+        # identifiers / keywords
+        if c in IDENT_START:
+            j = i
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Tok("ident", src[i:j], tl, tc))
+            has_code.add(tl)
+            bump(j - i)
+            continue
+        # operators / punctuation
+        for op in MULTI_OPS:
+            if src.startswith(op, i):
+                toks.append(Tok("op", op, tl, tc))
+                has_code.add(tl)
+                bump(len(op))
+                break
+        else:
+            toks.append(Tok("op", c, tl, tc))
+            has_code.add(tl)
+            bump()
+    return toks, comments, has_code
+
+
+def _scan_quoted(src, i, tl, tc):
+    """i points at the opening quote; returns index of the closing quote."""
+    j = i + 1
+    n = len(src)
+    while j < n:
+        if src[j] == "\\":
+            j += 2
+            continue
+        if src[j] == '"':
+            return j
+        j += 1
+    raise LexError(f"{tl}:{tc}: unterminated string")
+
+
+def _scan_char(src, i):
+    """i points at the opening '. Returns index of the closing '."""
+    j = i + 1
+    n = len(src)
+    if j < n and src[j] == "\\":
+        j += 2
+        # \u{...}
+        if j <= n and src[i + 2 : i + 3] == "u" and j < n and src[j] == "{":
+            while j < n and src[j] != "}":
+                j += 1
+            j += 1
+    else:
+        j += 1
+    if j >= n or src[j] != "'":
+        raise LexError(f"bad char literal at {i}")
+    return j
+
+
+# --------------------------------------------------------------------------
+# File index: brace matching, fn spans, #[cfg(test)] regions, allows.
+# Mirrors src/scope.rs.
+# --------------------------------------------------------------------------
+
+ALLOW_RE = re.compile(r"lint:allow\(([a-z0-9-]+)\)\s*(.*?)(?:$|\*/)", re.S)
+
+
+class FileIndex:
+    def __init__(self, path, src):
+        self.path = path
+        self.toks, self.comments, self.has_code = lex(src)
+        self.match_brace = self._match_braces()
+        self.fns = self._fn_spans()          # (name, start_line, end_line)
+        self.test_regions = self._test_regions()  # (start_line, end_line)
+        self.allows = self._allows()         # list of (id, line, reason)
+
+    def _match_braces(self):
+        m = {}
+        stack = []
+        for idx, t in enumerate(self.toks):
+            if t.kind == "op" and t.text == "{":
+                stack.append(idx)
+            elif t.kind == "op" and t.text == "}":
+                if stack:
+                    o = stack.pop()
+                    m[o] = idx
+                    m[idx] = o
+        return m
+
+    def _body_open(self, start):
+        """First `{` at paren-depth 0 after token `start`; None if a `;`
+        ends the item first."""
+        depth = 0
+        for idx in range(start, len(self.toks)):
+            t = self.toks[idx]
+            if t.kind != "op":
+                continue
+            if t.text in "([":
+                depth += 1
+            elif t.text in ")]":
+                depth -= 1
+            elif t.text == "{" and depth == 0:
+                return idx
+            elif t.text == ";" and depth == 0:
+                return None
+        return None
+
+    def _fn_spans(self):
+        spans = []
+        toks = self.toks
+        for idx, t in enumerate(toks):
+            if t.kind == "ident" and t.text == "fn":
+                if idx + 1 < len(toks) and toks[idx + 1].kind == "ident":
+                    name = toks[idx + 1].text
+                    o = self._body_open(idx + 2)
+                    if o is not None and o in self.match_brace:
+                        spans.append(
+                            (name, toks[o].line, toks[self.match_brace[o]].line)
+                        )
+        return spans
+
+    def fn_at(self, line):
+        """Name of the innermost fn whose body spans `line`."""
+        best = None
+        for name, s, e in self.fns:
+            if s <= line <= e and (best is None or s > best[1]):
+                best = (name, s, e)
+        return best[0] if best else None
+
+    def _test_regions(self):
+        regions = []
+        toks = self.toks
+        for idx in range(len(toks) - 6):
+            if (
+                toks[idx].kind == "op" and toks[idx].text == "#"
+                and toks[idx + 1].text == "["
+                and toks[idx + 2].text == "cfg"
+                and toks[idx + 3].text == "("
+                and toks[idx + 4].text == "test"
+                and toks[idx + 5].text == ")"
+                and toks[idx + 6].text == "]"
+            ):
+                j = idx + 7
+                # skip further attributes
+                while j < len(toks) and toks[j].kind == "op" and toks[j].text == "#":
+                    if j + 1 < len(toks) and toks[j + 1].text == "[":
+                        depth = 0
+                        k = j + 1
+                        while k < len(toks):
+                            if toks[k].kind == "op" and toks[k].text == "[":
+                                depth += 1
+                            elif toks[k].kind == "op" and toks[k].text == "]":
+                                depth -= 1
+                                if depth == 0:
+                                    break
+                            k += 1
+                        j = k + 1
+                    else:
+                        break
+                o = self._body_open(j)
+                if o is not None and o in self.match_brace:
+                    regions.append(
+                        (toks[o].line, toks[self.match_brace[o]].line)
+                    )
+        return regions
+
+    def in_test(self, line):
+        return any(s <= line <= e for s, e in self.test_regions)
+
+    def _allows(self):
+        out = []
+        for line, text in self.comments.items():
+            for m in ALLOW_RE.finditer(text):
+                target = line
+                if line not in self.has_code:
+                    # comment-only line: applies to the next code line
+                    nxt = line + 1
+                    limit = max(self.has_code) if self.has_code else line
+                    while nxt <= limit and nxt not in self.has_code:
+                        nxt += 1
+                    target = nxt
+                out.append((m.group(1), target, m.group(2).strip()))
+        return out
+
+    def comment_run_above_has_safety(self, line):
+        """True if the contiguous comment/attribute run ending on line-1
+        (or a comment on `line` itself) mentions SAFETY."""
+        if "SAFETY" in self.comments.get(line, "") or "# Safety" in self.comments.get(line, ""):
+            return True
+        l = line - 1
+        seen = ""
+        while l > 0:
+            is_comment = l in self.comments and l not in self.has_code
+            is_attr = l in self.has_code and self._line_is_attr(l)
+            if is_comment:
+                seen = self.comments[l] + "\n" + seen
+                l -= 1
+            elif is_attr:
+                l -= 1
+            else:
+                break
+        return "SAFETY" in seen or "# Safety" in seen
+
+    def _line_is_attr(self, line):
+        first = next((t for t in self.toks if t.line == line), None)
+        return first is not None and first.kind == "op" and first.text == "#"
+
+
+# --------------------------------------------------------------------------
+# Lint registry. Mirrors src/lints/mod.rs.
+# --------------------------------------------------------------------------
+
+UNSAFE_ALLOWLIST = {
+    "rust/src/util/threadpool.rs",
+    "rust/src/util/alloc_count.rs",
+    "rust/src/quant/engine/backend.rs",
+    "rust/src/runtime/mod.rs",
+    # bench-only single-copy literal staging comparison; same POD byte
+    # projection the runtime uses, kept so the §Perf L3 before/after row
+    # stays honest.
+    "rust/benches/runtime_micro.rs",
+}
+
+UNTRUSTED_FILES = {
+    "rust/src/deploy/serve.rs",
+    "rust/src/deploy/reader.rs",
+    "rust/src/coordinator/checkpoint.rs",
+    "rust/src/util/json.rs",
+}
+
+OFFSET_ARITH_FILES = {
+    "rust/src/deploy/reader.rs",
+    "rust/src/coordinator/checkpoint.rs",
+}
+
+KERNEL_FILES = {
+    "rust/src/quant/engine/simd.rs",
+    "rust/src/quant/engine/backend.rs",
+}
+
+MSTEP_FOLD_ALLOWLIST = {
+    ("rust/src/quant/engine/backend.rs", "apply_mstep"),
+    ("rust/src/quant/engine/backend.rs", "apply_mstep_drift"),
+    ("rust/src/quant/engine/backend.rs", "apply_soft"),
+}
+
+TRANSCENDENTALS = {
+    "exp", "exp2", "exp_m1", "expf", "ln", "ln_1p", "log", "log2", "log10",
+    "logf", "powf", "sin", "cos", "tan", "asin", "acos", "atan", "atan2",
+    "sinh", "cosh", "tanh",
+}
+
+METHOD_LITERALS = {"dkm", "idkm", "idkm_jfb"}
+BACKEND_LITERALS = {"scalar_ref", "blocked", "simd"}
+LOCK_FLAGGED_CALLS = {"forward", "run_pass", "submit", "run_batch"}
+POISON_RECEIVERS = {"lock", "wait", "wait_timeout", "into_inner"}
+OFFSET_NAME_RE = re.compile(
+    r"^(off|offset|base|pos|cursor|start|end|total|len|hlen)$"
+    r"|_(off|offset|base|pos|start|end|len|bytes)$"
+)
+
+LINTS = {
+    "route-literal": "raw wire route literal — use deploy::serve::ROUTE_* or the *_request helpers",
+    "method-literal": "quoted method literal — route through quant::engine::Method",
+    "backend-literal": "quoted backend literal — route through quant::engine::BackendKind",
+    "prune-slack-def": "PRUNE_SLACK defined outside quant/engine/simd.rs — the slack unit has one home; call simd::prune_slack(d)",
+    "bundle-magic": "raw bundle magic — use deploy::format::MAGIC",
+    "bundle-version": "raw format-version write — use deploy::format::{FORMAT_V1, FORMAT_V2}",
+    "unsafe-safety-comment": "unsafe without an immediately-preceding // SAFETY: comment",
+    "unsafe-allowlist": "unsafe outside the audited allowlist — see rust/xtask/README.md and the unsafe inventory in quant/engine/mod.rs",
+    "lock-held-forward": "forward-pass call while a Coalescer lock guard is live — release (drop/move) the guard first",
+    "json-unbounded-parse": "Json::parse on an untrusted path — use parse_bytes_bounded or pull-parser events",
+    "untrusted-unwrap": "unwrap/expect/panic on an untrusted path — return an error instead",
+    "untrusted-index": "literal slice index on an untrusted path — use get() or a checked span",
+    "unchecked-offset-arith": "unchecked offset arithmetic — use checked_add/checked_mul",
+    "float-transcendental": "libm transcendental in a kernel file — route through simd::exp_f32",
+    "f64-narrowing": "f64->f32 narrowing outside the allowlisted M-step fold sites",
+    "allow-without-reason": "lint:allow must carry a justification after the closing paren",
+}
+
+
+def finding(out, fi, tok, lid, detail=""):
+    out.append({
+        "file": fi.path,
+        "line": tok.line,
+        "col": tok.col,
+        "id": lid,
+        "msg": detail or LINTS[lid].split(" — ")[0],
+        "hint": LINTS[lid],
+    })
+
+
+# -- ported grep guards (src/lints/grep_ports.rs) ---------------------------
+
+ROUTE_RE = re.compile(r"^v1/[a-z_]+$")
+
+
+def lint_grep_ports(fi, out):
+    toks = fi.toks
+    for idx, t in enumerate(toks):
+        if t.kind == "str":
+            if ROUTE_RE.match(t.text) and fi.path != "rust/src/deploy/serve.rs":
+                finding(out, fi, t, "route-literal")
+            if t.text in METHOD_LITERALS:
+                finding(out, fi, t, "method-literal")
+            if t.text in BACKEND_LITERALS:
+                finding(out, fi, t, "backend-literal")
+        if (
+            t.kind in ("str", "bytestr")
+            and t.text == "IDKM"
+            and fi.path != "rust/src/deploy/format.rs"
+        ):
+            finding(out, fi, t, "bundle-magic")
+        if (
+            t.kind == "ident"
+            and t.text.startswith("PRUNE_SLACK")
+            and fi.path != "rust/src/quant/engine/simd.rs"
+            and idx + 1 < len(toks)
+            and toks[idx + 1].kind == "op"
+            and toks[idx + 1].text in (":", "=")
+        ):
+            finding(out, fi, t, "prune-slack-def")
+        if (
+            t.kind == "int"
+            and re.search(r"u(16|32|64)$", t.text)
+            and fi.path != "rust/src/deploy/format.rs"
+            and idx + 2 < len(toks)
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "."
+            and toks[idx + 2].kind == "ident"
+            and toks[idx + 2].text == "to_le_bytes"
+        ):
+            finding(out, fi, t, "bundle-version")
+
+
+# -- unsafe audit (src/lints/unsafe_audit.rs) -------------------------------
+
+def _stmt_start_line(fi, idx):
+    """Line of the first token of the statement containing toks[idx].
+
+    Walks backward to the nearest `;`/`{`/`}` at delimiter depth 0; the
+    statement starts at the token after it.
+    """
+    toks = fi.toks
+    depth = 0
+    for j in range(idx - 1, -1, -1):
+        t = toks[j]
+        if t.kind != "op":
+            continue
+        if t.text in ")]}":
+            if t.text == "}" and depth == 0:
+                return toks[j + 1].line
+            depth += 1
+        elif t.text in "([{":
+            if depth == 0:
+                if t.text == "{":
+                    return toks[j + 1].line
+                # unmatched ( or [ : enclosing group, keep walking left
+            else:
+                depth -= 1
+        elif t.text == ";" and depth == 0:
+            return toks[j + 1].line
+    return toks[0].line if toks else 0
+
+
+def lint_unsafe(fi, out):
+    toks = fi.toks
+    for idx, t in enumerate(toks):
+        if not (t.kind == "ident" and t.text == "unsafe"):
+            continue
+        nxt = toks[idx + 1] if idx + 1 < len(toks) else None
+        # `unsafe fn(` in type position is a fn-pointer type, not a site.
+        if (
+            nxt is not None
+            and nxt.kind == "ident"
+            and nxt.text == "fn"
+            and idx + 2 < len(toks)
+            and toks[idx + 2].kind == "op"
+            and toks[idx + 2].text == "("
+        ):
+            continue
+        if fi.path not in UNSAFE_ALLOWLIST:
+            finding(out, fi, t, "unsafe-allowlist")
+        # Accept a SAFETY run directly above the `unsafe` token, or above
+        # the first line of its enclosing statement (the clippy rule).
+        if not (
+            fi.comment_run_above_has_safety(t.line)
+            or fi.comment_run_above_has_safety(_stmt_start_line(fi, idx))
+        ):
+            finding(out, fi, t, "unsafe-safety-comment")
+
+
+# -- lock discipline (src/lints/lock_discipline.rs) -------------------------
+
+def lint_lock(fi, out):
+    if fi.path != "rust/src/deploy/serve.rs":
+        return
+    toks = fi.toks
+    n = len(toks)
+
+    def stmt_end(idx):
+        depth = 0
+        for j in range(idx, n):
+            t = toks[j]
+            if t.kind != "op":
+                continue
+            if t.text in "([{":
+                depth += 1
+            elif t.text in ")]}":
+                if depth == 0:
+                    return j
+                depth -= 1
+            elif t.text in (";", ",") and depth == 0:
+                return j
+        return n - 1
+
+    def stmt_start(idx):
+        depth = 0
+        for j in range(idx, -1, -1):
+            t = toks[j]
+            if t.kind != "op":
+                continue
+            if t.text in ")]}":
+                depth += 1
+            elif t.text in "([{":
+                if depth == 0:
+                    return j
+                depth -= 1
+            elif t.text in (";", ",") and depth == 0:
+                return j
+        return 0
+
+    # enclosing-brace close index for each token
+    stack, close_at = [], [n - 1] * n
+    for idx, t in enumerate(toks):
+        if t.kind == "op" and t.text == "{":
+            stack.append(idx)
+        elif t.kind == "op" and t.text == "}":
+            if stack:
+                stack.pop()
+        if stack:
+            close_at[idx] = fi.match_brace.get(stack[-1], n - 1)
+
+    guards = []  # (name, live_from, live_to)
+    for idx, t in enumerate(toks):
+        if not (
+            t.kind == "ident"
+            and t.text == "lock"
+            and idx >= 1
+            and toks[idx - 1].kind == "op" and toks[idx - 1].text == "."
+            and idx + 1 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "("
+        ):
+            continue
+        s = stmt_start(idx)
+        # find `=` (plain assignment) between stmt start and the lock call;
+        # `s` itself may be the boundary delimiter -- skip it so it does not
+        # skew the depth count
+        boundary = toks[s].kind == "op" and toks[s].text in ("(", "[", "{", ";", ",")
+        scan_from = s + 1 if boundary else s
+        eq = None
+        depth = 0
+        for j in range(scan_from, idx):
+            tj = toks[j]
+            if tj.kind != "op":
+                continue
+            if tj.text in "([{":
+                depth += 1
+            elif tj.text in ")]}":
+                depth -= 1
+            elif tj.text == "=" and depth == 0:
+                eq = j
+        e = stmt_end(idx)
+        if eq is not None and eq >= 1 and toks[eq - 1].kind == "ident":
+            name = toks[eq - 1].text
+            guards.append((name, e + 1, close_at[idx]))
+        else:
+            guards.append((None, idx, e))
+
+    # truncate at drop(name)
+    for gi, (name, lo, hi) in enumerate(guards):
+        if name is None:
+            continue
+        for idx in range(lo, min(hi + 1, n - 3)):
+            if (
+                toks[idx].kind == "ident" and toks[idx].text == "drop"
+                and toks[idx + 1].text == "("
+                and toks[idx + 2].kind == "ident" and toks[idx + 2].text == name
+                and toks[idx + 3].text == ")"
+            ):
+                guards[gi] = (name, lo, idx)
+                break
+
+    for idx, t in enumerate(toks):
+        if not (
+            t.kind == "ident"
+            and t.text in LOCK_FLAGGED_CALLS
+            and idx >= 1
+            and toks[idx - 1].kind == "op" and toks[idx - 1].text == "."
+            and idx + 1 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "("
+        ):
+            continue
+        for name, lo, hi in guards:
+            if not (lo <= idx <= hi):
+                continue
+            if name is not None and _guard_is_call_arg(fi, idx + 1, name):
+                continue
+            finding(
+                out, fi, t, "lock-held-forward",
+                f"`.{t.text}(` while guard `{name or '<temporary>'}` is live",
+            )
+            break
+
+
+def _guard_is_call_arg(fi, open_idx, name):
+    toks = fi.toks
+    depth = 0
+    for j in range(open_idx, len(toks)):
+        t = toks[j]
+        if t.kind == "op" and t.text in "([{":
+            depth += 1
+        elif t.kind == "op" and t.text in ")]}":
+            depth -= 1
+            if depth == 0:
+                return False
+        elif depth == 1 and t.kind == "ident" and t.text == name:
+            return True
+    return False
+
+
+# -- untrusted-input hygiene (src/lints/untrusted.rs) -----------------------
+
+def lint_untrusted(fi, out):
+    if fi.path not in UNTRUSTED_FILES:
+        return
+    toks = fi.toks
+    n = len(toks)
+    for idx, t in enumerate(toks):
+        if fi.in_test(t.line):
+            continue
+        # Json::parse(
+        if (
+            t.kind == "ident" and t.text == "Json"
+            and idx + 3 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "::"
+            and toks[idx + 2].kind == "ident" and toks[idx + 2].text == "parse"
+            and toks[idx + 3].kind == "op" and toks[idx + 3].text == "("
+        ):
+            finding(out, fi, t, "json-unbounded-parse")
+        # .unwrap( / .expect(
+        if (
+            t.kind == "ident" and t.text in ("unwrap", "expect")
+            and idx >= 1
+            and toks[idx - 1].kind == "op" and toks[idx - 1].text == "."
+            and idx + 1 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "("
+        ):
+            if not _poison_receiver(fi, idx - 1):
+                finding(out, fi, t, "untrusted-unwrap", f".{t.text}() on an untrusted path")
+        # panic!-family
+        if (
+            t.kind == "ident"
+            and t.text in ("panic", "unreachable", "todo", "unimplemented")
+            and idx + 1 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "!"
+        ):
+            finding(out, fi, t, "untrusted-unwrap", f"{t.text}! on an untrusted path")
+        # literal index: ident/)/] then [ <int> ]
+        if (
+            t.kind == "op" and t.text == "["
+            and idx >= 1
+            and (
+                toks[idx - 1].kind == "ident"
+                or (toks[idx - 1].kind == "op" and toks[idx - 1].text in (")", "]"))
+            )
+            and idx + 2 < n
+            and toks[idx + 1].kind == "int"
+            and toks[idx + 2].kind == "op" and toks[idx + 2].text == "]"
+        ):
+            finding(out, fi, t, "untrusted-index")
+    # offset arithmetic
+    if fi.path in OFFSET_ARITH_FILES:
+        for idx, t in enumerate(toks):
+            if fi.in_test(t.line):
+                continue
+            if not (t.kind == "op" and t.text in ("+", "*", "+=", "*=")):
+                continue
+            prev = toks[idx - 1] if idx >= 1 else None
+            nxt = toks[idx + 1] if idx + 1 < n else None
+            # unary deref/ref and `&*`/`*const` forms: `*` not preceded by
+            # an operand is not arithmetic
+            if t.text == "*" and not (
+                prev is not None
+                and (prev.kind in ("ident", "int", "float")
+                     or (prev.kind == "op" and prev.text in (")", "]")))
+            ):
+                continue
+            for side in (prev, nxt):
+                if side is not None and side.kind == "ident" and OFFSET_NAME_RE.search(side.text):
+                    finding(
+                        out, fi, t, "unchecked-offset-arith",
+                        f"`{side.text} {t.text} …` without checked_add/checked_mul",
+                    )
+                    break
+
+
+def _poison_receiver(fi, dot_idx):
+    """dot_idx points at the `.` before unwrap/expect. True when the
+    receiver is a lock()/wait()/wait_timeout() call (poison unwrap)."""
+    toks = fi.toks
+    j = dot_idx - 1
+    if j < 0 or not (toks[j].kind == "op" and toks[j].text == ")"):
+        return False
+    if j not in fi.match_brace_parens:
+        return False
+    o = fi.match_brace_parens[j]
+    return (
+        o >= 1
+        and toks[o - 1].kind == "ident"
+        and toks[o - 1].text in POISON_RECEIVERS
+    )
+
+
+# paren matching helper, attached lazily to FileIndex
+def _match_parens(fi):
+    m = {}
+    stack = []
+    for idx, t in enumerate(fi.toks):
+        if t.kind == "op" and t.text == "(":
+            stack.append(idx)
+        elif t.kind == "op" and t.text == ")":
+            if stack:
+                o = stack.pop()
+                m[o] = idx
+                m[idx] = o
+    return m
+
+
+# -- float determinism (src/lints/float_det.rs) -----------------------------
+
+def lint_float(fi, out):
+    if fi.path not in KERNEL_FILES:
+        return
+    toks = fi.toks
+    n = len(toks)
+    for idx, t in enumerate(toks):
+        if fi.in_test(t.line):
+            continue
+        enclosing = fi.fn_at(t.line)
+        # transcendental method calls and bare expf(/logf(
+        is_method = (
+            t.kind == "ident" and t.text in TRANSCENDENTALS
+            and idx >= 1
+            and toks[idx - 1].kind == "op" and toks[idx - 1].text == "."
+            and idx + 1 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "("
+        )
+        is_bare = (
+            t.kind == "ident" and t.text in ("expf", "logf")
+            and (idx == 0 or toks[idx - 1].text != ".")
+            and idx + 1 < n
+            and toks[idx + 1].kind == "op" and toks[idx + 1].text == "("
+        )
+        if (is_method or is_bare) and not (
+            fi.path == "rust/src/quant/engine/simd.rs" and enclosing == "exp_f32"
+        ):
+            finding(out, fi, t, "float-transcendental", f"`{t.text}(` in a kernel file")
+        # as f32
+        if (
+            t.kind == "ident" and t.text == "as"
+            and idx + 1 < n
+            and toks[idx + 1].kind == "ident" and toks[idx + 1].text == "f32"
+            and (fi.path, enclosing) not in MSTEP_FOLD_ALLOWLIST
+        ):
+            finding(out, fi, t, "f64-narrowing")
+
+
+# -- driver -----------------------------------------------------------------
+
+ROOTS = ["rust/src", "rust/benches", "rust/tests", "examples"]
+
+
+def collect_files(root):
+    files = []
+    for r in ROOTS:
+        top = os.path.join(root, r)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames.sort()
+            for f in sorted(filenames):
+                if f.endswith(".rs"):
+                    p = os.path.relpath(os.path.join(dirpath, f), root)
+                    files.append(p.replace(os.sep, "/"))
+    return files
+
+
+def lint_source(path, src):
+    """Lint one file's text as if it lived at `path` (repo-root-relative).
+    Returns (findings, allows_used, allow_findings)."""
+    fi = FileIndex(path, src)
+    fi.match_brace_parens = _match_parens(fi)
+    raw = []
+    lint_grep_ports(fi, raw)
+    lint_unsafe(fi, raw)
+    lint_lock(fi, raw)
+    lint_untrusted(fi, raw)
+    lint_float(fi, raw)
+    # allow-without-reason is a real lint finding
+    for lid, line, reason in fi.allows:
+        if not reason:
+            raw.append({
+                "file": path, "line": line, "col": 1,
+                "id": "allow-without-reason",
+                "msg": f"lint:allow({lid}) without a reason",
+                "hint": LINTS["allow-without-reason"],
+            })
+    allowed = {(lid, line) for lid, line, reason in fi.allows if reason}
+    kept, used = [], []
+    for f in raw:
+        if (f["id"], f["line"]) in allowed:
+            used.append(f)
+        else:
+            kept.append(f)
+    allows = [
+        {"file": path, "line": line, "id": lid, "reason": reason}
+        for lid, line, reason in fi.allows
+    ]
+    return kept, allows, used
+
+
+def main(argv):
+    as_json = "--json" in argv
+    root = None
+    if "--root" in argv:
+        root = argv[argv.index("--root") + 1]
+    if root is None:
+        root = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+    findings, all_allows = [], []
+    for path in collect_files(root):
+        try:
+            src = open(os.path.join(root, path), encoding="utf-8").read()
+        except OSError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        try:
+            k, a, _ = lint_source(path, src)
+        except LexError as e:
+            print(f"{path}: lex error: {e}", file=sys.stderr)
+            return 2
+        findings.extend(k)
+        all_allows.extend(a)
+    findings.sort(key=lambda f: (f["file"], f["line"], f["col"], f["id"]))
+    if as_json:
+        print(_json.dumps(
+            {
+                "version": 1,
+                "findings": findings,
+                "allows": all_allows,
+                "lints": sorted(LINTS),
+            },
+            indent=2,
+        ))
+    else:
+        for f in findings:
+            print(f"{f['file']}:{f['line']}:{f['col']}: [{f['id']}] {f['msg']}")
+            print(f"    hint: {f['hint']}")
+        print(
+            f"xtask lint (mirror): {len(findings)} finding(s), "
+            f"{len(all_allows)} allow(s) across {len(LINTS)} lints"
+        )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,400 @@
+//! Hand-rolled Rust lexer: just enough of the language to be reliable
+//! about what is *code* and what is not. Comments (line + nested block),
+//! raw/byte strings, char-literal vs lifetime disambiguation, numeric
+//! suffixes, and a greedy multi-char operator table — the things that make
+//! grep-based guards lie.
+//!
+//! The lexer works on a `Vec<char>` so columns count characters (the repo
+//! uses non-ASCII punctuation in comments), matching `lint_mirror.py`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Int,
+    Float,
+    /// String literal; `text` is the *inner* content, escapes left raw.
+    Str,
+    /// Byte or raw-byte string literal; inner content.
+    ByteStr,
+    Char,
+    Lifetime,
+    Op,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+#[derive(Debug)]
+pub struct LexError {
+    pub line: usize,
+    pub col: usize,
+    pub msg: &'static str,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+/// Lex output: the token stream plus per-line comment records.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// Concatenated comment text for comments that *start* on each line
+    /// (a block comment contributes its full text to its starting line).
+    pub comments: BTreeMap<usize, String>,
+    /// Lines carrying at least one non-comment token.
+    pub has_code: BTreeSet<usize>,
+}
+
+/// Longest-match-first operator table.
+const MULTI_OPS: &[&str] = &[
+    "<<=", ">>=", "..=", "...", //
+    "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&", "||", //
+    "<<", ">>", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+struct Cursor {
+    src: Vec<char>,
+    i: usize,
+    line: usize,
+    col: usize,
+}
+
+impl Cursor {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.src.get(self.i + ahead).copied()
+    }
+
+    fn starts_with(&self, at: usize, s: &str) -> bool {
+        let mut j = at;
+        for c in s.chars() {
+            if self.src.get(j) != Some(&c) {
+                return false;
+            }
+            j += 1;
+        }
+        true
+    }
+
+    fn bump(&mut self, k: usize) {
+        for _ in 0..k {
+            if self.src.get(self.i) == Some(&'\n') {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    fn text(&self, from: usize, to: usize) -> String {
+        self.src[from..to].iter().collect()
+    }
+
+    fn err(&self, msg: &'static str) -> LexError {
+        LexError { line: self.line, col: self.col, msg }
+    }
+}
+
+pub fn lex(source: &str) -> Result<Lexed, LexError> {
+    let mut cur = Cursor { src: source.chars().collect(), i: 0, line: 1, col: 1 };
+    let n = cur.src.len();
+    let mut toks = Vec::new();
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut has_code: BTreeSet<usize> = BTreeSet::new();
+
+    while cur.i < n {
+        let c = cur.src[cur.i];
+        if c == ' ' || c == '\t' || c == '\r' || c == '\n' {
+            cur.bump(1);
+            continue;
+        }
+        let (tl, tc) = (cur.line, cur.col);
+        // comments
+        if c == '/' {
+            if cur.peek(1) == Some('/') {
+                let mut j = cur.i;
+                while j < n && cur.src[j] != '\n' {
+                    j += 1;
+                }
+                let text = cur.text(cur.i, j);
+                comments.entry(tl).or_default().push_str(&text);
+                cur.bump(j - cur.i);
+                continue;
+            }
+            if cur.peek(1) == Some('*') {
+                let mut depth = 1usize;
+                let mut j = cur.i + 2;
+                while j < n && depth > 0 {
+                    if cur.starts_with(j, "/*") {
+                        depth += 1;
+                        j += 2;
+                    } else if cur.starts_with(j, "*/") {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                if depth > 0 {
+                    return Err(cur.err("unterminated block comment"));
+                }
+                let text = cur.text(cur.i, j);
+                comments.entry(tl).or_default().push_str(&text);
+                cur.bump(j - cur.i);
+                continue;
+            }
+        }
+        // raw strings r"..." / r#"..."# / br#"..."#
+        if c == 'b' || c == 'r' {
+            if let Some((prefix_len, hashes, is_byte)) = raw_string_prefix(&cur) {
+                let start = cur.i + prefix_len;
+                let mut j = start;
+                let close: String = format!("\"{}", "#".repeat(hashes));
+                loop {
+                    if j >= n {
+                        return Err(cur.err("unterminated raw string"));
+                    }
+                    if cur.starts_with(j, &close) {
+                        break;
+                    }
+                    j += 1;
+                }
+                let kind = if is_byte { Kind::ByteStr } else { Kind::Str };
+                toks.push(Tok { kind, text: cur.text(start, j), line: tl, col: tc });
+                has_code.insert(tl);
+                cur.bump(j + close.chars().count() - cur.i);
+                continue;
+            }
+        }
+        // byte string b"..."
+        if c == 'b' && cur.peek(1) == Some('"') {
+            let j = scan_quoted(&cur, cur.i + 1)?;
+            toks.push(Tok {
+                kind: Kind::ByteStr,
+                text: cur.text(cur.i + 2, j),
+                line: tl,
+                col: tc,
+            });
+            has_code.insert(tl);
+            cur.bump(j + 1 - cur.i);
+            continue;
+        }
+        // byte char b'x'
+        if c == 'b' && cur.peek(1) == Some('\'') {
+            let j = scan_char(&cur, cur.i + 1)?;
+            toks.push(Tok { kind: Kind::Char, text: cur.text(cur.i + 2, j), line: tl, col: tc });
+            has_code.insert(tl);
+            cur.bump(j + 1 - cur.i);
+            continue;
+        }
+        // string
+        if c == '"' {
+            let j = scan_quoted(&cur, cur.i)?;
+            toks.push(Tok { kind: Kind::Str, text: cur.text(cur.i + 1, j), line: tl, col: tc });
+            has_code.insert(tl);
+            cur.bump(j + 1 - cur.i);
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if cur.peek(1) == Some('\\') {
+                let j = scan_char(&cur, cur.i)?;
+                toks.push(Tok {
+                    kind: Kind::Char,
+                    text: cur.text(cur.i + 1, j),
+                    line: tl,
+                    col: tc,
+                });
+                has_code.insert(tl);
+                cur.bump(j + 1 - cur.i);
+                continue;
+            }
+            let is_lifetime = (cur.peek(1).is_some_and(is_ident_start)
+                && cur.peek(2).is_some_and(|c2| c2 != '\''))
+                || cur.peek(1) == Some('_');
+            if is_lifetime {
+                let mut j = cur.i + 1;
+                while j < n && is_ident_cont(cur.src[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: cur.text(cur.i, j),
+                    line: tl,
+                    col: tc,
+                });
+                has_code.insert(tl);
+                cur.bump(j - cur.i);
+                continue;
+            }
+            let j = scan_char(&cur, cur.i)?;
+            toks.push(Tok { kind: Kind::Char, text: cur.text(cur.i + 1, j), line: tl, col: tc });
+            has_code.insert(tl);
+            cur.bump(j + 1 - cur.i);
+            continue;
+        }
+        // numbers
+        if c.is_ascii_digit() {
+            let (j, kind) = scan_number(&cur);
+            toks.push(Tok { kind, text: cur.text(cur.i, j), line: tl, col: tc });
+            has_code.insert(tl);
+            cur.bump(j - cur.i);
+            continue;
+        }
+        // identifiers / keywords
+        if is_ident_start(c) {
+            let mut j = cur.i;
+            while j < n && is_ident_cont(cur.src[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: cur.text(cur.i, j), line: tl, col: tc });
+            has_code.insert(tl);
+            cur.bump(j - cur.i);
+            continue;
+        }
+        // operators / punctuation (longest match first)
+        let mut matched = false;
+        for op in MULTI_OPS {
+            if cur.starts_with(cur.i, op) {
+                toks.push(Tok { kind: Kind::Op, text: (*op).to_string(), line: tl, col: tc });
+                has_code.insert(tl);
+                cur.bump(op.len());
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            toks.push(Tok { kind: Kind::Op, text: c.to_string(), line: tl, col: tc });
+            has_code.insert(tl);
+            cur.bump(1);
+        }
+    }
+    Ok(Lexed { toks, comments, has_code })
+}
+
+/// If the cursor sits on `r"`, `r#"`, `br"`, `b r#...#"` etc., return
+/// (prefix length up to and including the opening quote, hash count,
+/// is_byte).
+fn raw_string_prefix(cur: &Cursor) -> Option<(usize, usize, bool)> {
+    let mut j = 0usize;
+    let is_byte = cur.peek(0) == Some('b');
+    if is_byte {
+        j += 1;
+    }
+    if cur.peek(j) != Some('r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while cur.peek(j) == Some('#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cur.peek(j) != Some('"') {
+        return None;
+    }
+    Some((j + 1, hashes, is_byte))
+}
+
+/// `at` points at the opening quote; returns the index of the closing quote.
+fn scan_quoted(cur: &Cursor, at: usize) -> Result<usize, LexError> {
+    let n = cur.src.len();
+    let mut j = at + 1;
+    while j < n {
+        match cur.src[j] {
+            '\\' => j += 2,
+            '"' => return Ok(j),
+            _ => j += 1,
+        }
+    }
+    Err(cur.err("unterminated string"))
+}
+
+/// `at` points at the opening `'`. Returns the index of the closing `'`.
+fn scan_char(cur: &Cursor, at: usize) -> Result<usize, LexError> {
+    let n = cur.src.len();
+    let mut j = at + 1;
+    if j < n && cur.src[j] == '\\' {
+        j += 2;
+        // \u{...}
+        if cur.src.get(at + 2) == Some(&'u') && cur.src.get(j) == Some(&'{') {
+            while j < n && cur.src[j] != '}' {
+                j += 1;
+            }
+            j += 1;
+        }
+    } else {
+        j += 1;
+    }
+    if j >= n || cur.src[j] != '\'' {
+        return Err(cur.err("bad char literal"));
+    }
+    Ok(j)
+}
+
+fn scan_number(cur: &Cursor) -> (usize, Kind) {
+    let src = &cur.src;
+    let n = src.len();
+    let i = cur.i;
+    let mut j = i;
+    let hex = cur.starts_with(i, "0x") || cur.starts_with(i, "0X");
+    if hex {
+        j = i + 2;
+        while j < n && (src[j].is_ascii_hexdigit() || src[j] == '_') {
+            j += 1;
+        }
+    } else if cur.starts_with(i, "0b") || cur.starts_with(i, "0o") {
+        j = i + 2;
+        while j < n && (('0'..='7').contains(&src[j]) || src[j] == '_') {
+            j += 1;
+        }
+    } else {
+        while j < n && (src[j].is_ascii_digit() || src[j] == '_') {
+            j += 1;
+        }
+    }
+    let mut kind = Kind::Int;
+    if j < n && src[j] == '.' && j + 1 < n && src[j + 1].is_ascii_digit() {
+        kind = Kind::Float;
+        j += 1;
+        while j < n && (src[j].is_ascii_digit() || src[j] == '_') {
+            j += 1;
+        }
+    }
+    if j < n && (src[j] == 'e' || src[j] == 'E') && !hex {
+        let mut k = j + 1;
+        if k < n && (src[k] == '+' || src[k] == '-') {
+            k += 1;
+        }
+        if k < n && src[k].is_ascii_digit() {
+            kind = Kind::Float;
+            j = k;
+            while j < n && src[j].is_ascii_digit() {
+                j += 1;
+            }
+        }
+    }
+    // suffix (u32, f64, usize, ...)
+    while j < n && is_ident_cont(src[j]) {
+        j += 1;
+    }
+    (j, kind)
+}

@@ -1,0 +1,141 @@
+//! `xtask` — the repo's syntax-aware invariant checker.
+//!
+//! Run as `cargo run -p xtask -- lint` (add `--json` for machine-readable
+//! output, `--root <dir>` to point at a checkout). The lint catalog, the
+//! allow-comment policy, and the porting notes for the retired CI grep
+//! guards live in `rust/xtask/README.md`. `lint_mirror.py` next to this
+//! crate is a line-for-line Python mirror for toolchain-less environments;
+//! this implementation is authoritative.
+
+pub mod lexer;
+pub mod lints;
+pub mod scope;
+
+use lints::{AllowRecord, Finding};
+use std::path::{Path, PathBuf};
+
+/// Scan roots, relative to the repo root — the same scope the retired
+/// grep guards used (`src benches tests ../examples` from `rust/`).
+pub const ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Every `.rs` file under [`ROOTS`], repo-root-relative with forward
+/// slashes, in sorted order.
+pub fn collect_files(root: &Path) -> std::io::Result<Vec<String>> {
+    let mut files = Vec::new();
+    for r in ROOTS {
+        let top = root.join(r);
+        if top.is_dir() {
+            walk(&top, &mut files)?;
+        }
+    }
+    let mut rel: Vec<String> = files
+        .iter()
+        .filter_map(|p| p.strip_prefix(root).ok())
+        .map(|p| {
+            p.components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/")
+        })
+        .collect();
+    rel.sort();
+    Ok(rel)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Outcome of a whole-tree run.
+pub struct TreeReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowRecord>,
+}
+
+/// Lint every file under the scan roots. Errors (io, lex) are reported as
+/// `Err` with a message suitable for stderr.
+pub fn lint_tree(root: &Path) -> Result<TreeReport, String> {
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    for path in collect_files(root).map_err(|e| format!("error: {e}"))? {
+        let src = std::fs::read_to_string(root.join(&path))
+            .map_err(|e| format!("{path}: {e}"))?;
+        let outcome =
+            lints::lint_source(&path, &src).map_err(|e| format!("{path}: lex error: {e}"))?;
+        findings.extend(outcome.findings);
+        allows.extend(outcome.allows);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.id).cmp(&(b.file.as_str(), b.line, b.col, b.id))
+    });
+    Ok(TreeReport { findings, allows })
+}
+
+/// Minimal JSON string escaping (the report has no exotic payloads, but
+/// reasons and hints may contain quotes/backslashes/non-ASCII).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the report in the same shape as `lint_mirror.py --json`.
+pub fn to_json(report: &TreeReport) -> String {
+    let mut s = String::from("{\n  \"version\": 1,\n  \"findings\": [\n");
+    for (i, f) in report.findings.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"col\": {}, \"id\": \"{}\", \
+             \"msg\": \"{}\", \"hint\": \"{}\"}}{}\n",
+            json_escape(&f.file),
+            f.line,
+            f.col,
+            f.id,
+            json_escape(&f.msg),
+            json_escape(f.hint),
+            if i + 1 < report.findings.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n  \"allows\": [\n");
+    for (i, a) in report.allows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"id\": \"{}\", \"reason\": \"{}\"}}{}\n",
+            json_escape(&a.file),
+            a.line,
+            json_escape(&a.id),
+            json_escape(&a.reason),
+            if i + 1 < report.allows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n  \"lints\": [");
+    let mut ids: Vec<&str> = lints::LINTS.iter().map(|(id, _)| *id).collect();
+    ids.sort_unstable();
+    for (i, id) in ids.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{id}\""));
+    }
+    s.push_str("]\n}");
+    s
+}

@@ -1,0 +1,63 @@
+//! Float determinism for the kernel files: no libm transcendentals
+//! outside the blessed `simd::exp_f32` definition site (their results are
+//! platform/libm-version dependent, which would break the SIMD/scalar
+//! bit-parity contract), and no `as f32` narrowing of f64 accumulators
+//! outside the allowlisted M-step fold sites where the contract itself is
+//! defined. `#[cfg(test)]` code is exempt.
+
+use crate::lexer::Kind;
+use crate::lints::{push, push_msg, Finding};
+use crate::scope::FileIndex;
+
+pub const KERNEL_FILES: &[&str] =
+    &["rust/src/quant/engine/simd.rs", "rust/src/quant/engine/backend.rs"];
+
+/// (file, fn) sites allowed to narrow f64 accumulators to f32 — the
+/// deterministic M-step/soft-step folds that define the parity contract.
+pub const MSTEP_FOLD_ALLOWLIST: &[(&str, &str)] = &[
+    ("rust/src/quant/engine/backend.rs", "apply_mstep"),
+    ("rust/src/quant/engine/backend.rs", "apply_mstep_drift"),
+    ("rust/src/quant/engine/backend.rs", "apply_soft"),
+];
+
+const TRANSCENDENTALS: &[&str] = &[
+    "exp", "exp2", "exp_m1", "expf", "ln", "ln_1p", "log", "log2", "log10", "logf", "powf",
+    "sin", "cos", "tan", "asin", "acos", "atan", "atan2", "sinh", "cosh", "tanh",
+];
+
+pub fn run(fi: &FileIndex, out: &mut Vec<Finding>) {
+    if !KERNEL_FILES.contains(&fi.path.as_str()) {
+        return;
+    }
+    let toks = &fi.toks;
+    for (idx, t) in toks.iter().enumerate() {
+        if fi.in_test(t.line) {
+            continue;
+        }
+        let enclosing = fi.fn_at(t.line);
+        // transcendental method calls and bare expf(/logf(
+        let is_method = t.kind == Kind::Ident
+            && TRANSCENDENTALS.contains(&t.text.as_str())
+            && idx >= 1
+            && fi.is_op(idx - 1, ".")
+            && fi.is_op(idx + 1, "(");
+        let is_bare = t.kind == Kind::Ident
+            && (t.text == "expf" || t.text == "logf")
+            && (idx == 0 || !fi.is_op(idx - 1, "."))
+            && fi.is_op(idx + 1, "(");
+        let blessed =
+            fi.path == "rust/src/quant/engine/simd.rs" && enclosing == Some("exp_f32");
+        if (is_method || is_bare) && !blessed {
+            push_msg(out, fi, t, "float-transcendental", format!("`{}(` in a kernel file", t.text));
+        }
+        // as f32
+        if fi.is_ident(idx, "as") && fi.is_ident(idx + 1, "f32") {
+            let allowed = MSTEP_FOLD_ALLOWLIST
+                .iter()
+                .any(|&(f, func)| f == fi.path && Some(func) == enclosing);
+            if !allowed {
+                push(out, fi, t, "f64-narrowing");
+            }
+        }
+    }
+}

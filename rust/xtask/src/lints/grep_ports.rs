@@ -1,0 +1,62 @@
+//! Token-aware ports of the eight retired CI grep guards. Matching on
+//! tokens (not text) means a route literal inside a comment, a raw-string
+//! doc example, or a `concat!` fragment can no longer false-positive —
+//! and a literal split across a format string can no longer sneak by
+//! inside a longer match.
+
+use crate::lexer::Kind;
+use crate::lints::{push, Finding};
+use crate::scope::FileIndex;
+
+const METHOD_LITERALS: &[&str] = &["dkm", "idkm", "idkm_jfb"];
+const BACKEND_LITERALS: &[&str] = &["scalar_ref", "blocked", "simd"];
+
+/// `^v1/[a-z_]+$` over the literal's full content.
+fn is_route_literal(text: &str) -> bool {
+    let Some(rest) = text.strip_prefix("v1/") else {
+        return false;
+    };
+    !rest.is_empty() && rest.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+}
+
+fn is_version_suffix(text: &str) -> bool {
+    text.ends_with("u16") || text.ends_with("u32") || text.ends_with("u64")
+}
+
+pub fn run(fi: &FileIndex, out: &mut Vec<Finding>) {
+    let toks = &fi.toks;
+    for (idx, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Str {
+            if is_route_literal(&t.text) && fi.path != "rust/src/deploy/serve.rs" {
+                push(out, fi, t, "route-literal");
+            }
+            if METHOD_LITERALS.contains(&t.text.as_str()) {
+                push(out, fi, t, "method-literal");
+            }
+            if BACKEND_LITERALS.contains(&t.text.as_str()) {
+                push(out, fi, t, "backend-literal");
+            }
+        }
+        if (t.kind == Kind::Str || t.kind == Kind::ByteStr)
+            && t.text == "IDKM"
+            && fi.path != "rust/src/deploy/format.rs"
+        {
+            push(out, fi, t, "bundle-magic");
+        }
+        if t.kind == Kind::Ident
+            && t.text.starts_with("PRUNE_SLACK")
+            && fi.path != "rust/src/quant/engine/simd.rs"
+            && (fi.is_op(idx + 1, ":") || fi.is_op(idx + 1, "="))
+        {
+            push(out, fi, t, "prune-slack-def");
+        }
+        if t.kind == Kind::Int
+            && is_version_suffix(&t.text)
+            && fi.path != "rust/src/deploy/format.rs"
+            && fi.is_op(idx + 1, ".")
+            && fi.is_ident(idx + 2, "to_le_bytes")
+        {
+            push(out, fi, t, "bundle-version");
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Lock discipline for the serve coalescer: no forward-pass call may sit
+//! lexically inside a region where a `lock()` guard binding is live. The
+//! liveness window of `let g = ….lock()…;` runs from the end of that
+//! statement to the close of the enclosing brace, truncated by `drop(g)`.
+//! Passing the guard as a top-level argument of the flagged call (the
+//! `st = self.run_pass(st, batch)` hand-off idiom) moves ownership into
+//! the callee and is exempt — the callee drops it before forwarding.
+
+use crate::lexer::Kind;
+use crate::lints::{push_msg, Finding};
+use crate::scope::FileIndex;
+
+const FLAGGED_CALLS: &[&str] = &["forward", "run_pass", "submit", "run_batch"];
+
+struct Guard {
+    /// Binding name; `None` for an unbound (temporary) guard expression.
+    name: Option<String>,
+    /// Live token range, inclusive.
+    lo: usize,
+    hi: usize,
+}
+
+/// Token index ending the statement containing `idx` (the `;`/`,` or
+/// closing delimiter at depth 0).
+fn stmt_end(fi: &FileIndex, idx: usize) -> usize {
+    let toks = &fi.toks;
+    let mut depth = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(idx) {
+        if t.kind != Kind::Op {
+            continue;
+        }
+        match t.text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                if depth == 0 {
+                    return j;
+                }
+                depth -= 1;
+            }
+            ";" | "," => {
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Token index starting the statement containing `idx`.
+fn stmt_start(fi: &FileIndex, idx: usize) -> usize {
+    let toks = &fi.toks;
+    let mut depth = 0i64;
+    for j in (0..=idx).rev() {
+        let t = &toks[j];
+        if t.kind != Kind::Op {
+            continue;
+        }
+        match t.text.as_str() {
+            ")" | "]" | "}" => depth += 1,
+            "(" | "[" | "{" => {
+                if depth == 0 {
+                    return j;
+                }
+                depth -= 1;
+            }
+            ";" | "," => {
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    0
+}
+
+/// True when `name` appears as a top-level argument inside the call whose
+/// `(` is at `open_idx` (ownership hand-off).
+fn guard_is_call_arg(fi: &FileIndex, open_idx: usize, name: &str) -> bool {
+    let mut depth = 0i64;
+    for t in fi.toks.iter().skip(open_idx) {
+        if t.kind == Kind::Op && matches!(t.text.as_str(), "(" | "[" | "{") {
+            depth += 1;
+        } else if t.kind == Kind::Op && matches!(t.text.as_str(), ")" | "]" | "}") {
+            depth -= 1;
+            if depth == 0 {
+                return false;
+            }
+        } else if depth == 1 && t.kind == Kind::Ident && t.text == name {
+            return true;
+        }
+    }
+    false
+}
+
+pub fn run(fi: &FileIndex, out: &mut Vec<Finding>) {
+    if fi.path != "rust/src/deploy/serve.rs" {
+        return;
+    }
+    let toks = &fi.toks;
+    let n = toks.len();
+
+    // enclosing-brace close index for each token
+    let mut close_at = vec![n.saturating_sub(1); n];
+    let mut stack: Vec<usize> = Vec::new();
+    for idx in 0..n {
+        if fi.is_op(idx, "{") {
+            stack.push(idx);
+        } else if fi.is_op(idx, "}") {
+            stack.pop();
+        }
+        if let Some(&top) = stack.last() {
+            close_at[idx] =
+                fi.match_brace.get(&top).copied().unwrap_or(n.saturating_sub(1));
+        }
+    }
+
+    let mut guards: Vec<Guard> = Vec::new();
+    for idx in 0..n {
+        let is_lock_call = fi.is_ident(idx, "lock")
+            && idx >= 1
+            && fi.is_op(idx - 1, ".")
+            && fi.is_op(idx + 1, "(");
+        if !is_lock_call {
+            continue;
+        }
+        let s = stmt_start(fi, idx);
+        // find the last `=` (plain assignment) between stmt start and the
+        // lock call; `s` itself may be the boundary delimiter — skip it so
+        // it does not skew the depth count
+        let boundary = toks[s].kind == Kind::Op
+            && matches!(toks[s].text.as_str(), "(" | "[" | "{" | ";" | ",");
+        let scan_from = if boundary { s + 1 } else { s };
+        let mut eq: Option<usize> = None;
+        let mut depth = 0i64;
+        for j in scan_from..idx {
+            let t = &toks[j];
+            if t.kind != Kind::Op {
+                continue;
+            }
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "=" if depth == 0 => eq = Some(j),
+                _ => {}
+            }
+        }
+        let e = stmt_end(fi, idx);
+        match eq {
+            Some(eq) if eq >= 1 && toks[eq - 1].kind == Kind::Ident => {
+                guards.push(Guard {
+                    name: Some(toks[eq - 1].text.clone()),
+                    lo: e + 1,
+                    hi: close_at[idx],
+                });
+            }
+            _ => guards.push(Guard { name: None, lo: idx, hi: e }),
+        }
+    }
+
+    // truncate each named guard's window at `drop(name)`
+    for g in &mut guards {
+        let Some(name) = &g.name else { continue };
+        for idx in g.lo..=g.hi.min(n.saturating_sub(4)) {
+            if fi.is_ident(idx, "drop")
+                && fi.is_op(idx + 1, "(")
+                && fi.is_ident(idx + 2, name)
+                && fi.is_op(idx + 3, ")")
+            {
+                g.hi = idx;
+                break;
+            }
+        }
+    }
+
+    for (idx, t) in toks.iter().enumerate() {
+        let is_flagged = t.kind == Kind::Ident
+            && FLAGGED_CALLS.contains(&t.text.as_str())
+            && idx >= 1
+            && fi.is_op(idx - 1, ".")
+            && fi.is_op(idx + 1, "(");
+        if !is_flagged {
+            continue;
+        }
+        for g in &guards {
+            if !(g.lo <= idx && idx <= g.hi) {
+                continue;
+            }
+            if let Some(name) = &g.name {
+                if guard_is_call_arg(fi, idx + 1, name) {
+                    continue;
+                }
+            }
+            let who = g.name.as_deref().unwrap_or("<temporary>");
+            push_msg(
+                out,
+                fi,
+                t,
+                "lock-held-forward",
+                format!("`.{}(` while guard `{who}` is live", t.text),
+            );
+            break;
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Lint registry and the per-file driver. Each lint family lives in its
+//! own module and pushes [`Finding`]s against a shared [`FileIndex`];
+//! this module owns the id -> hint catalog and the `lint:allow`
+//! bookkeeping (suppression + the `allow-without-reason` meta-lint).
+
+pub mod float_det;
+pub mod grep_ports;
+pub mod lock_discipline;
+pub mod untrusted;
+pub mod unsafe_audit;
+
+use crate::lexer::{LexError, Tok};
+use crate::scope::FileIndex;
+
+/// Stable id -> one-line fix hint. Every entry here must have a failing
+/// fixture in `tests/fixtures/fail/` (the non-vacuity test enforces it).
+pub const LINTS: &[(&str, &str)] = &[
+    ("route-literal", "raw wire route literal — use deploy::serve::ROUTE_* or the *_request helpers"),
+    ("method-literal", "quoted method literal — route through quant::engine::Method"),
+    ("backend-literal", "quoted backend literal — route through quant::engine::BackendKind"),
+    ("prune-slack-def", "PRUNE_SLACK defined outside quant/engine/simd.rs — the slack unit has one home; call simd::prune_slack(d)"),
+    ("bundle-magic", "raw bundle magic — use deploy::format::MAGIC"),
+    ("bundle-version", "raw format-version write — use deploy::format::{FORMAT_V1, FORMAT_V2}"),
+    ("unsafe-safety-comment", "unsafe without an immediately-preceding // SAFETY: comment"),
+    ("unsafe-allowlist", "unsafe outside the audited allowlist — see rust/xtask/README.md and the unsafe inventory in quant/engine/mod.rs"),
+    ("lock-held-forward", "forward-pass call while a Coalescer lock guard is live — release (drop/move) the guard first"),
+    ("json-unbounded-parse", "Json::parse on an untrusted path — use parse_bytes_bounded or pull-parser events"),
+    ("untrusted-unwrap", "unwrap/expect/panic on an untrusted path — return an error instead"),
+    ("untrusted-index", "literal slice index on an untrusted path — use get() or a checked span"),
+    ("unchecked-offset-arith", "unchecked offset arithmetic — use checked_add/checked_mul"),
+    ("float-transcendental", "libm transcendental in a kernel file — route through simd::exp_f32"),
+    ("f64-narrowing", "f64->f32 narrowing outside the allowlisted M-step fold sites"),
+    ("allow-without-reason", "lint:allow must carry a justification after the closing paren"),
+];
+
+pub fn hint(id: &str) -> &'static str {
+    LINTS
+        .iter()
+        .find(|(lid, _)| *lid == id)
+        .map(|(_, h)| *h)
+        .unwrap_or("unknown lint id")
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub id: &'static str,
+    pub msg: String,
+    pub hint: &'static str,
+}
+
+/// A `lint:allow` record as reported in `--json` output.
+#[derive(Clone, Debug)]
+pub struct AllowRecord {
+    pub file: String,
+    pub line: usize,
+    pub id: String,
+    pub reason: String,
+}
+
+pub struct LintOutcome {
+    /// Findings that survived allow suppression, in source order.
+    pub findings: Vec<Finding>,
+    /// Every allow comment in the file (reported so drift is visible).
+    pub allows: Vec<AllowRecord>,
+    /// Findings suppressed by a reasoned allow.
+    pub suppressed: Vec<Finding>,
+}
+
+pub(crate) fn push(out: &mut Vec<Finding>, fi: &FileIndex, tok: &Tok, id: &'static str) {
+    push_msg(out, fi, tok, id, String::new());
+}
+
+pub(crate) fn push_msg(
+    out: &mut Vec<Finding>,
+    fi: &FileIndex,
+    tok: &Tok,
+    id: &'static str,
+    detail: String,
+) {
+    let h = hint(id);
+    let msg = if detail.is_empty() {
+        h.split(" — ").next().unwrap_or(h).to_string()
+    } else {
+        detail
+    };
+    out.push(Finding { file: fi.path.clone(), line: tok.line, col: tok.col, id, msg, hint: h });
+}
+
+/// Lint one file's text as if it lived at `path` (repo-root-relative,
+/// forward slashes). This is the whole per-file pipeline: lex, index, run
+/// every lint family, then fold in `lint:allow` suppression.
+pub fn lint_source(path: &str, source: &str) -> Result<LintOutcome, LexError> {
+    let fi = FileIndex::new(path, source)?;
+    let mut raw: Vec<Finding> = Vec::new();
+    grep_ports::run(&fi, &mut raw);
+    unsafe_audit::run(&fi, &mut raw);
+    lock_discipline::run(&fi, &mut raw);
+    untrusted::run(&fi, &mut raw);
+    float_det::run(&fi, &mut raw);
+    // allow-without-reason is a real lint finding
+    for a in &fi.allows {
+        if a.reason.is_empty() {
+            raw.push(Finding {
+                file: path.to_string(),
+                line: a.line,
+                col: 1,
+                id: "allow-without-reason",
+                msg: format!("lint:allow({}) without a reason", a.id),
+                hint: hint("allow-without-reason"),
+            });
+        }
+    }
+    let allowed: Vec<(&str, usize)> = fi
+        .allows
+        .iter()
+        .filter(|a| !a.reason.is_empty())
+        .map(|a| (a.id.as_str(), a.line))
+        .collect();
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in raw {
+        if allowed.iter().any(|&(id, line)| id == f.id && line == f.line) {
+            suppressed.push(f);
+        } else {
+            findings.push(f);
+        }
+    }
+    let allows = fi
+        .allows
+        .iter()
+        .map(|a| AllowRecord {
+            file: path.to_string(),
+            line: a.line,
+            id: a.id.clone(),
+            reason: a.reason.clone(),
+        })
+        .collect();
+    Ok(LintOutcome { findings, allows, suppressed })
+}

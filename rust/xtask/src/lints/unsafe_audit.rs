@@ -1,0 +1,84 @@
+//! Unsafe audit: every `unsafe` site needs a `// SAFETY:` comment directly
+//! above it (or above its enclosing statement — the clippy
+//! `undocumented_unsafe_blocks` rule), and unsafe may only appear in the
+//! audited allowlist of files. The inventory with each site's disjointness
+//! argument lives in `quant/engine/mod.rs`.
+
+use crate::lexer::Kind;
+use crate::lints::{push, Finding};
+use crate::scope::FileIndex;
+
+/// Files audited to contain unsafe. Everything else fails CI with a
+/// pointer to the audit doc.
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/util/threadpool.rs",
+    "rust/src/util/alloc_count.rs",
+    "rust/src/quant/engine/backend.rs",
+    "rust/src/runtime/mod.rs",
+    // bench-only single-copy literal staging comparison; same POD byte
+    // projection the runtime uses, kept so the §Perf L3 before/after row
+    // stays honest.
+    "rust/benches/runtime_micro.rs",
+];
+
+/// Line of the first token of the statement containing `toks[idx]`: walk
+/// backward to the nearest `;` / `{` / `}` at delimiter depth 0 (an
+/// unmatched `(`/`[` is an enclosing group — keep walking).
+fn stmt_start_line(fi: &FileIndex, idx: usize) -> usize {
+    let toks = &fi.toks;
+    let mut depth = 0i64;
+    for j in (0..idx).rev() {
+        let t = &toks[j];
+        if t.kind != Kind::Op {
+            continue;
+        }
+        match t.text.as_str() {
+            ")" | "]" => depth += 1,
+            "}" => {
+                if depth == 0 {
+                    return toks[j + 1].line;
+                }
+                depth += 1;
+            }
+            "{" => {
+                if depth == 0 {
+                    return toks[j + 1].line;
+                }
+                depth -= 1;
+            }
+            "(" | "[" => {
+                if depth > 0 {
+                    depth -= 1;
+                }
+                // unmatched at depth 0: enclosing group, keep walking left
+            }
+            ";" => {
+                if depth == 0 {
+                    return toks[j + 1].line;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.first().map_or(0, |t| t.line)
+}
+
+pub fn run(fi: &FileIndex, out: &mut Vec<Finding>) {
+    for (idx, t) in fi.toks.iter().enumerate() {
+        if !(t.kind == Kind::Ident && t.text == "unsafe") {
+            continue;
+        }
+        // `unsafe fn(` in type position is a fn-pointer type, not a site.
+        if fi.is_ident(idx + 1, "fn") && fi.is_op(idx + 2, "(") {
+            continue;
+        }
+        if !UNSAFE_ALLOWLIST.contains(&fi.path.as_str()) {
+            push(out, fi, t, "unsafe-allowlist");
+        }
+        if !(fi.comment_run_above_has_safety(t.line)
+            || fi.comment_run_above_has_safety(stmt_start_line(fi, idx)))
+        {
+            push(out, fi, t, "unsafe-safety-comment");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Untrusted-input hygiene for the wire-facing files: no panic paths
+//! (`unwrap`/`expect`/`panic!`-family) on wire-derived values, no literal
+//! slice indexing, no unbounded `Json::parse(`, and offset arithmetic must
+//! go through `checked_add`/`checked_mul`. Mutex-poison unwraps
+//! (`lock()`/`wait()`/`into_inner()` receivers) are exempt — they are
+//! poisoning policy, not wire-data handling — as is `#[cfg(test)]` code.
+
+use crate::lexer::Kind;
+use crate::lints::{push, push_msg, Finding};
+use crate::scope::FileIndex;
+
+pub const UNTRUSTED_FILES: &[&str] = &[
+    "rust/src/deploy/serve.rs",
+    "rust/src/deploy/reader.rs",
+    "rust/src/coordinator/checkpoint.rs",
+    "rust/src/util/json.rs",
+];
+
+pub const OFFSET_ARITH_FILES: &[&str] =
+    &["rust/src/deploy/reader.rs", "rust/src/coordinator/checkpoint.rs"];
+
+const POISON_RECEIVERS: &[&str] = &["lock", "wait", "wait_timeout", "into_inner"];
+
+/// `^(off|offset|base|pos|cursor|start|end|total|len|hlen)$` or a
+/// `_off`/`_offset`/`_base`/`_pos`/`_start`/`_end`/`_len`/`_bytes` suffix.
+fn is_offset_name(name: &str) -> bool {
+    const WHOLE: &[&str] =
+        &["off", "offset", "base", "pos", "cursor", "start", "end", "total", "len", "hlen"];
+    const SUFFIX: &[&str] =
+        &["_off", "_offset", "_base", "_pos", "_start", "_end", "_len", "_bytes"];
+    WHOLE.contains(&name) || SUFFIX.iter().any(|s| name.ends_with(s))
+}
+
+/// `dot_idx` points at the `.` before unwrap/expect. True when the
+/// receiver is a `lock()`/`wait()`/`wait_timeout()`/`into_inner()` call.
+fn poison_receiver(fi: &FileIndex, dot_idx: usize) -> bool {
+    if dot_idx == 0 {
+        return false;
+    }
+    let j = dot_idx - 1;
+    if !fi.is_op(j, ")") {
+        return false;
+    }
+    let Some(&o) = fi.match_paren.get(&j) else {
+        return false;
+    };
+    o >= 1
+        && fi.toks[o - 1].kind == Kind::Ident
+        && POISON_RECEIVERS.contains(&fi.toks[o - 1].text.as_str())
+}
+
+pub fn run(fi: &FileIndex, out: &mut Vec<Finding>) {
+    if !UNTRUSTED_FILES.contains(&fi.path.as_str()) {
+        return;
+    }
+    let toks = &fi.toks;
+    for (idx, t) in toks.iter().enumerate() {
+        if fi.in_test(t.line) {
+            continue;
+        }
+        // Json::parse(
+        if fi.is_ident(idx, "Json")
+            && fi.is_op(idx + 1, "::")
+            && fi.is_ident(idx + 2, "parse")
+            && fi.is_op(idx + 3, "(")
+        {
+            push(out, fi, t, "json-unbounded-parse");
+        }
+        // .unwrap( / .expect(
+        if t.kind == Kind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && idx >= 1
+            && fi.is_op(idx - 1, ".")
+            && fi.is_op(idx + 1, "(")
+            && !poison_receiver(fi, idx - 1)
+        {
+            push_msg(
+                out,
+                fi,
+                t,
+                "untrusted-unwrap",
+                format!(".{}() on an untrusted path", t.text),
+            );
+        }
+        // panic!-family
+        if t.kind == Kind::Ident
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+            && fi.is_op(idx + 1, "!")
+        {
+            push_msg(out, fi, t, "untrusted-unwrap", format!("{}! on an untrusted path", t.text));
+        }
+        // literal index: ident / ) / ] then [ <int> ]
+        if t.kind == Kind::Op
+            && t.text == "["
+            && idx >= 1
+            && (toks[idx - 1].kind == Kind::Ident
+                || fi.is_op(idx - 1, ")")
+                || fi.is_op(idx - 1, "]"))
+            && toks.get(idx + 1).is_some_and(|t1| t1.kind == Kind::Int)
+            && fi.is_op(idx + 2, "]")
+        {
+            push(out, fi, t, "untrusted-index");
+        }
+    }
+    // offset arithmetic
+    if !OFFSET_ARITH_FILES.contains(&fi.path.as_str()) {
+        return;
+    }
+    for (idx, t) in toks.iter().enumerate() {
+        if fi.in_test(t.line) {
+            continue;
+        }
+        if !(t.kind == Kind::Op && matches!(t.text.as_str(), "+" | "*" | "+=" | "*=")) {
+            continue;
+        }
+        let prev = if idx >= 1 { toks.get(idx - 1) } else { None };
+        let nxt = toks.get(idx + 1);
+        // a `*` not preceded by an operand is a deref/raw-pointer sigil,
+        // not arithmetic
+        if t.text == "*" {
+            let operand_before = prev.is_some_and(|p| {
+                matches!(p.kind, Kind::Ident | Kind::Int | Kind::Float)
+                    || (p.kind == Kind::Op && (p.text == ")" || p.text == "]"))
+            });
+            if !operand_before {
+                continue;
+            }
+        }
+        for side in [prev, nxt].into_iter().flatten() {
+            if side.kind == Kind::Ident && is_offset_name(&side.text) {
+                push_msg(
+                    out,
+                    fi,
+                    t,
+                    "unchecked-offset-arith",
+                    format!("`{} {} …` without checked_add/checked_mul", side.text, t.text),
+                );
+                break;
+            }
+        }
+    }
+}

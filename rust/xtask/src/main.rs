@@ -1,0 +1,64 @@
+//! CLI for the repo lint pass: `cargo run -p xtask -- lint [--json]
+//! [--root <dir>]`. Exit codes: 0 clean, 1 findings, 2 usage/io error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- lint [--json] [--root <dir>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut as_json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            "--json" => as_json = true,
+            "--root" => match it.next() {
+                Some(r) => root = Some(PathBuf::from(r)),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+    if cmd != Some("lint") {
+        return usage();
+    }
+    // The crate lives at <root>/rust/xtask; default the scan root to the
+    // manifest's grandparent so `cargo run -p xtask -- lint` works from
+    // anywhere inside the checkout.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+    });
+    let report = match xtask::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+    if as_json {
+        println!("{}", xtask::to_json(&report));
+    } else {
+        for f in &report.findings {
+            println!("{}:{}:{}: [{}] {}", f.file, f.line, f.col, f.id, f.msg);
+            println!("    hint: {}", f.hint);
+        }
+        println!(
+            "xtask lint: {} finding(s), {} allow(s) across {} lints",
+            report.findings.len(),
+            report.allows.len(),
+            xtask::lints::LINTS.len()
+        );
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

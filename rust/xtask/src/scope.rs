@@ -1,0 +1,263 @@
+//! Per-file structural index over the token stream: brace/paren matching,
+//! `fn` body spans, `#[cfg(test)]` regions, SAFETY-comment adjacency, and
+//! `// lint:allow(<id>) <reason>` records. Everything a lint needs beyond
+//! the raw tokens lives here so the lints stay declarative.
+
+use crate::lexer::{lex, Kind, LexError, Lexed, Tok};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// One `lint:allow` occurrence, resolved to the code line it targets.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub id: String,
+    /// The code line the allow applies to (the comment's own line when it
+    /// shares a line with code, else the next code line below it).
+    pub line: usize,
+    pub reason: String,
+}
+
+pub struct FileIndex {
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: BTreeMap<usize, String>,
+    pub has_code: BTreeSet<usize>,
+    /// `{` index -> matching `}` index, and the reverse.
+    pub match_brace: HashMap<usize, usize>,
+    /// `(` index -> matching `)` index, and the reverse.
+    pub match_paren: HashMap<usize, usize>,
+    /// (fn name, body start line, body end line).
+    pub fns: Vec<(String, usize, usize)>,
+    /// (start line, end line) of `#[cfg(test)]`-gated bodies.
+    pub test_regions: Vec<(usize, usize)>,
+    pub allows: Vec<Allow>,
+}
+
+impl FileIndex {
+    pub fn new(path: &str, source: &str) -> Result<Self, LexError> {
+        let Lexed { toks, comments, has_code } = lex(source)?;
+        let match_brace = match_delims(&toks, "{", "}");
+        let match_paren = match_delims(&toks, "(", ")");
+        let mut fi = FileIndex {
+            path: path.to_string(),
+            toks,
+            comments,
+            has_code,
+            match_brace,
+            match_paren,
+            fns: Vec::new(),
+            test_regions: Vec::new(),
+            allows: Vec::new(),
+        };
+        fi.fns = fi.fn_spans();
+        fi.test_regions = fi.find_test_regions();
+        fi.allows = fi.find_allows();
+        Ok(fi)
+    }
+
+    pub fn is_op(&self, idx: usize, text: &str) -> bool {
+        self.toks.get(idx).is_some_and(|t| t.kind == Kind::Op && t.text == text)
+    }
+
+    pub fn is_ident(&self, idx: usize, text: &str) -> bool {
+        self.toks.get(idx).is_some_and(|t| t.kind == Kind::Ident && t.text == text)
+    }
+
+    /// First `{` at paren/bracket-depth 0 after token `start`; `None` if a
+    /// `;` ends the item first.
+    pub fn body_open(&self, start: usize) -> Option<usize> {
+        let mut depth = 0i64;
+        for (idx, t) in self.toks.iter().enumerate().skip(start) {
+            if t.kind != Kind::Op {
+                continue;
+            }
+            match t.text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => return Some(idx),
+                ";" if depth == 0 => return None,
+                _ => {}
+            }
+        }
+        None
+    }
+
+    fn fn_spans(&self) -> Vec<(String, usize, usize)> {
+        let mut spans = Vec::new();
+        for idx in 0..self.toks.len() {
+            if !self.is_ident(idx, "fn") {
+                continue;
+            }
+            let Some(name_tok) = self.toks.get(idx + 1) else { continue };
+            if name_tok.kind != Kind::Ident {
+                continue;
+            }
+            if let Some(o) = self.body_open(idx + 2) {
+                if let Some(&c) = self.match_brace.get(&o) {
+                    spans.push((name_tok.text.clone(), self.toks[o].line, self.toks[c].line));
+                }
+            }
+        }
+        spans
+    }
+
+    /// Name of the innermost fn whose body spans `line`.
+    pub fn fn_at(&self, line: usize) -> Option<&str> {
+        let mut best: Option<&(String, usize, usize)> = None;
+        for span in &self.fns {
+            if span.1 <= line && line <= span.2 {
+                let innermost = match best {
+                    None => true,
+                    Some(b) => span.1 > b.1,
+                };
+                if innermost {
+                    best = Some(span);
+                }
+            }
+        }
+        best.map(|b| b.0.as_str())
+    }
+
+    fn find_test_regions(&self) -> Vec<(usize, usize)> {
+        let mut regions = Vec::new();
+        let toks = &self.toks;
+        for idx in 0..toks.len().saturating_sub(6) {
+            let is_cfg_test = self.is_op(idx, "#")
+                && self.is_op(idx + 1, "[")
+                && self.is_ident(idx + 2, "cfg")
+                && self.is_op(idx + 3, "(")
+                && self.is_ident(idx + 4, "test")
+                && self.is_op(idx + 5, ")")
+                && self.is_op(idx + 6, "]");
+            if !is_cfg_test {
+                continue;
+            }
+            // skip further attributes
+            let mut j = idx + 7;
+            while self.is_op(j, "#") {
+                if !self.is_op(j + 1, "[") {
+                    break;
+                }
+                let mut depth = 0i64;
+                let mut k = j + 1;
+                while k < toks.len() {
+                    if self.is_op(k, "[") {
+                        depth += 1;
+                    } else if self.is_op(k, "]") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                j = k + 1;
+            }
+            if let Some(o) = self.body_open(j) {
+                if let Some(&c) = self.match_brace.get(&o) {
+                    regions.push((toks[o].line, toks[c].line));
+                }
+            }
+        }
+        regions
+    }
+
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(s, e)| s <= line && line <= e)
+    }
+
+    fn find_allows(&self) -> Vec<Allow> {
+        let mut out = Vec::new();
+        for (&line, text) in &self.comments {
+            for (id, reason) in parse_allows(text) {
+                let mut target = line;
+                if !self.has_code.contains(&line) {
+                    // comment-only line: applies to the next code line
+                    let limit = self.has_code.iter().next_back().copied().unwrap_or(line);
+                    let mut nxt = line + 1;
+                    while nxt <= limit && !self.has_code.contains(&nxt) {
+                        nxt += 1;
+                    }
+                    target = nxt;
+                }
+                out.push(Allow { id, line: target, reason });
+            }
+        }
+        out
+    }
+
+    /// True if the contiguous comment/attribute run ending on `line - 1`
+    /// (or a comment on `line` itself) mentions SAFETY.
+    pub fn comment_run_above_has_safety(&self, line: usize) -> bool {
+        let mentions = |text: &str| text.contains("SAFETY") || text.contains("# Safety");
+        if self.comments.get(&line).is_some_and(|t| mentions(t)) {
+            return true;
+        }
+        let mut l = line.saturating_sub(1);
+        while l > 0 {
+            let is_comment = self.comments.contains_key(&l) && !self.has_code.contains(&l);
+            let is_attr = self.has_code.contains(&l) && self.line_is_attr(l);
+            if is_comment {
+                if self.comments.get(&l).is_some_and(|t| mentions(t)) {
+                    return true;
+                }
+                l -= 1;
+            } else if is_attr {
+                l -= 1;
+            } else {
+                break;
+            }
+        }
+        false
+    }
+
+    fn line_is_attr(&self, line: usize) -> bool {
+        self.toks
+            .iter()
+            .find(|t| t.line == line)
+            .is_some_and(|t| t.kind == Kind::Op && t.text == "#")
+    }
+}
+
+fn match_delims(toks: &[Tok], open: &str, close: &str) -> HashMap<usize, usize> {
+    let mut m = HashMap::new();
+    let mut stack = Vec::new();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Op {
+            continue;
+        }
+        if t.text == open {
+            stack.push(idx);
+        } else if t.text == close {
+            if let Some(o) = stack.pop() {
+                m.insert(o, idx);
+                m.insert(idx, o);
+            }
+        }
+    }
+    m
+}
+
+/// Extract every `lint:allow(<id>) <reason…>` occurrence from one comment
+/// record. The reason runs to the end of the record (or a closing `*/`).
+fn parse_allows(text: &str) -> Vec<(String, String)> {
+    const NEEDLE: &str = "lint:allow(";
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(at) = rest.find(NEEDLE) {
+        let after = &rest[at + NEEDLE.len()..];
+        let id_len = after
+            .char_indices()
+            .find(|&(_, c)| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+            .map_or(after.len(), |(i, _)| i);
+        let id = &after[..id_len];
+        if !id.is_empty() && after[id_len..].starts_with(')') {
+            let tail = &after[id_len + 1..];
+            let reason = tail.split("*/").next().unwrap_or(tail).trim();
+            out.push((id.to_string(), reason.to_string()));
+            rest = &after[id_len + 1..];
+        } else {
+            rest = after;
+        }
+    }
+    out
+}

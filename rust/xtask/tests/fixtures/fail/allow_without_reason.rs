@@ -1,0 +1,7 @@
+//@ path: rust/src/deploy/reader.rs
+//@ expect: allow-without-reason
+//@ expect: untrusted-index
+fn first(buf: &[u8]) -> u8 {
+    // lint:allow(untrusted-index)
+    buf[0]
+}

@@ -1,0 +1,5 @@
+//@ path: rust/src/quant/mod.rs
+//@ expect: backend-literal
+pub fn kind() -> &'static str {
+    "scalar_ref"
+}

@@ -1,0 +1,3 @@
+//@ path: rust/src/deploy/mod.rs
+//@ expect: bundle-magic
+pub const MAGIC: &[u8; 4] = b"IDKM";

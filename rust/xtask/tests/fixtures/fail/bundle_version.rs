@@ -1,0 +1,5 @@
+//@ path: rust/src/deploy/mod.rs
+//@ expect: bundle-version
+pub fn version_field() -> [u8; 2] {
+    2u16.to_le_bytes()
+}

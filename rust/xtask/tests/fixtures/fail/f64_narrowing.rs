@@ -1,0 +1,5 @@
+//@ path: rust/src/quant/engine/backend.rs
+//@ expect: f64-narrowing
+fn fold(acc: f64) -> f32 {
+    acc as f32
+}

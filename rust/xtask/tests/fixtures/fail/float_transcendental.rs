@@ -1,0 +1,5 @@
+//@ path: rust/src/quant/engine/simd.rs
+//@ expect: float-transcendental
+pub fn softmax_denom(x: f32) -> f32 {
+    x.exp()
+}

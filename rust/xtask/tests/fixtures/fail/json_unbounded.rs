@@ -1,0 +1,5 @@
+//@ path: rust/src/deploy/serve.rs
+//@ expect: json-unbounded-parse
+fn parse_body(bytes: &[u8]) -> Json {
+    Json::parse(bytes)
+}

@@ -1,0 +1,9 @@
+//@ path: rust/src/deploy/serve.rs
+//@ expect: lock-held-forward
+impl Server {
+    fn bad(&self, batch: &[u64]) -> Vec<u8> {
+        let mut st = self.state.lock().unwrap();
+        st.passes += 1;
+        self.forward.forward(batch)
+    }
+}

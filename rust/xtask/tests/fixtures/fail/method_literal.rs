@@ -1,0 +1,5 @@
+//@ path: rust/src/quant/mod.rs
+//@ expect: method-literal
+pub fn name() -> &'static str {
+    "idkm_jfb"
+}

@@ -1,0 +1,3 @@
+//@ path: rust/src/quant/engine/backend.rs
+//@ expect: prune-slack-def
+pub const PRUNE_SLACK_LOCAL: usize = 4;

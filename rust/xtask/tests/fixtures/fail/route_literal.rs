@@ -1,0 +1,5 @@
+//@ path: rust/src/deploy/mod.rs
+//@ expect: route-literal
+pub fn route() -> &'static str {
+    "v1/infer"
+}

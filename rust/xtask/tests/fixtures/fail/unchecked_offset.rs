@@ -1,0 +1,5 @@
+//@ path: rust/src/deploy/reader.rs
+//@ expect: unchecked-offset-arith
+fn span_end(off: u64, len: u64) -> u64 {
+    off + len
+}

@@ -1,0 +1,6 @@
+//@ path: rust/src/quant/mod.rs
+//@ expect: unsafe-allowlist
+pub fn peek(p: *const u32) -> u32 {
+    // SAFETY: caller guarantees p is valid and aligned.
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+//@ path: rust/src/runtime/mod.rs
+//@ expect: unsafe-safety-comment
+pub fn peek(p: *const u32) -> u32 {
+    unsafe { *p }
+}

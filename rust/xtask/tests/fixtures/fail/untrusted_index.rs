@@ -1,0 +1,5 @@
+//@ path: rust/src/coordinator/checkpoint.rs
+//@ expect: untrusted-index
+fn first(buf: &[u8]) -> u8 {
+    buf[0]
+}

@@ -1,0 +1,11 @@
+//@ path: rust/src/deploy/reader.rs
+//@ expect: untrusted-unwrap
+fn field(v: Option<u64>) -> u64 {
+    v.unwrap()
+}
+
+fn check(b: u8) {
+    if b > 5 {
+        panic!("bad wire byte {b}");
+    }
+}

@@ -1,0 +1,15 @@
+//@ path: rust/src/quant/engine/simd.rs
+//@ pass
+pub fn exp_f32(x: f32) -> f32 {
+    let clamped = x.max(-87.0);
+    clamped.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn parity() {
+        let y = (0.5f64).exp() as f32;
+        assert!(y > 1.0);
+    }
+}

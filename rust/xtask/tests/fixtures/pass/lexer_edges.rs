@@ -1,0 +1,18 @@
+//@ path: rust/src/deploy/reader.rs
+//@ pass
+//! Lint-trigger text in non-code positions must NOT fire: this is the
+//! false-positive class that retired the grep guards.
+// "v1/infer" in a line comment; Json::parse( too; b"IDKM"; buf[0].unwrap()
+/* block comment: let x = buf[0].unwrap(); "dkm" "simd" 2u32.to_le_bytes()
+   offset += len; /* nested block */ still a comment */
+pub fn doc_example() -> &'static str {
+    r#"the route "v1/infer" is documented here, not used"#
+}
+
+pub fn assembled() -> &'static str {
+    concat!("v1/", "infer")
+}
+
+pub fn in_string() -> &'static str {
+    "unsafe { } and PRUNE_SLACK: only prose, Json::parse( too"
+}

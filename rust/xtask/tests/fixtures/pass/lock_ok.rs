@@ -1,0 +1,16 @@
+//@ path: rust/src/deploy/serve.rs
+//@ pass
+impl Server {
+    fn good_drop(&self, batch: &[u64]) -> Vec<u8> {
+        let mut st = self.state.lock().unwrap();
+        st.passes += 1;
+        drop(st);
+        self.forward.forward(batch)
+    }
+
+    fn good_handoff(&self, batch: Batch) {
+        let st = self.state.lock().unwrap();
+        let st = self.run_pass(st, batch);
+        drop(st);
+    }
+}

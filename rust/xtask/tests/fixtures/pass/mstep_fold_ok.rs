@@ -1,0 +1,9 @@
+//@ path: rust/src/quant/engine/backend.rs
+//@ pass
+fn apply_mstep(sums: &[f64], counts: &[u32], out: &mut [f32]) {
+    for (o, (s, c)) in out.iter_mut().zip(sums.iter().zip(counts)) {
+        if *c > 0 {
+            *o = (s / f64::from(*c)) as f32;
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//@ path: rust/src/util/threadpool.rs
+//@ pass
+pub fn peek(p: *const u32) -> u32 {
+    // SAFETY: caller guarantees p is valid and aligned.
+    unsafe { *p }
+}
+
+pub fn stmt_form(p: *const u32) -> u32 {
+    // SAFETY: the comment sits above the statement, not the unsafe token.
+    let v =
+        unsafe { *p };
+    v
+}
+
+/// # Safety
+/// Caller must pass a valid, aligned pointer.
+pub unsafe fn read_raw(p: *const u32) -> u32 {
+    // SAFETY: contract forwarded from this fn's own docs.
+    unsafe { *p }
+}
+
+pub struct FnPtr {
+    pub call: unsafe fn(*const (), usize),
+}

@@ -1,0 +1,18 @@
+//@ path: rust/src/deploy/reader.rs
+//@ pass
+fn span_end(off: u64, len: u64) -> Option<u64> {
+    off.checked_add(len)
+}
+
+fn first(buf: &[u8]) -> Option<u8> {
+    buf.first().copied()
+}
+
+fn allowed(buf: &[u8]) -> u8 {
+    // lint:allow(untrusted-index) fixture: length proven by the caller
+    buf[0]
+}
+
+fn poison(state: &std::sync::Mutex<u32>) -> u32 {
+    *state.lock().unwrap()
+}

@@ -1,0 +1,323 @@
+//! Fixture + self-test suite for the lint pass.
+//!
+//! - every fixture under `tests/fixtures/fail/` must fire exactly the lint
+//!   ids its `//@ expect:` headers declare;
+//! - every fixture under `tests/fixtures/pass/` (lexer edge cases included)
+//!   must produce zero findings;
+//! - non-vacuity: every registered lint id has at least one failing fixture;
+//! - mutation self-tests: appending a violation to a *real* tree file makes
+//!   the corresponding ported lint fire (this is what replaced the CI grep
+//!   steps' own greppability);
+//! - the whole tree lints clean;
+//! - when python3 is available, `lint_mirror.py` agrees with this
+//!   implementation on the whole tree.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn crate_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn repo_root() -> PathBuf {
+    crate_dir().join("../..")
+}
+
+struct Fixture {
+    file: PathBuf,
+    virtual_path: String,
+    expects: Vec<String>,
+    is_pass: bool,
+    source: String,
+}
+
+fn load_fixtures(sub: &str) -> Vec<Fixture> {
+    let dir = crate_dir().join("tests/fixtures").join(sub);
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.expect("fixture dir entry"))
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let file = e.path();
+        if file.extension().map(|x| x != "rs").unwrap_or(true) {
+            continue;
+        }
+        let source = std::fs::read_to_string(&file).expect("fixture read");
+        let mut virtual_path = None;
+        let mut expects = Vec::new();
+        let mut is_pass = false;
+        for line in source.lines() {
+            let Some(rest) = line.strip_prefix("//@ ") else { continue };
+            if let Some(p) = rest.strip_prefix("path:") {
+                virtual_path = Some(p.trim().to_string());
+            } else if let Some(id) = rest.strip_prefix("expect:") {
+                expects.push(id.trim().to_string());
+            } else if rest.trim() == "pass" {
+                is_pass = true;
+            }
+        }
+        out.push(Fixture {
+            virtual_path: virtual_path
+                .unwrap_or_else(|| panic!("{}: missing //@ path:", file.display())),
+            expects,
+            is_pass,
+            source,
+            file,
+        });
+    }
+    assert!(!out.is_empty(), "no fixtures under {}", dir.display());
+    out
+}
+
+#[test]
+fn failing_fixtures_fire_exactly_their_expected_lints() {
+    for fx in load_fixtures("fail") {
+        assert!(!fx.expects.is_empty(), "{}: fail fixture needs //@ expect:", fx.file.display());
+        let outcome = xtask::lints::lint_source(&fx.virtual_path, &fx.source)
+            .unwrap_or_else(|e| panic!("{}: lex error: {e}", fx.file.display()));
+        let fired: BTreeSet<&str> = outcome.findings.iter().map(|f| f.id).collect();
+        let expected: BTreeSet<&str> = fx.expects.iter().map(|s| s.as_str()).collect();
+        assert_eq!(
+            fired,
+            expected,
+            "{}: fired {:?}, expected {:?} (findings: {:#?})",
+            fx.file.display(),
+            fired,
+            expected,
+            outcome.findings
+        );
+    }
+}
+
+#[test]
+fn passing_fixtures_are_clean() {
+    for fx in load_fixtures("pass") {
+        assert!(fx.is_pass, "{}: pass fixture needs //@ pass", fx.file.display());
+        let outcome = xtask::lints::lint_source(&fx.virtual_path, &fx.source)
+            .unwrap_or_else(|e| panic!("{}: lex error: {e}", fx.file.display()));
+        assert!(
+            outcome.findings.is_empty(),
+            "{}: expected clean, got {:#?}",
+            fx.file.display(),
+            outcome.findings
+        );
+    }
+}
+
+/// Every registered lint id must have at least one failing fixture — a
+/// lint nobody can demonstrate firing is a lint that may be vacuous.
+#[test]
+fn every_lint_id_has_a_failing_fixture() {
+    let covered: BTreeSet<String> =
+        load_fixtures("fail").into_iter().flat_map(|fx| fx.expects).collect();
+    for (id, _) in xtask::lints::LINTS {
+        assert!(covered.contains(*id), "lint `{id}` has no failing fixture");
+    }
+    for id in &covered {
+        assert!(
+            xtask::lints::LINTS.iter().any(|(lid, _)| lid == id),
+            "fixture expects unknown lint id `{id}`"
+        );
+    }
+}
+
+fn read_tree(path: &str) -> String {
+    let p = repo_root().join(path);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+fn fires(path: &str, source: &str, id: &str) -> bool {
+    xtask::lints::lint_source(path, source)
+        .unwrap_or_else(|e| panic!("{path}: lex error: {e}"))
+        .findings
+        .iter()
+        .any(|f| f.id == id)
+}
+
+/// Mutation self-tests for the ported grep guards: take the *real* file
+/// from the tree, append a violation, and check the lint fires. This is
+/// the replacement for "would the grep have caught it" — run here, not in
+/// CI shell steps.
+#[test]
+fn mutations_on_real_tree_files_fire_ported_lints() {
+    let cases: &[(&str, &str, &str)] = &[
+        (
+            "rust/src/deploy/reader.rs",
+            "\nfn _mut_route() -> &'static str { \"v1/infer\" }\n",
+            "route-literal",
+        ),
+        (
+            "rust/src/quant/mod.rs",
+            "\nfn _mut_method() -> &'static str { \"dkm\" }\n",
+            "method-literal",
+        ),
+        (
+            "rust/src/quant/mod.rs",
+            "\nfn _mut_backend() -> &'static str { \"simd\" }\n",
+            "backend-literal",
+        ),
+        (
+            "rust/src/quant/engine/backend.rs",
+            "\nconst PRUNE_SLACK_MUT: usize = 1;\n",
+            "prune-slack-def",
+        ),
+        (
+            "rust/src/deploy/reader.rs",
+            "\nconst _MUT_MAGIC: &[u8; 4] = b\"IDKM\";\n",
+            "bundle-magic",
+        ),
+        (
+            "rust/src/deploy/reader.rs",
+            "\nfn _mut_version() -> [u8; 4] { 9u32.to_le_bytes() }\n",
+            "bundle-version",
+        ),
+        (
+            "rust/src/deploy/serve.rs",
+            "\nfn _mut_parse(b: &[u8]) -> Json { Json::parse(b) }\n",
+            "json-unbounded-parse",
+        ),
+        // the new analyses, same treatment
+        (
+            "rust/src/runtime/mod.rs",
+            "\nfn _mut_unsafe(p: *const u32) -> u32 { unsafe { *p } }\n",
+            "unsafe-safety-comment",
+        ),
+        (
+            "rust/src/quant/mod.rs",
+            "\n// SAFETY: mutation fixture.\nfn _mut_unsafe(p: *const u32) -> u32 { unsafe { *p } }\n",
+            "unsafe-allowlist",
+        ),
+        (
+            "rust/src/deploy/reader.rs",
+            "\nfn _mut_arith(off: u64, len: u64) -> u64 { off + len }\n",
+            "unchecked-offset-arith",
+        ),
+        (
+            "rust/src/quant/engine/simd.rs",
+            "\nfn _mut_exp(x: f32) -> f32 { x.exp() }\n",
+            "float-transcendental",
+        ),
+    ];
+    for (path, violation, id) in cases {
+        let mutated = format!("{}{}", read_tree(path), violation);
+        assert!(
+            fires(path, &mutated, id),
+            "appending {violation:?} to {path} did not fire `{id}`"
+        );
+        // and the unmutated file must not fire it (the mutation is the cause)
+        assert!(
+            !fires(path, &read_tree(path), id),
+            "{path} already fires `{id}` unmutated"
+        );
+    }
+}
+
+/// The eighth grep guard was an *exclusion*: route literals are fine in
+/// their home file. Pin the scoping, not just the firing.
+#[test]
+fn route_literal_is_allowed_in_serve_rs_only() {
+    let snippet = "fn _r() -> &'static str { \"v1/infer\" }\n";
+    assert!(!fires("rust/src/deploy/serve.rs", snippet, "route-literal"));
+    assert!(fires("rust/src/deploy/reader.rs", snippet, "route-literal"));
+}
+
+#[test]
+fn whole_tree_is_clean() {
+    let report = xtask::lint_tree(&repo_root()).expect("tree lint");
+    assert!(
+        report.findings.is_empty(),
+        "tree has lint findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{}:{}: [{}] {}", f.file, f.line, f.col, f.id, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // every allow must carry a reason (the reasonless ones surface as
+    // findings above, but pin the accounting too)
+    for a in &report.allows {
+        assert!(!a.reason.is_empty(), "{}:{}: allow without reason", a.file, a.line);
+    }
+}
+
+/// The committed Python mirror must agree with this implementation on the
+/// tree. Skipped when python3 is unavailable.
+#[test]
+fn python_mirror_agrees_on_the_tree() {
+    let root = repo_root();
+    let mirror = crate_dir().join("lint_mirror.py");
+    let out = match std::process::Command::new("python3")
+        .arg(&mirror)
+        .arg("--root")
+        .arg(&root)
+        .output()
+    {
+        Ok(o) => o,
+        Err(_) => {
+            eprintln!("python3 not found; skipping mirror agreement check");
+            return;
+        }
+    };
+    let report = xtask::lint_tree(&root).expect("tree lint");
+    let rust_clean = report.findings.is_empty();
+    let mirror_clean = out.status.code() == Some(0);
+    assert_eq!(
+        rust_clean,
+        mirror_clean,
+        "mirror disagreement: rust clean={rust_clean}, mirror exit={:?}\nmirror stdout:\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+mod lexer_unit {
+    use xtask::lexer::{lex, Kind};
+
+    #[test]
+    fn raw_strings_and_comments_are_not_code() {
+        let lexed = lex("// \"v1/x\"\n/* b\"IDKM\" /* nested */ */\nlet r = r#\"a \"q\" b\"#;")
+            .expect("lex");
+        let strs: Vec<_> =
+            lexed.toks.iter().filter(|t| t.kind == Kind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, vec!["a \"q\" b".to_string()]);
+        assert!(lexed.comments.contains_key(&1));
+        assert!(lexed.comments.contains_key(&2));
+        assert!(!lexed.has_code.contains(&1));
+        assert!(lexed.has_code.contains(&3));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let lexed = lex("let c = 'a'; fn f<'a>(x: &'a str) {} let n = '\\n';").expect("lex");
+        let kinds: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| matches!(t.kind, Kind::Char | Kind::Lifetime))
+            .map(|t| (t.kind, t.text.clone()))
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (Kind::Char, "a".to_string()),
+                (Kind::Lifetime, "'a".to_string()),
+                (Kind::Lifetime, "'a".to_string()),
+                (Kind::Char, "\\n".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn numeric_suffixes_stay_one_token() {
+        let lexed = lex("let a = 2u32; let b = 0xFFu16; let c = 1.5e3f64;").expect("lex");
+        let nums: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| matches!(t.kind, Kind::Int | Kind::Float))
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(nums, vec!["2u32", "0xFFu16", "1.5e3f64"]);
+    }
+}
